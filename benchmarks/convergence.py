@@ -1,0 +1,128 @@
+"""Paper Table 2 / Figure 2 analogue: fine-tuning convergence of SUMO-SVD vs
+SUMO-NS5 vs GaLore vs AdamW on the synthetic task (GLUE is not available
+offline; the paper's CLAIM under test is the ORDERING: SUMO-SVD converges
+faster than SUMO-NS5 and GaLore at equal rank/memory).
+
+Reports loss after a fixed step budget and steps-to-threshold (the ~1.6×
+speedup claim of Fig. 2 maps to the steps-to-threshold ratio).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.train import TrainConfig, train
+
+STEPS = 150
+THRESH_FRACTION = 0.6   # reach 60% of adamw's total improvement
+
+
+def run(csv_rows: list) -> None:
+    arch = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("conv", seq_len=64, global_batch=16, kind="train")
+    curves = {}
+    for opt in ("sumo-svd", "sumo-ns5", "galore", "adamw"):
+        t0 = time.perf_counter()
+        res = train(
+            arch, shape,
+            TrainConfig(optimizer=opt, learning_rate=3e-3, rank=8,
+                        update_freq=25, total_steps=STEPS, log_every=10**9),
+            log_fn=lambda s: None,
+        )
+        dt = time.perf_counter() - t0
+        losses = np.array([l for _, l in res.losses])
+        curves[opt] = losses
+        csv_rows.append((
+            f"table2_convergence/{opt}",
+            dt / STEPS * 1e6,
+            f"loss_start={losses[:5].mean():.4f} loss_end={losses[-10:].mean():.4f}",
+        ))
+
+    # steps-to-threshold (Fig. 2's speedup metric)
+    base = curves["adamw"]
+    target = base[:5].mean() - THRESH_FRACTION * (base[:5].mean() - base[-10:].mean())
+
+    def steps_to(losses):
+        sm = np.convolve(losses, np.ones(5) / 5, mode="valid")
+        hit = np.argmax(sm <= target)
+        return int(hit) if sm.min() <= target else STEPS
+
+    s_svd = steps_to(curves["sumo-svd"])
+    s_ns5 = steps_to(curves["sumo-ns5"])
+    s_gal = steps_to(curves["galore"])
+    speedup_vs_ns5 = s_ns5 / max(s_svd, 1)
+    speedup_vs_galore = s_gal / max(s_svd, 1)
+    csv_rows.append((
+        "fig2_speedup/sumo_svd_vs_ns5",
+        0.0,
+        f"steps_svd={s_svd} steps_ns5={s_ns5} speedup={speedup_vs_ns5:.2f}x",
+    ))
+    csv_rows.append((
+        "fig2_speedup/sumo_svd_vs_galore",
+        0.0,
+        f"steps_svd={s_svd} steps_galore={s_gal} speedup={speedup_vs_galore:.2f}x",
+    ))
+
+    _ill_conditioned_probe(csv_rows)
+
+
+def _ill_conditioned_probe(csv_rows: list) -> None:
+    """The regime the paper's theory targets (Lemma 3.2 / Remark 3.7): an
+    ill-conditioned objective whose gradients/moments have fast-decaying
+    spectra. Here the SVD-vs-NS5 gap is mechanistic, not noise: NS5's
+    contraction stalls at κ ≫ 1 while exact orthogonalization doesn't.
+
+    min_W ||A (W - W*)||² with A's spectrum decaying steeply WITHIN the top-r
+    subspace, so the projected moment is exactly the ill-conditioned case of
+    Lemma 3.2: κ(MMᵀ)|_r up to 1e10 — NS5's contraction stalls on the small
+    directions while exact orthogonalization still equalizes the update.
+    The SVD-vs-NS5 final-loss ratio should GROW with κ (the paper's story);
+    at mild κ the two tie (also the paper's story — Remark 3.7).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import SumoConfig, apply_updates, sumo
+
+    key = jax.random.PRNGKey(0)
+    m, n, r = 96, 64, 8
+    kA, kW = jax.random.split(key, 2)
+    UA, _ = jnp.linalg.qr(jax.random.normal(kA, (m, m)))
+    Wstar = jax.random.normal(kW, (m, n)) / 8
+
+    for kappa_exp in (3, 4, 5):
+        sA = jnp.concatenate(
+            [jnp.logspace(0, -kappa_exp / 2, r), jnp.zeros((m - r,))]
+        )
+        A = (UA * sA[None, :]) @ UA.T
+        params = {"w": jnp.zeros((m, n))}
+
+        def loss_fn(p):
+            return 0.5 * jnp.mean((A @ (p["w"] - Wstar)) ** 2) * m
+
+        out = {}
+        for method in ("svd", "ns5"):
+            tx = sumo(0.1, SumoConfig(rank=r, update_freq=10,
+                                      orth_method=method,
+                                      rms_scale=False, gamma=1e9))
+            state = tx.init(params)
+            p = params
+
+            @jax.jit
+            def step(p, s):
+                l, g = jax.value_and_grad(loss_fn)(p)
+                u, s = tx.update(g, s, p)
+                return apply_updates(p, u), s, l
+
+            for _ in range(500):
+                p, state, l = step(p, state)
+            out[method] = float(l)
+        csv_rows.append((
+            f"fig2_speedup/illconditioned_kappaA_1e{kappa_exp}",
+            0.0,
+            f"final_svd={out['svd']:.3e} final_ns5={out['ns5']:.3e} "
+            f"svd_advantage={out['ns5'] / out['svd']:.2f}x",
+        ))

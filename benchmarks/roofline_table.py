@@ -1,0 +1,53 @@
+"""§Roofline: render the per-(arch × shape) roofline rows from the dry-run
+artifacts — the paper-faithful BASELINE sweep (dryrun.json) and the §Perf
+OPTIMIZED sweep (dryrun_optimized.json) side by side. Reads artifacts; does
+not recompile (run ``python -m repro.launch.dryrun --all --mesh both --out
+<file>`` to regenerate)."""
+from __future__ import annotations
+
+import json
+import os
+
+_ROOT = os.path.join(os.path.dirname(__file__), "..")
+BASELINE_JSON = os.path.join(_ROOT, "dryrun.json")
+OPTIMIZED_JSON = os.path.join(_ROOT, "dryrun_optimized.json")
+
+
+def _load(path):
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        rows = json.load(f)
+    return {(r["arch"], r["shape"]): r for r in rows if r.get("mesh") == "16x16"}
+
+
+def run(csv_rows: list) -> None:
+    base = _load(BASELINE_JSON)
+    opt = _load(OPTIMIZED_JSON)
+    if not opt and not base:
+        csv_rows.append(("roofline/missing", 0.0,
+                         "run: python -m repro.launch.dryrun --all --mesh both "
+                         "--out dryrun_optimized.json"))
+        return
+    keys = sorted(opt or base)
+    for k in keys:
+        r = (opt or base)[k]
+        name = f"roofline/{k[0]}/{k[1]}"
+        if r["status"] == "skipped":
+            csv_rows.append((name, 0.0, r["reason"]))
+            continue
+        if r["status"] != "ok":
+            csv_rows.append((name, 0.0, f"FAIL {r.get('error', '')[:80]}"))
+            continue
+        dom = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        b = base.get(k)
+        dom_b = (max(b["t_compute_s"], b["t_memory_s"], b["t_collective_s"])
+                 if b and b.get("status") == "ok" else None)
+        extra = f" baseline_dom={dom_b:.4f} gain={dom_b / dom:.2f}x" if dom_b else ""
+        csv_rows.append((
+            name,
+            dom * 1e6,
+            f"t_comp={r['t_compute_s']:.4f} t_mem={r['t_memory_s']:.4f} "
+            f"t_coll={r['t_collective_s']:.4f} bottleneck={r['bottleneck']} "
+            f"roofline_frac={r['roofline_fraction']:.4f}{extra}",
+        ))

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2]
+
+Prints ``name,us_per_call,derived`` CSV rows:
+    table1_memory/*      paper Table 1  (optimizer state memory + flops)
+    table2_convergence/* paper Table 2 / Fig 2 (SVD vs NS5 vs GaLore vs Adam)
+    fig2_speedup/*       Fig 2's ~1.6× steps-to-threshold claim
+    table3_pretrain/*    paper Table 3  (pre-training perplexity)
+    lemma32_ns_error/*   Lemma 3.2 / Fig 1 (NS error vs condition number)
+    fig1a_*/lemma31_*    Fig 1(a) / Lemma 3.1 (moment conditioning, rank)
+    table6_step_time/*   Table 6       (wall time per step)
+    roofline/*           §Roofline     (from the dry-run artifact)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import convergence, memory_table, ortho_error, pretrain_small, roofline_table, step_time
+
+MODULES = {
+    "table1": memory_table,
+    "table2": convergence,
+    "table3": pretrain_small,
+    "lemma32": ortho_error,
+    "table6": step_time,
+    "roofline": roofline_table,
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", choices=list(MODULES), default=None)
+    args = ap.parse_args(argv)
+
+    rows: list = []
+    failed = 0
+    for name, mod in MODULES.items():
+        if args.only and name != args.only:
+            continue
+        try:
+            mod.run(rows)
+        except Exception:
+            traceback.print_exc()
+            rows.append((f"{name}/ERROR", 0.0, "see stderr"))
+            failed += 1
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

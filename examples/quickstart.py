@@ -1,0 +1,44 @@
+"""Quickstart: train a small LM with SUMO in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import SumoConfig, apply_updates, sumo_optimizer
+from repro.data import make_batch
+from repro.models import init_params, loss_fn
+
+
+def main():
+    # 1. pick an architecture (reduced config so it runs on CPU)
+    cfg = get_smoke_config("qwen3-4b")
+    shape = ShapeConfig("quickstart", seq_len=64, global_batch=8, kind="train")
+
+    # 2. init params and the SUMO optimizer (paper Algorithm 1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tx = sumo_optimizer(
+        3e-3, params,
+        SumoConfig(rank=8, update_freq=20, orth_method="polar"),
+    )
+    opt_state = tx.init(params)
+
+    # 3. jitted train step
+    @jax.jit
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(lambda p: loss_fn(p, cfg, batch))(params)
+        updates, opt_state = tx.update(grads, opt_state, params)
+        return apply_updates(params, updates), opt_state, loss
+
+    # 4. train on the synthetic deterministic stream
+    for i in range(40):
+        batch = make_batch(i, shape, cfg)
+        params, opt_state, loss = step(params, opt_state, batch)
+        if i % 10 == 0:
+            print(f"step {i:3d}  loss {float(loss):.4f}")
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""repro — SUMO (Subspace-Aware Moment-Orthogonalization, NeurIPS 2025) as a
+production-grade multi-pod JAX training/inference framework.
+
+Subpackages:
+    core      the paper's optimizer + baselines (AdamW/GaLore/Muon/LoRA)
+    models    10-arch model zoo (dense/MoE/hybrid-SSM/xLSTM/audio/VLM)
+    kernels   Pallas TPU kernels (NS5, projection, flash attention)
+    parallel  (pod, data, model) sharding rules
+    data      deterministic synthetic pipeline
+    train     steps, loop, checkpointing, fault tolerance
+    serve     batched prefill/decode engine
+    configs   assigned architecture configs
+    launch    mesh / dryrun / train / serve entry points
+    roofline  trip-count-aware HLO cost analysis
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,42 @@
+"""Architecture registry: --arch <id> resolves here."""
+from __future__ import annotations
+
+import importlib
+
+from .base import SHAPE_BY_NAME, SHAPES, ArchConfig, ShapeConfig, cell_supported
+
+_MODULES = {
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "stablelm-1.6b": "stablelm_1_6b",
+    "qwen3-4b": "qwen3_4b",
+    "smollm-360m": "smollm_360m",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "mixtral-8x22b": "mixtral_8x22b",
+    "granite-moe-3b-a800m": "granite_moe_3b_a800m",
+    "zamba2-7b": "zamba2_7b",
+    "hubert-xlarge": "hubert_xlarge",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "llama-paper": "llama_paper",
+}
+
+ARCH_IDS = tuple(k for k in _MODULES if k != "llama-paper")
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(_MODULES)}")
+    return importlib.import_module(f".{_MODULES[arch_id]}", __package__)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_smoke_config(arch_id: str) -> ArchConfig:
+    return _module(arch_id).smoke_config()
+
+
+__all__ = [
+    "ArchConfig", "ShapeConfig", "SHAPES", "SHAPE_BY_NAME",
+    "ARCH_IDS", "get_config", "get_smoke_config", "cell_supported",
+]

@@ -1,0 +1,157 @@
+"""ArchConfig — one schema covering all 10 assigned architecture families.
+
+Every src/repro/configs/<id>.py exposes
+    CONFIG: ArchConfig            the full published configuration
+    smoke_config() -> ArchConfig  a reduced same-family config for CPU tests
+and the registry in configs/__init__.py maps --arch <id> to them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 64           # N
+    head_dim: int = 64            # P
+    expand: int = 2               # d_inner = expand * d_model
+    conv_width: int = 4
+    chunk: int = 128              # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class XLSTMConfig:
+    slstm_every: int = 8          # xLSTM[7:1] layout: every 8th block is sLSTM
+    proj_factor_mlstm: float = 2.0
+    proj_factor_slstm: float = 1.3333
+    # mLSTM chunk length. The matrix memory is (hd × hd) per head, so the
+    # stacked inter-chunk states cost L/chunk · H · hd² bytes while the
+    # intra-chunk panels cost L · chunk · H bytes — chunk ≈ hd balances them
+    # (§Perf hillclimb: 128 → 512 cut per-device HBM traffic ~5× at hd=1024).
+    chunk: int = 512
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                       # dense | moe | hybrid | ssm | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    # attention details
+    head_dim: Optional[int] = None    # default d_model // n_heads
+    qk_norm: bool = False
+    rotary_pct: float = 1.0
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None   # SWA width; None = full attention
+    causal: bool = True                    # False for encoder-only (hubert)
+    norm: str = "rmsnorm"                  # rmsnorm | layernorm
+    mlp: str = "swiglu"                    # swiglu | gelu
+    tie_embeddings: bool = False
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    xlstm: Optional[XLSTMConfig] = None
+    attn_every: int = 0               # hybrid: every k-th layer is (shared) attention
+    shared_attn: bool = False         # zamba2: attention block weights are shared
+    # modality frontend stubs
+    frontend: str = "none"            # none | vision_stub | audio_stub
+    n_frontend_tokens: int = 0        # patches / frames provided by input_specs()
+    # numerics / training
+    dtype: str = "bfloat16"
+    param_dtype: str = "float32"
+    remat: bool = True                # activation checkpointing per block
+    max_seq_len: int = 32768
+    # distribution hints
+    fsdp: bool = False                # shard params over the data axis too
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim is not None else self.d_model // self.n_heads
+
+    @property
+    def subquadratic(self) -> bool:
+        """Can this arch decode at 500k tokens? (SSM/recurrent/SWA only.)"""
+        if self.family in ("ssm", "hybrid"):
+            return True
+        return self.sliding_window is not None
+
+    @property
+    def has_decode(self) -> bool:
+        return self.causal  # encoder-only archs have no autoregressive decode
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings + blocks + head)."""
+        d, f, V = self.d_model, self.d_ff, self.vocab
+        hd, H, KV = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * (H * hd) + 2 * d * (KV * hd) + (H * hd) * d
+        if self.mlp == "swiglu":
+            mlp = 3 * d * f
+        else:
+            mlp = 2 * d * f
+        if self.moe is not None:
+            mlp = self.moe.num_experts * (3 * d * f) + d * self.moe.num_experts
+        per_layer = attn + mlp + 2 * d
+        if self.family == "ssm" and self.xlstm is not None:
+            # rough: mLSTM block ~ 2*(d*2d qkv/proj) + gates
+            per_layer = 8 * d * d
+        if self.family in ("ssm", "hybrid") and self.ssm is not None:
+            d_in = self.ssm.expand * d
+            per_layer_ssm = 2 * d * d_in + d_in * d + d_in * (2 * self.ssm.state_dim)
+            if self.family == "hybrid":
+                pass  # mixture handled approximately
+            else:
+                per_layer = per_layer_ssm
+        total = self.n_layers * per_layer + V * d
+        if not self.tie_embeddings:
+            total += V * d
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of num_experts)."""
+        if self.moe is None:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        dense_experts = self.moe.num_experts * 3 * d * f
+        active_experts = self.moe.top_k * 3 * d * f
+        return self.param_count() - self.n_layers * (dense_experts - active_experts)
+
+
+# The four LM shapes assigned to every architecture.
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str        # train | prefill | decode | long_decode
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "long_decode"),
+)
+
+SHAPE_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Is (arch × shape) a runnable dry-run cell? Returns (ok, reason)."""
+    if shape.kind in ("decode", "long_decode") and not cfg.has_decode:
+        return False, "n/a-encoder (no autoregressive decode)"
+    if shape.kind == "long_decode" and not cfg.subquadratic:
+        return False, "skip-quadratic (full attention at 500k context)"
+    return True, "ok"

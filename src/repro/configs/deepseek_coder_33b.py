@@ -1,0 +1,27 @@
+"""deepseek-coder-33b [dense] — 62L d_model=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256. llama-arch. [arXiv:2401.14196; hf]
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-coder-33b",
+    family="dense",
+    n_layers=62,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=19200,
+    vocab=32256,
+    rope_theta=100_000.0,
+    fsdp=True,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=2, d_model=56, n_heads=4, n_kv_heads=2, d_ff=112,
+        vocab=256, remat=False, dtype="float32",
+    )

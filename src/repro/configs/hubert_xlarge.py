@@ -1,0 +1,33 @@
+"""hubert-xlarge [audio] — 48L d_model=1280 16H d_ff=5120 vocab=504.
+Encoder-only (bidirectional), same arch as wav2vec2; the CNN feature
+extractor is a STUB (input_specs() provides precomputed frame embeddings).
+No autoregressive decode — decode shapes are n/a (DESIGN.md §4).
+[arXiv:2106.07447; unverified]
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=5120,
+    vocab=504,
+    causal=False,
+    rotary_pct=0.0,          # hubert uses (stubbed) conv positional embeddings
+    norm="layernorm",
+    mlp="gelu",
+    frontend="audio_stub",
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=32, remat=False, dtype="float32",
+    )

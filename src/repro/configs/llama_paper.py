@@ -1,0 +1,36 @@
+"""The paper's own pre-training LLaMA configs (Table 3: 60M/130M/350M/1B on
+C4) with the paper's r/d_model rank pairings — used by the pre-training
+benchmark and the end-to-end example drivers."""
+import dataclasses
+
+from .base import ArchConfig
+
+_BASE = dict(
+    family="dense",
+    n_kv_heads=None,   # filled per-size (MHA in the paper)
+    vocab=32000,
+    rope_theta=10000.0,
+)
+
+
+def _llama(name, n_layers, d_model, n_heads, d_ff, rank) -> tuple[ArchConfig, int]:
+    cfg = ArchConfig(
+        name=name, family="dense", n_layers=n_layers, d_model=d_model,
+        n_heads=n_heads, n_kv_heads=n_heads, d_ff=d_ff, vocab=32000,
+    )
+    return cfg, rank
+
+
+LLAMA_60M, RANK_60M = _llama("llama-60m", 8, 512, 8, 1376, 128)
+LLAMA_130M, RANK_130M = _llama("llama-130m", 12, 768, 12, 2048, 256)
+LLAMA_350M, RANK_350M = _llama("llama-350m", 24, 1024, 16, 2736, 256)
+LLAMA_1B, RANK_1B = _llama("llama-1b", 24, 2048, 32, 5461, 512)
+
+CONFIG = LLAMA_130M   # registry default for --arch llama-paper
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        LLAMA_60M, n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+        d_ff=128, vocab=256, remat=False, dtype="float32",
+    )

@@ -1,0 +1,35 @@
+"""llava-next-mistral-7b [vlm] — Mistral-7B backbone + anyres vision stub.
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000.
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+The vision tower is a STUB per the assignment: input_specs() provides
+precomputed anyres patch embeddings (n_frontend_tokens of them) already at
+d_model width; the backbone (the part that trains/serves) is full-fidelity.
+"""
+import dataclasses
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b",
+    family="vlm",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    rope_theta=1_000_000.0,
+    frontend="vision_stub",
+    n_frontend_tokens=576,        # one anyres base tile (24×24 patches)
+    fsdp=True,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+        vocab=256, n_frontend_tokens=8, remat=False, dtype="float32",
+    )

@@ -1,0 +1,31 @@
+"""xlstm-1.3b [ssm] — 48 blocks d_model=2048 4H vocab=50304, xLSTM[7:1]
+layout (every 8th block sLSTM, rest mLSTM). d_ff=0: blocks carry their own
+internal up/down projections (proj factor 2 mLSTM, 4/3 sLSTM).
+[arXiv:2405.04517; unverified]
+
+Recurrent — O(1) decode state; designated long_500k cell.
+"""
+import dataclasses
+
+from .base import ArchConfig, XLSTMConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=0,
+    vocab=50304,
+    xlstm=XLSTMConfig(slstm_every=8),
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=4, d_model=64, n_heads=2, n_kv_heads=2,
+        vocab=256, xlstm=XLSTMConfig(slstm_every=2),
+        remat=False, dtype="float32",
+    )

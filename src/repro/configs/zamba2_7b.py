@@ -1,0 +1,38 @@
+"""zamba2-7b [hybrid] — 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64. Mamba2 backbone + SHARED attention block applied
+every 6 mamba blocks. [arXiv:2411.15242; unverified]
+
+The shared attention block uses a 4096 sliding window at long context so
+long_500k decode is O(window) — this is one of the designated sub-quadratic
+long-context cells (DESIGN.md §4).
+"""
+import dataclasses
+
+from .base import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab=32000,
+    sliding_window=4096,
+    ssm=SSMConfig(state_dim=64, head_dim=64, expand=2, conv_width=4, chunk=128),
+    attn_every=6,
+    shared_attn=True,
+    fsdp=True,
+)
+
+
+def smoke_config() -> ArchConfig:
+    return dataclasses.replace(
+        CONFIG,
+        n_layers=5, d_model=64, n_heads=4, n_kv_heads=4, d_ff=128,
+        vocab=256, sliding_window=32,
+        ssm=SSMConfig(state_dim=8, head_dim=16, expand=2, conv_width=4, chunk=16),
+        attn_every=2,
+        remat=False, dtype="float32",
+    )

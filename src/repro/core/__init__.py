@@ -1,0 +1,46 @@
+"""repro.core — SUMO and baseline optimizers (the paper's contribution)."""
+from .adamw import adamw, adamw_optimizer
+from .galore import GaloreConfig, galore, galore_optimizer
+from .lora import LoraConfig, apply_lora, extract_adapter, init_lora_params
+from .memory import analytic_state_floats, model_memory_report, tree_state_bytes
+from .muon import muon, muon_optimizer
+from .optimizer import (
+    Schedule,
+    Transform,
+    apply_updates,
+    chain,
+    clip_by_global_norm,
+    constant_schedule,
+    global_norm,
+    multi_transform,
+    partition_params,
+)
+from .orthogonalize import (
+    condition_number,
+    effective_rank,
+    newton_schulz5,
+    newton_schulz_cubic,
+    orthogonality_error,
+    orthogonalize_polar,
+    orthogonalize_svd,
+    rank_one_residual,
+)
+from .rsvd import randomized_range_finder, randomized_svd, subspace_overlap, truncated_svd
+from .sumo import SumoConfig, SumoState, sumo, sumo_optimizer
+
+__all__ = [
+    "SumoConfig", "SumoState", "sumo", "sumo_optimizer",
+    "GaloreConfig", "galore", "galore_optimizer",
+    "muon", "muon_optimizer",
+    "adamw", "adamw_optimizer",
+    "LoraConfig", "init_lora_params", "apply_lora", "extract_adapter",
+    "Transform", "chain", "multi_transform", "partition_params",
+    "apply_updates", "clip_by_global_norm", "global_norm",
+    "Schedule", "constant_schedule",
+    "orthogonalize_svd", "orthogonalize_polar", "newton_schulz5",
+    "newton_schulz_cubic", "condition_number", "effective_rank",
+    "rank_one_residual", "orthogonality_error",
+    "randomized_range_finder", "randomized_svd", "truncated_svd",
+    "subspace_overlap",
+    "analytic_state_floats", "model_memory_report", "tree_state_bytes",
+]

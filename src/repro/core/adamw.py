@@ -1,0 +1,72 @@
+"""AdamW (decoupled weight decay) — the full-state baseline and the fallback
+optimizer for non-matrix params under SUMO / Muon / GaLore."""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: opt.PyTree       # 1st moment
+    nu: opt.PyTree       # 2nd moment
+
+
+def adamw(
+    learning_rate: Union[float, Callable],
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+) -> opt.Transform:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda s: jnp.asarray(learning_rate))
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            mu=opt.tree_map_not_none(zeros, params),
+            nu=opt.tree_map_not_none(zeros, params),
+        )
+
+    def update(grads, state: AdamWState, params=None):
+        step = state.step + 1
+        lr = lr_fn(state.step).astype(jnp.float32)
+        c1 = 1.0 - b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        mu = opt.tree_map_not_none(
+            lambda g, m: b1 * m + (1 - b1) * g.astype(jnp.float32), grads, state.mu
+        )
+        nu = opt.tree_map_not_none(
+            lambda g, v: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            grads,
+            state.nu,
+        )
+
+        def _upd(m, v, p):
+            d = -lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if weight_decay > 0.0 and p is not None:
+                d = d - lr * weight_decay * p.astype(jnp.float32)
+            return d
+
+        if params is not None:
+            updates = jax.tree_util.tree_map(
+                lambda m, v, p: None if m is None else _upd(m, v, p),
+                mu, nu, params, is_leaf=lambda x: x is None,
+            )
+        else:
+            updates = opt.tree_map_not_none(lambda m, v: _upd(m, v, None), mu, nu)
+        return updates, AdamWState(step=step, mu=mu, nu=nu)
+
+    return opt.Transform(init, update)
+
+
+def adamw_optimizer(learning_rate, params, **kw) -> opt.Transform:
+    """Plain AdamW over the whole tree (the 'Full Fine-Tuning' baseline)."""
+    del params
+    return adamw(learning_rate, **kw)

@@ -1,0 +1,174 @@
+"""GaLore baseline (Zhao et al. 2024): low-rank gradient projection with Adam
+moments kept IN the projected subspace. State per matrix: Q (long·r) plus two
+r×short Adam moments (vs. SUMO's single moment) — paper Table 1's `2nr + mr`.
+
+Differences from SUMO (deliberate, faithful to GaLore):
+  * two Adam moments in the subspace, element-wise preconditioning
+  * NO moment rotation on subspace refresh (moments silently live in the
+    stale basis — the pathology SUMO's Block 1.1 fixes)
+  * NO orthogonalization of the update
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt
+from .rsvd import randomized_range_finder
+
+PyTree = opt.PyTree
+
+
+class GaloreState(NamedTuple):
+    step: jnp.ndarray
+    key: jax.Array
+    Q: PyTree
+    mu: PyTree
+    nu: PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class GaloreConfig:
+    rank: int = 128
+    update_freq: int = 200
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    alpha: float = 0.25        # GaLore's projection-back scale
+    weight_decay: float = 0.0
+    rsvd_iters: int = 2
+    seed: int = 0
+
+
+def galore(learning_rate: Union[float, Callable], config: GaloreConfig = GaloreConfig()) -> opt.Transform:
+    cfg = config
+    lr_fn = learning_rate if callable(learning_rate) else (lambda s: jnp.asarray(learning_rate))
+
+    def _leaf_init(leaf):
+        if leaf is None:
+            return None, None, None
+        m, n = leaf.shape[-2], leaf.shape[-1]
+        long_d, short_d = (n, m) if m < n else (m, n)
+        r = max(1, min(cfg.rank, min(m, n)))
+        batch = leaf.shape[:-2]
+        return (
+            jnp.zeros(batch + (long_d, r), jnp.float32),
+            jnp.zeros(batch + (r, short_d), jnp.float32),
+            jnp.zeros(batch + (r, short_d), jnp.float32),
+        )
+
+    def init(params):
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        triples = [_leaf_init(l) for l in leaves]
+        unflat = lambda i: jax.tree_util.tree_unflatten(treedef, [t[i] for t in triples])
+        return GaloreState(
+            step=jnp.zeros((), jnp.int32),
+            key=jax.random.PRNGKey(cfg.seed),
+            Q=unflat(0),
+            mu=unflat(1),
+            nu=unflat(2),
+        )
+
+    def _matrix(G, Q, mu, nu, lr, c1, c2, do_refresh, key, W):
+        m, n = G.shape
+        transpose = m < n
+        Gl = G.T if transpose else G
+        r = Q.shape[1]
+
+        Q = jax.lax.cond(
+            do_refresh,
+            lambda _: randomized_range_finder(Gl, key, r, n_iter=cfg.rsvd_iters),
+            lambda _: Q,
+            operand=None,
+        )
+        G_hat = Q.T @ Gl                                  # (r, short)
+        mu = cfg.b1 * mu + (1 - cfg.b1) * G_hat
+        nu = cfg.b2 * nu + (1 - cfg.b2) * jnp.square(G_hat)
+        step_hat = (mu / c1) / (jnp.sqrt(nu / c2) + cfg.eps)
+        upd = Q @ step_hat                                # (long, short)
+        if transpose:
+            upd = upd.T
+        d = -lr * cfg.alpha * upd
+        if cfg.weight_decay > 0.0 and W is not None:
+            d = d - lr * cfg.weight_decay * W.astype(jnp.float32)
+        return d, Q, mu, nu
+
+    def update(grads, state: GaloreState, params=None):
+        step = state.step + 1
+        lr = lr_fn(state.step).astype(jnp.float32)
+        c1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+        c2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+        do_refresh = (state.step % cfg.update_freq) == 0
+
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads, is_leaf=lambda x: x is None)
+        leaves_Q = treedef.flatten_up_to(state.Q)
+        leaves_mu = treedef.flatten_up_to(state.mu)
+        leaves_nu = treedef.flatten_up_to(state.nu)
+        leaves_p = (
+            treedef.flatten_up_to(params) if params is not None else [None] * len(leaves_g)
+        )
+        keys = jax.random.split(state.key, len(leaves_g) + 1)
+        new_key, leaf_keys = keys[0], keys[1:]
+
+        out = {"u": [], "Q": [], "mu": [], "nu": []}
+        for g, Q, mu, nu, p, k in zip(
+            leaves_g, leaves_Q, leaves_mu, leaves_nu, leaves_p, leaf_keys
+        ):
+            if g is None:
+                for v in out.values():
+                    v.append(None)
+                continue
+            g32 = g.astype(jnp.float32)
+            if g.ndim == 2:
+                d, Qn, mun, nun = _matrix(g32, Q, mu, nu, lr, c1, c2, do_refresh, k, p)
+            else:
+                bs = g.shape[:-2]
+                fn = jax.vmap(
+                    lambda G_, Q_, m_, v_, k_, W_: _matrix(
+                        G_, Q_, m_, v_, lr, c1, c2, do_refresh, k_, W_
+                    )
+                )
+                gb = g32.reshape((-1,) + g.shape[-2:])
+                pb = (
+                    p.astype(jnp.float32).reshape((-1,) + p.shape[-2:])
+                    if p is not None else jnp.zeros_like(gb)
+                )
+                d, Qn, mun, nun = fn(
+                    gb,
+                    Q.reshape((-1,) + Q.shape[-2:]),
+                    mu.reshape((-1,) + mu.shape[-2:]),
+                    nu.reshape((-1,) + nu.shape[-2:]),
+                    jax.random.split(k, gb.shape[0]),
+                    pb,
+                )
+                d = d.reshape(g.shape)
+                Qn = Qn.reshape(bs + Qn.shape[-2:])
+                mun = mun.reshape(bs + mun.shape[-2:])
+                nun = nun.reshape(bs + nun.shape[-2:])
+            out["u"].append(d); out["Q"].append(Qn)
+            out["mu"].append(mun); out["nu"].append(nun)
+
+        unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        return unflat(out["u"]), GaloreState(
+            step=step, key=new_key, Q=unflat(out["Q"]),
+            mu=unflat(out["mu"]), nu=unflat(out["nu"]),
+        )
+
+    return opt.Transform(init, update)
+
+
+def galore_optimizer(learning_rate, params, config: GaloreConfig = GaloreConfig(),
+                     fallback_lr=None) -> opt.Transform:
+    from .adamw import adamw
+
+    labels = opt.partition_params(params)
+    return opt.multi_transform(
+        {
+            "matrix": galore(learning_rate, config),
+            "fallback": adamw(fallback_lr if fallback_lr is not None else learning_rate),
+        },
+        labels,
+    )

@@ -1,0 +1,83 @@
+"""LoRA baseline: rank-r adapters W + (alpha/r)·B A on 2D matrices, trained
+with AdamW while base weights stay frozen. Also the post-hoc adapter
+extraction of paper Appendix B (Δ = W_ft − W_pre factorized at rank(Δ)).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt
+from .rsvd import truncated_svd
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class LoraConfig:
+    rank: int = 8
+    alpha: float = 16.0
+    seed: int = 0
+
+
+def init_lora_params(params: PyTree, config: LoraConfig = LoraConfig()) -> PyTree:
+    """Create {path: (A, B)} adapters for every matrix param. A is gaussian,
+    B is zero (so the adapted model starts exactly at the base model)."""
+    labels = opt.partition_params(params)
+    key = jax.random.PRNGKey(config.seed)
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    lab_leaves = treedef.flatten_up_to(labels)
+    keys = jax.random.split(key, len(leaves))
+
+    adapters = []
+    for leaf, lab, k in zip(leaves, lab_leaves, keys):
+        if lab != "matrix" or leaf.ndim != 2:
+            adapters.append(None)
+            continue
+        m, n = leaf.shape
+        r = min(config.rank, min(m, n))
+        A = jax.random.normal(k, (r, n), jnp.float32) / jnp.sqrt(n)
+        B = jnp.zeros((m, r), jnp.float32)
+        adapters.append({"A": A, "B": B})
+    return jax.tree_util.tree_unflatten(treedef, adapters)
+
+
+def _is_adapter(x) -> bool:
+    return x is None or (isinstance(x, dict) and set(x.keys()) == {"A", "B"})
+
+
+def apply_lora(params: PyTree, adapters: PyTree, config: LoraConfig = LoraConfig()) -> PyTree:
+    """Effective weights W + (alpha/r)·B A."""
+
+    def merge(ad, p):
+        if ad is None:
+            return p
+        scale = config.alpha / ad["A"].shape[0]
+        return p + (scale * (ad["B"] @ ad["A"])).astype(p.dtype)
+
+    # map over the ADAPTER tree (its {A,B} dicts / Nones are the leaves) and
+    # zip the matching param subtrees in as the second argument
+    return jax.tree_util.tree_map(merge, adapters, params, is_leaf=_is_adapter)
+
+
+def extract_adapter(w_pre: jnp.ndarray, w_ft: jnp.ndarray, rank: int):
+    """Post-hoc adapter extraction (paper App. B): factorize Δ = B A at rank r
+    via truncated SVD (the global optimum of the Frobenius factorization)."""
+    delta = (w_ft - w_pre).astype(jnp.float32)
+    U, s, Vt = truncated_svd(delta, rank)
+    B = U * jnp.sqrt(s)[None, :]
+    A = jnp.sqrt(s)[:, None] * Vt
+    return A, B
+
+
+def lora_param_count(params: PyTree, config: LoraConfig = LoraConfig()) -> int:
+    adapters = init_lora_params(params, config)
+    return sum(
+        int(l.size)
+        for l in jax.tree_util.tree_leaves(adapters)
+        if l is not None
+    )

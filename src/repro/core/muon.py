@@ -1,0 +1,93 @@
+"""Muon baseline (Jordan et al. 2024): full-space momentum + Newton-Schulz5
+orthogonalization, with Moonlight's weight-decay + rms update scaling.
+
+Paper role: the convergence-rate comparison of Lemma 3.3 — Muon pays the NS5
+approximation error δ in full space; SUMO removes it by exact orthogonalization
+in the subspace. State is the full-shape momentum (mn floats per matrix).
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt
+from .orthogonalize import newton_schulz5, orthogonalize_polar
+
+
+class MuonState(NamedTuple):
+    step: jnp.ndarray
+    momentum: opt.PyTree
+
+
+def muon(
+    learning_rate: Union[float, Callable],
+    beta: float = 0.95,
+    weight_decay: float = 0.0,
+    ns_steps: int = 5,
+    rms_scale: bool = True,
+    nesterov: bool = True,
+    exact: bool = False,   # exact=True -> SVD/polar orthogonalization (ablation)
+) -> opt.Transform:
+    lr_fn = learning_rate if callable(learning_rate) else (lambda s: jnp.asarray(learning_rate))
+
+    def init(params):
+        return MuonState(
+            step=jnp.zeros((), jnp.int32),
+            momentum=opt.tree_map_not_none(
+                lambda p: jnp.zeros_like(p, dtype=jnp.float32), params
+            ),
+        )
+
+    def _orth2d(M):
+        return orthogonalize_polar(M) if exact else newton_schulz5(M, steps=ns_steps)
+
+    def _leaf(g, m, p, lr):
+        g32 = g.astype(jnp.float32)
+        m_new = beta * m + g32
+        direction = beta * m_new + g32 if nesterov else m_new
+        if direction.ndim == 2:
+            O = _orth2d(direction)
+        else:
+            flat = direction.reshape((-1,) + direction.shape[-2:])
+            O = jax.vmap(_orth2d)(flat).reshape(direction.shape)
+        rows, cols = g.shape[-2], g.shape[-1]
+        scale = 0.2 * jnp.sqrt(float(max(rows, cols))) if rms_scale else 1.0
+        d = -lr * scale * O
+        if weight_decay > 0.0 and p is not None:
+            d = d - lr * weight_decay * p.astype(jnp.float32)
+        return d, m_new
+
+    def update(grads, state: MuonState, params=None):
+        lr = lr_fn(state.step).astype(jnp.float32)
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads, is_leaf=lambda x: x is None)
+        leaves_m = treedef.flatten_up_to(state.momentum)
+        leaves_p = (
+            treedef.flatten_up_to(params) if params is not None else [None] * len(leaves_g)
+        )
+        out_u, out_m = [], []
+        for g, m, p in zip(leaves_g, leaves_m, leaves_p):
+            if g is None:
+                out_u.append(None); out_m.append(None)
+                continue
+            d, m_new = _leaf(g, m, p, lr)
+            out_u.append(d); out_m.append(m_new)
+        unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        return unflat(out_u), MuonState(step=state.step + 1, momentum=unflat(out_m))
+
+    return opt.Transform(init, update)
+
+
+def muon_optimizer(learning_rate, params, fallback_lr=None, **kw) -> opt.Transform:
+    """Muon on matrices + AdamW on the rest (the standard Muon deployment)."""
+    from .adamw import adamw
+
+    labels = opt.partition_params(params)
+    return opt.multi_transform(
+        {
+            "matrix": muon(learning_rate, **kw),
+            "fallback": adamw(fallback_lr if fallback_lr is not None else learning_rate),
+        },
+        labels,
+    )

@@ -1,0 +1,221 @@
+"""Optimizer framework: a minimal, optax-like GradientTransformation protocol.
+
+Everything is a pure-functional pair (init_fn, update_fn) over pytrees so it
+composes with jit / shard_map / donate_argnums. We deliberately do NOT depend
+on optax (not installed in the target container) — the protocol is a strict
+subset, so swapping optax in later is trivial.
+
+Parameter classification
+------------------------
+SUMO / Muon / GaLore apply only to 2D "reversible-layer" matrices (attention &
+MLP projections, expert matrices). Embeddings, unembedding, norms, biases and
+other <2D or excluded tensors fall back to AdamW — exactly the practice in the
+Muon and GaLore papers. Classification is name+shape based and overridable
+per-config via ``matrix_rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Transform(NamedTuple):
+    """A pure gradient transformation: state = init(params);
+    updates, state = update(grads, state, params)."""
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, Optional[PyTree]], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    """W <- W + update (updates already carry their sign)."""
+    return jax.tree_util.tree_map(
+        lambda p, u: (p + u.astype(p.dtype)) if u is not None else p,
+        params,
+        updates,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def chain(*transforms: Transform) -> Transform:
+    """Compose transforms left-to-right (like optax.chain)."""
+
+    def init(params):
+        return tuple(t.init(params) for t in transforms)
+
+    def update(grads, state, params=None):
+        new_states = []
+        for t, s in zip(transforms, state):
+            grads, s = t.update(grads, s, params)
+            new_states.append(s)
+        return grads, tuple(new_states)
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Parameter classification
+# ---------------------------------------------------------------------------
+
+# Path substrings that force the AdamW fallback even for 2D tensors.
+_DEFAULT_FALLBACK_PATTERNS = (
+    r"embed",        # token / position / patch embeddings
+    r"lm_head",      # unembedding
+    r"unembed",
+    r"norm",         # rmsnorm / layernorm scales
+    r"bias",
+    r"A_log",        # mamba SSM params
+    r"\bD\b",
+    r"dt_",
+    r"conv1d",       # short conv kernels
+    r"router_bias",
+)
+
+
+def path_str(path) -> str:
+    """Render a tree_util key path into 'a/b/c' form."""
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def is_matrix_param(path: str, leaf: jnp.ndarray,
+                    fallback_patterns=_DEFAULT_FALLBACK_PATTERNS) -> bool:
+    """True if this leaf should receive the matrix optimizer (SUMO/Muon/GaLore).
+
+    Rules: ndim >= 2 (3D expert stacks count — they vmap over the leading
+    axis), both trailing dims > 1, and no fallback pattern matches the path.
+    """
+    if leaf.ndim < 2:
+        return False
+    if leaf.shape[-1] <= 1 or leaf.shape[-2] <= 1:
+        return False
+    for pat in fallback_patterns:
+        if re.search(pat, path):
+            return False
+    return True
+
+
+def partition_params(params: PyTree, fallback_patterns=_DEFAULT_FALLBACK_PATTERNS):
+    """Return a pytree of labels: 'matrix' | 'fallback' matching params."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: "matrix"
+        if is_matrix_param(path_str(path), leaf, fallback_patterns)
+        else "fallback",
+        params,
+    )
+
+
+def multi_transform(transforms: dict[str, Transform], labels: PyTree) -> Transform:
+    """Route each leaf to the transform named by its label (optax.multi_transform).
+
+    States are kept per-label as full pytrees with None at non-matching leaves,
+    which keeps everything jit-compatible (structure is static).
+    """
+
+    labels_flat = jax.tree_util.tree_leaves(labels)
+    names = sorted(set(labels_flat))
+    for n in names:
+        if n not in transforms:
+            raise KeyError(f"label {n!r} has no transform (have {list(transforms)})")
+
+    def _mask(tree, name):
+        return jax.tree_util.tree_map(
+            lambda leaf, lab: leaf if lab == name else None, tree, labels
+        )
+
+    def _merge(trees):
+        """Merge per-label trees (None elsewhere) back into one tree."""
+        def pick(*leaves):
+            for l in leaves:
+                if l is not None:
+                    return l
+            return None
+        return jax.tree_util.tree_map(pick, *trees, is_leaf=lambda x: x is None)
+
+    def init(params):
+        return {n: transforms[n].init(_mask(params, n)) for n in names}
+
+    def update(grads, state, params=None):
+        outs, new_state = [], {}
+        for n in names:
+            g_n = _mask(grads, n)
+            p_n = _mask(params, n) if params is not None else None
+            u_n, s_n = transforms[n].update(g_n, state[n], p_n)
+            outs.append(u_n)
+            new_state[n] = s_n
+        return _merge(outs), new_state
+
+    return Transform(init, update)
+
+
+# ---------------------------------------------------------------------------
+# Generic helpers shared by optimizers
+# ---------------------------------------------------------------------------
+
+def tree_map_not_none(fn, *trees):
+    """tree_map over trees that may contain None leaves (masked subsets)."""
+    return jax.tree_util.tree_map(
+        lambda *ls: None if ls[0] is None else fn(*ls),
+        *trees,
+        is_leaf=lambda x: x is None,
+    )
+
+
+def global_norm(tree: PyTree) -> jnp.ndarray:
+    leaves = [l for l in jax.tree_util.tree_leaves(tree) if l is not None]
+    if not leaves:
+        return jnp.zeros(())
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params=None):
+        gn = global_norm(grads)
+        scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+        return tree_map_not_none(lambda g: g * scale, grads), state
+
+    return Transform(init, update)
+
+
+@dataclasses.dataclass(frozen=True)
+class Schedule:
+    """Warmup-cosine LR schedule (the paper's training recipe default)."""
+
+    peak_lr: float
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    final_frac: float = 0.1
+
+    def __call__(self, step: jnp.ndarray) -> jnp.ndarray:
+        step = step.astype(jnp.float32)
+        warm = self.peak_lr * step / jnp.maximum(1.0, self.warmup_steps)
+        prog = jnp.clip(
+            (step - self.warmup_steps)
+            / jnp.maximum(1.0, self.total_steps - self.warmup_steps),
+            0.0,
+            1.0,
+        )
+        cos = self.final_frac + (1 - self.final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < self.warmup_steps, warm, self.peak_lr * cos)
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)

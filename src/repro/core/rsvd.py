@@ -1,0 +1,82 @@
+"""Truncated randomized SVD (Halko, Martinsson, Tropp 2010) — jittable.
+
+Used by SUMO / GaLore Block 1 to compute the rank-r orthonormal basis Q of the
+gradient every K steps at O(mnr + mr^2) instead of full-SVD O(mn^2).
+
+All functions are pure and jit/vmap/shard_map friendly. The only non-matmul
+op is the QR factorization of the m×r (or n×r) sketch.
+
+Distributed note: G may be sharded over its rows (model axis). ``G @ Omega``
+and ``G.T @ Y`` are tall-skinny matmuls that pjit auto-partitions with a
+single reduce-scatter/all-gather of an r-width panel — this is why the
+subspace refresh costs O(r(m+n)) in collective bytes, not O(mn).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def _orthonormalize(Y: jnp.ndarray) -> jnp.ndarray:
+    """Thin-QR orthonormal basis of range(Y). Y: (m, r) -> Q: (m, r)."""
+    Q, _ = jnp.linalg.qr(Y.astype(jnp.float32))
+    return Q
+
+
+@partial(jax.jit, static_argnames=("rank", "n_iter", "oversample"))
+def randomized_range_finder(
+    G: jnp.ndarray,
+    key: jax.Array,
+    rank: int,
+    n_iter: int = 2,
+    oversample: int = 4,
+) -> jnp.ndarray:
+    """Rank-`rank` orthonormal basis Q (m × rank) of the row space of G (m × n).
+
+    Power iteration (n_iter) sharpens the spectrum separation; oversampling
+    improves accuracy then truncates back to `rank`.
+    """
+    m, n = G.shape
+    l = min(rank + oversample, min(m, n))
+    G32 = G.astype(jnp.float32)
+    Omega = jax.random.normal(key, (n, l), dtype=jnp.float32)
+    Y = G32 @ Omega                       # (m, l)
+    Q = _orthonormalize(Y)
+    for _ in range(n_iter):
+        # subspace/power iteration with re-orthonormalization for stability
+        Z = G32.T @ Q                     # (n, l)
+        Z = _orthonormalize(Z)
+        Y = G32 @ Z                       # (m, l)
+        Q = _orthonormalize(Y)
+    return Q[:, :rank]
+
+
+@partial(jax.jit, static_argnames=("rank", "n_iter", "oversample"))
+def randomized_svd(
+    G: jnp.ndarray,
+    key: jax.Array,
+    rank: int,
+    n_iter: int = 2,
+    oversample: int = 4,
+):
+    """Truncated rSVD: returns (U (m,r), s (r,), Vt (r,n))."""
+    Q = randomized_range_finder(G, key, rank, n_iter, oversample)  # (m, r)
+    B = Q.T @ G.astype(jnp.float32)       # (r, n) — small
+    Ub, s, Vt = jnp.linalg.svd(B, full_matrices=False)
+    U = Q @ Ub
+    return U[:, :rank], s[:rank], Vt[:rank]
+
+
+@partial(jax.jit, static_argnames=("rank",))
+def truncated_svd(G: jnp.ndarray, rank: int):
+    """Exact truncated SVD (reference / small matrices)."""
+    U, s, Vt = jnp.linalg.svd(G.astype(jnp.float32), full_matrices=False)
+    return U[:, :rank], s[:rank], Vt[:rank]
+
+
+def subspace_overlap(Q1: jnp.ndarray, Q2: jnp.ndarray) -> jnp.ndarray:
+    """‖Q1ᵀQ2‖_F² / r ∈ [0,1] — how aligned two orthonormal bases are."""
+    r = Q1.shape[1]
+    return jnp.sum(jnp.square(Q1.T @ Q2)) / r

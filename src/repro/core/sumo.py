@@ -1,0 +1,283 @@
+"""SUMO: Subspace-Aware Moment-Orthogonalization (paper Algorithm 1).
+
+Per 2D weight W (m×n) the optimizer keeps
+  * Q  — rank-r orthonormal basis of the gradient's long dimension, refreshed
+         every K steps with truncated randomized SVD          (Block 1)
+  * M  — the single first-order moment in the projected space (r × short_dim)
+  * prev_norm — ‖O_{t-1}‖_F for the norm-growth limiter       (Block 3)
+
+Update (Def. C.1):
+  refresh (t ≡ 0 mod K):  Q_new = rSVD_r(G);  M ← (Q_newᵀ Q_old) M   (Block 1.1)
+  Ĝ = Qᵀ G                                                    (project)
+  M ← β M + (1-β) Ĝ                                           (moment)
+  O = orth(M)            exact polar/SVD, or NS5 for ablation (Block 2)
+  O ← limiter(O)         if ‖O‖/‖O_prev‖ > γ, rescale         (Block 3)
+  W ← W − η·(α·scale)·Q O − η·λ·W                             (Block 4)
+
+Shape convention: we always project the LONGER side, so the moment is
+(r × min(m,n)) and the subspace basis is (max(m,n) × r). For m < n this is
+the paper's "projection from the right" remark. 3D expert stacks (E, m, n)
+are handled by vmapping the per-matrix rule over the leading axis.
+
+Everything is jit-safe: the K-step refresh runs under ``jax.lax.cond`` so the
+rSVD cost is paid only on refresh steps.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from . import optimizer as opt
+from .orthogonalize import newton_schulz5, orthogonalize_polar, orthogonalize_svd
+from .rsvd import randomized_range_finder
+
+PyTree = opt.PyTree
+
+
+class SumoState(NamedTuple):
+    step: jnp.ndarray          # ()
+    key: jax.Array             # rng for rSVD sketches
+    Q: PyTree                  # per-leaf (long, r) bases (None on fallback leaves)
+    M: PyTree                  # per-leaf (r, short) moments
+    prev_norm: PyTree          # per-leaf () limiter memory
+
+
+@dataclasses.dataclass(frozen=True)
+class SumoConfig:
+    rank: int = 128
+    update_freq: int = 200          # K
+    beta: float = 0.95              # moment decay (paper uses convex combination)
+    alpha: float = 1.0              # projection-back scale factor
+    weight_decay: float = 0.0
+    gamma: float = 1.1              # norm-growth limiter threshold
+    orth_method: str = "polar"      # polar | svd | ns5
+    ns_steps: int = 5
+    rsvd_iters: int = 2
+    rsvd_oversample: int = 4
+    rms_scale: bool = True          # multiply update by 0.2·√max(m,n) (Moonlight)
+    seed: int = 0
+    # Alg. 1's alternative refresh criterion ("‖Ĝ‖ ≤ ς", the T_ℓ times of
+    # Theorem 3.8): ALSO refresh when the current basis captures less than
+    # `refresh_quality` of the gradient's energy, ‖QᵀG‖_F < ς·‖G‖_F.
+    # 0.0 disables (pure every-K refresh).
+    refresh_quality: float = 0.0
+
+
+def _orth(cfg: SumoConfig, M: jnp.ndarray) -> jnp.ndarray:
+    if cfg.orth_method == "polar":
+        return orthogonalize_polar(M)
+    if cfg.orth_method == "svd":
+        return orthogonalize_svd(M)
+    if cfg.orth_method == "ns5":
+        return newton_schulz5(M, steps=cfg.ns_steps)
+    raise ValueError(f"unknown orth_method {cfg.orth_method!r}")
+
+
+def _leaf_rank(cfg: SumoConfig, shape) -> int:
+    """Effective rank for one matrix: never above the short dim."""
+    m, n = shape[-2], shape[-1]
+    return max(1, min(cfg.rank, min(m, n)))
+
+
+def _matrix_update(
+    cfg: SumoConfig,
+    G: jnp.ndarray,           # (m, n) fp32
+    Q: jnp.ndarray,           # (long, r)
+    M: jnp.ndarray,           # (r, short)
+    prev_norm: jnp.ndarray,   # ()
+    lr: jnp.ndarray,
+    do_refresh: jnp.ndarray,  # bool
+    key: jax.Array,
+    W: Optional[jnp.ndarray],
+):
+    """One SUMO step for a single 2D matrix. Returns (delta, Q, M, prev_norm)."""
+    m, n = G.shape
+    transpose = m < n            # static
+    Gl = G.T if transpose else G      # (long, short)
+    r = Q.shape[1]
+
+    # Alg. 1 alternative criterion: refresh when the stale basis captures too
+    # little of the current gradient (‖QᵀG‖ < ς‖G‖).
+    if cfg.refresh_quality > 0.0:
+        g_norm = jnp.linalg.norm(Gl) + 1e-12
+        cap = jnp.linalg.norm(Q.T @ Gl) / g_norm
+        do_refresh = jnp.logical_or(do_refresh, cap < cfg.refresh_quality)
+
+    # ---- Block 1 + 1.1: subspace refresh & moment rotation -------------
+    def refresh(_):
+        Q_new = randomized_range_finder(
+            Gl, key, r, n_iter=cfg.rsvd_iters, oversample=cfg.rsvd_oversample
+        )
+        R = Q_new.T @ Q            # (r, r) rotation old->new basis
+        return Q_new, R @ M
+
+    def keep(_):
+        return Q, M
+
+    Q, M = jax.lax.cond(do_refresh, refresh, keep, operand=None)
+
+    # ---- project ---------------------------------------------------------
+    G_hat = Q.T @ Gl               # (r, short)
+
+    # ---- Block 2: moment + exact orthogonalization ------------------------
+    M = cfg.beta * M + (1.0 - cfg.beta) * G_hat
+    O = _orth(cfg, M)              # (r, short), orthonormal rows
+
+    # ---- Block 3: norm-growth limiter -------------------------------------
+    o_norm = jnp.linalg.norm(O)
+    first = prev_norm <= 0.0
+    cap = jnp.where(first, o_norm, cfg.gamma * prev_norm)
+    scale_lim = jnp.minimum(1.0, cap / (o_norm + 1e-12))
+    O = O * scale_lim
+    new_prev = o_norm * scale_lim
+
+    # ---- Block 4: back-project to the original space -----------------------
+    upd = Q @ O                    # (long, short)
+    if transpose:
+        upd = upd.T                # (m, n)
+    scale = cfg.alpha
+    if cfg.rms_scale:
+        scale = scale * 0.2 * jnp.sqrt(float(max(m, n)))
+    delta = -lr * scale * upd
+    if cfg.weight_decay > 0.0 and W is not None:
+        delta = delta - lr * cfg.weight_decay * W.astype(jnp.float32)
+    return delta, Q, M, new_prev
+
+
+def sumo(
+    learning_rate: Union[float, Callable],
+    config: SumoConfig = SumoConfig(),
+) -> opt.Transform:
+    """Build the SUMO transform for a tree of MATRIX params (ndim >= 2).
+
+    Leaves that are None are passed through (used under multi_transform).
+    """
+    lr_fn = learning_rate if callable(learning_rate) else (lambda s: jnp.asarray(learning_rate))
+    cfg = config
+
+    def _leaf_init(leaf):
+        if leaf is None:
+            return None, None, None
+        shape = leaf.shape
+        m, n = shape[-2], shape[-1]
+        long_d, short_d = (n, m) if m < n else (m, n)
+        r = _leaf_rank(cfg, shape)
+        batch = shape[:-2]
+        Q = jnp.zeros(batch + (long_d, r), jnp.float32)
+        M = jnp.zeros(batch + (r, short_d), jnp.float32)
+        pn = jnp.zeros(batch, jnp.float32) if batch else jnp.zeros((), jnp.float32)
+        return Q, M, pn
+
+    def init(params) -> SumoState:
+        leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        triples = [_leaf_init(l) for l in leaves]
+        unflat = lambda i: jax.tree_util.tree_unflatten(treedef, [t[i] for t in triples])
+        Qs, Ms, pns = unflat(0), unflat(1), unflat(2)
+        return SumoState(
+            step=jnp.zeros((), jnp.int32),
+            key=jax.random.PRNGKey(cfg.seed),
+            Q=Qs,
+            M=Ms,
+            prev_norm=pns,
+        )
+
+    def update(grads, state: SumoState, params=None):
+        lr = lr_fn(state.step).astype(jnp.float32)
+        do_refresh = (state.step % cfg.update_freq) == 0
+
+        leaves_g, treedef = jax.tree_util.tree_flatten(
+            grads, is_leaf=lambda x: x is None
+        )
+        leaves_Q = treedef.flatten_up_to(state.Q)
+        leaves_M = treedef.flatten_up_to(state.M)
+        leaves_pn = treedef.flatten_up_to(state.prev_norm)
+        leaves_p = (
+            treedef.flatten_up_to(params) if params is not None else [None] * len(leaves_g)
+        )
+
+        keys = jax.random.split(state.key, len(leaves_g) + 1)
+        new_key, leaf_keys = keys[0], keys[1:]
+
+        out_u, out_Q, out_M, out_pn = [], [], [], []
+        for g, Q, M, pn, p, k in zip(
+            leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p, leaf_keys
+        ):
+            if g is None:
+                out_u.append(None); out_Q.append(None)
+                out_M.append(None); out_pn.append(None)
+                continue
+            g32 = g.astype(jnp.float32)
+            if g.ndim == 2:
+                d, Qn, Mn, pnn = _matrix_update(
+                    cfg, g32, Q, M, pn, lr, do_refresh, k, p
+                )
+            else:
+                # batched expert stacks (E, m, n) (or deeper): vmap over batch
+                batch_shape = g.shape[:-2]
+                gb = g32.reshape((-1,) + g.shape[-2:])
+                Qb = Q.reshape((-1,) + Q.shape[-2:])
+                Mb = M.reshape((-1,) + M.shape[-2:])
+                pnb = pn.reshape(-1)
+                pb = (
+                    p.astype(jnp.float32).reshape((-1,) + p.shape[-2:])
+                    if p is not None
+                    else None
+                )
+                kb = jax.random.split(k, gb.shape[0])
+                fn = jax.vmap(
+                    lambda G_, Q_, M_, pn_, k_, W_: _matrix_update(
+                        cfg, G_, Q_, M_, pn_, lr, do_refresh, k_, W_
+                    ),
+                    in_axes=(0, 0, 0, 0, 0, 0 if pb is not None else None),
+                )
+                d, Qn, Mn, pnn = fn(gb, Qb, Mb, pnb, kb, pb)
+                d = d.reshape(g.shape)
+                Qn = Qn.reshape(batch_shape + Qn.shape[-2:])
+                Mn = Mn.reshape(batch_shape + Mn.shape[-2:])
+                pnn = pnn.reshape(batch_shape)
+            out_u.append(d)
+            out_Q.append(Qn)
+            out_M.append(Mn)
+            out_pn.append(pnn)
+
+        unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        new_state = SumoState(
+            step=state.step + 1,
+            key=new_key,
+            Q=unflat(out_Q),
+            M=unflat(out_M),
+            prev_norm=unflat(out_pn),
+        )
+        return unflat(out_u), new_state
+
+    return opt.Transform(init, update)
+
+
+def sumo_optimizer(
+    learning_rate,
+    params: PyTree,
+    config: SumoConfig = SumoConfig(),
+    fallback_lr: Optional[Union[float, Callable]] = None,
+    fallback_b1: float = 0.9,
+    fallback_b2: float = 0.999,
+    fallback_weight_decay: float = 0.0,
+) -> opt.Transform:
+    """SUMO on matrix params + AdamW fallback on everything else."""
+    from .adamw import adamw
+
+    labels = opt.partition_params(params)
+    return opt.multi_transform(
+        {
+            "matrix": sumo(learning_rate, config),
+            "fallback": adamw(
+                fallback_lr if fallback_lr is not None else learning_rate,
+                b1=fallback_b1,
+                b2=fallback_b2,
+                weight_decay=fallback_weight_decay,
+            ),
+        },
+        labels,
+    )

@@ -1,0 +1,4 @@
+"""repro.data — deterministic synthetic token pipeline."""
+from .pipeline import DataConfig, data_iterator, make_batch, make_sharded_batch
+
+__all__ = ["DataConfig", "make_batch", "data_iterator", "make_sharded_batch"]

@@ -1,0 +1,7 @@
+"""repro.kernels — Pallas TPU kernels for the perf-critical compute:
+fused Newton-Schulz5 (Muon/SUMO-NS5 ablation), subspace projection (Block 1),
+flash attention (model backbone). Each has a pure-jnp oracle in ref.py."""
+from . import ref
+from .ops import backproject, flash_attention, newton_schulz5, project
+
+__all__ = ["newton_schulz5", "project", "backproject", "flash_attention", "ref"]

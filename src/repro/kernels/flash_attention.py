@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: blocked online-softmax (flash) attention, forward.
+
+Tiling: grid (batch·heads, q_blocks, k_blocks) with k as the innermost axis so
+the running (max, sum, accumulator) for one q-block stays in VMEM scratch for
+the whole row of k-blocks. Causal + sliding-window masking is applied from
+the block indices; fully-masked k-blocks are skipped at grid level for the
+causal case by clamping the k range (block-sparse lower triangle).
+
+BlockSpec tiling (per program): q (1, bq, hd), k/v (1, bk, hd) in VMEM. MXU
+wants bq, bk multiples of 128 and hd ∈ {64, 128, 256}.
+
+This is the TPU adaptation of FlashAttention: the CUDA shared-memory staging
+becomes HBM→VMEM BlockSpecs, warp-level reductions become full-block vector
+ops on the VPU, and the MXU eats the (bq×hd)·(hd×bk) panels.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  n_k: int, bq: int, bk: int, causal: bool,
+                  window: int, scale: float, lk: int):
+    ki = pl.program_id(2)
+    qi = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                    # (bk, hd)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)   # (bq, bk)
+
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = k_pos < lk                      # KV padding
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > (q_pos - window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                  # (bq, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1, keepdims=True)
+    m_ref[...] = m_new
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+
+    @pl.when(ki == n_k - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: jnp.ndarray,            # (B, Lq, H, hd)
+    k: jnp.ndarray,            # (B, Lk, KV, hd)
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window=None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    B, Lq, H, hd = q.shape
+    _, Lk, KV, _ = k.shape
+    n_rep = H // KV
+    # fold heads into batch; repeat kv heads to match (GQA)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Lq, hd)
+    kf = jnp.repeat(k.transpose(0, 2, 1, 3), n_rep, axis=1).reshape(B * H, Lk, hd)
+    vf = jnp.repeat(v.transpose(0, 2, 1, 3), n_rep, axis=1).reshape(B * H, Lk, hd)
+
+    bq = min(block_q, Lq)
+    bk = min(block_k, Lk)
+    pad_q = (-Lq) % bq
+    pad_k = (-Lk) % bk
+    if pad_q:
+        qf = jnp.pad(qf, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kf = jnp.pad(kf, ((0, 0), (0, pad_k), (0, 0)))
+        vf = jnp.pad(vf, ((0, 0), (0, pad_k), (0, 0)))
+    n_q = (Lq + pad_q) // bq
+    n_k = (Lk + pad_k) // bk
+
+    kernel = functools.partial(
+        _flash_kernel, n_k=n_k, bq=bq, bk=bk, causal=causal,
+        window=(sliding_window or 0), scale=1.0 / (hd ** 0.5), lk=Lk,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, hd), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Lq + pad_q, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out[:, :Lq].reshape(B, H, Lq, hd).transpose(0, 2, 1, 3)
+    return out

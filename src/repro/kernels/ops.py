@@ -1,0 +1,53 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute in interpret mode (the kernel body
+runs as traced Python — same numerics, no Mosaic); on TPU they compile for
+real. ``interpret`` resolves automatically from the default backend.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_pallas
+from .ns5 import ns5_pallas
+from .projection import backproject_pallas, project_pallas
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("steps", "interpret"))
+def newton_schulz5(M: jnp.ndarray, steps: int = 5, interpret: bool | None = None):
+    """Fused NS5 orthogonalization. M: (..., r, n) with r <= n."""
+    itp = _auto_interpret() if interpret is None else interpret
+    return ns5_pallas(M, steps=steps, interpret=itp)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def project(Q, G, block_m: int = 1024, block_n: int = 512, interpret=None):
+    """Ĝ = Qᵀ G."""
+    itp = _auto_interpret() if interpret is None else interpret
+    return project_pallas(Q, G, block_m=block_m, block_n=block_n, interpret=itp)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "interpret"))
+def backproject(Q, O, block_m: int = 1024, block_n: int = 512, interpret=None):
+    """U = Q O."""
+    itp = _auto_interpret() if interpret is None else interpret
+    return backproject_pallas(Q, O, block_m=block_m, block_n=block_n, interpret=itp)
+
+
+@partial(jax.jit, static_argnames=("causal", "sliding_window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, causal: bool = True, sliding_window=None,
+                    block_q: int = 512, block_k: int = 512, interpret=None):
+    """Blocked online-softmax attention forward. q: (B, Lq, H, hd)."""
+    itp = _auto_interpret() if interpret is None else interpret
+    return flash_attention_pallas(
+        q, k, v, causal=causal, sliding_window=sliding_window,
+        block_q=block_q, block_k=block_k, interpret=itp,
+    )

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: tiled subspace projection  Ĝ = Qᵀ G.
+
+SUMO/GaLore Block-1 hot spot: Q (m × r) tall-skinny basis against the gradient
+G (m × n). The contraction axis is the LONG axis m (up to ~150k for vocab-
+sharded matrices), so the kernel tiles m into VMEM-sized panels and
+accumulates the (r × n-tile) partial products in a VMEM scratch accumulator —
+one pass over G (the big operand), no HBM round-trips for partials.
+
+Grid: (n_tiles, m_tiles); m is the inner (fastest) axis so the accumulator
+for a given n-tile stays live across the whole reduction.
+
+Also provides the back-projection  U = Q O  (m × n from (m×r)·(r×n)) via the
+same tiling transposed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _proj_kernel(q_ref, g_ref, o_ref, acc_ref, *, n_m: int):
+    """q_ref: (bm, r), g_ref: (bm, bn), o_ref: (r, bn), acc: (r, bn) f32."""
+    mi = pl.program_id(1)
+
+    @pl.when(mi == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        q_ref[...].astype(jnp.float32).T,
+        g_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(mi == n_m - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def project_pallas(
+    Q: jnp.ndarray,            # (m, r)
+    G: jnp.ndarray,            # (m, n)
+    block_m: int = 1024,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Ĝ = Qᵀ G -> (r, n)."""
+    m, r = Q.shape
+    m2, n = G.shape
+    assert m == m2
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        Q = jnp.pad(Q, ((0, pad_m), (0, 0)))
+        G = jnp.pad(G, ((0, pad_m), (0, 0)))
+    if pad_n:
+        G = jnp.pad(G, ((0, 0), (0, pad_n)))
+    n_m = (m + pad_m) // bm
+    n_n = (n + pad_n) // bn
+
+    kernel = functools.partial(_proj_kernel, n_m=n_m)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_n, n_m),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda ni, mi: (mi, 0)),
+            pl.BlockSpec((bm, bn), lambda ni, mi: (mi, ni)),
+        ],
+        out_specs=pl.BlockSpec((r, bn), lambda ni, mi: (0, ni)),
+        out_shape=jax.ShapeDtypeStruct(((r), n + pad_n), G.dtype),
+        scratch_shapes=[pltpu.VMEM((r, bn), jnp.float32)],
+        interpret=interpret,
+    )(Q, G)
+    return out[:, :n]
+
+
+def _backproj_kernel(q_ref, o_ref, u_ref):
+    """q_ref: (bm, r), o_ref: (r, bn), u_ref: (bm, bn). Single-shot matmul —
+    r is small, so no reduction tiling is needed."""
+    u_ref[...] = jnp.dot(
+        q_ref[...].astype(jnp.float32),
+        o_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ).astype(u_ref.dtype)
+
+
+def backproject_pallas(
+    Q: jnp.ndarray,            # (m, r)
+    O: jnp.ndarray,            # (r, n)
+    block_m: int = 1024,
+    block_n: int = 512,
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """U = Q O -> (m, n)."""
+    m, r = Q.shape
+    r2, n = O.shape
+    assert r == r2
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    pad_m = (-m) % bm
+    pad_n = (-n) % bn
+    if pad_m:
+        Q = jnp.pad(Q, ((0, pad_m), (0, 0)))
+    if pad_n:
+        O = jnp.pad(O, ((0, 0), (0, pad_n)))
+    out = pl.pallas_call(
+        _backproj_kernel,
+        grid=((m + pad_m) // bm, (n + pad_n) // bn),
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda mi, ni: (mi, 0)),
+            pl.BlockSpec((r, bn), lambda mi, ni: (0, ni)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda mi, ni: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((m + pad_m, n + pad_n), O.dtype),
+        interpret=interpret,
+    )(Q, O)
+    return out[:m, :n]

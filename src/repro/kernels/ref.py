@@ -1,0 +1,43 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NS5_A, NS5_B, NS5_C = 3.4445, -4.7750, 2.0315
+
+
+def ns5_ref(M: jnp.ndarray, steps: int = 5) -> jnp.ndarray:
+    """Quintic Newton-Schulz, batched over leading dims. M: (..., r, n), r<=n."""
+
+    def one(X):
+        X = X.astype(jnp.float32)
+        X = X / (jnp.sqrt(jnp.sum(X * X)) + 1e-7)
+        for _ in range(steps):
+            A = X @ X.T
+            B = NS5_B * A + NS5_C * (A @ A)
+            X = NS5_A * X + B @ X
+        return X
+
+    batch = M.shape[:-2]
+    if batch:
+        flat = M.reshape((-1,) + M.shape[-2:])
+        out = jax.vmap(one)(flat)
+        return out.reshape(M.shape).astype(M.dtype)
+    return one(M).astype(M.dtype)
+
+
+def project_ref(Q: jnp.ndarray, G: jnp.ndarray) -> jnp.ndarray:
+    """Ĝ = Qᵀ G in fp32."""
+    return (Q.astype(jnp.float32).T @ G.astype(jnp.float32)).astype(G.dtype)
+
+
+def backproject_ref(Q: jnp.ndarray, O: jnp.ndarray) -> jnp.ndarray:
+    return (Q.astype(jnp.float32) @ O.astype(jnp.float32)).astype(O.dtype)
+
+
+def flash_attention_ref(q, k, v, causal: bool = True, sliding_window=None):
+    """Full-materialization attention oracle (same semantics as the kernel)."""
+    from ..models.layers import attention_ref
+
+    return attention_ref(q, k, v, causal=causal, sliding_window=sliding_window)

@@ -1,0 +1,4 @@
+"""repro.launch — mesh builders, dry-run, train and serve entry points."""
+from .mesh import make_host_mesh, make_production_mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]

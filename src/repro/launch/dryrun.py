@@ -1,0 +1,227 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell and
+extract memory/cost/collective roofline terms. No real TPU needed — 512
+placeholder host devices stand in for the production pods.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both --out dryrun.json
+"""
+# The XLA device-count override MUST precede any other import that could
+# initialize jax (device count locks on first backend init).
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from ..configs import (  # noqa: E402
+    ARCH_IDS,
+    SHAPE_BY_NAME,
+    SHAPES,
+    cell_supported,
+    get_config,
+)
+from ..core import SumoConfig, sumo_optimizer  # noqa: E402
+from ..models import (  # noqa: E402
+    decode_cache_specs,
+    decode_step,
+    init_params,
+    input_specs,
+    prefill,
+)
+from ..parallel import (  # noqa: E402
+    cache_specs,
+    input_specs_sharding,
+    opt_state_specs,
+    tree_param_specs,
+)
+from ..roofline import (  # noqa: E402
+    Roofline,
+    extract_cost,
+    model_flops_for,
+)
+from ..roofline.hlo_cost import analyze_hlo  # noqa: E402
+from ..train.steps import make_train_step  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+
+
+def _named(tree_specs, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def _abstract_params(cfg):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def dryrun_cell(arch_id: str, shape_name: str, multi_pod: bool,
+                optimizer: str = "sumo", rank: int = 128,
+                verbose: bool = True, hints: bool = True) -> dict:
+    cfg = get_config(arch_id)
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, reason = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                "status": "skipped", "reason": reason}
+
+    t0 = time.perf_counter()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    from ..models.layers import clear_sharding_hints, set_sharding_hints
+    if hints:
+        dp = ("pod", "data") if multi_pod else ("data",)
+        set_sharding_hints(dp, "model", dict(mesh.shape))
+    else:
+        clear_sharding_hints()
+
+    params_s = _abstract_params(cfg)
+    param_specs = tree_param_specs(params_s, mesh, cfg)
+    param_sh = _named(param_specs, mesh)
+    batch_s = input_specs(cfg, shape)
+    batch_sh = _named(input_specs_sharding(batch_s, mesh, shape.global_batch), mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            tx = sumo_optimizer(
+                1e-3, params_s, SumoConfig(rank=rank, update_freq=200)
+            ) if optimizer == "sumo" else None
+            from ..train.steps import make_optimizer
+            if tx is None:
+                tx = make_optimizer(optimizer, 1e-3, params_s, rank=rank)
+            opt_s = jax.eval_shape(tx.init, params_s)
+            opt_sh = _named(opt_state_specs(opt_s, mesh, cfg), mesh)
+            step = make_train_step(cfg, tx, attn_impl="flash")
+            metric_sh = {k: NamedSharding(mesh, P())
+                         for k in ("loss", "grad_norm", "update_norm")}
+            jitted = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, metric_sh),
+            )
+            lowered = jitted.lower(params_s, opt_s, batch_s)
+        elif shape.kind == "prefill":
+            def prefill_step(params, batch):
+                return prefill(params, cfg, batch, cache_len=shape.seq_len)
+
+            jitted = jax.jit(prefill_step, in_shardings=(param_sh, batch_sh))
+            lowered = jitted.lower(params_s, batch_s)
+        else:  # decode / long_decode: one token against a seq_len cache
+            cache_s = decode_cache_specs(cfg, shape)
+            cache_sh = _named(
+                cache_specs(cache_s, mesh, cfg, shape.global_batch), mesh
+            )
+
+            def serve_step(params, token, cache):
+                return decode_step(params, cfg, token, cache)
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(param_sh, batch_sh["tokens"], cache_sh),
+                out_shardings=(NamedSharding(mesh, P()), cache_sh),
+            )
+            lowered = jitted.lower(params_s, batch_s["tokens"], cache_s)
+
+        compiled = lowered.compile()
+
+    mem = compiled.memory_analysis()
+    xla_flops, xla_bytes = extract_cost(compiled)       # XLA's own (no trip counts)
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)                             # trip-count-aware walker
+    n_active = cfg.active_param_count()
+    rl = Roofline(
+        arch=arch_id, shape=shape_name, mesh=mesh_name, chips=chips,
+        hlo_flops=cost.flops, hlo_bytes=cost.bytes,
+        collective_bytes=cost.collective_bytes,
+        model_flops=model_flops_for(cfg, shape, n_active, shape.kind),
+    )
+    result = {
+        "status": "ok",
+        "compile_s": round(time.perf_counter() - t0, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes},
+        "collective_breakdown": {k: v for k, v in cost.collective_breakdown.items() if v},
+        "unknown_trip_loops": cost.unknown_trip_loops,
+        **rl.row(),
+    }
+    if verbose:
+        print(f"[{arch_id} × {shape_name} × {mesh_name}] ok "
+              f"compile={result['compile_s']}s "
+              f"t_comp={rl.t_compute:.4f}s t_mem={rl.t_memory:.4f}s "
+              f"t_coll={rl.t_collective:.4f}s -> {rl.bottleneck} "
+              f"(useful {rl.useful_ratio:.2f}, roofline {rl.roofline_fraction:.2%})")
+        print(f"  memory/device: args={result['memory']['argument_bytes']} "
+              f"temp={result['memory']['temp_bytes']}")
+    return result
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default=None)
+    ap.add_argument("--shape", choices=[s.name for s in SHAPES], default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true", help="all archs × shapes")
+    ap.add_argument("--optimizer", default="sumo")
+    ap.add_argument("--rank", type=int, default=128)
+    ap.add_argument("--out", default=None, help="append results to this JSON file")
+    ap.add_argument("--no-hints", action="store_true",
+                    help="disable activation-sharding constraints (paper-faithful baseline)")
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = [s.name for s in SHAPES] if (args.all or args.shape is None) else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    results = []
+    if args.out and os.path.exists(args.out):
+        with open(args.out) as f:
+            results = json.load(f)
+    done = {(r["arch"], r["shape"], r["mesh"]) for r in results
+            if r.get("status") in ("ok", "skipped")}
+
+    n_fail = 0
+    for arch_id in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                if (arch_id, shape_name, mesh_name) in done:
+                    continue
+                try:
+                    r = dryrun_cell(arch_id, shape_name, mp,
+                                    optimizer=args.optimizer, rank=args.rank,
+                                    hints=not args.no_hints)
+                except Exception as e:
+                    traceback.print_exc()
+                    r = {"arch": arch_id, "shape": shape_name, "mesh": mesh_name,
+                         "status": "fail", "error": f"{type(e).__name__}: {e}"}
+                    n_fail += 1
+                results.append(r)
+                if args.out:
+                    with open(args.out, "w") as f:
+                        json.dump(results, f, indent=1, default=str)
+    ok = sum(1 for r in results if r.get("status") == "ok")
+    sk = sum(1 for r in results if r.get("status") == "skipped")
+    print(f"\ndry-run: {ok} ok, {sk} skipped, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,26 @@
+"""Production mesh builders.
+
+Single pod: 256 chips as (data=16, model=16).
+Multi-pod:  512 chips as (pod=2, data=16, model=16) — the `pod` axis is the
+cross-DCN data-parallel axis (gradient all-reduce only; no model collectives
+cross pods).
+
+Functions, not module constants — importing this module never touches jax
+device state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Degenerate mesh on whatever devices exist (tests / examples on CPU)."""
+    n = len(jax.devices())
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

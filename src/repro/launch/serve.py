@@ -1,0 +1,49 @@
+"""Serving launcher: batched generation with the KV/recurrent-cache engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --batch 4 --prompt-len 16 --max-new 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..models import init_params
+from ..serve import Engine, ServeConfig
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS), default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if not cfg.has_decode:
+        print(f"{cfg.name} is encoder-only — no decode path")
+        return 1
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, ServeConfig(
+        max_new_tokens=args.max_new, temperature=args.temperature))
+    key = jax.random.PRNGKey(1)
+    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    out = eng.generate(prompts)
+    dt = time.perf_counter() - t0
+    n_tok = out.size
+    print(f"generated {out.shape} in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s incl. compile)")
+    print("sample:", out[0][:16].tolist())
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,59 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch smollm-360m --smoke \
+        --optimizer sumo --steps 50 --batch 8 --seq 128
+
+On a real cluster this process runs per host under the pod scheduler
+(jax.distributed.initialize picks up the coordinator from env); on this
+container it runs the same code single-host. --smoke selects the reduced
+config so the full model zoo is trainable on CPU.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from ..configs import ARCH_IDS, get_config, get_smoke_config
+from ..configs.base import ShapeConfig
+from ..train import FaultInjector, TrainConfig, train
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=list(ARCH_IDS) + ["llama-paper"],
+                    default="smollm-360m")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU-trainable)")
+    ap.add_argument("--optimizer", default="sumo",
+                    choices=["sumo", "sumo-svd", "sumo-ns5", "galore", "muon", "adamw"])
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--rank", type=int, default=32)
+    ap.add_argument("--update-freq", type=int, default=50)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--preempt-at", type=int, nargs="*", default=None,
+                    help="simulate preemptions at these steps (fault-tolerance demo)")
+    args = ap.parse_args(argv)
+
+    arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch, kind="train")
+    tcfg = TrainConfig(
+        optimizer=args.optimizer, learning_rate=args.lr, rank=args.rank,
+        update_freq=args.update_freq, total_steps=args.steps, accum=args.accum,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+    )
+    injector = FaultInjector(preempt_at=args.preempt_at) if args.preempt_at else None
+    res = train(arch, shape, tcfg, fault_injector=injector)
+    first = res.losses[0][1]
+    last = res.losses[-1][1]
+    print(f"\ndone: {res.final_step} steps, loss {first:.4f} -> {last:.4f}, "
+          f"restarts {res.restarts}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

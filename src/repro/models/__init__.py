@@ -1,0 +1,18 @@
+"""repro.models — pure-JAX model zoo for the 10 assigned architectures."""
+from .model import (
+    decode_cache_specs,
+    decode_step,
+    forward_hidden,
+    forward_logits,
+    init_decode_cache,
+    init_params,
+    input_specs,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "init_params", "forward_hidden", "forward_logits", "loss_fn",
+    "init_decode_cache", "decode_step", "prefill",
+    "input_specs", "decode_cache_specs",
+]

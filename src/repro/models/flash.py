@@ -1,0 +1,179 @@
+"""Flash attention with custom VJP — O(L·chunk) memory in BOTH directions.
+
+The naive differentiable chunked attention stores every (bq × bk) probability
+panel for the backward pass (O(L²) residuals — 47 GB/device at 4k seq for a
+360M model, measured in the dry-run). This implementation saves only
+(q, k, v, out, lse) and RECOMPUTES the panels in the backward pass, i.e. the
+FlashAttention-2 backward, expressed as jnp scans so it lowers everywhere
+(and mirrors what the Pallas kernel does on real TPU).
+
+Forward:  out, lse    (lse = m + log l, the softmax log-normalizer per row)
+Backward: D = rowsum(dout ⊙ out); per kv-chunk
+          p  = exp(q kᵀ·s − lse);  dv += pᵀ dout;  dp = dout vᵀ
+          ds = p ⊙ (dp − D);       dk += dsᵀ q·s;  dq += ds k·s
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    if n_rep == 1:
+        return k
+    B, L, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, L, KV, n_rep, hd)).reshape(
+        B, L, KV * n_rep, hd
+    )
+
+
+def _mask(q_pos, k_pos, causal, window, lk):
+    m = k_pos[None, :] < lk
+    if causal:
+        m &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        m &= k_pos[None, :] > (q_pos[:, None] - window)
+    return m
+
+
+def _fwd_impl(q, k, v, causal, window, chunk_q, chunk_k):
+    """Returns (out (B,Lq,H,hd), lse (B,Lq,H))."""
+    B, Lq, H, hd = q.shape
+    KV, Lk = k.shape[2], k.shape[1]
+    n_rep = H // KV
+    cq, ck = min(chunk_q, Lq), min(chunk_k, Lk)
+    pq, pk = (-Lq) % cq, (-Lk) % ck
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Lq + pq) // cq, (Lk + pk) // ck
+    scale = 1.0 / jnp.sqrt(hd)
+    kc = kp.reshape(B, nk, ck, KV, hd).swapaxes(0, 1)
+    vc = vp.reshape(B, nk, ck, KV, hd).swapaxes(0, 1)
+
+    def q_block(args):
+        qi, q_blk = args
+        q32 = q_blk.astype(jnp.float32) * scale
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_step(carry, inp):
+            acc, m, l = carry
+            ki, k_blk, v_blk = inp
+            k_pos = ki * ck + jnp.arange(ck)
+            kr = _repeat_kv(k_blk, n_rep).astype(jnp.float32)
+            vr = _repeat_kv(v_blk, n_rep).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bqhk", q32, kr)
+            msk = _mask(q_pos, k_pos, causal, window, Lk)
+            s = jnp.where(msk[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, vr)
+            return (acc, m_new, l_new), None
+
+        init = (
+            jnp.zeros((B, cq, H, hd), jnp.float32),
+            jnp.full((B, cq, H), NEG_INF, jnp.float32),
+            jnp.zeros((B, cq, H), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(kv_step, init, (jnp.arange(nk), kc, vc))
+        out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    q_blocks = qp.reshape(B, nq, cq, H, hd).swapaxes(0, 1)
+    out, lse = jax.lax.map(q_block, (jnp.arange(nq), q_blocks))
+    out = out.swapaxes(0, 1).reshape(B, nq * cq, H, hd)[:, :Lq]
+    lse = lse.swapaxes(0, 1).reshape(B, nq * cq, H)[:, :Lq]
+    return out, lse
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def flash_attention(q, k, v, causal: bool = True, window: Optional[int] = None,
+                    chunk_q: int = 512, chunk_k: int = 1024):
+    out, _ = _fwd_impl(q, k, v, causal, window, chunk_q, chunk_k)
+    return out
+
+
+def _fa_fwd(q, k, v, causal, window, chunk_q, chunk_k):
+    out, lse = _fwd_impl(q, k, v, causal, window, chunk_q, chunk_k)
+    return out, (q, k, v, out, lse)
+
+
+def _fa_bwd(causal, window, chunk_q, chunk_k, res, dout):
+    q, k, v, out, lse = res
+    B, Lq, H, hd = q.shape
+    KV, Lk = k.shape[2], k.shape[1]
+    n_rep = H // KV
+    cq, ck = min(chunk_q, Lq), min(chunk_k, Lk)
+    pq, pk = (-Lq) % cq, (-Lk) % ck
+    scale = 1.0 / jnp.sqrt(hd)
+
+    qp = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    dop = jnp.pad(dout, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    lsep = jnp.pad(lse, ((0, 0), (0, pq), (0, 0)), constant_values=0.0)
+    # D = rowsum(dout * out)
+    D = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    Dp = jnp.pad(D, ((0, 0), (0, pq), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    nq, nk = (Lq + pq) // cq, (Lk + pk) // ck
+
+    kc = kp.reshape(B, nk, ck, KV, hd).swapaxes(0, 1)
+    vc = vp.reshape(B, nk, ck, KV, hd).swapaxes(0, 1)
+    qc = qp.reshape(B, nq, cq, H, hd).swapaxes(0, 1)
+    dc = dop.reshape(B, nq, cq, H, hd).swapaxes(0, 1)
+    lc = lsep.reshape(B, nq, cq, H).swapaxes(0, 1)
+    Dc = Dp.reshape(B, nq, cq, H).swapaxes(0, 1)
+
+    def q_step(carry, inp):
+        dk_acc, dv_acc = carry                     # (B, nk, ck, H, hd) fp32
+        qi, q_blk, do_blk, lse_blk, D_blk = inp
+        q32 = q_blk.astype(jnp.float32)
+        do32 = do_blk.astype(jnp.float32)
+        q_pos = qi * cq + jnp.arange(cq)
+
+        def kv_step(dq_acc, inp2):
+            ki, k_blk, v_blk = inp2
+            k_pos = ki * ck + jnp.arange(ck)
+            kr = _repeat_kv(k_blk, n_rep).astype(jnp.float32)   # (B,ck,H,hd)
+            vr = _repeat_kv(v_blk, n_rep).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bqhk", q32 * scale, kr)
+            msk = _mask(q_pos, k_pos, causal, window, Lk)
+            s = jnp.where(msk[None, :, None, :], s, NEG_INF)
+            p = jnp.exp(s - lse_blk[..., None])                 # (B,cq,H,ck)
+            dv_c = jnp.einsum("bqhk,bqhd->bkhd", p, do32)
+            dp = jnp.einsum("bqhd,bkhd->bqhk", do32, vr)
+            ds = p * (dp - D_blk[..., None])
+            dk_c = jnp.einsum("bqhk,bqhd->bkhd", ds, q32) * scale
+            dq_acc = dq_acc + jnp.einsum("bqhk,bkhd->bqhd", ds, kr) * scale
+            return dq_acc, (dk_c, dv_c)
+
+        dq0 = jnp.zeros((B, cq, H, hd), jnp.float32)
+        dq_blk, (dk_c, dv_c) = jax.lax.scan(
+            kv_step, dq0, (jnp.arange(nk), kc, vc)
+        )
+        return (dk_acc + dk_c, dv_acc + dv_c), dq_blk
+
+    dk0 = jnp.zeros((nk, B, ck, H, hd), jnp.float32)
+    dv0 = jnp.zeros((nk, B, ck, H, hd), jnp.float32)
+    (dkf, dvf), dqs = jax.lax.scan(
+        q_step, (dk0, dv0), (jnp.arange(nq), qc, dc, lc, Dc)
+    )
+    dq = dqs.swapaxes(0, 1).reshape(B, nq * cq, H, hd)[:, :Lq].astype(q.dtype)
+    dk_full = dkf.swapaxes(0, 1).reshape(B, nk * ck, H, hd)[:, :Lk]
+    dv_full = dvf.swapaxes(0, 1).reshape(B, nk * ck, H, hd)[:, :Lk]
+    # fold repeated kv-head grads back to KV heads (GQA)
+    if n_rep > 1:
+        dk_full = dk_full.reshape(B, Lk, KV, n_rep, hd).sum(axis=3)
+        dv_full = dv_full.reshape(B, Lk, KV, n_rep, hd).sum(axis=3)
+    return dq, dk_full.astype(k.dtype), dv_full.astype(v.dtype)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,442 @@
+"""Shared model primitives: norms, rotary embeddings, GQA attention, MLPs.
+
+Pure-functional pytree style: ``init_*`` builds param dicts, ``apply`` fns are
+closed over nothing. Naming matters: fallback-optimizer routing keys off path
+substrings ("embed", "norm", "bias", ...) — see core/optimizer.py.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+# ---------------------------------------------------------------------------
+# activation-sharding hints (§Perf hillclimb: explicit constraints stop the
+# SPMD partitioner from conservatively all-gathering the MLP hidden and the
+# attention context inside the layer scan). Set by launch/dryrun + train.
+# ---------------------------------------------------------------------------
+
+_DP_AXES: Optional[tuple] = None     # e.g. ("pod", "data")
+_TP_AXIS: Optional[str] = None       # e.g. "model"
+_AXIS_SIZES: dict = {}
+
+
+def set_sharding_hints(dp_axes: Optional[tuple], tp_axis: Optional[str],
+                       axis_sizes: Optional[dict] = None) -> None:
+    global _DP_AXES, _TP_AXIS, _AXIS_SIZES
+    _DP_AXES = tuple(dp_axes) if dp_axes else None
+    _TP_AXIS = tp_axis
+    _AXIS_SIZES = dict(axis_sizes or {})
+
+
+def clear_sharding_hints() -> None:
+    set_sharding_hints(None, None, None)
+
+
+def _axes_size(axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return _AXIS_SIZES.get(axes, 1)
+    n = 1
+    for a in axes:
+        n *= _AXIS_SIZES.get(a, 1)
+    return n
+
+
+def constrain(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """Apply with_sharding_constraint using the hint axes; 'dp'/'tp' tokens in
+    spec resolve to the configured axes. Dims the axis doesn't divide stay
+    unconstrained; no-op entirely when hints are unset."""
+    if _TP_AXIS is None and _DP_AXES is None:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    resolved = []
+    for dim, s in zip(x.shape, spec):
+        axes = {"dp": _DP_AXES, "tp": _TP_AXIS}.get(s, s) if isinstance(s, str) else s
+        n = _axes_size(axes)
+        resolved.append(axes if (n > 1 and dim % n == 0) else None)
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+    except Exception:
+        return x
+
+
+def fsdp_gather(w: jnp.ndarray, tp_dim: int) -> jnp.ndarray:
+    """ZeRO-3 gather-at-use: FSDP-stored weights (extra `data`-axis shard) are
+    constrained back to their pure tensor-parallel sharding right before the
+    matmul, so the partitioner inserts ONE weight all-gather (params/L bytes)
+    instead of activation-sized partial-sum all-reduces over the data axis
+    (measured 4× byte blowup on deepseek-33b train_4k without this)."""
+    spec = [None] * w.ndim
+    spec[tp_dim if tp_dim >= 0 else w.ndim + tp_dim] = "tp"
+    return constrain(w, *spec)
+
+
+def dtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype_of(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jnp.ndarray:
+    scale = 1.0 / jnp.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jnp.ndarray:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ArchConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    p = {"norm_scale": jnp.ones((d,), pdtype_of(cfg))}
+    if cfg.norm == "layernorm":
+        p["norm_bias"] = jnp.zeros((d,), pdtype_of(cfg))
+    return p
+
+
+def apply_norm(p, x: jnp.ndarray, cfg: ArchConfig, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) / jnp.sqrt(var + eps)
+        y = y * p["norm_scale"].astype(jnp.float32) + p["norm_bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf / jnp.sqrt(ms + eps) * p["norm_scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    """qk-norm: per-head RMS norm over the head_dim axis (qwen3 style)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf / jnp.sqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(cfg: ArchConfig) -> jnp.ndarray:
+    """Inverse frequencies for the rotated fraction of head_dim."""
+    hd = cfg.hd
+    rot = int(hd * cfg.rotary_pct) // 2 * 2
+    if rot == 0:
+        return jnp.zeros((0,), jnp.float32)
+    return 1.0 / (cfg.rope_theta ** (jnp.arange(0, rot, 2, dtype=jnp.float32) / rot))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    """x: (..., L, H, hd); positions: broadcastable to (..., L)."""
+    inv = rope_frequencies(cfg)
+    rot = inv.shape[0] * 2
+    if rot == 0:
+        return x
+    ang = positions[..., :, None].astype(jnp.float32) * inv[None, :]  # (..., L, rot/2)
+    cos = jnp.cos(ang)[..., None, :]                                  # (..., L, 1, rot/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x_rot, x_pass = x[..., :rot], x[..., rot:]
+    x1, x2 = x_rot[..., 0::2], x_rot[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    y = jnp.stack([y1, y2], axis=-1).reshape(x_rot.shape)
+    return jnp.concatenate([y.astype(x.dtype), x_pass], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+NEG_INF = -1e30
+
+
+def _repeat_kv(k: jnp.ndarray, n_rep: int) -> jnp.ndarray:
+    """(B, L, KV, hd) -> (B, L, KV*n_rep, hd) by head repetition."""
+    if n_rep == 1:
+        return k
+    B, L, KV, hd = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (B, L, KV, n_rep, hd)).reshape(
+        B, L, KV * n_rep, hd
+    )
+
+
+def attention_ref(
+    q: jnp.ndarray,             # (B, Lq, H, hd)
+    k: jnp.ndarray,             # (B, Lk, KV, hd)
+    v: jnp.ndarray,             # (B, Lk, KV, hd)
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int = 0,
+) -> jnp.ndarray:
+    """Reference full-materialization attention (oracle + small shapes)."""
+    B, Lq, H, hd = q.shape
+    KV = k.shape[2]
+    k = _repeat_kv(k, H // KV)
+    v = _repeat_kv(v, H // KV)
+    scale = 1.0 / jnp.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+    Lk = k.shape[1]
+    q_pos = jnp.arange(Lq) + q_offset
+    k_pos = jnp.arange(Lk)
+    mask = jnp.ones((Lq, Lk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if sliding_window is not None:
+        mask &= k_pos[None, :] > (q_pos[:, None] - sliding_window)
+    logits = jnp.where(mask[None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attention_chunked(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    causal: bool = True,
+    sliding_window: Optional[int] = None,
+    q_offset: int = 0,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+) -> jnp.ndarray:
+    """Flash-style online-softmax attention in pure jnp (lax.scan over KV
+    chunks, lax.map over Q chunks). O(L·chunk) memory instead of O(L²):
+    the TPU-portable fallback when the Pallas kernel isn't available, and
+    exactly what the dry-run lowers (memory analysis reflects flash-like
+    footprint).
+    """
+    B, Lq, H, hd = q.shape
+    KV = k.shape[2]
+    n_rep = H // KV
+    Lk = k.shape[1]
+    chunk_q = min(chunk_q, Lq)
+    chunk_k = min(chunk_k, Lk)
+    # pad to multiples
+    pad_q = (-Lq) % chunk_q
+    pad_k = (-Lk) % chunk_k
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // chunk_q, kp.shape[1] // chunk_k
+    scale = 1.0 / jnp.sqrt(hd)
+
+    kc = kp.reshape(B, nk, chunk_k, KV, hd)
+    vc = vp.reshape(B, nk, chunk_k, KV, hd)
+
+    def q_block(args):
+        qi, q_blk = args                      # q_blk: (B, cq, H, hd)
+        q32 = q_blk.astype(jnp.float32) * scale
+        q_pos = qi * chunk_q + jnp.arange(chunk_q) + q_offset
+
+        def kv_step(carry, inp):
+            acc, m, l = carry                 # acc: (B,cq,H,hd) m,l: (B,cq,H)
+            ki, k_blk, v_blk = inp
+            k_pos = ki * chunk_k + jnp.arange(chunk_k)
+            kr = _repeat_kv(k_blk, n_rep).astype(jnp.float32)
+            vr = _repeat_kv(v_blk, n_rep).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bqhk", q32, kr)  # (B,cq,H,ck)
+            mask = jnp.ones((chunk_q, chunk_k), bool)
+            mask &= k_pos[None, :] < Lk                  # kv padding
+            if causal:
+                mask &= k_pos[None, :] <= q_pos[:, None]
+            if sliding_window is not None:
+                mask &= k_pos[None, :] > (q_pos[:, None] - sliding_window)
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum("bqhk,bkhd->bqhd", p, vr)
+            return (acc, m_new, l_new), None
+
+        init = (
+            jnp.zeros((B, chunk_q, H, hd), jnp.float32),
+            jnp.full((B, chunk_q, H), NEG_INF, jnp.float32),
+            jnp.zeros((B, chunk_q, H), jnp.float32),
+        )
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, init, (jnp.arange(nk), kc.swapaxes(0, 1), vc.swapaxes(0, 1))
+        )
+        return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+    q_blocks = qp.reshape(B, nq, chunk_q, H, hd).swapaxes(0, 1)  # (nq, B, cq, H, hd)
+    out = jax.lax.map(q_block, (jnp.arange(nq), q_blocks))
+    out = out.swapaxes(0, 1).reshape(B, nq * chunk_q, H, hd)
+    return out[:, :Lq]
+
+
+def attention(q, k, v, *, impl: str = "flash", **kw) -> jnp.ndarray:
+    if impl == "ref":
+        return attention_ref(q, k, v, **kw)
+    if impl == "chunked":
+        return attention_chunked(q, k, v, **kw)
+    if impl == "flash":
+        from .flash import flash_attention as fa
+        kw.pop("q_offset", None)
+        return fa(q, k, v, kw.get("causal", True), kw.get("sliding_window"))
+    if impl == "pallas":
+        from ..kernels.ops import flash_attention as fa
+        return fa(q, k, v, **kw)
+    raise ValueError(f"unknown attention impl {impl!r}")
+
+
+def decode_attention(
+    q: jnp.ndarray,             # (B, 1, H, hd)
+    k_cache: jnp.ndarray,       # (B, S, KV, hd)
+    v_cache: jnp.ndarray,
+    cache_len: jnp.ndarray,     # () int — valid prefix length (or ring filled)
+    sliding_window: Optional[int] = None,
+    ring: bool = False,
+) -> jnp.ndarray:
+    """One-token attention against a (possibly ring-buffered) KV cache."""
+    B, S, KV, hd = k_cache.shape
+    H = q.shape[2]
+    kr = _repeat_kv(k_cache, H // KV).astype(jnp.float32)
+    vr = _repeat_kv(v_cache, H // KV).astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32) * scale, kr)  # (B,H,1,S)
+    pos = jnp.arange(S)
+    if ring:
+        valid = pos[None, None, None, :] < jnp.minimum(cache_len, S)
+    else:
+        valid = pos[None, None, None, :] < cache_len
+        if sliding_window is not None:
+            valid &= pos[None, None, None, :] >= (cache_len - sliding_window)
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention block (init + apply)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, d_model: Optional[int] = None):
+    d = d_model or cfg.d_model
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    pd = pdtype_of(cfg)
+    p = {
+        "wq": dense_init(ks[0], d, H * hd, pd),
+        "wk": dense_init(ks[1], d, KV * hd, pd),
+        "wv": dense_init(ks[2], d, KV * hd, pd),
+        "wo": dense_init(ks[3], H * hd, d, pd),
+    }
+    if cfg.qk_norm:
+        p["q_norm_scale"] = jnp.ones((hd,), pd)
+        p["k_norm_scale"] = jnp.ones((hd,), pd)
+    return p
+
+
+def attn_qkv(p, x: jnp.ndarray, positions: jnp.ndarray, cfg: ArchConfig):
+    """Project + rope + qk-norm. x: (B, L, d) -> q (B,L,H,hd), k/v (B,L,KV,hd)."""
+    B, L, _ = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    dt = x.dtype
+    q = constrain((x @ fsdp_gather(p["wq"].astype(dt), 1)).reshape(B, L, H, hd),
+                  "dp", None, "tp", None)
+    k = constrain((x @ fsdp_gather(p["wk"].astype(dt), 1)).reshape(B, L, KV, hd),
+                  "dp", None, "tp", None)
+    v = constrain((x @ fsdp_gather(p["wv"].astype(dt), 1)).reshape(B, L, KV, hd),
+                  "dp", None, "tp", None)
+    if cfg.qk_norm:
+        q = rms_head_norm(q, p["q_norm_scale"])
+        k = rms_head_norm(k, p["k_norm_scale"])
+    q = apply_rope(q, positions, cfg)
+    k = apply_rope(k, positions, cfg)
+    return q, k, v
+
+
+def attention_sharded(q, k, v, cfg: ArchConfig, impl: str = "flash"):
+    """attention() with head-count padding so the head axis shards over the
+    tensor axis even when H ∤ tp (deepseek 56H, smollm 15H on a 16-way axis:
+    without this, every device computes ALL heads — measured 16× replicated
+    attention FLOPs/bytes, §Perf). GQA kv heads are pre-expanded so the
+    padded grouping stays correct; padded heads have q=0 and are sliced off.
+    """
+    tp = _axes_size(_TP_AXIS)
+    H = q.shape[2]
+    if tp > 1 and H % tp != 0:
+        KV = k.shape[2]
+        if KV != H:
+            k = _repeat_kv(k, H // KV)
+            v = _repeat_kv(v, H // KV)
+        Hp = -(-H // tp) * tp
+        padh = lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, Hp - H), (0, 0)))
+        q, k, v = padh(q), padh(k), padh(v)
+        q = constrain(q, "dp", None, "tp", None)
+        k = constrain(k, "dp", None, "tp", None)
+        v = constrain(v, "dp", None, "tp", None)
+        out = attention(q, k, v, impl=impl, causal=cfg.causal,
+                        sliding_window=cfg.sliding_window)
+        return out[:, :, :H]
+    return attention(q, k, v, impl=impl, causal=cfg.causal,
+                     sliding_window=cfg.sliding_window)
+
+
+def apply_attention_block(
+    p, x: jnp.ndarray, cfg: ArchConfig, *, impl: str = "chunked",
+    positions: Optional[jnp.ndarray] = None,
+) -> jnp.ndarray:
+    B, L, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    q, k, v = attn_qkv(p, x, positions, cfg)
+    out = attention_sharded(q, k, v, cfg, impl=impl)
+    out = constrain(out, "dp", None, "tp", None)
+    out = out.reshape(B, L, cfg.n_heads * cfg.hd)
+    return constrain(out @ fsdp_gather(p["wo"].astype(x.dtype), 0), "dp", None, None)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_model: Optional[int] = None,
+             d_ff: Optional[int] = None):
+    d = d_model or cfg.d_model
+    f = d_ff or cfg.d_ff
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 3)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": dense_init(ks[0], d, f, pd),
+            "w_up": dense_init(ks[1], d, f, pd),
+            "w_down": dense_init(ks[2], f, d, pd),
+        }
+    return {
+        "w_up": dense_init(ks[0], d, f, pd),
+        "w_down": dense_init(ks[1], f, d, pd),
+    }
+
+
+def apply_mlp(p, x: jnp.ndarray, cfg: ArchConfig) -> jnp.ndarray:
+    dt = x.dtype
+    if "w_gate" in p:
+        g = jax.nn.silu(constrain(
+            x @ fsdp_gather(p["w_gate"].astype(dt), 1), "dp", None, "tp"))
+        u = constrain(x @ fsdp_gather(p["w_up"].astype(dt), 1), "dp", None, "tp")
+        return constrain(
+            (g * u) @ fsdp_gather(p["w_down"].astype(dt), 0), "dp", None, None)
+    h = jax.nn.gelu(constrain(
+        x @ fsdp_gather(p["w_up"].astype(dt), 1), "dp", None, "tp"))
+    return constrain(h @ fsdp_gather(p["w_down"].astype(dt), 0), "dp", None, None)

@@ -1,0 +1,226 @@
+"""Mamba2 (SSD) block — chunked, matmul-dominant formulation for TPU.
+
+Training path follows the SSD "minimal" algorithm (Dao & Gu 2024) with chunk
+length Q: intra-chunk quadratic attention-like matmuls + an inter-chunk state
+recurrence carried by lax.scan over chunks. Everything is MXU-shaped einsums —
+this is the TPU-native adaptation of the CUDA selective-scan (DESIGN.md §3).
+
+Decode path is the O(1) recurrent update: S ← a·S + dt·B⊗x, y = C·S — what
+makes zamba2/long_500k feasible.
+
+Shapes: heads H = d_inner / P, state N, B/C shared across heads (1 group).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, pdtype_of
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray    # (B, conv_width-1, d_conv_channels)
+    ssm: jnp.ndarray     # (B, H, P, N)
+
+
+def init_mamba2(key, cfg: ArchConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    H = d_in // s.head_dim
+    N = s.state_dim
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 6)
+    # in_proj produces [z (gate), x, B, C, dt] fused as one matrix
+    d_proj = 2 * d_in + 2 * N + H
+    conv_ch = d_in + 2 * N     # conv over x, B, C (mamba2 convention)
+    return {
+        "in_proj": dense_init(ks[0], d, d_proj, pd),
+        "conv1d_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch)) * 0.1).astype(pd),
+        "conv1d_bias": jnp.zeros((conv_ch,), pd),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(pd),   # per-head decay
+        "D_skip": jnp.ones((H,), pd),
+        "dt_bias": jnp.zeros((H,), pd),
+        "out_norm_scale": jnp.ones((d_in,), pd),
+        "out_proj": dense_init(ks[2], d_in, d, pd),
+    }
+
+
+def _split_proj(proj, cfg: ArchConfig):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    N = s.state_dim
+    z, xBC, dt = jnp.split(proj, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xBC, dt, d_in, H, N
+
+
+def _causal_conv(xBC, w, b, cache=None):
+    """Depthwise causal conv, width K. xBC: (B, L, ch). cache: (B, K-1, ch)."""
+    K = w.shape[0]
+    if cache is None:
+        pad = jnp.zeros((xBC.shape[0], K - 1, xBC.shape[2]), xBC.dtype)
+    else:
+        pad = cache.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)          # (B, L+K-1, ch)
+    out = sum(xp[:, i : i + xBC.shape[1]] * w[i][None, None] for i in range(K))
+    new_cache = xp[:, -(K - 1) :]
+    return jax.nn.silu(out + b[None, None]), new_cache
+
+
+def _segsum(log_a):
+    """Cumulative log-decay matrix: L[i,j] = sum_{j<k<=i} log_a[k], -inf for j>i.
+    log_a: (..., Q) -> (..., Q, Q)."""
+    Q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]        # sum over (j, i]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, return_state: bool = False):
+    """SSD scan. x: (B,L,H,P), dt: (B,L,H), A: (H,) >0 decay rates,
+    Bm/Cm: (B,L,N). Returns y: (B,L,H,P) (and the final SSM state (B,H,P,N)
+    when return_state — used by the parallel prefill).
+
+    Discretization: a_t = exp(-dt_t · A); input scaled by dt_t.
+    """
+    Bsz, L, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    Lp = L + pad
+    nC = Lp // Q
+
+    xf = x.astype(jnp.float32).reshape(Bsz, nC, Q, H, P)
+    dtf = dt.astype(jnp.float32).reshape(Bsz, nC, Q, H)
+    Bf = Bm.astype(jnp.float32).reshape(Bsz, nC, Q, N)
+    Cf = Cm.astype(jnp.float32).reshape(Bsz, nC, Q, N)
+    log_a = -dtf * A[None, None, None, :]             # (B, nC, Q, H) (negative)
+
+    # ---- intra-chunk (quadratic within chunk, attention-like) -------------
+    Lmat = jnp.exp(_segsum(jnp.moveaxis(log_a, -1, -2)))      # (B,nC,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf)            # (B,nC,Q,Q)
+    y_intra = jnp.einsum(
+        "bchqk,bcqk,bckh,bckhp->bcqhp",
+        Lmat, scores, dtf, xf,
+    )
+
+    # ---- chunk summary states ----------------------------------------------
+    # decay from position k to end of chunk: exp(sum_{j>k} log_a)
+    cums = jnp.cumsum(log_a, axis=2)
+    decay_to_end = jnp.exp(cums[:, :, -1:, :] - cums)         # (B,nC,Q,H)
+    S_chunk = jnp.einsum("bckn,bckh,bckh,bckhp->bchpn",
+                         Bf, decay_to_end, dtf, xf)           # (B,nC,H,P,N)
+    a_chunk = jnp.exp(cums[:, :, -1, :])                      # (B,nC,H) total decay
+
+    # ---- inter-chunk recurrence (scan over chunks) -------------------------
+    def step(S_prev, inp):
+        a_c, S_c = inp                                        # (B,H), (B,H,P,N)
+        S_new = a_c[:, :, None, None] * S_prev + S_c
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    S_final, S_before = jax.lax.scan(
+        step, S0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S_chunk, 1, 0))
+    )
+    S_before = jnp.moveaxis(S_before, 0, 1)                   # (B,nC,H,P,N)
+
+    # ---- inter-chunk contribution ------------------------------------------
+    decay_from_start = jnp.exp(cums)                          # (B,nC,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                         Cf, decay_from_start, S_before)
+
+    y = (y_intra + y_inter).reshape(Bsz, Lp, H, P)[:, :L]
+    if return_state:
+        # NOTE: with padding, padded steps have dt=0 ⇒ a=1, input weight 0 —
+        # they do not perturb the state, so S_final is exact.
+        return y, S_final
+    return y
+
+
+def apply_mamba2(p, x: jnp.ndarray, cfg: ArchConfig, return_cache: bool = False):
+    """Training/prefill forward. x: (B, L, d) -> (B, L, d)
+    (+ final MambaCache when return_cache — the parallel prefill path)."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xBC, dt_raw, d_in, H, N = _split_proj(proj, cfg)
+    xBC_pre = xBC
+    xBC, _ = _causal_conv(xBC, p["conv1d_w"].astype(dt_), p["conv1d_bias"].astype(dt_))
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    B_, L, _ = x.shape
+    xh = xs.reshape(B_, L, H, s.head_dim)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    if return_cache:
+        y, S_final = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk, return_state=True)
+        K = s.conv_width
+        if L >= K - 1:
+            conv_state = xBC_pre[:, L - (K - 1):]
+        else:
+            conv_state = jnp.pad(xBC_pre, ((0, 0), (K - 1 - L, 0), (0, 0)))
+        cache = MambaCache(conv=conv_state, ssm=S_final)
+    else:
+        y = ssd_chunked(xh, dt, A, Bm, Cm, s.chunk)           # (B,L,H,P) fp32
+    y = y + p["D_skip"].astype(jnp.float32)[None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(B_, L, d_in)
+    # gated RMSNorm (mamba2 output norm)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-6) * p["out_norm_scale"].astype(jnp.float32)
+    out = (y.astype(dt_)) @ p["out_proj"].astype(dt_)
+    if return_cache:
+        return out, cache
+    return out
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype) -> MambaCache:
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.state_dim
+    return MambaCache(
+        conv=jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype),
+        ssm=jnp.zeros((batch, H, s.head_dim, s.state_dim), jnp.float32),
+    )
+
+
+def decode_mamba2(p, x: jnp.ndarray, cache: MambaCache, cfg: ArchConfig):
+    """One-token recurrent step. x: (B, 1, d) -> (y (B,1,d), new cache)."""
+    s = cfg.ssm
+    dt_ = x.dtype
+    proj = x @ p["in_proj"].astype(dt_)
+    z, xBC, dt_raw, d_in, H, N = _split_proj(proj, cfg)
+    xBC, conv_new = _causal_conv(
+        xBC, p["conv1d_w"].astype(dt_), p["conv1d_bias"].astype(dt_), cache.conv
+    )
+    xs, Bm, Cm = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    B_ = x.shape[0]
+    xh = xs.reshape(B_, H, s.head_dim).astype(jnp.float32)            # L=1 squeezed
+    dt = jax.nn.softplus(
+        dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )                                                                  # (B, H)
+    A = jnp.exp(p["A_log"].astype(jnp.float32))
+    a = jnp.exp(-dt * A[None, :])                                      # (B, H)
+    Bf = Bm[:, 0].astype(jnp.float32)                                  # (B, N)
+    Cf = Cm[:, 0].astype(jnp.float32)
+    S = cache.ssm * a[:, :, None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xh, Bf
+    )
+    y = jnp.einsum("bhpn,bn->bhp", S, Cf)
+    y = y + p["D_skip"].astype(jnp.float32)[None, :, None] * xh
+    y = y.reshape(B_, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-6) * p["out_norm_scale"].astype(jnp.float32)
+    out = (y.astype(dt_)) @ p["out_proj"].astype(dt_)
+    return out, MambaCache(conv=conv_new, ssm=S)

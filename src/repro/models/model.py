@@ -1,0 +1,123 @@
+"""Unified model API — dispatches on cfg.family.
+
+    init_params(cfg, key)                         -> params
+    forward_hidden(params, cfg, batch)            -> (hidden, aux)
+    loss_fn(params, cfg, batch)                   -> scalar
+    init_decode_cache(cfg, batch, seq_len)        -> cache
+    decode_step(params, cfg, token, cache)        -> (logits, cache)
+    prefill(params, cfg, batch, cache_len)        -> (logits, cache)   (attn archs)
+    input_specs(cfg, shape)                       -> ShapeDtypeStructs (launch/)
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from . import transformer as tfm
+from . import xlstm as xl
+from . import zamba2 as zb
+
+
+def init_params(cfg: ArchConfig, key: Optional[jax.Array] = None):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    if cfg.family == "hybrid":
+        return zb.init_zamba2(key, cfg)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return xl.init_xlstm_lm(key, cfg)
+    return tfm.init_transformer(key, cfg)
+
+
+def forward_hidden(params, cfg: ArchConfig, batch: dict, attn_impl: str = "chunked"):
+    if cfg.family == "hybrid":
+        return zb.forward_hidden(params, cfg, batch, attn_impl)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return xl.forward_hidden(params, cfg, batch, attn_impl)
+    return tfm.forward_hidden(params, cfg, batch, attn_impl)
+
+
+def head_matrix(params, cfg: ArchConfig):
+    return tfm.head_matrix(params, cfg)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict,
+            attn_impl: str = "chunked", aux_weight: float = 0.01):
+    h, aux = forward_hidden(params, cfg, batch, attn_impl)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        n_f = batch["frontend_embeds"].shape[1]
+        pad = jnp.full(labels.shape[:1] + (n_f,), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = tfm.chunked_softmax_xent(h, head_matrix(params, cfg), labels)
+    return ce + aux_weight * aux
+
+
+def forward_logits(params, cfg: ArchConfig, batch: dict, attn_impl: str = "chunked"):
+    h, _ = forward_hidden(params, cfg, batch, attn_impl)
+    return h.astype(jnp.float32) @ head_matrix(params, cfg).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+def init_decode_cache(cfg: ArchConfig, batch: int, seq_len: int):
+    if cfg.family == "hybrid":
+        return zb.init_zamba_cache(cfg, batch, seq_len)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return xl.init_xlstm_cache(cfg, batch)
+    return tfm.init_cache(cfg, batch, seq_len)
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache):
+    if cfg.family == "hybrid":
+        return zb.decode_step(params, cfg, token, cache)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return xl.decode_step(params, cfg, token, cache)
+    return tfm.decode_step(params, cfg, token, cache)
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
+            attn_impl: str = "chunked"):
+    if cfg.family == "hybrid":
+        return zb.prefill(params, cfg, batch, cache_len, attn_impl)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        return xl.prefill(params, cfg, batch, cache_len, attn_impl)
+    return tfm.prefill(params, cfg, batch, cache_len, attn_impl)
+
+
+# ---------------------------------------------------------------------------
+# ShapeDtypeStruct stand-ins for the dry-run (no allocation)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Abstract input batch for (cfg × shape) — tokens/labels for train and
+    prefill; a single-token batch for decode shapes (serve_step semantics).
+    VLM/audio frontends provide precomputed embeddings (stub)."""
+    B, L = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        specs: dict[str, Any] = {}
+        if cfg.family == "audio":
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct((B, L, cfg.d_model), jnp.bfloat16)
+            specs["labels"] = jax.ShapeDtypeStruct((B, L), i32)
+        elif cfg.family == "vlm":
+            n_f = cfg.n_frontend_tokens
+            specs["frontend_embeds"] = jax.ShapeDtypeStruct((B, n_f, cfg.d_model), jnp.bfloat16)
+            specs["tokens"] = jax.ShapeDtypeStruct((B, L - n_f), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, L - n_f), i32)
+        else:
+            specs["tokens"] = jax.ShapeDtypeStruct((B, L), i32)
+            specs["labels"] = jax.ShapeDtypeStruct((B, L), i32)
+        return specs
+    # decode kinds: one new token against a cache of seq_len
+    return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: ShapeConfig):
+    """Abstract decode cache for the dry-run (eval_shape — no allocation)."""
+    return jax.eval_shape(
+        lambda: init_decode_cache(cfg, shape.global_batch, shape.seq_len)
+    )

@@ -1,0 +1,159 @@
+"""Token-choice top-k Mixture-of-Experts with GROUPED sort-based dispatch.
+
+TPU adaptation notes (DESIGN.md §3 + §Perf iterations):
+  * sort-based capacity dispatch: no (T, E, C) one-hot tensor — bookkeeping is
+    O(T·k) vectors, the expert matmul is one batched einsum.
+  * GROUPED routing: tokens are routed within `groups` independent groups
+    aligned with the data-parallel batch sharding. All sorting, position
+    bookkeeping, gathers and scatters are then *shard-local* (batched ops
+    sharded on their leading group axis — zero collectives). Without this the
+    partitioner lowered the global argsort/gather/scatter into ~3.6 TB/step of
+    all-reduces on mixtral train_4k (measured, §Perf).
+  * expert weights: hidden dim sharded over `model` (Megatron), replicated
+    over `data` (FSDP-sharded storage when cfg.fsdp); every group computes
+    with all experts — classic "data-parallel dispatch + tensor-parallel
+    experts", the right regime for E ≪ chips.
+
+Auxiliary load-balancing loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import constrain, dense_init, pdtype_of
+
+
+def init_moe(key, cfg: ArchConfig):
+    assert cfg.moe is not None
+    E, d, f = cfg.moe.num_experts, cfg.d_model, cfg.d_ff
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    return {
+        "router": dense_init(ks[0], d, E, pd),
+        # stacked expert weights: leading E axis (vmapped by the optimizer too)
+        "experts": {
+            "w_gate": (jax.random.normal(ks[1], (E, d, f)) * scale).astype(pd),
+            "w_up": (jax.random.normal(ks[2], (E, d, f)) * scale).astype(pd),
+            "w_down": (jax.random.normal(ks[3], (E, f, d)) / jnp.sqrt(f)).astype(pd),
+        },
+    }
+
+
+def _capacity(n_tokens: int, cfg: ArchConfig, multiple: int = 8) -> int:
+    m = cfg.moe
+    c = int(n_tokens * m.top_k * m.capacity_factor / m.num_experts) + 1
+    return max(multiple, -(-c // multiple) * multiple)
+
+
+def _dispatch_group(xt, probs, C: int, cfg: ArchConfig):
+    """Shard-local dispatch for ONE group. xt: (t, d), probs: (t, E).
+    Returns (buf (E, C, d), e_sorted, pos_in_e, tok_sorted, gate_sorted, keep)."""
+    m = cfg.moe
+    t, d = xt.shape
+    k, E = m.top_k, m.num_experts
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)                  # (t, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+    flat_e = expert_idx.reshape(-1)                                  # (t*k,)
+    flat_g = gate_vals.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    order = jnp.argsort(flat_e)
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    g_sorted = flat_g[order]
+    seg_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(t * k) - seg_start[e_sorted]
+    keep = pos_in_e < C
+    pos_in_e = jnp.where(keep, pos_in_e, 0)
+    xs = xt[tok_sorted] * keep[:, None].astype(xt.dtype)             # (t*k, d)
+    buf = jnp.zeros((E, C, d), xt.dtype).at[e_sorted, pos_in_e].set(
+        xs, mode="drop", unique_indices=False
+    )
+    return buf, e_sorted, pos_in_e, tok_sorted, g_sorted, keep
+
+
+def _combine_group(eo, e_sorted, pos_in_e, tok_sorted, g_sorted, keep, t: int):
+    """eo: (E, C, d) expert outputs -> (t, d) token outputs."""
+    slot_out = eo[e_sorted, pos_in_e] * (
+        g_sorted * keep.astype(jnp.float32)
+    )[:, None].astype(eo.dtype)
+    return jnp.zeros((t, eo.shape[-1]), eo.dtype).at[tok_sorted].add(slot_out)
+
+
+def apply_moe(p, x: jnp.ndarray, cfg: ArchConfig,
+              groups: Optional[int] = None):
+    """x: (B, L, d) -> (out (B, L, d), aux_loss ())."""
+    from .layers import _DP_AXES, _axes_size
+
+    m = cfg.moe
+    B, L, d = x.shape
+    T = B * L
+    E = m.num_experts
+    dt = x.dtype
+
+    if groups is None:
+        groups = _axes_size(_DP_AXES)         # align with the batch sharding
+    G = max(1, groups)
+    while B % G != 0:                          # groups must tile the batch dim
+        G //= 2
+    # decode-sized calls (a handful of tokens): grouping + sharding constraints
+    # cost more in resharding than they save — route locally, unconstrained
+    # (measured: mixtral decode_32k regressed 2.1× with constraints on)
+    small = T < 2048
+    if small:
+        G = 1
+    cns = (lambda t, *spec: t) if small else constrain
+    tG = T // G
+    # small-expert regime (see sharding.py): expert weights replicated, the
+    # CAPACITY dim shards over the tensor axis instead of d_ff
+    from .layers import _TP_AXIS
+    tp_size = _axes_size(_TP_AXIS)
+    cap_tp = (not small) and tp_size > 1 and cfg.d_ff // tp_size < 128
+    C = _capacity(tG, cfg, multiple=(tp_size * 8 if cap_tp else 8))
+    cap_spec = "tp" if cap_tp else None
+    ff_spec = None if cap_tp else "tp"
+
+    xt = cns(x.reshape(G, tG, d), "dp", None, None)
+    logits = (xt @ p["router"].astype(dt)).astype(jnp.float32)       # (G, t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # ---- load-balancing aux loss (Switch): E · Σ_e f_e · p̄_e (global) ------
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.mean(jax.nn.one_hot(top1, E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+
+    # ---- shard-local dispatch (vmapped over groups) --------------------------
+    buf, e_s, pos, tok_s, g_s, keep = jax.vmap(
+        lambda xg, pg: _dispatch_group(xg, pg, C, cfg)
+    )(xt, probs)
+    buf = cns(buf, "dp", None, cap_spec, None)                 # (G,E,C,d)
+
+    # ---- expert compute: batched SwiGLU (groups × experts) -------------------
+    W = p["experts"]
+    g = jax.nn.silu(cns(
+        jnp.einsum("gecd,edf->gecf", buf, W["w_gate"].astype(dt)),
+        "dp", None, cap_spec, ff_spec))
+    u = cns(jnp.einsum("gecd,edf->gecf", buf, W["w_up"].astype(dt)),
+                  "dp", None, cap_spec, ff_spec)
+    # (§Perf "MoE deferred unshard" — keeping d sharded through the combine —
+    # was tried and REFUTED: the partitioner re-sharded around the gathers and
+    # collective bytes rose 11%; the eager layout below is the measured best.)
+    # unshard the capacity dim BEFORE the combine: one buffer all-gather per
+    # layer beats the cross-shard gather/scatter all-reduces the partitioner
+    # otherwise emits (measured 600→4 GB/layer on granite, §Perf)
+    eo = cns(jnp.einsum("gecf,efd->gecd", g * u, W["w_down"].astype(dt)),
+                   "dp", None, None, None)                           # (G,E,C,d)
+
+    # ---- shard-local combine ---------------------------------------------------
+    out = jax.vmap(lambda e, a, b, c, gg, kk: _combine_group(e, a, b, c, gg, kk, tG))(
+        eo, e_s, pos, tok_s, g_s, keep
+    )
+    out = cns(out, "dp", None, None)
+    return out.reshape(B, L, d), aux

@@ -1,0 +1,299 @@
+"""Decoder/encoder transformer assembly for the dense, MoE, VLM and audio
+families. Layers are STACKED (leading n_layers axis) and iterated with
+jax.lax.scan — one traced block regardless of depth, which keeps HLO size and
+compile time flat across the 24–81-layer assigned archs. Activation
+checkpointing (jax.checkpoint) wraps the scan body when cfg.remat.
+
+Cross-entropy is computed CHUNKED over the sequence so the (B, L, vocab)
+logit tensor is never materialized — decisive for vocab 100k–152k archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (
+    apply_attention_block,
+    attention_sharded,
+    apply_mlp,
+    apply_norm,
+    attn_qkv,
+    decode_attention,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_attention,
+    init_mlp,
+    init_norm,
+    pdtype_of,
+)
+from .moe import apply_moe, init_moe
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ArchConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "attn_norm": init_norm(cfg),
+        "attn": init_attention(k1, cfg),
+        "mlp_norm": init_norm(cfg),
+    }
+    if cfg.moe is not None:
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k3, cfg)
+    return p
+
+
+def init_transformer(key, cfg: ArchConfig):
+    ks = jax.random.split(key, 4)
+    block_keys = jax.random.split(ks[0], cfg.n_layers)
+    blocks = jax.vmap(lambda k: _init_block(k, cfg))(block_keys)  # stacked
+    params = {
+        "blocks": blocks,
+        "final_norm": init_norm(cfg),
+    }
+    if cfg.frontend == "none" or cfg.family == "vlm":
+        params["embed_tokens"] = embed_init(ks[1], cfg.vocab, cfg.d_model, pdtype_of(cfg))
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(ks[2], cfg.d_model, cfg.vocab, pdtype_of(cfg))
+    if cfg.frontend != "none":
+        # stub frontend: a single projection applied to precomputed embeddings
+        params["frontend_proj"] = dense_init(ks[3], cfg.d_model, cfg.d_model, pdtype_of(cfg))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / head helpers
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params, cfg: ArchConfig, batch: dict) -> jnp.ndarray:
+    """Assemble the input embedding sequence (B, L_total, d).
+
+    vlm: [frontend patch embeds ; token embeds]; audio: frontend frames only;
+    text: token embeds only.
+    """
+    dt = dtype_of(cfg)
+    parts = []
+    if cfg.frontend != "none":
+        fe = batch["frontend_embeds"].astype(dt)
+        parts.append(fe @ params["frontend_proj"].astype(dt))
+    if "tokens" in batch and "embed_tokens" in params:
+        parts.append(params["embed_tokens"].astype(dt)[batch["tokens"]])
+    return parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+
+
+def head_matrix(params, cfg: ArchConfig) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed_tokens"].T
+    return params["lm_head"]
+
+
+def chunked_softmax_xent(
+    h: jnp.ndarray,            # (B, L, d) final hidden states
+    W: jnp.ndarray,            # (d, V)
+    labels: jnp.ndarray,       # (B, L) int32; -100 = ignore
+    chunk: int = 512,
+) -> jnp.ndarray:
+    """Streamed cross-entropy: logits are produced chunk-by-chunk and reduced
+    immediately (never materializing B×L×V)."""
+    B, L, d = h.shape
+    c = min(chunk, L)
+    pad = (-L) % c
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    n = (L + pad) // c
+    hc = h.reshape(B, n, c, d).swapaxes(0, 1)          # (n, B, c, d)
+    lc = labels.reshape(B, n, c).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hb, lb = inp
+        logits = (hb.astype(jnp.float32)) @ W.astype(jnp.float32)   # (B, c, V)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(lb, 0)[..., None], axis=-1
+        )[..., 0]
+        valid = lb >= 0
+        nll = jnp.where(valid, lse - tgt, 0.0)
+        return (tot + jnp.sum(nll), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros((), jnp.int32)), (hc, lc))
+    return tot / jnp.maximum(cnt, 1)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill trunk)
+# ---------------------------------------------------------------------------
+
+def _block_apply(bp, x, cfg: ArchConfig, attn_impl: str):
+    """One transformer block. Returns (x_out, aux_loss).
+
+    The residual stream is constrained sequence-parallel (seq over the tensor
+    axis) between blocks — Megatron-SP: norms/residual adds run seq-sharded,
+    and the partitioner turns the per-matmul all-reduces into the cheaper
+    all-gather + reduce-scatter pair at the block boundaries (§Perf)."""
+    from .layers import constrain
+
+    x = constrain(x, "dp", "tp", None)
+    h = apply_norm(bp["attn_norm"], x, cfg)
+    x = x + apply_attention_block(bp["attn"], h, cfg, impl=attn_impl)
+    x = constrain(x, "dp", "tp", None)
+    h = apply_norm(bp["mlp_norm"], x, cfg)
+    if "moe" in bp:
+        y, aux = apply_moe(bp["moe"], h, cfg)
+    else:
+        y, aux = apply_mlp(bp["mlp"], h, cfg), jnp.zeros(())
+    return x + y, aux
+
+
+def forward_hidden(params, cfg: ArchConfig, batch: dict,
+                   attn_impl: str = "chunked") -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Embed + all blocks + final norm. Returns (hidden (B,L,d), aux_loss)."""
+    x = embed_inputs(params, cfg, batch)
+
+    def body(carry, bp):
+        x, aux = carry
+        x, a = _block_apply(bp, x, cfg, attn_impl)
+        return (x, aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    (x, aux), _ = jax.lax.scan(body_fn, (x, jnp.zeros(())), params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def forward_logits(params, cfg: ArchConfig, batch: dict,
+                   attn_impl: str = "chunked") -> jnp.ndarray:
+    h, _ = forward_hidden(params, cfg, batch, attn_impl)
+    return h.astype(jnp.float32) @ head_matrix(params, cfg).astype(jnp.float32)
+
+
+def loss_fn(params, cfg: ArchConfig, batch: dict,
+            attn_impl: str = "chunked", aux_weight: float = 0.01) -> jnp.ndarray:
+    h, aux = forward_hidden(params, cfg, batch, attn_impl)
+    labels = batch["labels"]
+    if cfg.frontend != "none" and cfg.family == "vlm":
+        # frontend tokens carry no labels
+        n_f = batch["frontend_embeds"].shape[1]
+        pad = jnp.full(labels.shape[:1] + (n_f,), -100, labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    ce = chunked_softmax_xent(h, head_matrix(params, cfg), labels)
+    return ce + aux_weight * aux
+
+
+# ---------------------------------------------------------------------------
+# KV-cache serving
+# ---------------------------------------------------------------------------
+
+class TransformerCache(NamedTuple):
+    k: jnp.ndarray       # (nL, B, S, KV, hd)
+    v: jnp.ndarray
+    length: jnp.ndarray  # () int32 — tokens written so far
+
+
+def cache_capacity(cfg: ArchConfig, seq_len: int) -> int:
+    """Ring-buffer size: the sliding window if set, else the full context."""
+    if cfg.sliding_window is not None:
+        return min(cfg.sliding_window, seq_len)
+    return seq_len
+
+
+def init_cache(cfg: ArchConfig, batch: int, seq_len: int) -> TransformerCache:
+    S = cache_capacity(cfg, seq_len)
+    shape = (cfg.n_layers, batch, S, cfg.n_kv_heads, cfg.hd)
+    dt = dtype_of(cfg)
+    return TransformerCache(
+        k=jnp.zeros(shape, dt), v=jnp.zeros(shape, dt),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
+            attn_impl: str = "chunked"):
+    """Run the full prompt, return (last-token logits, filled cache)."""
+    x = embed_inputs(params, cfg, batch)
+    B, L, _ = x.shape
+    S = cache_capacity(cfg, cache_len)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+
+    # Ring-layout slot map (SWA only): token at absolute position p lives in
+    # slot p % S; slot s holds the newest token p with p ≡ s (mod S). For the
+    # linear (full-attention) cache we keep the first S tokens in order.
+    ring = cfg.sliding_window is not None
+    if L >= S and ring:
+        slots = jnp.arange(S)
+        ring_src = slots + ((L - 1 - slots) // S) * S       # positions to keep
+
+    def body(x, bp):
+        h = apply_norm(bp["attn_norm"], x, cfg)
+        q, k, v = attn_qkv(bp["attn"], h, positions, cfg)
+        o = attention_sharded(q, k, v, cfg, impl=attn_impl)
+        o = o.reshape(B, L, cfg.n_heads * cfg.hd) @ bp["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        h = apply_norm(bp["mlp_norm"], x, cfg)
+        if "moe" in bp:
+            y, _ = apply_moe(bp["moe"], h, cfg)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg)
+        if L >= S and ring:
+            k_keep, v_keep = k[:, ring_src], v[:, ring_src]
+        elif L >= S:
+            k_keep, v_keep = k[:, :S], v[:, :S]
+        else:
+            k_keep = jnp.pad(k, ((0, 0), (0, S - L), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v, ((0, 0), (0, S - L), (0, 0), (0, 0)))
+        return x + y, (k_keep, v_keep)
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x[:, -1:].astype(jnp.float32) @ head_matrix(params, cfg).astype(jnp.float32)
+    cache = TransformerCache(k=ks, v=vs, length=jnp.asarray(min(L, S), jnp.int32))
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache: TransformerCache):
+    """One autoregressive step. token: (B, 1) int32. Returns (logits, cache).
+
+    With a sliding window the cache is a ring buffer (write at length % S);
+    otherwise it is linear (write at length).
+    """
+    B = token.shape[0]
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[token]          # (B, 1, d)
+    S = cache.k.shape[2]
+    pos = jnp.broadcast_to(cache.length[None, None], (B, 1))
+    ring = cfg.sliding_window is not None
+    write_at = cache.length % S if ring else jnp.minimum(cache.length, S - 1)
+
+    def body(x, layer):
+        bp, k_cache, v_cache = layer
+        h = apply_norm(bp["attn_norm"], x, cfg)
+        q, k, v = attn_qkv(bp["attn"], h, pos, cfg)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, write_at, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, write_at, 0, 0))
+        o = decode_attention(
+            q, k_cache, v_cache, cache.length + 1,
+            sliding_window=cfg.sliding_window, ring=ring,
+        )
+        o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ bp["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        h = apply_norm(bp["mlp_norm"], x, cfg)
+        if "moe" in bp:
+            y, _ = apply_moe(bp["moe"], h, cfg)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg)
+        return x + y, (k_cache, v_cache)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["blocks"], cache.k, cache.v))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x.astype(jnp.float32) @ head_matrix(params, cfg).astype(jnp.float32)
+    new_cache = TransformerCache(k=ks, v=vs, length=cache.length + 1)
+    return logits[:, 0], new_cache

@@ -1,0 +1,432 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, parallelizable) and
+sLSTM (scalar memory, sequential) in the paper's [7:1] alternation.
+
+TPU adaptation (DESIGN.md §3): the mLSTM recurrence
+    C_t = f_t C_{t-1} + i_t v_t k_tᵀ,  n_t = f_t n_{t-1} + i_t k_t
+is the same algebra as Mamba2's SSD, so training uses the same chunked
+matmul-dominant scheme (intra-chunk quadratic + inter-chunk scan) — here with
+per-head k/q ("B/C") since xLSTM keys are per-head. Decode is the O(1)
+recurrent update, which is what makes long_500k runnable for this arch.
+
+sLSTM is inherently sequential (recurrent weights on h_{t-1}); it runs as a
+lax.scan over time with block-diagonal per-head recurrent matrices — the
+architecture's own constraint, not an implementation shortcut.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import dense_init, pdtype_of
+
+_GATE_CLIP = 8.0  # stabilizes exponential input gating (see module docstring)
+
+
+# ---------------------------------------------------------------------------
+# chunked per-head linear attention with scalar decay (shared by mLSTM)
+# ---------------------------------------------------------------------------
+
+def linear_attn_chunked(q, k, v, w, log_a, chunk: int = 128,
+                        return_state: bool = False):
+    """y_t = Σ_{j<=t} (Π_{s=j+1..t} a_s) w_j (q_t·k_j) v_j   — per head.
+
+    q,k: (B,L,H,Dk), v: (B,L,H,Dv), w,log_a: (B,L,H). Returns (B,L,H,Dv) fp32
+    (and the final state (B,H,Dk,Dv) when return_state — parallel prefill).
+    Padding is state-exact: padded steps get w=0 and log_a=0 (a=1).
+    """
+    Bsz, L, H, Dk = q.shape
+    Dv = v.shape[-1]
+    Q = min(chunk, L)
+    pad = (-L) % Q
+    if pad:
+        padt = lambda t: jnp.pad(t, ((0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 2))
+        q, k, v, w, log_a = map(padt, (q, k, v, w, log_a))
+    Lp = L + pad
+    nC = Lp // Q
+    f32 = lambda t: t.astype(jnp.float32)
+    qc = f32(q).reshape(Bsz, nC, Q, H, Dk)
+    kc = f32(k).reshape(Bsz, nC, Q, H, Dk)
+    vc = f32(v).reshape(Bsz, nC, Q, H, Dv)
+    wc = f32(w).reshape(Bsz, nC, Q, H)
+    la = f32(log_a).reshape(Bsz, nC, Q, H)
+
+    cs = jnp.cumsum(la, axis=2)                                    # (B,nC,Q,H)
+    # intra-chunk: D[i,j] = cs[i] - cs[j] for j <= i
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]             # (B,nC,Qi,Qj,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    Lmat = jnp.where(mask, jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcqhd,bckhd->bcqkh", qc, kc)
+    y_intra = jnp.einsum("bcqkh,bcqkh,bckh,bckhv->bcqhv", Lmat, scores, wc, vc)
+
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)                  # (B,nC,Q,H)
+    S_chunk = jnp.einsum("bckhd,bckh,bckh,bckhv->bchdv", kc, decay_to_end, wc, vc)
+    a_chunk = jnp.exp(cs[:, :, -1])                                # (B,nC,H)
+
+    def step(S_prev, inp):
+        a_c, S_c = inp
+        return a_c[:, :, None, None] * S_prev + S_c, S_prev
+
+    S0 = jnp.zeros((Bsz, H, Dk, Dv), jnp.float32)
+    S_final, S_before = jax.lax.scan(
+        step, S0, (jnp.moveaxis(a_chunk, 1, 0), jnp.moveaxis(S_chunk, 1, 0))
+    )
+    S_before = jnp.moveaxis(S_before, 0, 1)                        # (B,nC,H,Dk,Dv)
+    y_inter = jnp.einsum("bcqhd,bcqh,bchdv->bcqhv", qc, jnp.exp(cs), S_before)
+    y = (y_intra + y_inter).reshape(Bsz, Lp, H, Dv)[:, :L]
+    if return_state:
+        return y, S_final
+    return y
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray    # (B, H, Dk, Dv) matrix memory
+    n: jnp.ndarray    # (B, H, Dk) normalizer
+
+
+def init_mlstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    pf = cfg.xlstm.proj_factor_mlstm
+    d_in = int(d * pf)
+    H = cfg.n_heads
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 7)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * d_in, pd),     # [x_path, gate z]
+        "wq": dense_init(ks[1], d_in, d_in, pd),
+        "wk": dense_init(ks[2], d_in, d_in, pd),
+        "wv": dense_init(ks[3], d_in, d_in, pd),
+        "w_gates": dense_init(ks[4], d_in, 2 * H, pd),     # [ĩ, f̃] per head
+        "gate_bias": jnp.concatenate([
+            jnp.zeros((H,)), 3.0 * jnp.ones((H,))          # forget bias -> remember
+        ]).astype(pd),
+        "out_norm_scale": jnp.ones((d_in,), pd),
+        "down_proj": dense_init(ks[5], d_in, d, pd),
+    }
+
+
+def _mlstm_qkv_gates(p, xp, cfg):
+    B, L, d_in = xp.shape
+    H = cfg.n_heads
+    hd = d_in // H
+    dt = xp.dtype
+    q = (xp @ p["wq"].astype(dt)).reshape(B, L, H, hd) / jnp.sqrt(hd).astype(dt)
+    k = (xp @ p["wk"].astype(dt)).reshape(B, L, H, hd)
+    v = (xp @ p["wv"].astype(dt)).reshape(B, L, H, hd)
+    gates = (xp @ p["w_gates"].astype(dt)).astype(jnp.float32) + p["gate_bias"].astype(
+        jnp.float32
+    )[None, None]
+    i_raw, f_raw = jnp.split(gates, 2, axis=-1)            # (B,L,H) each
+    w = jnp.exp(jnp.clip(i_raw, -_GATE_CLIP, _GATE_CLIP))  # input gate (exp, clipped)
+    log_a = jax.nn.log_sigmoid(f_raw)                      # forget gate
+    return q, k, v, w, log_a
+
+
+def apply_mlstm(p, x: jnp.ndarray, cfg: ArchConfig, return_cache: bool = False):
+    dt = x.dtype
+    up = x @ p["up_proj"].astype(dt)
+    xp, z = jnp.split(up, 2, axis=-1)
+    q, k, v, w, log_a = _mlstm_qkv_gates(p, xp, cfg)
+    Q = cfg.xlstm.chunk
+    # fused numerator + normalizer: augment v with a ones channel so the
+    # (Q×Q) decay/score panels are computed ONCE for both (§Perf: halves the
+    # intra-chunk panel traffic vs two linear_attn passes)
+    v_aug = jnp.concatenate([v, jnp.ones_like(v[..., :1])], axis=-1)
+    if return_cache:
+        y_aug, S_fin = linear_attn_chunked(q, k, v_aug, w, log_a, chunk=Q,
+                                           return_state=True)
+        cache = MLSTMCache(C=S_fin[..., :-1], n=S_fin[..., -1])
+    else:
+        y_aug = linear_attn_chunked(q, k, v_aug, w, log_a, chunk=Q)
+    num, den = y_aug[..., :-1], y_aug[..., -1:]
+    y = num / jnp.maximum(jnp.abs(den), 1.0)
+    B, L, H, hd = y.shape
+    y = y.reshape(B, L, H * hd)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-6) * p["out_norm_scale"].astype(jnp.float32)
+    out = y.astype(dt) @ p["down_proj"].astype(dt)
+    if return_cache:
+        return out, cache
+    return out
+
+
+def init_mlstm_cache(cfg: ArchConfig, batch: int) -> MLSTMCache:
+    d_in = int(cfg.d_model * cfg.xlstm.proj_factor_mlstm)
+    H = cfg.n_heads
+    hd = d_in // H
+    return MLSTMCache(
+        C=jnp.zeros((batch, H, hd, hd), jnp.float32),
+        n=jnp.zeros((batch, H, hd), jnp.float32),
+    )
+
+
+def decode_mlstm(p, x: jnp.ndarray, cache: MLSTMCache, cfg: ArchConfig):
+    """x: (B, 1, d) -> (y, cache)."""
+    dt = x.dtype
+    up = x @ p["up_proj"].astype(dt)
+    xp, z = jnp.split(up, 2, axis=-1)
+    q, k, v, w, log_a = _mlstm_qkv_gates(p, xp, cfg)
+    qs, ks_, vs = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # (B,H,hd)
+    a = jnp.exp(log_a[:, 0])                                        # (B,H)
+    wi = w[:, 0]
+    C = cache.C * a[:, :, None, None] + jnp.einsum("bh,bhd,bhv->bhdv", wi, ks_, vs)
+    n = cache.n * a[:, :, None] + wi[:, :, None] * ks_
+    num = jnp.einsum("bhdv,bhd->bhv", C, qs)
+    den = jnp.einsum("bhd,bhd->bh", n, qs)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[:, :, None]
+    B = x.shape[0]
+    y = y.reshape(B, 1, -1)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-6) * p["out_norm_scale"].astype(jnp.float32)
+    return y.astype(dt) @ p["down_proj"].astype(dt), MLSTMCache(C=C, n=n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray    # (B, d)
+    n: jnp.ndarray
+    h: jnp.ndarray
+    m: jnp.ndarray    # stabilizer
+
+
+def init_slstm(key, cfg: ArchConfig):
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    pd = pdtype_of(cfg)
+    ks = jax.random.split(key, 4)
+    pf = cfg.xlstm.proj_factor_slstm
+    d_ff = int(d * pf)
+    return {
+        "w_in": dense_init(ks[0], d, 4 * d, pd),              # z, i, f, o pre-acts
+        "r_blocks": (jax.random.normal(ks[1], (H, dh, 4 * dh)) / jnp.sqrt(dh)).astype(pd),
+        "gate_bias": jnp.concatenate(
+            [jnp.zeros((2 * d,)), 3.0 * jnp.ones((d,)), jnp.zeros((d,))]
+        ).astype(pd),
+        "out_norm_scale": jnp.ones((d,), pd),
+        "ff_up": dense_init(ks[2], d, d_ff, pd),
+        "ff_down": dense_init(ks[3], d_ff, d, pd),
+    }
+
+
+def _slstm_cell(p, x_t, state: SLSTMCache, cfg: ArchConfig):
+    """One timestep. x_t: (B, 4d) pre-activation from the input projection."""
+    B = x_t.shape[0]
+    d = cfg.d_model
+    H = cfg.n_heads
+    dh = d // H
+    h_heads = state.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", h_heads, p["r_blocks"].astype(jnp.float32))
+    pre = x_t.astype(jnp.float32) + rec.reshape(B, 4 * d) + p["gate_bias"].astype(
+        jnp.float32
+    )[None]
+    z_t, i_t, f_t, o_t = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z_t)
+    log_f = jax.nn.log_sigmoid(f_t)
+    m_new = jnp.maximum(log_f + state.m, i_t)                 # stabilizer
+    i = jnp.exp(i_t - m_new)
+    f = jnp.exp(log_f + state.m - m_new)
+    c = f * state.c + i * z
+    n = f * state.n + i
+    h = jax.nn.sigmoid(o_t) * c / jnp.maximum(n, 1.0)
+    return SLSTMCache(c=c, n=n, h=h, m=m_new)
+
+
+def apply_slstm(p, x: jnp.ndarray, cfg: ArchConfig, return_cache: bool = False):
+    B, L, d = x.shape
+    dt = x.dtype
+    # NOTE (§Perf, refuted hypotheses): pinning the scan operand/output to
+    # batch-only sharding was tried twice and measured WORSE (the partitioner
+    # responded with per-timestep weight-gradient all-reduces, +60% coll).
+    # The winning config is: replicate r_blocks (sharding.py) and let the
+    # partitioner keep the gate pre-activations model-sharded — the residual
+    # per-step AR is 51 GB/step total, 4% of the cell's collective bytes.
+    xin = x @ p["w_in"].astype(dt)                             # (B, L, 4d)
+
+    def step(state, x_t):
+        state = _slstm_cell(p, x_t, state, cfg)
+        return state, state.h
+
+    init = init_slstm_cache(cfg, B)
+    final, hs = jax.lax.scan(step, init, jnp.moveaxis(xin, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1)                                 # (B, L, d) fp32
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-6) * p["out_norm_scale"].astype(jnp.float32)
+    y = y.astype(dt)
+    h = jax.nn.gelu(y @ p["ff_up"].astype(dt))
+    out = h @ p["ff_down"].astype(dt)
+    if return_cache:
+        return out, final
+    return out
+
+
+def init_slstm_cache(cfg: ArchConfig, batch: int) -> SLSTMCache:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMCache(c=z, n=z, h=z, m=jnp.full((batch, d), -1e9, jnp.float32))
+
+
+def decode_slstm(p, x: jnp.ndarray, cache: SLSTMCache, cfg: ArchConfig):
+    dt = x.dtype
+    xin = (x @ p["w_in"].astype(dt))[:, 0]                     # (B, 4d)
+    state = _slstm_cell(p, xin, cache, cfg)
+    y = state.h[:, None]                                       # (B,1,d)
+    ms = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y / jnp.sqrt(ms + 1e-6) * p["out_norm_scale"].astype(jnp.float32)
+    y = y.astype(dt)
+    h = jax.nn.gelu(y @ p["ff_up"].astype(dt))
+    return h @ p["ff_down"].astype(dt), state
+
+
+# ---------------------------------------------------------------------------
+# full xLSTM language model: groups of (slstm_every-1 mLSTM + 1 sLSTM)
+# ---------------------------------------------------------------------------
+
+class XLSTMLMCache(NamedTuple):
+    mlstm: MLSTMCache     # stacked (n_groups, per_group, ...)
+    slstm: SLSTMCache     # stacked (n_groups, ...)
+    length: jnp.ndarray
+
+
+def _xlstm_layout(cfg: ArchConfig) -> tuple[int, int]:
+    per = cfg.xlstm.slstm_every              # block group size, e.g. 8
+    assert cfg.n_layers % per == 0, "n_layers must be divisible by slstm_every"
+    return cfg.n_layers // per, per - 1      # (n_groups, mlstm per group)
+
+
+def init_xlstm_lm(key, cfg: ArchConfig):
+    from .layers import dense_init, embed_init, init_norm, pdtype_of
+
+    n_groups, n_ml = _xlstm_layout(cfg)
+    ks = jax.random.split(key, 5)
+    mkeys = jax.random.split(ks[0], n_groups * n_ml).reshape(n_groups, n_ml, 2)
+    skeys = jax.random.split(ks[1], n_groups)
+
+    def init_mblock(k):
+        return {"norm": init_norm(cfg), "mlstm": init_mlstm(k, cfg)}
+
+    def init_sblock(k):
+        return {"norm": init_norm(cfg), "slstm": init_slstm(k, cfg)}
+
+    return {
+        "embed_tokens": embed_init(ks[2], cfg.vocab, cfg.d_model, pdtype_of(cfg)),
+        "mlstm_groups": jax.vmap(jax.vmap(init_mblock))(mkeys),
+        "slstm_blocks": jax.vmap(init_sblock)(skeys),
+        "final_norm": init_norm(cfg),
+        "lm_head": dense_init(ks[3], cfg.d_model, cfg.vocab, pdtype_of(cfg)),
+    }
+
+
+def forward_hidden(params, cfg: ArchConfig, batch: dict, attn_impl: str = "chunked"):
+    del attn_impl
+    from .layers import apply_norm, dtype_of
+
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[batch["tokens"]]
+
+    def m_block(x, bp):
+        h = apply_norm(bp["norm"], x, cfg)
+        return x + apply_mlstm(bp["mlstm"], h, cfg), None
+
+    m_fn = jax.checkpoint(m_block) if cfg.remat else m_block
+
+    def group(x, gp):
+        mgp, sgp = gp
+        x, _ = jax.lax.scan(m_fn, x, mgp)
+        h = apply_norm(sgp["norm"], x, cfg)
+        x = x + apply_slstm(sgp["slstm"], h, cfg)
+        return x, None
+
+    g_fn = jax.checkpoint(group) if cfg.remat else group
+    x, _ = jax.lax.scan(g_fn, x, (params["mlstm_groups"], params["slstm_blocks"]))
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, jnp.zeros(())
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
+            attn_impl: str = "chunked"):
+    """Parallel prefill: one chunked forward pass over the prompt extracting
+    every block's final recurrent state (mLSTM matrix memory + normalizer via
+    the chunked linear-attention scan; sLSTM final cell from its time scan).
+    Returns (last-token logits, XLSTMLMCache)."""
+    del attn_impl
+    from .layers import apply_norm, dtype_of
+
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[batch["tokens"]]
+
+    def m_block(x, bp):
+        h = apply_norm(bp["norm"], x, cfg)
+        y, mc = apply_mlstm(bp["mlstm"], h, cfg, return_cache=True)
+        return x + y, mc
+
+    def group(x, gp):
+        mgp, sgp = gp
+        x, mc = jax.lax.scan(m_block, x, mgp)
+        h = apply_norm(sgp["norm"], x, cfg)
+        y, sc = apply_slstm(sgp["slstm"], h, cfg, return_cache=True)
+        return x + y, (mc, sc)
+
+    x, (ml, sl) = jax.lax.scan(
+        group, x, (params["mlstm_groups"], params["slstm_blocks"])
+    )
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x[:, -1:].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    L = batch["tokens"].shape[1]
+    return logits, XLSTMLMCache(mlstm=ml, slstm=sl,
+                                length=jnp.asarray(L, jnp.int32))
+
+
+def init_xlstm_cache(cfg: ArchConfig, batch: int) -> XLSTMLMCache:
+    n_groups, n_ml = _xlstm_layout(cfg)
+    ml = init_mlstm_cache(cfg, batch)
+    sl = init_slstm_cache(cfg, batch)
+    # broadcast the true initial values (the sLSTM stabilizer m starts at -1e9,
+    # NOT 0 — zeros would silently change the n-floor normalization)
+    stack = lambda t, shape: jax.tree_util.tree_map(
+        lambda l: jnp.broadcast_to(l, shape + l.shape).copy(), t
+    )
+    return XLSTMLMCache(
+        mlstm=stack(ml, (n_groups, n_ml)),
+        slstm=stack(sl, (n_groups,)),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache: XLSTMLMCache):
+    from .layers import apply_norm, dtype_of
+
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[token]     # (B,1,d)
+
+    def m_block(x, layer):
+        bp, mc = layer
+        h = apply_norm(bp["norm"], x, cfg)
+        y, mc_new = decode_mlstm(bp["mlstm"], h, mc, cfg)
+        return x + y, mc_new
+
+    def group(x, layer):
+        mgp, sgp, g_mc, s_c = layer
+        x, mc_new = jax.lax.scan(m_block, x, (mgp, g_mc))
+        h = apply_norm(sgp["norm"], x, cfg)
+        y, s_new = decode_slstm(sgp["slstm"], h, s_c, cfg)
+        return x + y, (mc_new, s_new)
+
+    x, (ml, sl) = jax.lax.scan(
+        group, x,
+        (params["mlstm_groups"], params["slstm_blocks"], cache.mlstm, cache.slstm),
+    )
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits[:, 0], XLSTMLMCache(mlstm=ml, slstm=sl, length=cache.length + 1)

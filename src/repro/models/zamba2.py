@@ -1,0 +1,251 @@
+"""Zamba2 hybrid assembly: a Mamba2 backbone with a SHARED full transformer
+block (attention + MLP, one set of weights) applied after every
+``cfg.attn_every`` Mamba blocks — the Zamba2 weight-sharing trick.
+
+Layout for n_layers=81, attn_every=6: 13 groups of (6 mamba + shared-attn)
+plus a 3-block mamba tail. Groups are scanned (stacked params), the shared
+block is a closure constant — HLO stays small at 81 layers.
+
+The shared attention uses a sliding-window KV ring cache (cfg.sliding_window)
+so long_500k decode is O(window), while the Mamba state is O(1) — this arch
+is one of the designated long-context cells.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import (
+    apply_attention_block,
+    apply_mlp,
+    apply_norm,
+    attn_qkv,
+    decode_attention,
+    dense_init,
+    dtype_of,
+    embed_init,
+    init_attention,
+    init_mlp,
+    init_norm,
+    pdtype_of,
+)
+from .mamba2 import (
+    MambaCache,
+    apply_mamba2,
+    decode_mamba2,
+    init_mamba2,
+    init_mamba_cache,
+)
+
+
+def _group_shape(cfg: ArchConfig) -> tuple[int, int]:
+    n_groups = cfg.n_layers // cfg.attn_every
+    tail = cfg.n_layers % cfg.attn_every
+    return n_groups, tail
+
+
+def _init_mamba_block(key, cfg: ArchConfig):
+    k1, k2 = jax.random.split(key)
+    return {"norm": init_norm(cfg), "mamba": init_mamba2(k1, cfg)}
+
+
+def init_zamba2(key, cfg: ArchConfig):
+    n_groups, tail = _group_shape(cfg)
+    ks = jax.random.split(key, 6)
+    gkeys = jax.random.split(ks[0], n_groups * cfg.attn_every).reshape(
+        n_groups, cfg.attn_every, 2
+    )
+    groups = jax.vmap(jax.vmap(lambda k: _init_mamba_block(k, cfg)))(gkeys)
+    params = {
+        "embed_tokens": embed_init(ks[1], cfg.vocab, cfg.d_model, pdtype_of(cfg)),
+        "mamba_groups": groups,
+        "shared_attn": {
+            "attn_norm": init_norm(cfg),
+            "attn": init_attention(ks[2], cfg),
+            "mlp_norm": init_norm(cfg),
+            "mlp": init_mlp(ks[3], cfg),
+        },
+        "final_norm": init_norm(cfg),
+        "lm_head": dense_init(ks[4], cfg.d_model, cfg.vocab, pdtype_of(cfg)),
+    }
+    if tail:
+        tkeys = jax.random.split(ks[5], tail)
+        params["mamba_tail"] = jax.vmap(lambda k: _init_mamba_block(k, cfg))(tkeys)
+    return params
+
+
+def _mamba_block(bp, x, cfg):
+    h = apply_norm(bp["norm"], x, cfg)
+    return x + apply_mamba2(bp["mamba"], h, cfg)
+
+
+def _shared_block(sp, x, cfg, attn_impl):
+    h = apply_norm(sp["attn_norm"], x, cfg)
+    x = x + apply_attention_block(sp["attn"], h, cfg, impl=attn_impl)
+    h = apply_norm(sp["mlp_norm"], x, cfg)
+    return x + apply_mlp(sp["mlp"], h, cfg)
+
+
+def forward_hidden(params, cfg: ArchConfig, batch: dict,
+                   attn_impl: str = "chunked"):
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[batch["tokens"]]
+    sp = params["shared_attn"]
+
+    def inner(x, bp):
+        return _mamba_block(bp, x, cfg), None
+
+    inner_fn = jax.checkpoint(inner) if cfg.remat else inner
+
+    def group(x, gp):
+        x, _ = jax.lax.scan(inner_fn, x, gp)
+        x = _shared_block(sp, x, cfg, attn_impl)
+        return x, None
+
+    group_fn = jax.checkpoint(group) if cfg.remat else group
+    x, _ = jax.lax.scan(group_fn, x, params["mamba_groups"])
+    if "mamba_tail" in params:
+        x, _ = jax.lax.scan(inner_fn, x, params["mamba_tail"])
+    x = apply_norm(params["final_norm"], x, cfg)
+    return x, jnp.zeros(())
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+class ZambaCache(NamedTuple):
+    mamba_groups: MambaCache      # stacked (n_groups, attn_every, ...)
+    mamba_tail: MambaCache        # stacked (tail, ...) — empty tail => zeros((0,...))
+    attn_k: jnp.ndarray           # (n_groups, B, S, KV, hd) ring buffers
+    attn_v: jnp.ndarray
+    length: jnp.ndarray
+
+
+def init_zamba_cache(cfg: ArchConfig, batch: int, seq_len: int) -> ZambaCache:
+    n_groups, tail = _group_shape(cfg)
+    S = min(cfg.sliding_window or seq_len, seq_len)
+    dt = dtype_of(cfg)
+
+    def stack(n):
+        base = init_mamba_cache(cfg, batch, dt)
+        return jax.tree_util.tree_map(
+            lambda l: jnp.zeros((n,) + l.shape, l.dtype), base
+        )
+
+    inner_stack = jax.tree_util.tree_map(
+        lambda l: jnp.zeros((n_groups, cfg.attn_every) + l.shape, l.dtype),
+        init_mamba_cache(cfg, batch, dt),
+    )
+    return ZambaCache(
+        mamba_groups=inner_stack,
+        mamba_tail=stack(max(tail, 0)),
+        attn_k=jnp.zeros((n_groups, batch, S, cfg.n_kv_heads, cfg.hd), dt),
+        attn_v=jnp.zeros((n_groups, batch, S, cfg.n_kv_heads, cfg.hd), dt),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
+            attn_impl: str = "chunked"):
+    """Parallel prefill: one chunked forward pass over the whole prompt that
+    also extracts every recurrent state (final SSM state per mamba block, a
+    ring-layout sliding-window KV cache per shared-attn invocation). Returns
+    (last-token logits, ZambaCache) — O(L) memory, no token-by-token loop."""
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[batch["tokens"]]
+    B, L, _ = x.shape
+    sp = params["shared_attn"]
+    S = min(cfg.sliding_window or cache_len, cache_len)
+    positions = jnp.broadcast_to(jnp.arange(L)[None], (B, L))
+    if L >= S:
+        slots = jnp.arange(S)
+        ring_src = slots + ((L - 1 - slots) // S) * S
+
+    def inner(x, bp):
+        h = apply_norm(bp["norm"], x, cfg)
+        y, mc = apply_mamba2(bp["mamba"], h, cfg, return_cache=True)
+        return x + y, mc
+
+    def group(x, layer):
+        gp = layer
+        x, mc = jax.lax.scan(inner, x, gp)
+        h = apply_norm(sp["attn_norm"], x, cfg)
+        q, k, v = attn_qkv(sp["attn"], h, positions, cfg)
+        from .layers import attention_sharded
+        o = attention_sharded(q, k, v, cfg, impl=attn_impl)
+        o = o.reshape(B, L, cfg.n_heads * cfg.hd) @ sp["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        h = apply_norm(sp["mlp_norm"], x, cfg)
+        x = x + apply_mlp(sp["mlp"], h, cfg)
+        if L >= S:
+            k_keep, v_keep = k[:, ring_src], v[:, ring_src]
+        else:
+            k_keep = jnp.pad(k, ((0, 0), (0, S - L), (0, 0), (0, 0)))
+            v_keep = jnp.pad(v, ((0, 0), (0, S - L), (0, 0), (0, 0)))
+        return x, (mc, k_keep, v_keep)
+
+    x, (g_mc, ks, vs) = jax.lax.scan(group, x, params["mamba_groups"])
+    if "mamba_tail" in params:
+        x, tail_mc = jax.lax.scan(inner, x, params["mamba_tail"])
+    else:
+        n_groups, tail = _group_shape(cfg)
+        tail_mc = jax.tree_util.tree_map(
+            lambda l: jnp.zeros((max(tail, 0),) + l.shape, l.dtype),
+            init_mamba_cache(cfg, B, dt),
+        )
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x[:, -1:].astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    cache = ZambaCache(
+        mamba_groups=g_mc, mamba_tail=tail_mc, attn_k=ks, attn_v=vs,
+        length=jnp.asarray(L, jnp.int32),
+    )
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache: ZambaCache):
+    B = token.shape[0]
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[token]          # (B, 1, d)
+    sp = params["shared_attn"]
+    S = cache.attn_k.shape[2]
+    pos = jnp.broadcast_to(cache.length[None, None], (B, 1))
+    write_at = cache.length % S
+
+    def inner(x, layer):
+        bp, mc = layer
+        h = apply_norm(bp["norm"], x, cfg)
+        y, mc_new = decode_mamba2(bp["mamba"], h, mc, cfg)
+        return x + y, mc_new
+
+    def group(x, layer):
+        gp, g_mc, k_cache, v_cache = layer
+        x, mc_new = jax.lax.scan(inner, x, (gp, g_mc))
+        h = apply_norm(sp["attn_norm"], x, cfg)
+        q, k, v = attn_qkv(sp["attn"], h, pos, cfg)
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k, (0, write_at, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v, (0, write_at, 0, 0))
+        o = decode_attention(q, k_cache, v_cache, cache.length + 1,
+                             sliding_window=cfg.sliding_window, ring=True)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ sp["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        h = apply_norm(sp["mlp_norm"], x, cfg)
+        x = x + apply_mlp(sp["mlp"], h, cfg)
+        return x, (mc_new, k_cache, v_cache)
+
+    x, (g_mc, ks, vs) = jax.lax.scan(
+        group, x, (params["mamba_groups"], cache.mamba_groups,
+                   cache.attn_k, cache.attn_v)
+    )
+    tail_mc = cache.mamba_tail
+    if "mamba_tail" in params:
+        x, tail_mc = jax.lax.scan(inner, x, (params["mamba_tail"], cache.mamba_tail))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits[:, 0], ZambaCache(
+        mamba_groups=g_mc, mamba_tail=tail_mc,
+        attn_k=ks, attn_v=vs, length=cache.length + 1,
+    )

@@ -1,0 +1,23 @@
+"""repro.parallel — mesh/sharding rules for pjit distribution."""
+from .compression import (
+    CompressionConfig,
+    compress_grads,
+    compression_ratio,
+    finalize,
+    init_state,
+)
+from .sharding import (
+    batch_spec,
+    cache_specs,
+    data_axes,
+    input_specs_sharding,
+    opt_state_specs,
+    param_spec,
+    tree_param_specs,
+    tree_shardings,
+)
+
+__all__ = [
+    "param_spec", "tree_param_specs", "tree_shardings", "opt_state_specs",
+    "cache_specs", "batch_spec", "data_axes", "input_specs_sharding",
+]

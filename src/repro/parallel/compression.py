@@ -1,0 +1,179 @@
+"""Gradient compression for the data-parallel axis (SUMO-aligned).
+
+The paper's subspace view gives a natural DP-communication compressor:
+workers exchange the PROJECTED gradient Ĝ = QᵀG (r × short floats) instead
+of the full G (long × short) — an (long/r)× wire reduction. Two design
+choices make this deployable:
+
+  * **Zero-coordination basis.** Q is a seeded random orthonormal sketch
+    regenerated from (seed, step) — every worker derives the same Q without
+    any extra collective (Flora-style). SUMO's own rSVD basis could be reused
+    instead (set ``use_sketch=False`` and pass the optimizer's Q), costing
+    one broadcast per refresh.
+  * **Error feedback (EF).** The per-worker residual e = G − Q Ĝ is carried
+    and added to the next step's gradient before compression, which restores
+    convergence to the uncompressed fixed point (standard EF14/EF21
+    argument; verified empirically in tests/test_compression.py).
+
+Integration point: wrap the per-shard gradients inside a shard_map over the
+dp axis —
+    ĝ   = compress(g + e, key)                  # local
+    ĝ̄  = jax.lax.pmean(ĝ, "data")              # r·short wire bytes
+    g̃, e = decompress(ĝ̄, key), (g + e) − decompress(ĝ, key)
+On this container the collective itself is exercised via vmap-simulated
+workers (tests); the compress/decompress path is the real production code.
+
+Only 2D+ "matrix" leaves are compressed; small leaves go through exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    rank: int = 64
+    seed: int = 0
+    min_dim: int = 256     # leaves with long-dim below this go uncompressed
+    error_feedback: bool = True
+
+
+class CompressionState(NamedTuple):
+    step: jnp.ndarray
+    error: PyTree          # per-leaf EF residual (None for uncompressed leaves)
+
+
+def _sketch(key, long_dim: int, r: int) -> jnp.ndarray:
+    """Seeded orthonormal (long, r) basis — identical on every worker."""
+    W = jax.random.normal(key, (long_dim, r), jnp.float32)
+    Q, _ = jnp.linalg.qr(W)
+    return Q
+
+
+def _leaf_key(base_key, step, idx: int):
+    return jax.random.fold_in(jax.random.fold_in(base_key, step), idx)
+
+
+def _eligible(leaf) -> bool:
+    return leaf is not None and leaf.ndim >= 2 and max(leaf.shape) >= 1
+
+
+def init_state(grads_template: PyTree, cfg: CompressionConfig) -> CompressionState:
+    error = jax.tree_util.tree_map(
+        lambda g: jnp.zeros(g.shape, jnp.float32)
+        if _eligible(g) and max(g.shape[-2:]) >= cfg.min_dim else None,
+        grads_template,
+        is_leaf=lambda x: x is None,
+    )
+    return CompressionState(step=jnp.zeros((), jnp.int32), error=error)
+
+
+def compress_leaf(G: jnp.ndarray, key, r: int):
+    """G (m, n) -> (Ĝ (r, short), basis is regenerated, not transmitted)."""
+    m, n = G.shape[-2], G.shape[-1]
+    transpose = m < n
+    Gl = jnp.swapaxes(G, -1, -2) if transpose else G
+    long_dim = Gl.shape[-2]
+    r_eff = min(r, long_dim)
+    Q = _sketch(key, long_dim, r_eff)
+    if G.ndim == 2:
+        return Q.T @ Gl.astype(jnp.float32)
+    flat = Gl.reshape((-1,) + Gl.shape[-2:]).astype(jnp.float32)
+    return jax.vmap(lambda g: Q.T @ g)(flat).reshape(
+        Gl.shape[:-2] + (r_eff, Gl.shape[-1])
+    )
+
+
+def decompress_leaf(G_hat: jnp.ndarray, key, shape) -> jnp.ndarray:
+    m, n = shape[-2], shape[-1]
+    transpose = m < n
+    long_dim = n if transpose else m
+    r_eff = G_hat.shape[-2]
+    Q = _sketch(key, long_dim, r_eff)
+    if len(shape) == 2:
+        out = Q @ G_hat
+    else:
+        flat = G_hat.reshape((-1,) + G_hat.shape[-2:])
+        out = jax.vmap(lambda g: Q @ g)(flat).reshape(
+            shape[:-2] + (long_dim, shape[-1] if not transpose else shape[-2])
+        )
+    return jnp.swapaxes(out, -1, -2) if transpose else out
+
+
+def compress_grads(grads: PyTree, state: CompressionState,
+                   cfg: CompressionConfig):
+    """Returns (payload pytree to be summed across DP workers, new_state_fn).
+
+    payload leaves: compressed (r, short) arrays for eligible leaves, raw
+    arrays otherwise. Call ``finalize(payload_mean, state)`` after the
+    cross-worker mean to obtain (decompressed grads, next state).
+    """
+    base = jax.random.PRNGKey(cfg.seed)
+    leaves, treedef = jax.tree_util.tree_flatten(grads, is_leaf=lambda x: x is None)
+    err_leaves = treedef.flatten_up_to(state.error)
+
+    payload, meta = [], []
+    for i, (g, e) in enumerate(zip(leaves, err_leaves)):
+        if g is None or e is None:
+            payload.append(g)
+            meta.append(None)
+            continue
+        g32 = g.astype(jnp.float32)
+        if cfg.error_feedback:
+            g32 = g32 + e
+        key = _leaf_key(base, state.step, i)
+        payload.append(compress_leaf(g32, key, cfg.rank))
+        meta.append((g.shape, i, g32))
+    return jax.tree_util.tree_unflatten(treedef, payload), meta, treedef
+
+
+def finalize(payload_mean: PyTree, meta, treedef, state: CompressionState,
+             cfg: CompressionConfig):
+    """Decompress the averaged payload; update EF residuals."""
+    base = jax.random.PRNGKey(cfg.seed)
+    p_leaves = treedef.flatten_up_to(payload_mean)
+    out, new_err = [], []
+    for p, m in zip(p_leaves, meta):
+        if m is None:
+            out.append(p)
+            new_err.append(None)
+            continue
+        shape, i, g_with_err = m
+        key = _leaf_key(base, state.step, i)
+        decoded = decompress_leaf(p, key, shape)
+        out.append(decoded.astype(jnp.float32))
+        if cfg.error_feedback:
+            # residual of the LOCAL contribution (what this worker failed to send)
+            local_decoded = decompress_leaf(
+                compress_leaf(g_with_err, key, cfg.rank), key, shape
+            )
+            new_err.append(g_with_err - local_decoded)
+        else:
+            new_err.append(jnp.zeros(shape, jnp.float32))
+    grads = jax.tree_util.tree_unflatten(treedef, out)
+    new_state = CompressionState(
+        step=state.step + 1,
+        error=jax.tree_util.tree_unflatten(treedef, new_err),
+    )
+    return grads, new_state
+
+
+def compression_ratio(grads: PyTree, cfg: CompressionConfig) -> float:
+    """Wire bytes with compression / without (lower is better)."""
+    full = comp = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        n = g.size
+        full += n
+        if g.ndim >= 2 and max(g.shape[-2:]) >= cfg.min_dim:
+            short = min(g.shape[-2], g.shape[-1])
+            batch = n // (g.shape[-2] * g.shape[-1])
+            comp += batch * min(cfg.rank, max(g.shape[-2:])) * short
+        else:
+            comp += n
+    return comp / full

@@ -1,0 +1,226 @@
+"""Sharding rules for the (pod, data, model) production mesh.
+
+Strategy (DESIGN.md §5):
+  * 2D weight matrices — tensor-parallel over `model` on the dimension the
+    Megatron layout prescribes (column-parallel up-projections, row-parallel
+    down/out-projections), falling back to "largest divisible dim" for
+    matrices outside the table.
+  * 3D expert stacks — expert-parallel: E over `model`.
+  * cfg.fsdp — additionally shard the other matrix dim over `data`
+    (FSDP/ZeRO-3 style) so 22B+ archs fit 16 GB/chip.
+  * optimizer states — same rule as the param they mirror; SUMO's Q basis
+    shards its long dim over `model`, the r×short moment is replicated
+    (negligible bytes — the point of the paper).
+  * activations/batches — batch over (pod, data); KV caches shard batch
+    over (pod, data) and heads over `model` when divisible, else sequence
+    over `model`.
+
+Everything returns jax.sharding.PartitionSpec; NamedSharding wrappers are
+built by tree_shardings(mesh, ...).
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig
+from ..core.optimizer import path_str
+
+# path-pattern → (axis_to_shard_over_model) for 2D params: 0 = rows, 1 = cols
+_MEGATRON_RULES: tuple[tuple[str, int], ...] = (
+    (r"embed", 0),           # vocab/patch rows over model
+    (r"lm_head", 1),         # vocab cols over model
+    (r"wq$", 1), (r"wk$", 1), (r"wv$", 1),      # column-parallel
+    (r"wo$", 0),                                  # row-parallel
+    (r"w_gate$", 1), (r"w_up$", 1), (r"ff_up$", 1), (r"up_proj$", 1),
+    (r"w_down$", 0), (r"ff_down$", 0), (r"down_proj$", 0),
+    (r"in_proj$", 1), (r"out_proj$", 0),          # mamba
+    (r"w_in$", 1), (r"w_gates$", 1),              # xlstm
+    (r"router$", 1),
+)
+
+# Small per-step weights where ANY sharding costs a collective inside a
+# sequential scan (e.g. the sLSTM recurrent blocks: 16 MB replicated vs a
+# 2 MB all-reduce × seq_len steps = ~100 GB/step — measured, §Perf).
+_REPLICATE_PATTERNS = (r"r_blocks$", r"conv1d", r"gate_bias$")
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.shape else 1
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    n = _axis_size(mesh, axis)
+    return n > 1 and dim % n == 0
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Batch-sharding axes: ('pod', 'data') on the multi-pod mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def param_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               cfg: Optional[ArchConfig] = None) -> P:
+    """PartitionSpec for one parameter leaf."""
+    fsdp = bool(cfg and cfg.fsdp)
+    if len(shape) <= 1:
+        return P()
+    for pat in _REPLICATE_PATTERNS:
+        if re.search(pat, path):
+            return P()
+    # Small-expert MoE (granite: d_ff=512 ⇒ 32-wide sharded contractions):
+    # replicate the expert weights and shard the CAPACITY dim of the dispatch
+    # buffers over `model` instead (apply_moe mirrors this choice) — the
+    # per-expert matrices are sub-MB, while f-sharding cost a 4 GB activation
+    # all-reduce per layer (§Perf, granite iteration).
+    if (cfg is not None and cfg.moe is not None and "experts" in path
+            and cfg.d_ff // max(_axis_size(mesh, "model"), 1) < 128):
+        return P()
+    # Megatron TP dim for the trailing (m, n) matmul dims: 0 = rows, 1 = cols.
+    tp_dim = None
+    for pat, dim in _MEGATRON_RULES:
+        if re.search(pat, path):
+            tp_dim = dim
+            break
+
+    if len(shape) >= 3:
+        # Stacked layers (scan) and expert stacks: the trailing 2 dims are the
+        # matmul and MUST follow the Megatron rule (a stacked w_down sharded
+        # on its output dim forces an activation all-gather + replicated
+        # contraction — measured 16× FLOP waste in §Perf iteration 3).
+        # Expert stacks additionally prefer expert-parallel on the E axis.
+        spec = [None] * len(shape)
+        nd = len(shape)
+        if "experts" in path:
+            for i in range(nd - 2):
+                if _divisible(shape[i], mesh, "model"):
+                    spec[i] = "model"
+                    break
+        if "model" not in spec:
+            order = (tp_dim, 1 - tp_dim) if tp_dim is not None else (
+                (0, 1) if shape[-2] >= shape[-1] else (1, 0))
+            for d in order:
+                if _divisible(shape[nd - 2 + d], mesh, "model"):
+                    spec[nd - 2 + d] = "model"
+                    break
+        if fsdp:
+            for j in (nd - 2, nd - 1):
+                if spec[j] is None and _divisible(shape[j], mesh, "data"):
+                    spec[j] = "data"
+                    break
+        return P(*spec)
+
+    # 2D
+    rows, cols = shape
+    if tp_dim is None:
+        tp_dim = 0 if rows >= cols else 1
+    spec = [None, None]
+    if _divisible(shape[tp_dim], mesh, "model"):
+        spec[tp_dim] = "model"
+    elif _divisible(shape[1 - tp_dim], mesh, "model"):
+        spec[1 - tp_dim] = "model"
+    if fsdp:
+        other = 1 - spec.index("model") if "model" in spec else 0
+        if spec[other] is None and _divisible(shape[other], mesh, "data"):
+            spec[other] = "data"
+    if all(s is None for s in spec):
+        return P()
+    return P(*spec)
+
+
+def batch_spec(mesh: Mesh, ndim: int, batch_divisible: bool = True) -> P:
+    """Inputs: batch over (pod,data); everything else replicated."""
+    if ndim == 0 or not batch_divisible:
+        return P()
+    return P(data_axes(mesh))
+
+
+def cache_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+               cfg: Optional[ArchConfig] = None, batch: int = 0) -> P:
+    """Decode-cache leaves. Transformer KV caches are (nL, B, S, KV, hd);
+    recurrent states are (B, H, ...) or stacked (G, ..., B, ...)."""
+    d_ax = data_axes(mesh)
+    n_data = 1
+    for a in d_ax:
+        n_data *= _axis_size(mesh, a)
+    spec = [None] * len(shape)
+    # find the batch dim: the first dim equal to `batch`
+    b_idx = next((i for i, d in enumerate(shape) if batch and d == batch), None)
+    if b_idx is not None and batch % max(n_data, 1) == 0 and n_data > 1:
+        spec[b_idx] = d_ax
+    # shard a heads/seq-like dim over model: prefer KV-heads, else longest dim
+    for i, d in enumerate(shape):
+        if i == b_idx or len(shape) - i <= 1:
+            continue
+        if _divisible(d, mesh, "model") and d >= _axis_size(mesh, "model"):
+            # pick the largest divisible non-batch dim
+            pass
+    cands = [
+        (d, i) for i, d in enumerate(shape)
+        if i != b_idx and spec[i] is None and _divisible(d, mesh, "model")
+    ]
+    if cands:
+        _, i = max(cands)
+        spec[i] = "model"
+    return P(*spec)
+
+
+# ---------------------------------------------------------------------------
+# tree-level helpers
+# ---------------------------------------------------------------------------
+
+def tree_param_specs(params, mesh: Mesh, cfg: Optional[ArchConfig] = None):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: param_spec(path_str(path), leaf.shape, mesh, cfg), params
+    )
+
+
+def tree_shardings(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda spec: NamedSharding(mesh, spec), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def opt_state_specs(state, mesh: Mesh, cfg: Optional[ArchConfig] = None):
+    """Sharding for optimizer states: mirror the generic rule per leaf;
+    scalars/keys replicated."""
+
+    def leaf_spec(path, leaf):
+        if leaf is None:
+            return None
+        shape = getattr(leaf, "shape", ())
+        if len(shape) <= 1:
+            return P()
+        return param_spec(path_str(path), shape, mesh, cfg)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf_spec, state, is_leaf=lambda x: x is None
+    )
+
+
+def cache_specs(cache, mesh: Mesh, cfg: Optional[ArchConfig], batch: int):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: cache_spec(path_str(path), leaf.shape, mesh, cfg, batch),
+        cache,
+    )
+
+
+def input_specs_sharding(specs: dict, mesh: Mesh, batch: int):
+    """Shard every input leaf's batch (dim 0) over (pod, data) when divisible."""
+    d_ax = data_axes(mesh)
+    n_data = 1
+    for a in d_ax:
+        n_data *= _axis_size(mesh, a)
+
+    def spec(leaf):
+        shape = leaf.shape
+        if len(shape) >= 1 and n_data > 1 and shape[0] % n_data == 0:
+            return P(d_ax)
+        return P()
+
+    return {k: spec(v) for k, v in specs.items()}

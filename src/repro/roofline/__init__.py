@@ -1,0 +1,13 @@
+"""repro.roofline — roofline-term extraction from compiled artifacts."""
+from .analysis import (
+    CollectiveStats,
+    Roofline,
+    collective_bytes_from_hlo,
+    extract_cost,
+    model_flops_for,
+)
+
+__all__ = [
+    "Roofline", "CollectiveStats", "collective_bytes_from_hlo",
+    "extract_cost", "model_flops_for",
+]

@@ -1,0 +1,191 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Terms (per EXPERIMENTS.md §Roofline, TPU v5e constants):
+    t_compute    = HLO_FLOPs       / (chips × 197e12  bf16 FLOP/s)
+    t_memory     = HLO_bytes       / (chips × 819e9   B/s HBM)
+    t_collective = collective_bytes/ (chips × 50e9    B/s per ICI link)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis(). collective_bytes is
+NOT in cost_analysis — we parse the optimized HLO text and sum the RESULT
+buffer sizes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (result size ≈ bytes crossing the interconnect per device
+for these ops; all-reduce is counted twice for the reduce+broadcast phases).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+# TPU v5e per-chip constants
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# matches e.g.  %ag = bf16[16,2048,512]{2,1,0} all-gather(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_LINE_RE = re.compile(
+    r"=\s*((?:\([^)]*\)|\w+\[[\d,]*\]\S*))\s+(" + "|".join(_COLLECTIVE_OPS) + r")[\s(.]"
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum byte sizes over all shapes in a result string (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    totals: dict            # op -> bytes
+    count: dict             # op -> #ops
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.totals.values())
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> CollectiveStats:
+    totals = {op: 0 for op in _COLLECTIVE_OPS}
+    counts = {op: 0 for op in _COLLECTIVE_OPS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        if op + "-start" in line and op in line:
+            pass  # the start op carries the shape; done ops counted via start
+        b = _shape_bytes(shape_str)
+        # all-reduce moves ~2× the buffer (reduce-scatter + all-gather phases)
+        if op == "all-reduce":
+            b *= 2
+        totals[op] += b
+        counts[op] += 1
+    return CollectiveStats(totals=totals, count=counts)
+
+
+@dataclasses.dataclass
+class Roofline:
+    """All byte/flop quantities are PER DEVICE (the compiled HLO module is the
+    per-device SPMD program); model_flops is global and divided by chips."""
+
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float             # per device
+    hlo_bytes: float             # per device
+    collective_bytes: float      # per device link traffic
+    model_flops: float           # GLOBAL 6·N·D useful flops
+    collectives: Optional[CollectiveStats] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.hlo_flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hlo_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {
+            "compute": self.t_compute,
+            "memory": self.t_memory,
+            "collective": self.t_collective,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        """MODEL_FLOPS / (global HLO flops) — remat/redundancy waste."""
+        total = self.hlo_flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved if the dominant term sets
+        step time: MODEL_FLOPS/(chips·peak) / max(term)."""
+        t_star = self.model_flops / (self.chips * PEAK_FLOPS)
+        t_dom = max(self.t_compute, self.t_memory, self.t_collective)
+        return (t_star / t_dom) if t_dom > 0 else 0.0
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "hlo_flops": self.hlo_flops, "hlo_bytes": self.hlo_bytes,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "useful_ratio": self.useful_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape, n_params_active: int, kind: str) -> float:
+    """Useful FLOPs: 6·N·D (train) / 2·N·D (inference) plus the attention
+    score/value matmuls (2·L²·H·hd per layer per sequence fwd, causal-halved;
+    windowed archs pay 2·L·W instead of L²). For small-d long-L cells the
+    attention term dominates — omitting it (pure 6ND) would misread those
+    rooflines."""
+    B, L = shape.global_batch, shape.seq_len
+    fwd_bwd = 3.0 if kind == "train" else 1.0
+    tokens = B * L if kind in ("train", "prefill") else B
+    flops = (6.0 if kind == "train" else 2.0) * n_params_active * tokens
+
+    # attention context flops (only attention-bearing layers)
+    n_attn_layers = cfg.n_layers
+    if cfg.family == "hybrid" and cfg.attn_every:
+        n_attn_layers = cfg.n_layers // cfg.attn_every
+    if cfg.family == "ssm":
+        n_attn_layers = 0   # recurrent: context flops are in the params term
+    if n_attn_layers and kind in ("train", "prefill"):
+        eff = min(L, cfg.sliding_window) if cfg.sliding_window else L
+        ctx = L * eff if cfg.sliding_window else L * L / 2.0  # causal half
+        if not cfg.causal:
+            ctx = L * L
+        flops += fwd_bwd * n_attn_layers * B * 4.0 * ctx * cfg.n_heads * cfg.hd
+    elif n_attn_layers:  # decode: one token attends to the whole cache
+        eff = min(L, cfg.sliding_window) if cfg.sliding_window else L
+        flops += n_attn_layers * B * 4.0 * eff * cfg.n_heads * cfg.hd
+    return flops
+
+
+def extract_cost(compiled) -> tuple[float, float]:
+    """(flops, bytes) from compiled.cost_analysis(), robust to key variants."""
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return 0.0, 0.0
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", ca.get("bytes_accessed", 0.0)))
+    return flops, byts

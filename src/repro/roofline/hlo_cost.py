@@ -1,0 +1,504 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, so for
+scan-over-layers models (everything here) it under-reports FLOPs/bytes by
+~n_layers× and misses every collective inside the loop. This walker parses
+the optimized HLO text, builds the computation call graph, extracts static
+trip counts from loop-condition constants (jax scans lower to
+``while (i < N)`` with N inline), and accumulates:
+
+  * flops        — 2·prod(result)·prod(contract) for dots; |result| for
+                   element-wise/fusion ops (dots dominate);
+  * bytes        — operands + result per top-level (post-fusion) op — the
+                   same HBM-traffic convention XLA's own model uses;
+  * collective_bytes — result-buffer sizes of all-gather / reduce-scatter /
+                   all-to-all / collective-permute (+2× for all-reduce),
+                   trip-multiplied.
+
+Validated against analytic 6·N·D model FLOPs in tests (agrees within the
+attention/remat overhead margin).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import lru_cache
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = {
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\((.*?)\)\s*->")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\("
+)
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_info(shape_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) over all array shapes in the string."""
+    elems_total, bytes_total = 0, 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems_total += n
+        bytes_total += n * _DTYPE_BYTES[dt]
+    return elems_total, bytes_total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list
+    attrs: str
+    raw: str = ""
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: float = 0.0
+    collective_breakdown: dict = dataclasses.field(default_factory=dict)
+    unknown_trip_loops: int = 0
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        self.collective_bytes += o.collective_bytes
+        for k, v in o.collective_breakdown.items():
+            self.collective_breakdown[k] = self.collective_breakdown.get(k, 0) + v
+        self.unknown_trip_loops += o.unknown_trip_loops
+        return self
+
+    def scaled(self, mult: float) -> "Cost":
+        return Cost(
+            flops=self.flops * mult,
+            bytes=self.bytes * mult,
+            collective_bytes=self.collective_bytes * mult,
+            collective_breakdown={
+                k: v * mult for k, v in self.collective_breakdown.items()
+            },
+            unknown_trip_loops=self.unknown_trip_loops,
+        )
+
+
+def _split_operands(args: str) -> list[str]:
+    """Operand %names at depth 0 of the op's argument list."""
+    out, depth, cur = [], 0, []
+    for ch in args:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            out.append("".join(cur).strip())
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur).strip())
+    names = []
+    for tok in out:
+        m = re.match(r"^%([\w.\-]+)$", tok.strip())
+        names.append(m.group(1) if m else None)
+    return names
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str):
+        self.computations: dict[str, list[Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(hlo_text)
+        self._memo: dict[str, Cost] = {}
+
+    # -- parsing ------------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            if not line:
+                continue
+            if not line.startswith(" ") and ("->" in line) and line.endswith("{"):
+                m = _COMP_HDR_RE.match(line.strip())
+                if m:
+                    cur = m.group(1)
+                    self.computations[cur] = []
+                    if line.strip().startswith("ENTRY"):
+                        self.entry = cur
+                continue
+            if line.strip() == "}":
+                continue
+            if cur is None:
+                continue
+            m = _OP_RE.match(line)
+            if not m:
+                continue
+            name, rtype, opcode = m.group(1), m.group(2), m.group(3)
+            # operand segment: text between opcode '(' and its matching ')'
+            start = m.end()
+            depth, i = 1, start
+            while i < len(line) and depth:
+                if line[i] in "([{":
+                    depth += 1
+                elif line[i] in ")]}":
+                    depth -= 1
+                i += 1
+            operands = _split_operands(line[start : i - 1])
+            attrs = line[i:]
+            self.computations[cur].append(
+                Op(name=name, result_type=rtype, opcode=opcode,
+                   operands=operands, attrs=attrs, raw=line)
+            )
+
+    # -- shape table -----------------------------------------------------------
+    @lru_cache(maxsize=None)
+    def _shapes(self, comp: str) -> dict[str, str]:
+        return {op.name: op.result_type for op in self.computations.get(comp, [])}
+
+    def _trip_count(self, cond_comp: str) -> Optional[int]:
+        """Largest s32 constant in the loop condition ≈ trip count (jax scans
+        lower to `while (i < N)` with i0=0, step 1)."""
+        consts = []
+        for op in self.computations.get(cond_comp, []):
+            if op.opcode == "constant" and "s32[]" in op.result_type:
+                m = re.search(r"constant\((\d+)\)", op.raw)
+                if m:
+                    consts.append(int(m.group(1)))
+        if not consts:  # constants may be inlined elsewhere in the condition
+            for op in self.computations.get(cond_comp, []):
+                for m in _CONST_RE.finditer(op.raw):
+                    consts.append(int(m.group(1)))
+        return max(consts) if consts else None
+
+    def _called(self, attrs: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w.\-]+)", attrs)
+        return m.group(1) if m else None
+
+    _SLICE_OPS = ("dynamic-slice", "slice", "gather", "dynamic-update-slice")
+
+    @lru_cache(maxsize=None)
+    def _fusion_root(self, target: str) -> Optional[Op]:
+        for iop in self.computations.get(target, []):
+            if "ROOT" in iop.raw:
+                return iop
+        return None
+
+    def _fusion_operand_bytes(self, op: Op, target: str, shapes: dict) -> int:
+        """Bytes actually read from each fusion operand: slice-sized when the
+        matching parameter only feeds slice/gather ops inside the fusion."""
+        inner_ops = self.computations.get(target, [])
+        # parameter name -> parameter index
+        param_idx: dict[str, int] = {}
+        for iop in inner_ops:
+            if iop.opcode == "parameter":
+                m = re.search(r"parameter\((\d+)\)", iop.raw)
+                if m:
+                    param_idx[iop.name] = int(m.group(1))
+        # consumers per parameter
+        touched_by_param: dict[int, int] = {}
+        sliced_only: dict[int, bool] = {i: True for i in param_idx.values()}
+        for iop in inner_ops:
+            for nm in iop.operands:
+                if nm in param_idx:
+                    pi = param_idx[nm]
+                    if iop.opcode in self._SLICE_OPS:
+                        sb = _shape_info(iop.result_type)[1]
+                        if iop.opcode == "dynamic-update-slice" and len(iop.operands) > 1:
+                            upd = iop.operands[1]
+                            ishapes = self._shapes(target)
+                            if upd in ishapes:
+                                sb = _shape_info(ishapes[upd])[1]
+                        touched_by_param[pi] = touched_by_param.get(pi, 0) + sb
+                    else:
+                        sliced_only[pi] = False
+        total = 0
+        for j, nm in enumerate(op.operands):
+            if nm is None or nm not in shapes:
+                continue
+            full = _shape_info(shapes[nm])[1]
+            if sliced_only.get(j, False) and j in touched_by_param:
+                total += min(full, touched_by_param[j])
+            else:
+                total += full
+        return total
+
+    # -- cost ----------------------------------------------------------------
+    def computation_cost(self, comp: str) -> Cost:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = Cost()
+        shapes = self._shapes(comp)
+        for op in self.computations.get(comp, []):
+            total += self._op_cost(op, comp, shapes)
+        self._memo[comp] = total
+        return total
+
+    def _op_cost(self, op: Op, comp: str, shapes: dict[str, str]) -> Cost:
+        oc = op.opcode
+        res_elems, res_bytes = _shape_info(op.result_type)
+
+        if oc in ("parameter", "constant", "tuple", "get-tuple-element",
+                  "bitcast", "after-all", "partition-id", "replica-id",
+                  "iota"):
+            return Cost()
+
+        if oc == "while":
+            body = self._called(op.attrs, "body")
+            cond = self._called(op.attrs, "condition")
+            inner = Cost()
+            if body:
+                inner += self.computation_cost(body)
+            if cond:
+                inner += self.computation_cost(cond)
+            trip = self._trip_count(cond) if cond else None
+            if trip is None:
+                c = inner.scaled(1.0)
+                c.unknown_trip_loops += 1
+                return c
+            return inner.scaled(trip)
+
+        if oc in ("call", "conditional", "async-start"):
+            target = self._called(op.attrs, "calls") or self._called(
+                op.attrs, "to_apply"
+            )
+            if target:
+                return self.computation_cost(target)
+            return Cost(flops=res_elems, bytes=res_bytes)
+
+        # operand bytes
+        opnd_bytes = 0
+        for name in op.operands:
+            if name and name in shapes:
+                opnd_bytes += _shape_info(shapes[name])[1]
+        io_bytes = opnd_bytes + res_bytes
+
+        base = oc.replace("-start", "").replace("-done", "")
+        if base in _COLLECTIVES:
+            if oc.endswith("-done"):
+                return Cost()
+            cb = res_bytes * (2 if base == "all-reduce" else 1)
+            return Cost(
+                bytes=io_bytes, collective_bytes=cb,
+                collective_breakdown={base: cb},
+            )
+
+        if oc in ("dot", "dot-general"):
+            contract = 1
+            mm = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+            lhs = op.operands[0] if op.operands else None
+            if mm and lhs and lhs in shapes:
+                dims_m = _SHAPE_RE.search(shapes[lhs])
+                if dims_m and dims_m.group(2):
+                    lhs_dims = [int(d) for d in dims_m.group(2).split(",")]
+                    for ci in mm.group(1).split(","):
+                        if ci != "":
+                            contract *= lhs_dims[int(ci)]
+            return Cost(flops=2.0 * res_elems * contract, bytes=io_bytes)
+
+        if oc == "convolution":
+            # not used by our models; approximate as elementwise
+            return Cost(flops=res_elems, bytes=io_bytes)
+
+        if oc == "fusion":
+            target = self._called(op.attrs, "calls")
+            inner = self.computation_cost(target) if target else Cost()
+            # Bytes: operands that are only dynamic-sliced/gathered inside the
+            # fusion contribute their SLICE bytes, not the whole buffer —
+            # otherwise a scan backward that slices its 500 MB residual stack
+            # per timestep books 24576× the buffer (measured 300+ TB phantom
+            # traffic on the xlstm cell).
+            touched = self._fusion_operand_bytes(op, target, shapes) if target \
+                else opnd_bytes
+            # a DUS-rooted fusion writes only the update slice (in-place)
+            out_bytes = res_bytes
+            root = self._fusion_root(target)
+            if root is not None and root.opcode == "dynamic-update-slice":
+                ishapes = self._shapes(target)
+                upd = root.operands[1] if len(root.operands) > 1 else None
+                if upd in ishapes:
+                    out_bytes = _shape_info(ishapes[upd])[1]
+                flops_est = inner.flops
+            else:
+                flops_est = max(inner.flops, float(res_elems))
+            return Cost(
+                flops=flops_est,
+                bytes=touched + out_bytes,
+                collective_bytes=inner.collective_bytes,
+                collective_breakdown=dict(inner.collective_breakdown),
+            )
+
+        if oc in ("custom-call",):
+            return Cost(flops=res_elems, bytes=io_bytes)
+
+        if oc == "dynamic-update-slice":
+            # in-place update: traffic = read + write of the UPDATE slice only
+            # (XLA aliases the target buffer; counting the full operand would
+            # overcount scan-carry updates by the buffer/slice ratio)
+            upd = op.operands[1] if len(op.operands) > 1 else None
+            upd_bytes = _shape_info(shapes[upd])[1] if upd in shapes else res_bytes
+            return Cost(flops=0.0, bytes=2.0 * upd_bytes)
+
+        if oc in ("dynamic-slice", "slice", "gather"):
+            # indexed read + write of the slice; the source buffer is not
+            # streamed in full
+            return Cost(flops=0.0, bytes=2.0 * res_bytes)
+
+        if oc == "scatter":
+            upd = op.operands[2] if len(op.operands) > 2 else None
+            upd_bytes = _shape_info(shapes[upd])[1] if upd in shapes else res_bytes
+            return Cost(flops=float(res_elems), bytes=3.0 * upd_bytes)
+
+        if oc in ("copy", "copy-start", "transpose", "reshape", "broadcast",
+                  "pad", "concatenate", "reverse", "select",
+                  "compare", "convert", "reduce", "sort", "map", "clamp"):
+            return Cost(flops=float(res_elems), bytes=io_bytes)
+
+        if oc.endswith("-done"):
+            return Cost()
+
+        # default element-wise
+        return Cost(flops=float(res_elems), bytes=io_bytes)
+
+    def total(self) -> Cost:
+        if self.entry is None:
+            # fall back: sum all computations not called by others (rare)
+            raise ValueError("no ENTRY computation found in HLO")
+        return self.computation_cost(self.entry)
+
+
+def analyze_hlo(hlo_text: str) -> Cost:
+    return HloCostModel(hlo_text).total()
+
+
+def top_dots(hlo_text: str, k: int = 20) -> list[dict]:
+    """Top-k dot ops by trip-multiplied FLOPs, with source attribution."""
+    model = HloCostModel(hlo_text)
+    entries: list[dict] = []
+
+    def walk(comp: str, mult: float, seen: tuple):
+        if comp in seen:
+            return
+        shapes = model._shapes(comp)
+        for op in model.computations.get(comp, []):
+            if op.opcode in ("dot", "dot-general"):
+                c = model._op_cost(op, comp, shapes)
+                m = re.search(r'op_name="([^"]*)"', op.raw)
+                entries.append({
+                    "flops": c.flops * mult, "mult": mult,
+                    "shape": op.result_type.strip(),
+                    "source": m.group(1) if m else "?",
+                })
+            elif op.opcode == "while":
+                body = model._called(op.attrs, "body")
+                cond = model._called(op.attrs, "condition")
+                trip = model._trip_count(cond) if cond else None
+                for c2 in (body, cond):
+                    if c2:
+                        walk(c2, mult * (trip or 1), seen + (comp,))
+            elif op.opcode in ("call", "conditional", "fusion"):
+                tgt = model._called(op.attrs, "calls") or model._called(
+                    op.attrs, "to_apply")
+                if tgt:
+                    walk(tgt, mult, seen + (comp,))
+
+    walk(model.entry, 1.0, ())
+    entries.sort(key=lambda e: -e["flops"])
+    return entries[:k]
+
+
+def top_bytes(hlo_text: str, k: int = 20) -> list[dict]:
+    """Top-k ops by trip-multiplied HBM traffic, with source attribution."""
+    model = HloCostModel(hlo_text)
+    entries: list[dict] = []
+
+    def walk(comp: str, mult: float, seen: tuple):
+        if comp in seen:
+            return
+        shapes = model._shapes(comp)
+        for op in model.computations.get(comp, []):
+            if op.opcode == "while":
+                body = model._called(op.attrs, "body")
+                cond = model._called(op.attrs, "condition")
+                trip = model._trip_count(cond) if cond else None
+                for c2 in (body, cond):
+                    if c2:
+                        walk(c2, mult * (trip or 1), seen + (comp,))
+                continue
+            if op.opcode in ("call", "conditional"):
+                tgt = model._called(op.attrs, "calls") or model._called(
+                    op.attrs, "to_apply")
+                if tgt:
+                    walk(tgt, mult, seen + (comp,))
+                continue
+            c = model._op_cost(op, comp, shapes)
+            if c.bytes <= 0:
+                continue
+            m = re.search(r'op_name="([^"]*)"', op.raw)
+            entries.append({
+                "bytes": c.bytes * mult, "mult": mult, "opcode": op.opcode,
+                "shape": op.result_type.strip(),
+                "source": m.group(1) if m else "?",
+            })
+
+    walk(model.entry, 1.0, ())
+    entries.sort(key=lambda e: -e["bytes"])
+    return entries[:k]
+
+
+def top_collectives(hlo_text: str, k: int = 20) -> list[dict]:
+    """Attribute collective bytes to jax source ops: walks the call graph with
+    trip-count multipliers and returns the top-k collectives by total bytes,
+    each with its HLO shape and the jax op_name metadata (source attribution).
+    """
+    model = HloCostModel(hlo_text)
+    entries: list[dict] = []
+
+    def walk(comp: str, mult: float, seen: tuple):
+        if comp in seen:
+            return
+        shapes = model._shapes(comp)
+        for op in model.computations.get(comp, []):
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                _, rb = _shape_info(op.result_type)
+                b = rb * (2 if base == "all-reduce" else 1)
+                m = re.search(r'op_name="([^"]*)"', op.raw)
+                entries.append({
+                    "op": base, "bytes": b * mult, "mult": mult,
+                    "shape": op.result_type.strip(),
+                    "source": m.group(1) if m else "?",
+                })
+            elif op.opcode == "while":
+                body = model._called(op.attrs, "body")
+                cond = model._called(op.attrs, "condition")
+                trip = model._trip_count(cond) if cond else None
+                for c in (body, cond):
+                    if c:
+                        walk(c, mult * (trip or 1), seen + (comp,))
+            elif op.opcode in ("call", "conditional", "fusion"):
+                tgt = model._called(op.attrs, "calls") or model._called(
+                    op.attrs, "to_apply")
+                if tgt:
+                    walk(tgt, mult, seen + (comp,))
+
+    walk(model.entry, 1.0, ())
+    entries.sort(key=lambda e: -e["bytes"])
+    return entries[:k]

@@ -1,0 +1,4 @@
+"""repro.serve — batched prefill/decode serving engine."""
+from .engine import Engine, ServeConfig
+
+__all__ = ["Engine", "ServeConfig"]

@@ -1,0 +1,72 @@
+"""Batched serving engine: prefill + decode with KV/recurrent caches.
+
+Serves a batch of requests with a shared-length cache (continuous batching is
+approximated by padding to the batch's max prompt — the standard static-batch
+TPU serving layout). Works for all decode-capable families:
+attention archs take the fast parallel prefill; recurrent/hybrid archs
+prefill by scanning decode steps (their O(1)-state architecture).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import decode_step, init_decode_cache, prefill
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0       # 0 = greedy
+    seed: int = 0
+    attn_impl: str = "chunked"
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig = ServeConfig()):
+        if not cfg.has_decode:
+            raise ValueError(f"{cfg.name} is encoder-only; nothing to decode")
+        self.cfg = cfg
+        self.params = params
+        self.scfg = scfg
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(p, self.cfg, t, c)
+        )
+
+    def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate(self, prompts: jnp.ndarray) -> jnp.ndarray:
+        """prompts: (B, Lp) int32 (left-padded with 0 allowed).
+        Returns (B, max_new_tokens) generated ids."""
+        cfg, scfg = self.cfg, self.scfg
+        B, Lp = prompts.shape
+        total = Lp + scfg.max_new_tokens
+        key = jax.random.PRNGKey(scfg.seed)
+
+        # all families use the parallel prefill (recurrent archs extract their
+        # final states from the chunked scans — see models/{zamba2,xlstm}.py)
+        logits, cache = prefill(
+            self.params, cfg, {"tokens": prompts}, cache_len=total,
+            attn_impl=scfg.attn_impl,
+        )
+        logits = logits[:, 0]
+
+        outs = []
+        tok = self._sample(logits, key)
+        for i in range(scfg.max_new_tokens):
+            outs.append(tok)
+            if i == scfg.max_new_tokens - 1:
+                break
+            key, sub = jax.random.split(key)
+            logits, cache = self._decode(self.params, tok[:, None], cache)
+            tok = self._sample(logits, sub)
+        return jnp.stack(outs, axis=1)

@@ -1,0 +1,18 @@
+"""repro.train — train-step builders, checkpointing, fault tolerance, loop."""
+from .checkpoint import CheckpointManager
+from .failures import (
+    FaultInjector,
+    SimulatedPreemption,
+    StragglerMonitor,
+    StragglerTimeout,
+    supervise,
+)
+from .loop import TrainConfig, TrainResult, train
+from .steps import make_eval_step, make_optimizer, make_train_step
+
+__all__ = [
+    "make_train_step", "make_eval_step", "make_optimizer",
+    "CheckpointManager", "FaultInjector", "StragglerMonitor",
+    "SimulatedPreemption", "StragglerTimeout", "supervise",
+    "TrainConfig", "TrainResult", "train",
+]

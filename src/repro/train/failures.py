@@ -1,0 +1,95 @@
+"""Fault-tolerance machinery: preemption/failure injection, straggler
+detection, and the restart supervisor.
+
+On a real 1000-node deployment the coordinator observes missing heartbeats /
+slow all-reduces; in this container the same control flow is driven by a
+deterministic fault injector, so the recovery path (checkpoint restore +
+deterministic data replay) is exercised end-to-end by tests and examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional, Sequence
+
+
+class SimulatedPreemption(RuntimeError):
+    """A node vanished (SIGTERM from the scheduler, hardware fault, ...)."""
+
+
+class StragglerTimeout(RuntimeError):
+    """A step exceeded the straggler threshold; treat the worker as sick."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Raises SimulatedPreemption at the given global steps (once each)."""
+
+    preempt_at: Sequence[int] = ()
+    _fired: set = dataclasses.field(default_factory=set)
+
+    def check(self, step: int) -> None:
+        if step in self.preempt_at and step not in self._fired:
+            self._fired.add(step)
+            raise SimulatedPreemption(f"simulated preemption at step {step}")
+
+
+class StragglerMonitor:
+    """Flags steps slower than `factor` × the running median step time.
+
+    Mitigation policy on a TPU pod: a straggling step cannot be skipped
+    (SPMD), so the supervisor restarts the sick worker from the last
+    checkpoint — the same path as a preemption. `warmup` steps are exempt
+    (compilation).
+    """
+
+    def __init__(self, factor: float = 5.0, warmup: int = 2, enabled: bool = True):
+        self.factor = factor
+        self.warmup = warmup
+        self.enabled = enabled
+        self.times: list[float] = []
+        self.events: list[tuple[int, float]] = []
+
+    def observe(self, step: int, seconds: float) -> None:
+        if not self.enabled:
+            return
+        if len(self.times) >= self.warmup:
+            med = sorted(self.times)[len(self.times) // 2]
+            if seconds > self.factor * med and med > 0:
+                self.events.append((step, seconds))
+                raise StragglerTimeout(
+                    f"step {step} took {seconds:.3f}s (> {self.factor}× median {med:.3f}s)"
+                )
+        self.times.append(seconds)
+        if len(self.times) > 64:
+            self.times.pop(0)
+
+
+@dataclasses.dataclass
+class SupervisorReport:
+    steps_run: int = 0
+    restarts: int = 0
+    straggler_events: int = 0
+    final_step: int = 0
+
+
+def supervise(
+    run_from: Callable[[int], int],
+    max_restarts: int = 8,
+) -> SupervisorReport:
+    """Restart loop: run_from(start_step) -> final_step, restarted on
+    preemption/straggler faults. run_from is responsible for restoring from
+    the latest checkpoint when start_step > 0 (or always)."""
+    report = SupervisorReport()
+    start = 0
+    while True:
+        try:
+            report.final_step = run_from(start)
+            return report
+        except (SimulatedPreemption, StragglerTimeout) as e:
+            report.restarts += 1
+            if isinstance(e, StragglerTimeout):
+                report.straggler_events += 1
+            if report.restarts > max_restarts:
+                raise RuntimeError(f"exceeded {max_restarts} restarts") from e
+            start = -1   # sentinel: resume from latest checkpoint

@@ -1,0 +1,122 @@
+"""The training loop: jitted step + checkpointing + fault tolerance +
+deterministic data replay. Used by examples/ and launch/train.py."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig, ShapeConfig
+from ..data import DataConfig, make_batch
+from ..models import init_params
+from .checkpoint import CheckpointManager
+from .failures import FaultInjector, StragglerMonitor, supervise
+from .steps import make_optimizer, make_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    optimizer: str = "sumo"
+    learning_rate: float = 3e-3
+    rank: int = 128
+    update_freq: int = 200
+    weight_decay: float = 0.0
+    total_steps: int = 100
+    accum: int = 1
+    attn_impl: str = "flash"
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    ckpt_keep: int = 3
+    ckpt_async: bool = True
+    log_every: int = 10
+    seed: int = 0
+
+
+@dataclasses.dataclass
+class TrainResult:
+    losses: list
+    final_step: int
+    restarts: int
+    params: object
+    opt_state: object
+
+
+def train(
+    arch: ArchConfig,
+    shape: ShapeConfig,
+    tcfg: TrainConfig,
+    fault_injector: Optional[FaultInjector] = None,
+    log_fn: Callable[[str], None] = print,
+) -> TrainResult:
+    key = jax.random.PRNGKey(tcfg.seed)
+    params0 = init_params(arch, key)
+    tx = make_optimizer(
+        tcfg.optimizer, tcfg.learning_rate, params0,
+        rank=tcfg.rank, update_freq=tcfg.update_freq,
+        weight_decay=tcfg.weight_decay,
+    )
+    step_fn = jax.jit(
+        make_train_step(arch, tx, attn_impl=tcfg.attn_impl, accum=tcfg.accum),
+        donate_argnums=(0, 1),
+    )
+    ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep) if tcfg.ckpt_dir else None
+    monitor = StragglerMonitor(enabled=fault_injector is not None)
+    losses: list = []
+    restarts = [0]
+    holder = {}
+
+    def run_from(start_step: int) -> int:
+        if start_step == -1:  # resume from latest checkpoint
+            restarts[0] += 1
+            if ckpt.latest_step() is None:
+                params, opt_state = params0, tx.init(params0)
+                step = 0
+                log_fn(f"[recovery] no checkpoint yet — cold restart (#{restarts[0]})")
+            else:
+                template = {"params": params0, "opt_state": tx.init(params0)}
+                state, manifest = ckpt.restore(template)
+                params, opt_state = state["params"], state["opt_state"]
+                step = manifest["step"]
+                log_fn(f"[recovery] restored step {step} after fault "
+                       f"(restart #{restarts[0]})")
+        else:
+            params, opt_state = params0, tx.init(params0)
+            step = start_step
+
+        while step < tcfg.total_steps:
+            if fault_injector is not None:
+                fault_injector.check(step)
+            batch = make_batch(step, shape, arch, DataConfig(seed=tcfg.seed))
+            t0 = time.perf_counter()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            monitor.observe(step, time.perf_counter() - t0)
+            losses.append((step, loss))
+            if step % tcfg.log_every == 0:
+                log_fn(f"step {step:5d} loss {loss:.4f} "
+                       f"gnorm {float(metrics['grad_norm']):.3f}")
+            step += 1
+            if ckpt and (step % tcfg.ckpt_every == 0 or step == tcfg.total_steps):
+                ckpt.save(step, {"params": params, "opt_state": opt_state},
+                          extra={"arch": arch.name, "optimizer": tcfg.optimizer},
+                          blocking=not tcfg.ckpt_async)
+        if ckpt:
+            ckpt.wait()
+        holder["params"], holder["opt_state"] = params, opt_state
+        return step
+
+    if fault_injector is not None:
+        if ckpt is None:
+            raise ValueError("fault tolerance requires ckpt_dir")
+        report = supervise(run_from)
+        final = report.final_step
+    else:
+        final = run_from(0)
+
+    return TrainResult(
+        losses=losses, final_step=final, restarts=restarts[0],
+        params=holder.get("params"), opt_state=holder.get("opt_state"),
+    )

@@ -1,0 +1,109 @@
+"""Train/eval step builders: loss + grad + optimizer update, with gradient
+accumulation (microbatch scan) and the optimizer factory used by the
+launcher, benchmarks and examples."""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import (
+    GaloreConfig,
+    SumoConfig,
+    adamw,
+    apply_updates,
+    galore_optimizer,
+    global_norm,
+    muon_optimizer,
+    sumo_optimizer,
+)
+from ..models import loss_fn
+
+
+def make_optimizer(name: str, learning_rate, params, cfg: Optional[ArchConfig] = None,
+                   rank: int = 128, update_freq: int = 200, weight_decay: float = 0.0,
+                   **kw):
+    """Factory: sumo | sumo-ns5 | galore | muon | adamw."""
+    name = name.lower()
+    if name == "sumo":
+        return sumo_optimizer(
+            learning_rate, params,
+            SumoConfig(rank=rank, update_freq=update_freq,
+                       weight_decay=weight_decay, orth_method="polar", **kw),
+        )
+    if name == "sumo-svd":
+        return sumo_optimizer(
+            learning_rate, params,
+            SumoConfig(rank=rank, update_freq=update_freq,
+                       weight_decay=weight_decay, orth_method="svd", **kw),
+        )
+    if name == "sumo-ns5":
+        return sumo_optimizer(
+            learning_rate, params,
+            SumoConfig(rank=rank, update_freq=update_freq,
+                       weight_decay=weight_decay, orth_method="ns5", **kw),
+        )
+    if name == "galore":
+        return galore_optimizer(
+            learning_rate, params,
+            GaloreConfig(rank=rank, update_freq=update_freq,
+                         weight_decay=weight_decay, **kw),
+        )
+    if name == "muon":
+        return muon_optimizer(learning_rate, params, weight_decay=weight_decay, **kw)
+    if name == "adamw":
+        return adamw(learning_rate, weight_decay=weight_decay, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")
+
+
+def make_train_step(cfg: ArchConfig, tx, attn_impl: str = "flash",
+                    accum: int = 1) -> Callable:
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    accum > 1 splits the batch into `accum` microbatches along dim 0 and
+    accumulates grads with a lax.scan — constant memory in accum.
+    """
+
+    def loss(p, b):
+        return loss_fn(p, cfg, b, attn_impl=attn_impl)
+
+    def train_step(params, opt_state, batch):
+        if accum == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(
+                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+            )
+
+            def body(carry, mb):
+                tot_l, tot_g = carry
+                l, g = jax.value_and_grad(loss)(params, mb)
+                tot_g = jax.tree_util.tree_map(jnp.add, tot_g, g)
+                return (tot_l + l, tot_g), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (l, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+            l = l / accum
+            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+
+        updates, new_opt_state = tx.update(grads, opt_state, params)
+        new_params = apply_updates(params, updates)
+        metrics = {
+            "loss": l,
+            "grad_norm": global_norm(grads),
+            "update_norm": global_norm(updates),
+        }
+        return new_params, new_opt_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ArchConfig, attn_impl: str = "chunked") -> Callable:
+    def eval_step(params, batch):
+        return loss_fn(params, cfg, batch, attn_impl=attn_impl)
+
+    return eval_step

@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS device-count override here — smoke tests and benches
+# must see the real (single) device. Multi-device compile tests spawn
+# subprocesses with their own flags (test_sharding.py).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

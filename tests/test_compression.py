@@ -1,0 +1,102 @@
+"""DP gradient compression: exactness properties, error feedback convergence
+(simulated multi-worker sync), wire-byte ratio."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.compression import (
+    CompressionConfig,
+    compress_grads,
+    compress_leaf,
+    compression_ratio,
+    decompress_leaf,
+    finalize,
+    init_state,
+)
+
+
+def test_roundtrip_is_projection():
+    """decompress(compress(G)) is the orthogonal projection of G onto the
+    sketch subspace: idempotent and norm-non-increasing."""
+    key = jax.random.PRNGKey(0)
+    G = jax.random.normal(key, (512, 64))
+    skey = jax.random.PRNGKey(7)
+    d1 = decompress_leaf(compress_leaf(G, skey, 16), skey, G.shape)
+    d2 = decompress_leaf(compress_leaf(d1, skey, 16), skey, G.shape)
+    np.testing.assert_allclose(np.asarray(d1), np.asarray(d2), atol=1e-4)
+    assert float(jnp.linalg.norm(d1)) <= float(jnp.linalg.norm(G)) + 1e-4
+
+
+def test_low_rank_gradient_transmits_losslessly_in_expectation():
+    """A gradient already inside a rank-<r subspace loses little energy
+    under an oversampled sketch... exact when the sketch contains it."""
+    key = jax.random.PRNGKey(1)
+    U = jnp.linalg.qr(jax.random.normal(key, (256, 4)))[0]
+    C = jax.random.normal(jax.random.fold_in(key, 2), (4, 32))
+    G = U @ C
+    skey = jax.random.PRNGKey(3)
+    dec = decompress_leaf(compress_leaf(G, skey, 64), skey, G.shape)
+    # random 64-dim sketch of a 256-dim space captures ~64/256 energy of a
+    # fixed subspace; with EF the rest arrives over subsequent steps — here
+    # we just check the projection is substantial and bounded
+    ratio = float(jnp.linalg.norm(dec)) / float(jnp.linalg.norm(G))
+    assert 0.3 < ratio <= 1.0
+
+
+def test_error_feedback_sync_converges_to_exact_mean():
+    """4 simulated workers with different gradients: compressed+EF sync
+    accumulates to the exact mean over steps (EF guarantee)."""
+    cfg = CompressionConfig(rank=32, min_dim=16, error_feedback=True)
+    key = jax.random.PRNGKey(4)
+    n_workers = 4
+    G_true = jax.random.normal(key, (n_workers, 128, 32))
+    grads_t = {"w": G_true[0]}
+    states = [init_state(grads_t, cfg) for _ in range(n_workers)]
+
+    exact_mean = jnp.mean(G_true, axis=0)
+    acc = jnp.zeros((128, 32))
+    T = 100
+    for step in range(T):
+        payloads, metas = [], []
+        treedef = None
+        for w in range(n_workers):
+            p, m, treedef = compress_grads({"w": G_true[w]}, states[w], cfg)
+            payloads.append(p)
+            metas.append(m)
+        mean_payload = jax.tree_util.tree_map(
+            lambda *xs: sum(xs) / n_workers, *payloads
+        )
+        new_states = []
+        decoded = None
+        for w in range(n_workers):
+            g, s = finalize(mean_payload, metas[w], treedef, states[w], cfg)
+            decoded = g
+            new_states.append(s)
+        states = new_states
+        acc = acc + decoded["w"]
+    # the running average of decoded syncs approaches the exact mean (~1/T)
+    err = float(jnp.linalg.norm(acc / T - exact_mean)) / float(
+        jnp.linalg.norm(exact_mean)
+    )
+    assert err < 0.08, err
+
+
+def test_compression_ratio():
+    cfg = CompressionConfig(rank=32, min_dim=128)
+    grads = {
+        "big": jnp.zeros((4096, 1024)),
+        "small": jnp.zeros((64, 64)),
+        "vec": jnp.zeros((512,)),
+    }
+    r = compression_ratio(grads, cfg)
+    # big: 32*1024 vs 4096*1024 -> 1/128 of its share
+    assert r < 0.05
+
+
+def test_uncompressed_leaves_pass_through():
+    cfg = CompressionConfig(rank=8, min_dim=1024)
+    grads = {"w": jnp.ones((64, 32))}      # below min_dim -> exact path
+    state = init_state(grads, cfg)
+    p, m, treedef = compress_grads(grads, state, cfg)
+    g, _ = finalize(p, m, treedef, state, cfg)
+    np.testing.assert_array_equal(np.asarray(g["w"]), np.ones((64, 32)))

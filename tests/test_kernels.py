@@ -1,0 +1,95 @@
+"""Pallas kernels vs ref.py oracles — shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import backproject, flash_attention, newton_schulz5, project
+from repro.kernels import ref
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", [(8, 64), (16, 128), (32, 256), (4, 32)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_ns5_kernel(shape, dtype):
+    M = jax.random.normal(jax.random.PRNGKey(0), shape).astype(dtype)
+    out = newton_schulz5(M)
+    expect = ref.ns5_ref(M)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("batch", [1, 3])
+def test_ns5_kernel_batched(batch):
+    M = jax.random.normal(jax.random.PRNGKey(1), (batch, 8, 64))
+    np.testing.assert_allclose(
+        np.asarray(newton_schulz5(M)), np.asarray(ref.ns5_ref(M)), atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("m,r,n", [(512, 16, 300), (1000, 8, 128), (2048, 64, 700),
+                                   (100, 4, 50)])
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_projection_kernel(m, r, n, dtype):
+    key = jax.random.PRNGKey(2)
+    Q = jax.random.normal(key, (m, r)).astype(dtype)
+    G = jax.random.normal(jax.random.fold_in(key, 1), (m, n)).astype(dtype)
+    out = project(Q, G, block_m=256, block_n=128)
+    expect = ref.project_ref(Q, G)
+    tol = 2e-3 * np.sqrt(m) if dtype == jnp.float32 else 0.5
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=tol
+    )
+
+
+@pytest.mark.parametrize("m,r,n", [(512, 16, 300), (100, 4, 50)])
+def test_backprojection_kernel(m, r, n):
+    key = jax.random.PRNGKey(3)
+    Q = jax.random.normal(key, (m, r))
+    O = jax.random.normal(jax.random.fold_in(key, 1), (r, n))
+    np.testing.assert_allclose(
+        np.asarray(backproject(Q, O, block_m=256, block_n=128)),
+        np.asarray(ref.backproject_ref(Q, O)), atol=1e-4,
+    )
+
+
+@pytest.mark.parametrize("L,H,KV,hd", [(256, 4, 2, 64), (130, 2, 2, 32),
+                                        (512, 8, 1, 64)])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_kernel(L, H, KV, hd, causal):
+    key = jax.random.PRNGKey(4)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (2, L, H, hd))
+    k = jax.random.normal(ks[1], (2, L, KV, hd))
+    v = jax.random.normal(ks[2], (2, L, KV, hd))
+    out = flash_attention(q, k, v, causal=causal, block_q=128, block_k=128)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_flash_kernel_sliding_window():
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 300, 4, 32))
+    k = jax.random.normal(ks[1], (1, 300, 2, 32))
+    v = jax.random.normal(ks[2], (1, 300, 2, 32))
+    out = flash_attention(q, k, v, causal=True, sliding_window=64,
+                          block_q=128, block_k=128)
+    expect = ref.flash_attention_ref(q, k, v, causal=True, sliding_window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5)
+
+
+def test_flash_kernel_bf16():
+    key = jax.random.PRNGKey(6)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 2, 64)).astype(jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(jnp.bfloat16)
+    out = flash_attention(q, k, v, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(expect, np.float32), atol=5e-2
+    )

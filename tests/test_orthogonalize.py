@@ -1,0 +1,121 @@
+"""Orthogonalization operators: exactness, the paper's Lemma 3.2 error bound,
+and hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    condition_number,
+    newton_schulz5,
+    newton_schulz_cubic,
+    orthogonality_error,
+    orthogonalize_polar,
+    orthogonalize_svd,
+    rank_one_residual,
+)
+
+SHAPES = [(4, 16), (16, 16), (16, 64), (64, 16), (128, 96)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_polar_equals_svd(shape):
+    M = jax.random.normal(jax.random.PRNGKey(0), shape)
+    np.testing.assert_allclose(
+        orthogonalize_polar(M), orthogonalize_svd(M), atol=5e-5
+    )
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_polar_is_orthogonal(shape):
+    M = jax.random.normal(jax.random.PRNGKey(1), shape)
+    O = orthogonalize_polar(M)
+    assert float(orthogonality_error(O)) < 1e-5
+
+
+def test_polar_rank_deficient():
+    """Rank-deficient input: zero directions are dropped, not amplified."""
+    key = jax.random.PRNGKey(2)
+    A = jax.random.normal(key, (8, 3))
+    B = jax.random.normal(jax.random.fold_in(key, 1), (3, 32))
+    M = A @ B                      # rank 3, shape (8, 32)
+    O = orthogonalize_polar(M)
+    s = jnp.linalg.svd(O, compute_uv=False)
+    # top-3 singular values ~1, rest ~0
+    np.testing.assert_allclose(s[:3], 1.0, atol=1e-3)
+    assert float(s[3]) < 1e-3
+
+
+def test_ns5_error_grows_with_condition_number():
+    """Lemma 3.2: NS error increases with κ — the paper's core motivation."""
+    key = jax.random.PRNGKey(3)
+    errs = []
+    for kappa in (2.0, 50.0, 5000.0):
+        U, _ = jnp.linalg.qr(jax.random.normal(key, (32, 32)))
+        V, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (64, 64)))
+        s = jnp.linspace(1.0, 1.0 / np.sqrt(kappa), 32)   # κ(MMᵀ) = kappa
+        M = (U * s[None, :]) @ V[:32]
+        exact = orthogonalize_svd(M)
+        approx = newton_schulz_cubic(M, steps=5)
+        errs.append(float(jnp.linalg.norm(exact - approx)))
+    assert errs[0] < errs[1] < errs[2]
+
+
+def test_ns_cubic_bound_lemma32():
+    """‖E_i‖_F ≤ √r (1 − 1/κ)^{2^i} for the cubic iteration (σ ≤ 1 scaling)."""
+    key = jax.random.PRNGKey(4)
+    r = 16
+    U, _ = jnp.linalg.qr(jax.random.normal(key, (r, r)))
+    V, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (48, 48)))
+    s = jnp.linspace(1.0, 0.5, r)
+    M = (U * s[None, :]) @ V[:r]
+    kappa = float(condition_number(M))       # κ of MMᵀ
+    exact = orthogonalize_svd(M)
+    for i in (3, 5, 8):
+        err = float(jnp.linalg.norm(exact - newton_schulz_cubic(M, steps=i)))
+        bound = np.sqrt(r) * (1 - 1 / kappa) ** (2 ** i)
+        assert err <= bound + 1e-3, (i, err, bound)
+
+
+def test_rank_one_residual_range():
+    M = jax.random.normal(jax.random.PRNGKey(5), (16, 32))
+    k = float(rank_one_residual(M))
+    assert 0.0 <= k <= 1.0
+    u = jnp.ones((16, 1)); v = jnp.ones((1, 32))
+    assert float(rank_one_residual(u @ v)) < 1e-5
+
+
+@hypothesis.given(
+    r=st.integers(2, 12), n=st.integers(12, 48), seed=st.integers(0, 2**16)
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_polar_idempotent(r, n, seed):
+    """orth(orth(M)) == orth(M) — orthogonalization is idempotent."""
+    M = jax.random.normal(jax.random.PRNGKey(seed), (r, n))
+    O1 = orthogonalize_polar(M)
+    O2 = orthogonalize_polar(O1)
+    np.testing.assert_allclose(np.asarray(O1), np.asarray(O2), atol=5e-4)
+
+
+@hypothesis.given(
+    r=st.integers(2, 12), n=st.integers(12, 48),
+    scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_property_polar_scale_invariant(r, n, scale, seed):
+    """orth(cM) == orth(M) for c > 0 — spectral direction is scale-free."""
+    M = jax.random.normal(jax.random.PRNGKey(seed), (r, n))
+    np.testing.assert_allclose(
+        np.asarray(orthogonalize_polar(M * scale)),
+        np.asarray(orthogonalize_polar(M)),
+        atol=5e-4,
+    )
+
+
+def test_ns5_spectral_range():
+    """Muon's quintic drives singular values into ≈[0.7, 1.3] (not exact 1)."""
+    M = jax.random.normal(jax.random.PRNGKey(6), (32, 128))
+    s = jnp.linalg.svd(newton_schulz5(M), compute_uv=False)
+    assert float(s[0]) < 1.6 and float(s[-1]) > 0.3

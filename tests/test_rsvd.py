@@ -1,0 +1,74 @@
+"""Randomized SVD (Block 1): subspace quality + hypothesis properties."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import randomized_range_finder, randomized_svd, subspace_overlap, truncated_svd
+
+
+def _low_rank(key, m, n, r, decay=0.1):
+    k1, k2 = jax.random.split(key)
+    U = jnp.linalg.qr(jax.random.normal(k1, (m, r)))[0]
+    V = jnp.linalg.qr(jax.random.normal(k2, (n, r)))[0]
+    s = jnp.exp(-decay * jnp.arange(r)) * 10
+    return (U * s[None]) @ V.T
+
+
+def test_range_finder_captures_low_rank():
+    key = jax.random.PRNGKey(0)
+    G = _low_rank(key, 128, 64, 8) + 1e-4 * jax.random.normal(key, (128, 64))
+    Q = randomized_range_finder(G, key, rank=8)
+    assert Q.shape == (128, 8)
+    # orthonormal
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(8), atol=1e-5)
+    # captures the range: ‖G − QQᵀG‖ small
+    resid = G - Q @ (Q.T @ G)
+    assert float(jnp.linalg.norm(resid)) < 1e-2 * float(jnp.linalg.norm(G))
+
+
+def test_rsvd_matches_truncated_svd():
+    key = jax.random.PRNGKey(1)
+    G = _low_rank(key, 96, 48, 16, decay=0.4)   # clear spectral gaps
+    U1, s1, Vt1 = randomized_svd(G, key, rank=8, n_iter=6, oversample=8)
+    U2, s2, Vt2 = truncated_svd(G, rank=8)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-2)
+    # reconstruction agreement (the subspace, not individual vectors)
+    np.testing.assert_allclose(
+        np.asarray((U1 * s1) @ Vt1), np.asarray((U2 * s2) @ Vt2), atol=5e-2
+    )
+
+
+def test_subspace_overlap_bounds():
+    key = jax.random.PRNGKey(2)
+    Q1 = jnp.linalg.qr(jax.random.normal(key, (64, 8)))[0]
+    assert abs(float(subspace_overlap(Q1, Q1)) - 1.0) < 1e-5
+    Q2 = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (64, 8)))[0]
+    assert 0.0 <= float(subspace_overlap(Q1, Q2)) <= 1.0
+
+
+@hypothesis.given(
+    m=st.integers(16, 96), n=st.integers(16, 96),
+    r=st.integers(1, 8), seed=st.integers(0, 2**16),
+)
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_range_finder_orthonormal(m, n, r, seed):
+    key = jax.random.PRNGKey(seed)
+    r = min(r, min(m, n))
+    G = jax.random.normal(key, (m, n))
+    Q = randomized_range_finder(G, key, rank=r)
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(r), atol=1e-4)
+
+
+@hypothesis.given(seed=st.integers(0, 2**16), r=st.integers(2, 10))
+@hypothesis.settings(max_examples=15, deadline=None)
+def test_property_rsvd_never_worse_than_noise(seed, r):
+    """rSVD rank-r residual ≤ 1.5× optimal rank-r residual (oversampled)."""
+    key = jax.random.PRNGKey(seed)
+    G = jax.random.normal(key, (64, 32))
+    Q = randomized_range_finder(G, key, rank=r, n_iter=3, oversample=6)
+    resid = float(jnp.linalg.norm(G - Q @ (Q.T @ G)))
+    s = jnp.linalg.svd(G, compute_uv=False)
+    opt = float(jnp.sqrt(jnp.sum(s[r:] ** 2)))
+    assert resid <= 1.5 * opt + 1e-4

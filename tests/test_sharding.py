@@ -1,0 +1,95 @@
+"""Sharding rules + a real multi-device pjit compile in a subprocess (the
+main test process must keep 1 device for everything else)."""
+import subprocess
+import sys
+
+import jax
+import pytest
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.parallel import param_spec
+
+
+def _mesh(shape=(16, 16), axes=("data", "model")):
+    return AbstractMesh(shape, axes)
+
+
+def test_megatron_rules():
+    mesh = _mesh()
+    assert param_spec("blocks/attn/wq", (4096, 4096), mesh) == P(None, "model")
+    assert param_spec("blocks/attn/wo", (4096, 4096), mesh) == P("model", None)
+    assert param_spec("blocks/mlp/w_up", (4096, 14336), mesh) == P(None, "model")
+    assert param_spec("blocks/mlp/w_down", (14336, 4096), mesh) == P("model", None)
+    assert param_spec("embed_tokens", (32000, 4096), mesh) == P("model", None)
+    assert param_spec("final_norm/norm_scale", (4096,), mesh) == P()
+
+
+def test_non_divisible_falls_back():
+    mesh = _mesh()
+    # vocab 49155 is not divisible by 16 -> shard the other dim
+    assert param_spec("embed_tokens", (49155, 1536), mesh) == P(None, "model")
+    # nothing divisible -> replicated
+    assert param_spec("blocks/x", (15, 9), mesh) == P()
+
+
+def test_expert_stack_spec():
+    mesh = _mesh()
+    # 8 experts not divisible by 16 -> trailing dim over model
+    assert param_spec("experts/w_gate", (8, 6144, 16384), mesh) == P(None, None, "model")
+    # 32 experts divisible -> expert-parallel
+    assert param_spec("experts/w_gate", (32, 1536, 512), mesh) == P("model", None, None)
+
+
+def test_fsdp_adds_data_axis():
+    mesh = _mesh()
+    cfg = get_config("deepseek-coder-33b")
+    assert cfg.fsdp
+    spec = param_spec("blocks/mlp/w_up", (7168, 19200), mesh, cfg)
+    assert spec == P("data", "model")
+
+
+@pytest.mark.slow
+def test_multi_device_pjit_compiles():
+    """Real 8-device (2 data × 4 model) lower+compile of a SUMO train step."""
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.core import SumoConfig, sumo_optimizer
+from repro.models import init_params, input_specs
+from repro.parallel import tree_param_specs, opt_state_specs, input_specs_sharding
+from repro.train.steps import make_train_step
+import dataclasses
+
+cfg = get_smoke_config("qwen3-4b")
+cfg = dataclasses.replace(cfg, d_model=64, n_layers=2, head_dim=16)
+shape = ShapeConfig("t", seq_len=64, global_batch=8, kind="train")
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+params_s = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+tx = sumo_optimizer(1e-3, params_s, SumoConfig(rank=4, update_freq=10))
+opt_s = jax.eval_shape(tx.init, params_s)
+named = lambda specs: jax.tree_util.tree_map(
+    lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s, specs,
+    is_leaf=lambda x: isinstance(x, P) or x is None)
+p_sh = named(tree_param_specs(params_s, mesh, cfg))
+o_sh = named(opt_state_specs(opt_s, mesh, cfg))
+b_s = input_specs(cfg, shape)
+b_sh = named(input_specs_sharding(b_s, mesh, shape.global_batch))
+with mesh:
+    step = make_train_step(cfg, tx)
+    compiled = jax.jit(step, in_shardings=(p_sh, o_sh, b_sh)).lower(
+        params_s, opt_s, b_s).compile()
+mem = compiled.memory_analysis()
+assert "all-reduce" in compiled.as_text() or "all-gather" in compiled.as_text()
+print("OK", mem.temp_size_in_bytes)
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=600,
+                       env={**__import__("os").environ, "PYTHONPATH": "src"},
+                       cwd="/root/repo")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout

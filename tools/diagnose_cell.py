@@ -1,0 +1,76 @@
+"""Hillclimb diagnostic: recompile one dry-run cell and print the top
+collective ops (with jax source attribution) + top memory-traffic regions.
+
+    PYTHONPATH=src python tools/diagnose_cell.py qwen3-4b train_4k
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import sys  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPE_BY_NAME, get_config  # noqa: E402
+from repro.core import SumoConfig, sumo_optimizer  # noqa: E402
+from repro.launch.dryrun import _abstract_params, _named  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import input_specs  # noqa: E402
+from repro.parallel import input_specs_sharding, opt_state_specs, tree_param_specs  # noqa: E402
+from repro.roofline.hlo_cost import (  # noqa: E402
+    analyze_hlo,
+    top_bytes,
+    top_collectives,
+    top_dots,
+)
+from repro.train.steps import make_train_step  # noqa: E402
+
+
+def main(arch_id: str, shape_name: str, hints: str = "off") -> None:
+    cfg = get_config(arch_id)
+    shape = SHAPE_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=False)
+    if hints == "on":
+        from repro.models.layers import set_sharding_hints
+        set_sharding_hints(("data",), "model", dict(mesh.shape))
+    params_s = _abstract_params(cfg)
+    param_sh = _named(tree_param_specs(params_s, mesh, cfg), mesh)
+    batch_s = input_specs(cfg, shape)
+    batch_sh = _named(input_specs_sharding(batch_s, mesh, shape.global_batch), mesh)
+    with mesh:
+        tx = sumo_optimizer(1e-3, params_s, SumoConfig(rank=128, update_freq=200))
+        opt_s = jax.eval_shape(tx.init, params_s)
+        opt_sh = _named(opt_state_specs(opt_s, mesh, cfg), mesh)
+        step = make_train_step(cfg, tx, attn_impl="flash")
+        metric_sh = {k: NamedSharding(mesh, P())
+                     for k in ("loss", "grad_norm", "update_norm")}
+        compiled = jax.jit(
+            step, in_shardings=(param_sh, opt_sh, batch_sh),
+            out_shardings=(param_sh, opt_sh, metric_sh),
+        ).lower(params_s, opt_s, batch_s).compile()
+    hlo = compiled.as_text()
+    cost = analyze_hlo(hlo)
+    print(f"flops/dev={cost.flops:.3e} bytes/dev={cost.bytes:.3e} "
+          f"coll/dev={cost.collective_bytes:.3e}")
+    print("\ntop collectives:")
+    for e in top_collectives(hlo, k=12):
+        src = e["source"][:110]
+        print(f"  {e['bytes']/1e9:8.1f}GB  ×{e['mult']:<5.0f} {e['op']:18s} "
+              f"{e['shape'][:40]:40s} {src}")
+    print("\ntop dots:")
+    for e in top_dots(hlo, k=12):
+        src = e["source"][:110]
+        print(f"  {e['flops']/1e12:8.2f}TF  ×{e['mult']:<5.0f} "
+              f"{e['shape'][:40]:40s} {src}")
+    print("\ntop bytes:")
+    for e in top_bytes(hlo, k=14):
+        src = e["source"][:100]
+        print(f"  {e['bytes']/1e9:8.1f}GB  ×{e['mult']:<7.0f} {e['opcode']:12s} "
+              f"{e['shape'][:36]:36s} {src}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])
