@@ -54,3 +54,38 @@ def run(csv_rows: list) -> None:
         upd = jax.jit(lambda g, s, p: tx.update(g, s, p))
         us = _time_step(upd, g, st, p) * 1e6
         csv_rows.append((f"optimizer_update_only/{opt}", us, "1024x512+2048x256 r=32"))
+
+    # bucketed vs per-leaf SUMO engine on a 24-layer transformer-shaped tree
+    # (96 matrix leaves in 3 shape buckets): 3 refresh conds / batched rSVDs
+    # / fused dispatches against 96 per-leaf ones. Steady-state step time
+    # (post-refresh, the 1-in-K common path) plus compile wall time — the
+    # bucketed engine's other headline is compiling ~3 update programs
+    # instead of ~96.
+    key = jax.random.PRNGKey(2)
+    p24 = {}
+    for i in range(24):
+        kk = jax.random.fold_in(key, i)
+        p24[f"block{i:02d}"] = {
+            "wq": jax.random.normal(jax.random.fold_in(kk, 0), (32, 32)),
+            "wo": jax.random.normal(jax.random.fold_in(kk, 1), (32, 32)),
+            "w_up": jax.random.normal(jax.random.fold_in(kk, 2), (32, 64)),
+            "w_down": jax.random.normal(jax.random.fold_in(kk, 3), (64, 32)),
+        }
+    g24 = jax.tree_util.tree_map(lambda x: x * 0.01, p24)
+    engine_us = {}
+    for label, bucketed in (("bucketed", True), ("per_leaf", False)):
+        tx = make_optimizer("sumo", 1e-3, p24, rank=4, update_freq=10,
+                            bucketed=bucketed)
+        st = tx.init(p24)
+        upd = jax.jit(lambda g, s, p: tx.update(g, s, p))
+        t0 = time.perf_counter()
+        _, st = upd(g24, st, p24)        # compile + advance past the refresh
+        jax.block_until_ready(jax.tree_util.tree_leaves(st)[0])
+        csv_rows.append((f"sumo_update_engine/compile_s/{label}",
+                         time.perf_counter() - t0, "24-layer x4 proj"))
+        engine_us[label] = _time_step(upd, g24, st, p24) * 1e6
+        csv_rows.append((f"sumo_update_engine/{label}", engine_us[label],
+                         "24-layer x4 proj steady-state"))
+    csv_rows.append(("sumo_update_engine/speedup_x",
+                     engine_us["per_leaf"] / max(engine_us["bucketed"], 1e-9),
+                     "per_leaf / bucketed"))

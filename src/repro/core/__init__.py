@@ -5,9 +5,11 @@ from .lora import LoraConfig, apply_lora, extract_adapter, init_lora_params
 from .memory import analytic_state_floats, model_memory_report, tree_state_bytes
 from .muon import muon, muon_optimizer
 from .optimizer import (
+    Bucket,
     Schedule,
     Transform,
     apply_updates,
+    build_bucket_plan,
     chain,
     clip_by_global_norm,
     constant_schedule,
@@ -35,6 +37,7 @@ __all__ = [
     "adamw", "adamw_optimizer",
     "LoraConfig", "init_lora_params", "apply_lora", "extract_adapter",
     "Transform", "chain", "multi_transform", "partition_params",
+    "Bucket", "build_bucket_plan",
     "apply_updates", "clip_by_global_norm", "global_norm",
     "Schedule", "constant_schedule",
     "orthogonalize_svd", "orthogonalize_polar", "newton_schulz5",

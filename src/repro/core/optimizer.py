@@ -120,6 +120,59 @@ def partition_params(params: PyTree, fallback_patterns=_DEFAULT_FALLBACK_PATTERN
     )
 
 
+# ---------------------------------------------------------------------------
+# Bucket plan: group same-shaped matrix leaves for stacked (vmapped) updates
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Bucket:
+    """One stacked update group: every matrix in it shares (m, n).
+
+    ``leaf_indices`` index into the *flattened* leaf list the plan was built
+    from; ``counts[i]`` is how many (m, n) matrices leaf i contributes (1 for
+    a 2D leaf, prod(leading dims) for an (E, m, n) expert stack). Stacking
+    order is leaf order, experts in layout order — the scatter in the
+    consumer must slice back with the same offsets.
+    """
+
+    shape: tuple[int, int]
+    leaf_indices: tuple[int, ...]
+    counts: tuple[int, ...]
+
+    @property
+    def size(self) -> int:
+        return sum(self.counts)
+
+
+def build_bucket_plan(shapes) -> tuple[Bucket, ...]:
+    """Group flattened leaf shapes by trailing (m, n) matrix shape.
+
+    ``shapes`` is a sequence of array shapes (or None for masked leaves, which
+    are skipped). Purely static — safe to call at trace time; the same shapes
+    always produce the same plan, so init and update agree without storing the
+    plan in optimizer state. Buckets are ordered by first occurrence.
+    """
+    groups: dict[tuple[int, int], list[tuple[int, int]]] = {}
+    for i, s in enumerate(shapes):
+        if s is None:
+            continue
+        if len(s) < 2:
+            raise ValueError(f"bucket plan needs matrix leaves, got shape {s}")
+        key = (int(s[-2]), int(s[-1]))
+        cnt = 1
+        for d in s[:-2]:
+            cnt *= int(d)
+        groups.setdefault(key, []).append((i, cnt))
+    return tuple(
+        Bucket(
+            shape=k,
+            leaf_indices=tuple(i for i, _ in members),
+            counts=tuple(c for _, c in members),
+        )
+        for k, members in groups.items()
+    )
+
+
 def multi_transform(transforms: dict[str, Transform], labels: PyTree) -> Transform:
     """Route each leaf to the transform named by its label (optax.multi_transform).
 

@@ -2,6 +2,15 @@
 fused Newton-Schulz5 (Muon/SUMO-NS5 ablation), subspace projection (Block 1),
 flash attention (model backbone). Each has a pure-jnp oracle in ref.py."""
 from . import ref
-from .ops import backproject, flash_attention, newton_schulz5, project
+from .ops import (
+    backproject,
+    flash_attention,
+    newton_schulz5,
+    project,
+    resolve_projection_impl,
+    subspace_backproject,
+    subspace_project,
+)
 
-__all__ = ["newton_schulz5", "project", "backproject", "flash_attention", "ref"]
+__all__ = ["newton_schulz5", "project", "backproject", "flash_attention", "ref",
+           "subspace_project", "subspace_backproject", "resolve_projection_impl"]

@@ -11,6 +11,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from . import ref
 from .flash_attention import flash_attention_pallas
 from .ns5 import ns5_pallas
 from .projection import backproject_pallas, project_pallas
@@ -18,6 +19,44 @@ from .projection import backproject_pallas, project_pallas
 
 def _auto_interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Optimizer-facing dispatch: the SUMO bucketed engine routes its per-bucket
+# projection Ĝ = QᵀG and back-projection U = QO through these so the Pallas
+# kernels serve the training hot path (compiled on TPU, interpret mode when
+# forced on CPU) while CPU runs default to the plain-matmul reference.
+# ---------------------------------------------------------------------------
+
+PROJECTION_IMPLS = ("auto", "pallas", "reference")
+
+
+def resolve_projection_impl(impl: str) -> str:
+    """'auto' → 'pallas' on TPU, 'reference' elsewhere; validates the rest."""
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "reference"
+    if impl not in ("pallas", "reference"):
+        raise ValueError(
+            f"unknown projection impl {impl!r} (have {PROJECTION_IMPLS})")
+    return impl
+
+
+def subspace_project(Q: jnp.ndarray, G: jnp.ndarray, impl: str = "auto"):
+    """Ĝ = Qᵀ G for one (long, r) basis against one (long, short) gradient.
+
+    Safe under jax.vmap: the Pallas path batches via pallas_call's batching
+    rule (an extra grid dimension), the reference path is a plain dot.
+    """
+    if resolve_projection_impl(impl) == "pallas":
+        return project(Q, G)
+    return ref.project_ref(Q, G)
+
+
+def subspace_backproject(Q: jnp.ndarray, O: jnp.ndarray, impl: str = "auto"):
+    """U = Q O (same dispatch contract as subspace_project)."""
+    if resolve_projection_impl(impl) == "pallas":
+        return backproject(Q, O)
+    return ref.backproject_ref(Q, O)
 
 
 @partial(jax.jit, static_argnames=("steps", "interpret"))

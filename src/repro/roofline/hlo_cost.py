@@ -117,7 +117,10 @@ def _split_operands(args: str) -> list[str]:
         out.append("".join(cur).strip())
     names = []
     for tok in out:
-        m = re.match(r"^%([\w.\-]+)$", tok.strip())
+        # Operands print either bare ("%name") or type-prefixed
+        # ("f32[64,64]{1,0} %name", "(s32[], f32[8]) %name") depending on the
+        # HLO printer options; the %name is always the last token.
+        m = re.search(r"%([\w.\-]+)$", tok.strip())
         names.append(m.group(1) if m else None)
     return names
 
@@ -191,6 +194,16 @@ class HloCostModel:
     def _called(self, attrs: str, key: str) -> Optional[str]:
         m = re.search(key + r"=%?([\w.\-]+)", attrs)
         return m.group(1) if m else None
+
+    def _while_trip(self, op: Op) -> Optional[int]:
+        """Trip count of a while op: XLA's own loop analysis when present
+        (``backend_config={"known_trip_count":{"n":"10"}}``), else the
+        largest constant in the loop condition."""
+        m = re.search(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"', op.raw)
+        if m:
+            return int(m.group(1))
+        cond = self._called(op.attrs, "condition")
+        return self._trip_count(cond) if cond else None
 
     _SLICE_OPS = ("dynamic-slice", "slice", "gather", "dynamic-update-slice")
 
@@ -268,7 +281,7 @@ class HloCostModel:
                 inner += self.computation_cost(body)
             if cond:
                 inner += self.computation_cost(cond)
-            trip = self._trip_count(cond) if cond else None
+            trip = self._while_trip(op)
             if trip is None:
                 c = inner.scaled(1.0)
                 c.unknown_trip_loops += 1
@@ -409,7 +422,7 @@ def top_dots(hlo_text: str, k: int = 20) -> list[dict]:
             elif op.opcode == "while":
                 body = model._called(op.attrs, "body")
                 cond = model._called(op.attrs, "condition")
-                trip = model._trip_count(cond) if cond else None
+                trip = model._while_trip(op)
                 for c2 in (body, cond):
                     if c2:
                         walk(c2, mult * (trip or 1), seen + (comp,))
@@ -437,7 +450,7 @@ def top_bytes(hlo_text: str, k: int = 20) -> list[dict]:
             if op.opcode == "while":
                 body = model._called(op.attrs, "body")
                 cond = model._called(op.attrs, "condition")
-                trip = model._trip_count(cond) if cond else None
+                trip = model._while_trip(op)
                 for c2 in (body, cond):
                     if c2:
                         walk(c2, mult * (trip or 1), seen + (comp,))
@@ -489,7 +502,7 @@ def top_collectives(hlo_text: str, k: int = 20) -> list[dict]:
             elif op.opcode == "while":
                 body = model._called(op.attrs, "body")
                 cond = model._called(op.attrs, "condition")
-                trip = model._trip_count(cond) if cond else None
+                trip = model._while_trip(op)
                 for c in (body, cond):
                     if c:
                         walk(c, mult * (trip or 1), seen + (comp,))

@@ -24,25 +24,30 @@ from ..models import loss_fn
 
 def make_optimizer(name: str, learning_rate, params, cfg: Optional[ArchConfig] = None,
                    rank: int = 128, update_freq: int = 200, weight_decay: float = 0.0,
-                   **kw):
-    """Factory: sumo | sumo-ns5 | galore | muon | adamw."""
+                   bucketed: bool = True, **kw):
+    """Factory: sumo | sumo-ns5 | galore | muon | adamw.
+
+    ``bucketed`` selects SUMO's stacked same-shape update engine (one refresh
+    cond/rSVD per bucket); False falls back to the per-leaf reference engine.
+    Non-SUMO optimizers ignore it.
+    """
     name = name.lower()
     if name == "sumo":
         return sumo_optimizer(
             learning_rate, params,
-            SumoConfig(rank=rank, update_freq=update_freq,
+            SumoConfig(rank=rank, update_freq=update_freq, bucketed=bucketed,
                        weight_decay=weight_decay, orth_method="polar", **kw),
         )
     if name == "sumo-svd":
         return sumo_optimizer(
             learning_rate, params,
-            SumoConfig(rank=rank, update_freq=update_freq,
+            SumoConfig(rank=rank, update_freq=update_freq, bucketed=bucketed,
                        weight_decay=weight_decay, orth_method="svd", **kw),
         )
     if name == "sumo-ns5":
         return sumo_optimizer(
             learning_rate, params,
-            SumoConfig(rank=rank, update_freq=update_freq,
+            SumoConfig(rank=rank, update_freq=update_freq, bucketed=bucketed,
                        weight_decay=weight_decay, orth_method="ns5", **kw),
         )
     if name == "galore":

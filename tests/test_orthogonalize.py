@@ -1,11 +1,19 @@
 """Orthogonalization operators: exactness, the paper's Lemma 3.2 error bound,
-and hypothesis property tests."""
-import hypothesis
-import hypothesis.strategies as st
+and hypothesis property tests.
+
+Property tests are gated on `hypothesis` being importable (the offline
+container lacks it); the deterministic smoke replays below always run.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:
+    hypothesis = st = None
 
 from repro.core import (
     condition_number,
@@ -87,11 +95,7 @@ def test_rank_one_residual_range():
     assert float(rank_one_residual(u @ v)) < 1e-5
 
 
-@hypothesis.given(
-    r=st.integers(2, 12), n=st.integers(12, 48), seed=st.integers(0, 2**16)
-)
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_property_polar_idempotent(r, n, seed):
+def _check_polar_idempotent(r, n, seed):
     """orth(orth(M)) == orth(M) — orthogonalization is idempotent."""
     M = jax.random.normal(jax.random.PRNGKey(seed), (r, n))
     O1 = orthogonalize_polar(M)
@@ -99,12 +103,7 @@ def test_property_polar_idempotent(r, n, seed):
     np.testing.assert_allclose(np.asarray(O1), np.asarray(O2), atol=5e-4)
 
 
-@hypothesis.given(
-    r=st.integers(2, 12), n=st.integers(12, 48),
-    scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**16),
-)
-@hypothesis.settings(max_examples=20, deadline=None)
-def test_property_polar_scale_invariant(r, n, scale, seed):
+def _check_polar_scale_invariant(r, n, scale, seed):
     """orth(cM) == orth(M) for c > 0 — spectral direction is scale-free."""
     M = jax.random.normal(jax.random.PRNGKey(seed), (r, n))
     np.testing.assert_allclose(
@@ -112,6 +111,40 @@ def test_property_polar_scale_invariant(r, n, scale, seed):
         np.asarray(orthogonalize_polar(M)),
         atol=5e-4,
     )
+
+
+@pytest.mark.parametrize("r,n,seed", [(2, 12, 0), (12, 48, 1), (7, 23, 42)])
+def test_smoke_polar_idempotent(r, n, seed):
+    """Deterministic replay of the idempotence property (no hypothesis)."""
+    _check_polar_idempotent(r, n, seed)
+
+
+@pytest.mark.parametrize("r,n,scale,seed", [
+    (2, 12, 0.01, 0), (12, 48, 100.0, 1), (5, 19, 3.7, 2),
+])
+def test_smoke_polar_scale_invariant(r, n, scale, seed):
+    """Deterministic replay of the scale-invariance property (no hypothesis)."""
+    _check_polar_scale_invariant(r, n, scale, seed)
+
+
+if hypothesis is not None:
+    @hypothesis.given(
+        r=st.integers(2, 12), n=st.integers(12, 48), seed=st.integers(0, 2**16)
+    )
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_property_polar_idempotent(r, n, seed):
+        _check_polar_idempotent(r, n, seed)
+
+    @hypothesis.given(
+        r=st.integers(2, 12), n=st.integers(12, 48),
+        scale=st.floats(0.01, 100.0), seed=st.integers(0, 2**16),
+    )
+    @hypothesis.settings(max_examples=20, deadline=None)
+    def test_property_polar_scale_invariant(r, n, scale, seed):
+        _check_polar_scale_invariant(r, n, scale, seed)
+else:
+    def test_property_suite_requires_hypothesis():
+        pytest.importorskip("hypothesis")
 
 
 def test_ns5_spectral_range():

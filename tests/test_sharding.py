@@ -12,7 +12,8 @@ from repro.parallel import param_spec
 
 
 def _mesh(shape=(16, 16), axes=("data", "model")):
-    return AbstractMesh(shape, axes)
+    # AbstractMesh takes a shape_tuple of (axis_name, size) pairs.
+    return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def test_megatron_rules():

@@ -1,0 +1,8 @@
+#!/usr/bin/env bash
+# Tier-1 verify: the ROADMAP's canonical test command, with PYTHONPATH=src
+# wired in so it is one line from anywhere in the repo.
+#   tools/run_tier1.sh            # full tier-1 run
+#   tools/run_tier1.sh -m 'not slow'   # extra pytest args pass through
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
