@@ -55,12 +55,14 @@ def run(csv_rows: list) -> None:
         us = _time_step(upd, g, st, p) * 1e6
         csv_rows.append((f"optimizer_update_only/{opt}", us, "1024x512+2048x256 r=32"))
 
-    # bucketed vs per-leaf SUMO engine on a 24-layer transformer-shaped tree
-    # (96 matrix leaves in 3 shape buckets): 3 refresh conds / batched rSVDs
-    # / fused dispatches against 96 per-leaf ones. Steady-state step time
-    # (post-refresh, the 1-in-K common path) plus compile wall time — the
-    # bucketed engine's other headline is compiling ~3 update programs
-    # instead of ~96.
+    # SUMO engine × state-layout axis on a 24-layer transformer-shaped tree
+    # (96 matrix leaves; canonical orientation merges w_up/w_down, so 2
+    # buckets): 2 refresh conds / batched rSVDs / fused dispatches against 96
+    # per-leaf ones, and bucket-RESIDENT state (Q/M/prev_norm stored as the
+    # stacked bucket arrays) against the leaf layout's per-step
+    # concatenate/scatter round-trip. Steady-state step time (post-refresh,
+    # the 1-in-K common path) plus compile wall time — the bucketed engine's
+    # other headline is compiling ~2 update programs instead of ~96.
     key = jax.random.PRNGKey(2)
     p24 = {}
     for i in range(24):
@@ -73,9 +75,14 @@ def run(csv_rows: list) -> None:
         }
     g24 = jax.tree_util.tree_map(lambda x: x * 0.01, p24)
     engine_us = {}
-    for label, bucketed in (("bucketed", True), ("per_leaf", False)):
+    variants = (
+        ("bucketed/bucket_state", True, "bucket"),
+        ("bucketed/leaf_state", True, "leaf"),
+        ("per_leaf/leaf_state", False, "leaf"),
+    )
+    for label, bucketed, layout in variants:
         tx = make_optimizer("sumo", 1e-3, p24, rank=4, update_freq=10,
-                            bucketed=bucketed)
+                            bucketed=bucketed, state_layout=layout)
         st = tx.init(p24)
         upd = jax.jit(lambda g, s, p: tx.update(g, s, p))
         t0 = time.perf_counter()
@@ -87,5 +94,10 @@ def run(csv_rows: list) -> None:
         csv_rows.append((f"sumo_update_engine/{label}", engine_us[label],
                          "24-layer x4 proj steady-state"))
     csv_rows.append(("sumo_update_engine/speedup_x",
-                     engine_us["per_leaf"] / max(engine_us["bucketed"], 1e-9),
-                     "per_leaf / bucketed"))
+                     engine_us["per_leaf/leaf_state"]
+                     / max(engine_us["bucketed/bucket_state"], 1e-9),
+                     "per_leaf / bucketed+bucket_state"))
+    csv_rows.append(("sumo_update_engine/state_layout_speedup_x",
+                     engine_us["bucketed/leaf_state"]
+                     / max(engine_us["bucketed/bucket_state"], 1e-9),
+                     "leaf_state / bucket_state (stack/scatter copy removed)"))

@@ -28,10 +28,18 @@ from .orthogonalize import (
     rank_one_residual,
 )
 from .rsvd import randomized_range_finder, randomized_svd, subspace_overlap, truncated_svd
-from .sumo import SumoConfig, SumoState, sumo, sumo_optimizer
+from .sumo import (
+    SumoConfig,
+    SumoState,
+    convert_sumo_state,
+    sumo,
+    sumo_optimizer,
+    sumo_state_layout,
+)
 
 __all__ = [
     "SumoConfig", "SumoState", "sumo", "sumo_optimizer",
+    "convert_sumo_state", "sumo_state_layout",
     "GaloreConfig", "galore", "galore_optimizer",
     "muon", "muon_optimizer",
     "adamw", "adamw_optimizer",

@@ -126,48 +126,79 @@ def partition_params(params: PyTree, fallback_patterns=_DEFAULT_FALLBACK_PATTERN
 
 @dataclasses.dataclass(frozen=True)
 class Bucket:
-    """One stacked update group: every matrix in it shares (m, n).
+    """One stacked update group: every matrix in it shares the CANONICAL
+    (long, short) trailing shape, long = max(m, n) ≥ short = min(m, n).
+
+    Orientation is canonicalized so that an (m, n) leaf and its transpose
+    partner (n, m) land in the SAME bucket (e.g. a transformer's w_up /
+    w_down pair): the per-matrix update only ever operates on the long-first
+    view, so merging them halves the refresh conds and — crucially — makes
+    the bucket key a pure function of the optimizer-state shapes (Q is
+    (long, r), M is (r, short) regardless of orientation), which is what lets
+    bucket-resident state round-trip through checkpoints unambiguously.
 
     ``leaf_indices`` index into the *flattened* leaf list the plan was built
-    from; ``counts[i]`` is how many (m, n) matrices leaf i contributes (1 for
-    a 2D leaf, prod(leading dims) for an (E, m, n) expert stack). Stacking
-    order is leaf order, experts in layout order — the scatter in the
-    consumer must slice back with the same offsets.
+    from; ``counts[i]`` is how many matrices leaf i contributes (1 for a 2D
+    leaf, prod(leading dims) for an (E, m, n) expert stack); ``transposed[i]``
+    says whether that leaf's matrices must be transposed into the canonical
+    long-first orientation (m < n). Stacking order is leaf order, experts in
+    layout order — the scatter in the consumer must slice back with the same
+    offsets (and transpose back where flagged).
     """
 
     shape: tuple[int, int]
     leaf_indices: tuple[int, ...]
     counts: tuple[int, ...]
+    transposed: tuple[bool, ...]
 
     @property
     def size(self) -> int:
         return sum(self.counts)
 
+    @property
+    def key(self) -> str:
+        """Stable string id — the bucket-resident state key."""
+        return bucket_key(*self.shape)
+
+
+def bucket_key(long_d: int, short_d: int) -> str:
+    """Canonical bucket-state key ('LONGxSHORT'). The single encoder — used
+    by Bucket.key and checkpoint layout migration; ``BUCKET_KEY_RE`` is the
+    matching decoder side (layout detection in sumo/checkpoint/sharding)."""
+    return f"{long_d}x{short_d}"
+
+
+# Matches bucket_key output — import this instead of re-encoding the format.
+BUCKET_KEY_RE = re.compile(r"^\d+x\d+$")
+
 
 def build_bucket_plan(shapes) -> tuple[Bucket, ...]:
-    """Group flattened leaf shapes by trailing (m, n) matrix shape.
+    """Group flattened leaf shapes by canonical trailing (long, short) shape.
 
     ``shapes`` is a sequence of array shapes (or None for masked leaves, which
     are skipped). Purely static — safe to call at trace time; the same shapes
-    always produce the same plan, so init and update agree without storing the
-    plan in optimizer state. Buckets are ordered by first occurrence.
+    always produce the same plan, so init, update and checkpoint restore agree
+    without storing the plan anywhere. Buckets are ordered by first
+    occurrence.
     """
-    groups: dict[tuple[int, int], list[tuple[int, int]]] = {}
+    groups: dict[tuple[int, int], list[tuple[int, int, bool]]] = {}
     for i, s in enumerate(shapes):
         if s is None:
             continue
         if len(s) < 2:
             raise ValueError(f"bucket plan needs matrix leaves, got shape {s}")
-        key = (int(s[-2]), int(s[-1]))
+        m, n = int(s[-2]), int(s[-1])
+        key = (max(m, n), min(m, n))
         cnt = 1
         for d in s[:-2]:
             cnt *= int(d)
-        groups.setdefault(key, []).append((i, cnt))
+        groups.setdefault(key, []).append((i, cnt, m < n))
     return tuple(
         Bucket(
             shape=k,
-            leaf_indices=tuple(i for i, _ in members),
-            counts=tuple(c for _, c in members),
+            leaf_indices=tuple(i for i, _, _ in members),
+            counts=tuple(c for _, c, _ in members),
+            transposed=tuple(t for _, _, t in members),
         )
         for k, members in groups.items()
     )

@@ -25,22 +25,56 @@ rSVD cost is paid only on refresh steps.
 Bucketed update engine
 ----------------------
 With ``SumoConfig.bucketed=True`` (the default) the update groups every
-matrix leaf with the same trailing (m, n) shape into one stacked (B, m, n)
-bucket (2D leaves contribute one matrix, (E, m, n) expert stacks contribute
-E), then runs ONE ``jax.vmap``-ed ``_matrix_update`` per bucket and scatters
-the results back to the original tree. A 24-layer transformer therefore
-compiles ~4 bucketed updates instead of ~100 per-leaf ones, and each bucket
-pays a single ``lax.cond``/rSVD for its refresh instead of one per leaf (the
-refresh predicate is shared, so vmap keeps the cond a cond). The projection
-Ĝ = QᵀG and back-projection U = QO route through ``kernels.ops`` —
-Pallas kernels on TPU, plain-matmul reference on CPU, overridable with
-``SumoConfig.projection``. The adaptive ``refresh_quality`` criterion is
-evaluated at bucket granularity (refresh the whole bucket when ANY member's
-basis has gone stale) to keep the single-cond property; per-leaf granularity
-is available via ``bucketed=False``, which also serves as the bit-exact
-reference implementation in tests. Optimizer *state* stays per-leaf either
-way, so checkpointing and sharding specs are unaffected. One bucket is one
-shardable (B, m, n) tensor — the unit for multi-device SUMO later.
+matrix leaf with the same CANONICAL trailing (long, short) shape — an (m, n)
+leaf and its transpose partner (n, m) share a bucket — into one stacked
+(B, long, short) bucket (2D leaves contribute one matrix, (E, m, n) expert
+stacks contribute E), then runs ONE ``jax.vmap``-ed ``_matrix_update`` per
+bucket and scatters the results back to the original tree. A 24-layer
+transformer therefore compiles ~3 bucketed updates instead of ~100 per-leaf
+ones, and each bucket pays a single ``lax.cond``/rSVD for its refresh instead
+of one per leaf (the refresh predicate is shared, so vmap keeps the cond a
+cond). The projection Ĝ = QᵀG and back-projection U = QO route through
+``kernels.ops`` — Pallas kernels on TPU, plain-matmul reference on CPU,
+overridable with ``SumoConfig.projection``. The adaptive ``refresh_quality``
+criterion is evaluated at bucket granularity (refresh the whole bucket when
+ANY member's basis has gone stale) to keep the single-cond property; per-leaf
+granularity is available via ``bucketed=False``, which also serves as the
+bit-exact reference implementation in tests.
+
+Bucket-resident optimizer state
+-------------------------------
+``SumoConfig.state_layout`` picks where Q/M/prev_norm live:
+
+* ``"bucket"`` (the default under ``bucketed=True``) — state is stored in
+  bucket layout: one stacked array per bucket, keyed by the canonical
+  ``"LONGxSHORT"`` string of ``build_bucket_plan`` (Q: (B, long, r),
+  M: (B, r, short), prev_norm: (B,)). The per-step state
+  concatenate/scatter round-trip of the per-leaf layout disappears — the
+  bucket array IS the storage — and each bucket is one shardable tensor:
+  shard B over ``data`` (layer/expert parallel) and Q's long dim over
+  ``model`` (see ``parallel.sharding.opt_state_specs``).
+* ``"leaf"`` — Q/M/prev_norm mirror the param tree (the pre-bucket layout);
+  kept for per-leaf introspection and as the migration source/target.
+
+The plan is a pure function of the (static) leaf shapes, so init, update,
+checkpoint save and restore all agree without storing the plan anywhere.
+``convert_sumo_state`` converts between the two layouts bit-exactly (pure
+data movement), and ``train.checkpoint`` migrates on restore when a
+checkpoint's layout differs from the restore template's. Both engines run
+under either layout (the per-leaf engine unstacks/restacks at the
+boundary), so all four combinations are bit-identical — the equivalence
+harness in tests/test_sumo_state_layout.py pins this.
+
+Sharded bucket update
+---------------------
+Passing a ``jax.sharding.Mesh`` to ``sumo(..., mesh=...)`` runs each bucket
+update under ``shard_map``, sharding the stacked B axis over
+``SumoConfig.bucket_axis`` (default ``"data"``) whenever B divides the axis
+size. Projection, moment update, orthogonalization and the rSVD refresh are
+all per-matrix, so the steady-state update runs entirely shard-local — zero
+collectives; only the delta scatter back to (replicated) params gathers.
+Buckets whose B does not divide the axis fall back to the single-device
+vmap path, so mixed trees still work.
 """
 from __future__ import annotations
 
@@ -49,6 +83,8 @@ from typing import Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels.ops import subspace_backproject, subspace_project
 from . import optimizer as opt
@@ -57,13 +93,16 @@ from .rsvd import randomized_range_finder
 
 PyTree = opt.PyTree
 
+STATE_LAYOUTS = ("auto", "leaf", "bucket")
+
 
 class SumoState(NamedTuple):
     step: jnp.ndarray          # ()
     key: jax.Array             # rng for rSVD sketches
-    Q: PyTree                  # per-leaf (long, r) bases (None on fallback leaves)
-    M: PyTree                  # per-leaf (r, short) moments
-    prev_norm: PyTree          # per-leaf () limiter memory
+    Q: PyTree                  # bases: per-leaf (long, r) arrays, or per-bucket
+                               # (B, long, r) stacks keyed "LONGxSHORT"
+    M: PyTree                  # moments: (r, short) per leaf / (B, r, short) per bucket
+    prev_norm: PyTree          # limiter memory: () per leaf / (B,) per bucket
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,13 +124,29 @@ class SumoConfig:
     # `refresh_quality` of the gradient's energy, ‖QᵀG‖_F < ς·‖G‖_F.
     # 0.0 disables (pure every-K refresh).
     refresh_quality: float = 0.0
-    # Bucketed update engine: stack same-(m, n) leaves and run one vmapped
-    # update (one refresh cond + rSVD) per bucket. False = per-leaf reference.
+    # Bucketed update engine: stack same-(long, short) leaves and run one
+    # vmapped update (one refresh cond + rSVD) per bucket. False = per-leaf
+    # reference.
     bucketed: bool = True
+    # Where Q/M/prev_norm live: "bucket" stores them as per-bucket stacked
+    # arrays (no per-step state stack/scatter; the shardable layout), "leaf"
+    # mirrors the param tree. "auto" = "bucket" when bucketed else "leaf".
+    state_layout: str = "auto"
+    # Mesh axis the shard_map path shards the stacked bucket (B) axis over,
+    # when a mesh is passed to sumo(..., mesh=...).
+    bucket_axis: str = "data"
     # Projection/back-projection impl: "auto" (Pallas on TPU, reference
     # matmul elsewhere), "pallas" (force the kernel; interpret mode on CPU),
     # or "reference".
     projection: str = "auto"
+
+    def resolved_state_layout(self) -> str:
+        if self.state_layout == "auto":
+            return "bucket" if self.bucketed else "leaf"
+        if self.state_layout not in ("leaf", "bucket"):
+            raise ValueError(
+                f"unknown state_layout {self.state_layout!r} (have {STATE_LAYOUTS})")
+        return self.state_layout
 
 
 def _orth(cfg: SumoConfig, M: jnp.ndarray) -> jnp.ndarray:
@@ -234,121 +289,321 @@ def _per_leaf_updates(cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
     return out_u, out_Q, out_M, out_pn
 
 
-def _bucketed_updates(cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
-                      leaf_keys, lr, do_refresh):
-    """Bucketed engine: one vmapped ``_matrix_update`` per (m, n) bucket.
+# ---------------------------------------------------------------------------
+# State layout: per-leaf trees <-> per-bucket stacked arrays
+# ---------------------------------------------------------------------------
 
-    Leaves sharing a trailing matrix shape are stacked into a (B, m, n)
-    bucket (expert stacks flatten their leading dims in), updated with a
-    single vmap whose refresh predicate is unbatched — so the whole bucket
-    pays ONE ``lax.cond``/rSVD — and sliced back to the original leaves.
-    Per-matrix rSVD keys match the per-leaf engine exactly (same per-leaf
-    key, same per-expert split), which is what makes the two engines
-    bit-comparable.
+def _leaf_state_shapes(cfg: SumoConfig, g_shape):
+    """Leaf-layout (Q, M, prev_norm) shapes for one matrix leaf."""
+    m, n = g_shape[-2], g_shape[-1]
+    long_d, short_d = (n, m) if m < n else (m, n)
+    r = _leaf_rank(cfg, g_shape)
+    batch = tuple(g_shape[:-2])
+    return batch + (long_d, r), batch + (r, short_d), batch
+
+
+def _stack_leaf_state(plan, leaves_Q, leaves_M, leaves_pn):
+    """Per-leaf state lists -> per-bucket stacked dicts (pure data movement).
+
+    Q/M/prev_norm are orientation-free (always long-first), so no transposes
+    are needed — only reshapes of the leading expert dims and concatenation
+    in plan order.
     """
-    shapes = [None if g is None else g.shape for g in leaves_g]
+    Qd, Md, pnd = {}, {}, {}
+    for b in plan:
+        Qd[b.key] = jnp.concatenate(
+            [leaves_Q[i].reshape((-1,) + leaves_Q[i].shape[-2:])
+             for i in b.leaf_indices], axis=0)
+        Md[b.key] = jnp.concatenate(
+            [leaves_M[i].reshape((-1,) + leaves_M[i].shape[-2:])
+             for i in b.leaf_indices], axis=0)
+        pnd[b.key] = jnp.concatenate(
+            [leaves_pn[i].reshape(-1) for i in b.leaf_indices], axis=0)
+    return Qd, Md, pnd
+
+
+def _check_bucket_slots(Qd, bucket):
+    """The static-mask contract: the plan derived from the current tree must
+    agree with the stored bucket stacks. A drift that changes a bucket's slot
+    count fails here; one that merely permutes same-shaped leaves is
+    undetectable without storing the plan (slots are positional) and stays
+    the caller's responsibility."""
+    if bucket.key not in Qd or Qd[bucket.key].shape[0] != bucket.size:
+        have = (Qd[bucket.key].shape[0] if bucket.key in Qd else "no")
+        raise ValueError(
+            f"bucket {bucket.key}: state has {have} slots but the tree "
+            f"contributes {bucket.size} — the None mask must match the tree "
+            "the state was initialised from (state is keyed by the static "
+            "bucket plan)"
+        )
+
+
+def _unstack_bucket_state(cfg, plan, leaf_shapes, Qd, Md, pnd):
+    """Per-bucket stacked dicts -> per-leaf state lists (inverse of stack)."""
+    n_leaves = len(leaf_shapes)
+    lQ = [None] * n_leaves
+    lM = [None] * n_leaves
+    lpn = [None] * n_leaves
+    for b in plan:
+        _check_bucket_slots(Qd, b)
+        Qb, Mb, pnb = Qd[b.key], Md[b.key], pnd[b.key]
+        off = 0
+        for i, cnt in zip(b.leaf_indices, b.counts):
+            sl = slice(off, off + cnt)
+            off += cnt
+            q_shape, m_shape, batch = _leaf_state_shapes(cfg, leaf_shapes[i])
+            lQ[i] = Qb[sl].reshape(q_shape)
+            lM[i] = Mb[sl].reshape(m_shape)
+            lpn[i] = pnb[sl].reshape(batch)
+    return lQ, lM, lpn
+
+
+def sumo_state_layout(state: SumoState) -> str:
+    """Detect a state's layout: 'bucket' iff Q is a dict of 'LONGxSHORT'
+    stacked arrays (the ``build_bucket_plan`` keying), else 'leaf'."""
+    if isinstance(state.Q, dict) and all(
+        isinstance(k, str) and opt.BUCKET_KEY_RE.match(k) for k in state.Q
+    ):
+        return "bucket"
+    return "leaf"
+
+
+def convert_sumo_state(
+    state: SumoState, params: PyTree, cfg: SumoConfig, target: str
+) -> SumoState:
+    """Convert SUMO state between 'leaf' and 'bucket' layouts, bit-exactly.
+
+    ``params`` (the masked matrix-param tree the state was initialised from —
+    None leaves stay None) supplies the static leaf shapes/treedef the plan
+    is derived from; no plan is ever stored in the state itself.
+    """
+    if target not in ("leaf", "bucket"):
+        raise ValueError(f"unknown target layout {target!r}")
+    if sumo_state_layout(state) == target:
+        return state
+    leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+    shapes = [None if l is None else l.shape for l in leaves]
     plan = opt.build_bucket_plan(shapes)
+    if target == "bucket":
+        Qd, Md, pnd = _stack_leaf_state(
+            plan,
+            treedef.flatten_up_to(state.Q),
+            treedef.flatten_up_to(state.M),
+            treedef.flatten_up_to(state.prev_norm),
+        )
+        return state._replace(Q=Qd, M=Md, prev_norm=pnd)
+    lQ, lM, lpn = _unstack_bucket_state(cfg, plan, shapes, state.Q, state.M,
+                                        state.prev_norm)
+    unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+    return state._replace(Q=unflat(lQ), M=unflat(lM), prev_norm=unflat(lpn))
+
+
+# ---------------------------------------------------------------------------
+# Bucketed engine
+# ---------------------------------------------------------------------------
+
+def _bucket_update_fn(cfg: SumoConfig, with_w: bool):
+    """The per-bucket batched update: vmap of ``_matrix_update`` over the
+    stacked B axis with an UNBATCHED refresh predicate (one cond/rSVD per
+    bucket). lr/do_refresh are explicit args so the same function body can be
+    wrapped in ``shard_map`` without closing over traced values."""
+
+    def run(lr, do_refresh, G, Q, M, pn, K, W):
+        f = jax.vmap(
+            lambda G_, Q_, M_, pn_, k_, W_: _matrix_update(
+                cfg, G_, Q_, M_, pn_, lr, do_refresh, k_, W_,
+                check_quality=False,
+            ),
+            in_axes=(0, 0, 0, 0, 0, 0 if with_w else None),
+        )
+        return f(G, Q, M, pn, K, W)
+
+    if with_w:
+        return run
+    return lambda lr, do_refresh, G, Q, M, pn, K: run(
+        lr, do_refresh, G, Q, M, pn, K, None)
+
+
+def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
+                      leaf_keys, lr, do_refresh):
+    """Bucketed engine over BUCKET-LAYOUT state: one vmapped
+    ``_matrix_update`` per canonical (long, short) bucket.
+
+    Gradients are stacked into the canonical long-first orientation (members
+    with m < n transpose in; their deltas and decay params transpose with
+    them — transposition commutes bit-exactly with every element-wise op in
+    the update). State arrives and leaves as the per-bucket stacked dicts, so
+    in bucket-resident mode there is NO per-step state copy at all. Per-matrix
+    rSVD keys match the per-leaf engine exactly (same per-leaf key, same
+    per-expert split), which is what makes all engine/layout combinations
+    bit-comparable.
+
+    When ``mesh`` is given and ``mesh.shape[cfg.bucket_axis]`` divides a
+    bucket's stacked size, the bucket update runs under ``shard_map`` with B
+    sharded over that axis — every block of the update
+    (projection, moment, orthogonalization, rSVD refresh) is per-matrix, so
+    the sharded update is collective-free.
+    """
     n_leaves = len(leaves_g)
     out_u = [None] * n_leaves
-    out_Q = [None] * n_leaves
-    out_M = [None] * n_leaves
-    out_pn = [None] * n_leaves
+    new_Qd, new_Md, new_pnd = {}, {}, {}
 
     for bucket in plan:
-        m, n = bucket.shape
+        long_d, short_d = bucket.shape
         # W only feeds the decoupled weight-decay term: skip the stacking
         # traffic entirely when decay is off or no member has a param. In a
         # mixed bucket, members without a param get zeros — a zero decay
         # term, matching the per-leaf engine's "no W, no decay" semantics.
+        # W transposes into canonical orientation alongside G, so decay stays
+        # bit-identical for m < n members sharing a bucket with their
+        # transpose partners.
         stack_w = cfg.weight_decay > 0.0 and any(
             leaves_p[i] is not None for i in bucket.leaf_indices
         )
-        Gs, Qs, Ms, pns, Ws, Ks = [], [], [], [], [], []
-        for i, cnt in zip(bucket.leaf_indices, bucket.counts):
+        Gs, Ws, Ks = [], [], []
+        for i, cnt, tr in zip(bucket.leaf_indices, bucket.counts,
+                              bucket.transposed):
             g = leaves_g[i]
-            Gs.append(g.astype(jnp.float32).reshape((-1, m, n)))
-            Qs.append(leaves_Q[i].reshape((-1,) + leaves_Q[i].shape[-2:]))
-            Ms.append(leaves_M[i].reshape((-1,) + leaves_M[i].shape[-2:]))
-            pns.append(leaves_pn[i].reshape(-1))
+            g32 = g.astype(jnp.float32).reshape((-1,) + g.shape[-2:])
+            Gs.append(jnp.swapaxes(g32, -1, -2) if tr else g32)
             if stack_w:
-                Ws.append(
-                    leaves_p[i].astype(jnp.float32).reshape((-1, m, n))
-                    if leaves_p[i] is not None
-                    else jnp.zeros((cnt, m, n), jnp.float32)
-                )
+                if leaves_p[i] is None:
+                    Ws.append(jnp.zeros((cnt, long_d, short_d), jnp.float32))
+                else:
+                    w32 = leaves_p[i].astype(jnp.float32).reshape(
+                        (-1,) + leaves_p[i].shape[-2:])
+                    Ws.append(jnp.swapaxes(w32, -1, -2) if tr else w32)
             k = leaf_keys[i]
             Ks.append(k[None] if g.ndim == 2 else jax.random.split(k, cnt))
-        G = jnp.concatenate(Gs, axis=0)          # (B, m, n)
-        Q = jnp.concatenate(Qs, axis=0)          # (B, long, r)
-        M = jnp.concatenate(Ms, axis=0)          # (B, r, short)
-        pn = jnp.concatenate(pns, axis=0)        # (B,)
+        G = jnp.concatenate(Gs, axis=0)          # (B, long, short)
         K = jnp.concatenate(Ks, axis=0)          # (B, key)
         W = jnp.concatenate(Ws, axis=0) if stack_w else None
+        _check_bucket_slots(Qd, bucket)
+        Q, M, pn = Qd[bucket.key], Md[bucket.key], pnd[bucket.key]
 
-        # Bucket-level adaptive refresh: refresh the whole bucket when ANY
-        # member's basis has gone stale. Keeping the predicate unbatched is
-        # what lets vmap preserve the cond (a batched pred would lower to a
-        # select that always pays the rSVD).
-        do_refresh_b = do_refresh
-        if cfg.refresh_quality > 0.0:
-            Gl = jnp.swapaxes(G, -1, -2) if m < n else G
-            g_norms = jnp.linalg.norm(Gl, axis=(-2, -1)) + 1e-12
-            caps = jnp.linalg.norm(
-                jnp.matmul(jnp.swapaxes(Q, -1, -2), Gl), axis=(-2, -1)
-            ) / g_norms
-            do_refresh_b = jnp.logical_or(
-                do_refresh, jnp.any(caps < cfg.refresh_quality)
-            )
-
-        fn = jax.vmap(
-            lambda G_, Q_, M_, pn_, k_, W_: _matrix_update(
-                cfg, G_, Q_, M_, pn_, lr, do_refresh_b, k_, W_,
-                check_quality=False,
-            ),
-            in_axes=(0, 0, 0, 0, 0, 0 if W is not None else None),
+        fn = _bucket_update_fn(cfg, with_w=stack_w)
+        axis = cfg.bucket_axis
+        n_shards = (
+            mesh.shape[axis]
+            if isinstance(mesh, Mesh) and axis in mesh.shape else 1
         )
-        d, Qn, Mn, pnn = fn(G, Q, M, pn, K, W)
+        if n_shards > 1 and bucket.size % n_shards == 0:
+            # Sharded bucket update. Data-movement discipline: the stacked
+            # G/W/keys enter REPLICATED (they are assembled locally from the
+            # replicated grads — no resharding collective at the shard_map
+            # boundary) and each shard slices its own B-block by axis index;
+            # the state stacks enter and leave SHARDED over B and never move;
+            # the only steady-state collective is ONE explicit all_gather of
+            # the delta stack (the updates must reach the replicated params).
+            # With refresh_quality > 0 the bucket-wide staleness OR adds a
+            # scalar pmax per bucket — the documented exception.
+            blk = bucket.size // n_shards
+            q_thresh = cfg.refresh_quality
 
+            def body(lr_, dr_, G_, Q_, M_, pn_, K_, *W_):
+                i0 = jax.lax.axis_index(axis) * blk
+                G_loc = jax.lax.dynamic_slice_in_dim(G_, i0, blk, axis=0)
+                K_loc = jax.lax.dynamic_slice_in_dim(K_, i0, blk, axis=0)
+                W_loc = tuple(
+                    jax.lax.dynamic_slice_in_dim(w, i0, blk, axis=0)
+                    for w in W_
+                )
+                if q_thresh > 0.0:
+                    g_norms = jnp.linalg.norm(G_loc, axis=(-2, -1)) + 1e-12
+                    caps = jnp.linalg.norm(
+                        jnp.matmul(jnp.swapaxes(Q_, -1, -2), G_loc),
+                        axis=(-2, -1),
+                    ) / g_norms
+                    stale = jnp.any(caps < q_thresh).astype(jnp.int32)
+                    dr_ = jnp.logical_or(dr_, jax.lax.pmax(stale, axis) > 0)
+                d_loc, Qn, Mn, pnn = fn(lr_, dr_, G_loc, Q_, M_, pn_, K_loc,
+                                        *W_loc)
+                d_full = jax.lax.all_gather(d_loc, axis, axis=0, tiled=True)
+                return d_full, Qn, Mn, pnn
+
+            s3 = P(axis, None, None)
+            rep3, rep2 = P(None, None, None), P(None, None)
+            in_specs = (P(), P(), rep3, s3, s3, P(axis), rep2)
+            if stack_w:
+                in_specs = in_specs + (rep3,)
+            call = shard_map(
+                body, mesh=mesh, in_specs=in_specs,
+                out_specs=(rep3, s3, s3, P(axis)), check_rep=False,
+            )
+            args = (lr, do_refresh, G, Q, M, pn, K) + ((W,) if stack_w else ())
+            d, Qn, Mn, pnn = call(*args)
+        else:
+            # Bucket-level adaptive refresh: refresh the whole bucket when
+            # ANY member's basis has gone stale. Keeping the predicate
+            # unbatched is what lets vmap preserve the cond (a batched pred
+            # would lower to a select that always pays the rSVD).
+            do_refresh_b = do_refresh
+            if cfg.refresh_quality > 0.0:
+                g_norms = jnp.linalg.norm(G, axis=(-2, -1)) + 1e-12
+                caps = jnp.linalg.norm(
+                    jnp.matmul(jnp.swapaxes(Q, -1, -2), G), axis=(-2, -1)
+                ) / g_norms
+                do_refresh_b = jnp.logical_or(
+                    do_refresh, jnp.any(caps < cfg.refresh_quality)
+                )
+            args = (lr, do_refresh_b, G, Q, M, pn, K) + ((W,) if stack_w else ())
+            d, Qn, Mn, pnn = fn(*args)
+
+        new_Qd[bucket.key] = Qn
+        new_Md[bucket.key] = Mn
+        new_pnd[bucket.key] = pnn
         off = 0
-        for i, cnt in zip(bucket.leaf_indices, bucket.counts):
+        for i, cnt, tr in zip(bucket.leaf_indices, bucket.counts,
+                              bucket.transposed):
             sl = slice(off, off + cnt)
             off += cnt
-            out_u[i] = d[sl].reshape(leaves_g[i].shape)
-            out_Q[i] = Qn[sl].reshape(leaves_Q[i].shape)
-            out_M[i] = Mn[sl].reshape(leaves_M[i].shape)
-            out_pn[i] = pnn[sl].reshape(leaves_pn[i].shape)
-    return out_u, out_Q, out_M, out_pn
+            di = jnp.swapaxes(d[sl], -1, -2) if tr else d[sl]
+            out_u[i] = di.reshape(leaves_g[i].shape)
+    return out_u, new_Qd, new_Md, new_pnd
 
 
 def sumo(
     learning_rate: Union[float, Callable],
     config: SumoConfig = SumoConfig(),
+    mesh: Optional[Mesh] = None,
 ) -> opt.Transform:
     """Build the SUMO transform for a tree of MATRIX params (ndim >= 2).
 
     Leaves that are None are passed through (used under multi_transform).
+    ``mesh`` enables the shard_map bucket-update path (B sharded over
+    ``config.bucket_axis``); without it everything runs single-device.
     """
     lr_fn = learning_rate if callable(learning_rate) else (lambda s: jnp.asarray(learning_rate))
     cfg = config
+    layout = cfg.resolved_state_layout()
 
     def _leaf_init(leaf):
         if leaf is None:
             return None, None, None
-        shape = leaf.shape
-        m, n = shape[-2], shape[-1]
-        long_d, short_d = (n, m) if m < n else (m, n)
-        r = _leaf_rank(cfg, shape)
-        batch = shape[:-2]
-        Q = jnp.zeros(batch + (long_d, r), jnp.float32)
-        M = jnp.zeros(batch + (r, short_d), jnp.float32)
-        pn = jnp.zeros(batch, jnp.float32) if batch else jnp.zeros((), jnp.float32)
-        return Q, M, pn
+        q_shape, m_shape, batch = _leaf_state_shapes(cfg, leaf.shape)
+        return (
+            jnp.zeros(q_shape, jnp.float32),
+            jnp.zeros(m_shape, jnp.float32),
+            jnp.zeros(batch, jnp.float32),
+        )
 
     def init(params) -> SumoState:
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
-        triples = [_leaf_init(l) for l in leaves]
-        unflat = lambda i: jax.tree_util.tree_unflatten(treedef, [t[i] for t in triples])
-        Qs, Ms, pns = unflat(0), unflat(1), unflat(2)
+        if layout == "bucket":
+            plan = opt.build_bucket_plan(
+                [None if l is None else l.shape for l in leaves])
+            Qs, Ms, pns = {}, {}, {}
+            for b in plan:
+                long_d, short_d = b.shape
+                r = _leaf_rank(cfg, b.shape)
+                Qs[b.key] = jnp.zeros((b.size, long_d, r), jnp.float32)
+                Ms[b.key] = jnp.zeros((b.size, r, short_d), jnp.float32)
+                pns[b.key] = jnp.zeros((b.size,), jnp.float32)
+        else:
+            triples = [_leaf_init(l) for l in leaves]
+            unflat = lambda i: jax.tree_util.tree_unflatten(
+                treedef, [t[i] for t in triples])
+            Qs, Ms, pns = unflat(0), unflat(1), unflat(2)
         return SumoState(
             step=jnp.zeros((), jnp.int32),
             key=jax.random.PRNGKey(cfg.seed),
@@ -364,29 +619,62 @@ def sumo(
         leaves_g, treedef = jax.tree_util.tree_flatten(
             grads, is_leaf=lambda x: x is None
         )
-        leaves_Q = treedef.flatten_up_to(state.Q)
-        leaves_M = treedef.flatten_up_to(state.M)
-        leaves_pn = treedef.flatten_up_to(state.prev_norm)
+        shapes = [None if g is None else g.shape for g in leaves_g]
+        plan = opt.build_bucket_plan(shapes)
         leaves_p = (
             treedef.flatten_up_to(params) if params is not None else [None] * len(leaves_g)
         )
 
         keys = jax.random.split(state.key, len(leaves_g) + 1)
         new_key, leaf_keys = keys[0], keys[1:]
-
-        engine = _bucketed_updates if cfg.bucketed else _per_leaf_updates
-        out_u, out_Q, out_M, out_pn = engine(
-            cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
-            leaf_keys, lr, do_refresh,
-        )
-
         unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+
+        if cfg.bucketed:
+            if layout == "bucket":
+                # Bucket-resident fast path: the stacked state arrays are the
+                # storage — no per-step state stack/scatter at all.
+                Qd, Md, pnd = state.Q, state.M, state.prev_norm
+            else:
+                Qd, Md, pnd = _stack_leaf_state(
+                    plan,
+                    treedef.flatten_up_to(state.Q),
+                    treedef.flatten_up_to(state.M),
+                    treedef.flatten_up_to(state.prev_norm),
+                )
+            out_u, Qd2, Md2, pnd2 = _bucketed_updates(
+                cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
+                leaf_keys, lr, do_refresh,
+            )
+            if layout == "bucket":
+                new_Q, new_M, new_pn = Qd2, Md2, pnd2
+            else:
+                lQ, lM, lpn = _unstack_bucket_state(cfg, plan, shapes, Qd2,
+                                                    Md2, pnd2)
+                new_Q, new_M, new_pn = unflat(lQ), unflat(lM), unflat(lpn)
+        else:
+            if layout == "bucket":
+                leaves_Q, leaves_M, leaves_pn = _unstack_bucket_state(
+                    cfg, plan, shapes, state.Q, state.M, state.prev_norm)
+            else:
+                leaves_Q = treedef.flatten_up_to(state.Q)
+                leaves_M = treedef.flatten_up_to(state.M)
+                leaves_pn = treedef.flatten_up_to(state.prev_norm)
+            out_u, out_Q, out_M, out_pn = _per_leaf_updates(
+                cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
+                leaf_keys, lr, do_refresh,
+            )
+            if layout == "bucket":
+                new_Q, new_M, new_pn = _stack_leaf_state(
+                    plan, out_Q, out_M, out_pn)
+            else:
+                new_Q, new_M, new_pn = unflat(out_Q), unflat(out_M), unflat(out_pn)
+
         new_state = SumoState(
             step=state.step + 1,
             key=new_key,
-            Q=unflat(out_Q),
-            M=unflat(out_M),
-            prev_norm=unflat(out_pn),
+            Q=new_Q,
+            M=new_M,
+            prev_norm=new_pn,
         )
         return unflat(out_u), new_state
 
@@ -401,6 +689,7 @@ def sumo_optimizer(
     fallback_b1: float = 0.9,
     fallback_b2: float = 0.999,
     fallback_weight_decay: float = 0.0,
+    mesh: Optional[Mesh] = None,
 ) -> opt.Transform:
     """SUMO on matrix params + AdamW fallback on everything else."""
     from .adamw import adamw
@@ -408,7 +697,7 @@ def sumo_optimizer(
     labels = opt.partition_params(params)
     return opt.multi_transform(
         {
-            "matrix": sumo(learning_rate, config),
+            "matrix": sumo(learning_rate, config, mesh=mesh),
             "fallback": adamw(
                 fallback_lr if fallback_lr is not None else learning_rate,
                 b1=fallback_b1,

@@ -8,6 +8,7 @@ from .compression import (
 )
 from .sharding import (
     batch_spec,
+    bucket_state_spec,
     cache_specs,
     data_axes,
     input_specs_sharding,
@@ -19,5 +20,6 @@ from .sharding import (
 
 __all__ = [
     "param_spec", "tree_param_specs", "tree_shardings", "opt_state_specs",
+    "bucket_state_spec",
     "cache_specs", "batch_spec", "data_axes", "input_specs_sharding",
 ]

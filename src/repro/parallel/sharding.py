@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..configs.base import ArchConfig
-from ..core.optimizer import path_str
+from ..core.optimizer import BUCKET_KEY_RE, path_str
 
 # path-pattern → (axis_to_shard_over_model) for 2D params: 0 = rows, 1 = cols
 _MEGATRON_RULES: tuple[tuple[str, int], ...] = (
@@ -186,14 +186,57 @@ def tree_shardings(tree_specs, mesh: Mesh):
     )
 
 
-def opt_state_specs(state, mesh: Mesh, cfg: Optional[ArchConfig] = None):
-    """Sharding for optimizer states: mirror the generic rule per leaf;
-    scalars/keys replicated."""
+# Bucket-resident SUMO state: leaves live under Q/M/prev_norm keyed by the
+# canonical "LONGxSHORT" bucket id (see core.optimizer.build_bucket_plan).
+_BUCKET_FIELDS = ("Q", "M", "prev_norm")
+
+
+def bucket_state_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
+                      bucket_axis: str = "data",
+                      long_over_model: bool = True) -> Optional[P]:
+    """PartitionSpec for one bucket-resident SUMO state leaf, or None if the
+    path is not a bucket-state leaf.
+
+    The stacked B axis (dim 0) shards over ``bucket_axis`` — layer/expert
+    parallelism across the bucket members, matching ``SumoConfig.bucket_axis``
+    of the shard_map bucket-update path — and Q's long dim additionally
+    shards over `model` (tensor parallel; the r-width moment stays replicated
+    on that axis, negligible bytes). Set ``long_over_model=False`` when the
+    update runs under SUMO's shard_map path on a mesh that ALSO has a `model`
+    axis: the shard_map body needs the full long dim per shard (its in_specs
+    replicate every non-B axis), so model-sharded Q would be re-gathered at
+    the boundary every step."""
+    parts = path.split("/")
+    if len(parts) < 2 or not BUCKET_KEY_RE.match(parts[-1]):
+        return None
+    if parts[-2] not in _BUCKET_FIELDS:
+        return None
+    spec = [None] * len(shape)
+    if shape and _divisible(shape[0], mesh, bucket_axis):
+        spec[0] = bucket_axis
+    if (long_over_model and parts[-2] == "Q" and len(shape) == 3
+            and _divisible(shape[1], mesh, "model")):
+        spec[1] = "model"
+    return P(*spec)
+
+
+def opt_state_specs(state, mesh: Mesh, cfg: Optional[ArchConfig] = None,
+                    bucket_axis: str = "data",
+                    bucket_long_over_model: bool = True):
+    """Sharding for optimizer states: bucket-resident SUMO state gets
+    per-bucket specs (B over ``bucket_axis``, Q's long dim over `model` —
+    see ``bucket_state_spec`` for when to disable the latter); everything
+    else mirrors the generic param rule per leaf; scalars/keys replicated."""
 
     def leaf_spec(path, leaf):
         if leaf is None:
             return None
         shape = getattr(leaf, "shape", ())
+        bspec = bucket_state_spec(path_str(path), shape, mesh,
+                                  bucket_axis=bucket_axis,
+                                  long_over_model=bucket_long_over_model)
+        if bspec is not None:
+            return bspec
         if len(shape) <= 1:
             return P()
         return param_spec(path_str(path), shape, mesh, cfg)

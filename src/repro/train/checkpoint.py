@@ -11,7 +11,12 @@ Design (DESIGN.md §5):
     (the train loop overlaps the next steps with the I/O), with a barrier on
     the next save to bound in-flight writes;
   * resume metadata — step and data-stream position are in the manifest, so
-    the deterministic data pipeline replays exactly.
+    the deterministic data pipeline replays exactly;
+  * SUMO layout migration — a checkpoint whose SUMO optimizer state was saved
+    in the per-leaf layout restores into a bucket-resident template (and the
+    reverse) via `_migrate_sumo_layouts`: the flat entries are re-stacked /
+    re-sliced to the template's layout before unflattening, so flipping
+    `SumoConfig.state_layout` between runs never invalidates checkpoints.
 
 Format: one .npz of flattened path->array plus a manifest.json.
 """
@@ -26,8 +31,16 @@ from typing import Any, Optional
 import jax
 import numpy as np
 
+from ..core.optimizer import BUCKET_KEY_RE, bucket_key
+from ..core.sumo import SumoState, sumo_state_layout
+
 PyTree = Any
 _SEP = "|"
+
+
+def _path_key(path) -> str:
+    return _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+                     for k in path)
 
 
 def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
@@ -36,8 +49,7 @@ def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
         tree, is_leaf=lambda x: x is None
     )[0]
     for path, leaf in leaves:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
-                        for k in path)
+        key = _path_key(path)
         if leaf is None:
             flat[f"__none__{key}"] = np.zeros((0,))
         else:
@@ -52,8 +64,7 @@ def _unflatten_into(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
     )
     out = []
     for path, leaf in paths_leaves:
-        key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
-                        for k in path)
+        key = _path_key(path)
         if leaf is None:
             out.append(None)
             continue
@@ -66,6 +77,95 @@ def _unflatten_into(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
             )
         out.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# SUMO state-layout migration (per-leaf <-> bucket-resident)
+# ---------------------------------------------------------------------------
+
+def _flat_sumo_layout(flat: dict, pfx: str) -> Optional[str]:
+    """Layout of the SumoState saved under `pfx` in `flat`: 'bucket' iff every
+    Q entry is keyed by a canonical 'LONGxSHORT' bucket id; None if absent."""
+    suffixes = [k[len(pfx) + 2:] for k in flat if k.startswith(f"{pfx}Q{_SEP}")]
+    if not suffixes:
+        return None
+    return "bucket" if all(BUCKET_KEY_RE.match(s) for s in suffixes) else "leaf"
+
+
+def _migrate_sumo_layouts(template: PyTree, flat: dict) -> dict:
+    """Rewrite `flat` entries for every SumoState subtree whose on-disk layout
+    differs from the template's.
+
+    Both directions are pure data movement and need no stored plan: the
+    bucket key is a function of the state shapes alone (Q is (long, r), M is
+    (r, short), orientation-free), and the slot order within a bucket is the
+    leaf flatten order — identical at save and restore time because both are
+    flattenings of the same (static) param structure. Masked leaves (None,
+    saved as `__none__` markers) occupy no bucket slots on either side.
+    """
+    out = dict(flat)
+    nodes = jax.tree_util.tree_flatten_with_path(
+        template, is_leaf=lambda x: isinstance(x, SumoState) or x is None
+    )[0]
+    for path, node in nodes:
+        if not isinstance(node, SumoState):
+            continue
+        prefix = _path_key(path)
+        pfx = f"{prefix}{_SEP}" if prefix else ""
+        src = _flat_sumo_layout(flat, pfx)
+        dst = sumo_state_layout(node)
+        if src is None or src == dst:
+            continue
+        if dst == "bucket":
+            # per-leaf ckpt -> bucket-resident template: stack leaf entries
+            # into buckets in their flat (== flatten) order.
+            buckets: dict[str, tuple[list, list, list]] = {}
+            for qk in [k for k in flat if k.startswith(f"{pfx}Q{_SEP}")]:
+                suffix = qk[len(pfx) + 2:]
+                mk = f"{pfx}M{_SEP}{suffix}"
+                pk = f"{pfx}prev_norm{_SEP}{suffix}"
+                Qa, Ma, pna = flat[qk], flat[mk], flat[pk]
+                bkey = bucket_key(Qa.shape[-2], Ma.shape[-1])
+                qs, ms, pns = buckets.setdefault(bkey, ([], [], []))
+                qs.append(Qa.reshape((-1,) + Qa.shape[-2:]))
+                ms.append(Ma.reshape((-1,) + Ma.shape[-2:]))
+                pns.append(pna.reshape(-1))
+                for k in (qk, mk, pk):
+                    del out[k]
+            for bkey, (qs, ms, pns) in buckets.items():
+                out[f"{pfx}Q{_SEP}{bkey}"] = np.concatenate(qs, axis=0)
+                out[f"{pfx}M{_SEP}{bkey}"] = np.concatenate(ms, axis=0)
+                out[f"{pfx}prev_norm{_SEP}{bkey}"] = np.concatenate(pns, axis=0)
+        else:
+            # bucket-resident ckpt -> per-leaf template: slice each leaf's
+            # slots back out, walking template leaves in flatten order.
+            none_leaf = lambda x: x is None
+            q_leaves = jax.tree_util.tree_flatten_with_path(node.Q, is_leaf=none_leaf)[0]
+            m_leaves = jax.tree_util.tree_flatten_with_path(node.M, is_leaf=none_leaf)[0]
+            pn_leaves = jax.tree_util.tree_flatten_with_path(node.prev_norm,
+                                                             is_leaf=none_leaf)[0]
+            offsets: dict[str, int] = {}
+            for (lpath, qt), (_, mt), (_, pt) in zip(q_leaves, m_leaves, pn_leaves):
+                if qt is None:
+                    continue
+                bkey = bucket_key(qt.shape[-2], mt.shape[-1])
+                cnt = 1
+                for d in qt.shape[:-2]:
+                    cnt *= int(d)
+                off = offsets.get(bkey, 0)
+                offsets[bkey] = off + cnt
+                suffix = _path_key(lpath)
+                sl = slice(off, off + cnt)
+                out[f"{pfx}Q{_SEP}{suffix}"] = (
+                    flat[f"{pfx}Q{_SEP}{bkey}"][sl].reshape(qt.shape))
+                out[f"{pfx}M{_SEP}{suffix}"] = (
+                    flat[f"{pfx}M{_SEP}{bkey}"][sl].reshape(mt.shape))
+                out[f"{pfx}prev_norm{_SEP}{suffix}"] = (
+                    flat[f"{pfx}prev_norm{_SEP}{bkey}"][sl].reshape(pt.shape))
+            for bkey in offsets:
+                for field in ("Q", "M", "prev_norm"):
+                    out.pop(f"{pfx}{field}{_SEP}{bkey}", None)
+    return out
 
 
 class CheckpointManager:
@@ -140,8 +240,16 @@ class CheckpointManager:
             raise FileNotFoundError(f"no checkpoints in {self.directory}")
         d = self._step_dir(step)
         with np.load(os.path.join(d, "state.npz")) as z:
+            # insertion order == save-time flatten order (zip member order) —
+            # the layout migration's slot ordering relies on this.
             flat = {k: z[k] for k in z.files if not k.startswith("__none__")}
-        state = _unflatten_into(template, flat)
+        try:
+            state = _unflatten_into(template, flat)
+        except KeyError:
+            # SUMO state layout changed between save and restore (per-leaf vs
+            # bucket-resident): migrate the flat entries, then retry — any
+            # genuinely missing leaf still raises from the second attempt.
+            state = _unflatten_into(template, _migrate_sumo_layouts(template, flat))
         if shardings is not None:
             state = jax.tree_util.tree_map(
                 lambda x, s: jax.device_put(x, s) if x is not None else None,

@@ -24,6 +24,9 @@ class TrainConfig:
     rank: int = 128
     update_freq: int = 200
     weight_decay: float = 0.0
+    # SUMO state layout ("auto" | "leaf" | "bucket"): checkpoints written in
+    # either layout restore into either (checkpoint.py migrates on restore).
+    state_layout: str = "auto"
     total_steps: int = 100
     accum: int = 1
     attn_impl: str = "flash"
@@ -56,7 +59,7 @@ def train(
     tx = make_optimizer(
         tcfg.optimizer, tcfg.learning_rate, params0,
         rank=tcfg.rank, update_freq=tcfg.update_freq,
-        weight_decay=tcfg.weight_decay,
+        weight_decay=tcfg.weight_decay, state_layout=tcfg.state_layout,
     )
     step_fn = jax.jit(
         make_train_step(arch, tx, attn_impl=tcfg.attn_impl, accum=tcfg.accum),

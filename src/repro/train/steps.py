@@ -24,31 +24,41 @@ from ..models import loss_fn
 
 def make_optimizer(name: str, learning_rate, params, cfg: Optional[ArchConfig] = None,
                    rank: int = 128, update_freq: int = 200, weight_decay: float = 0.0,
-                   bucketed: bool = True, **kw):
+                   bucketed: bool = True, state_layout: str = "auto",
+                   mesh=None, **kw):
     """Factory: sumo | sumo-ns5 | galore | muon | adamw.
 
     ``bucketed`` selects SUMO's stacked same-shape update engine (one refresh
     cond/rSVD per bucket); False falls back to the per-leaf reference engine.
-    Non-SUMO optimizers ignore it.
+    ``state_layout`` picks where SUMO's Q/M/prev_norm live ("auto" =
+    bucket-resident under the bucketed engine, per-leaf otherwise); ``mesh``
+    enables SUMO's shard_map bucket-update path. Non-SUMO optimizers ignore
+    all three.
     """
     name = name.lower()
     if name == "sumo":
         return sumo_optimizer(
             learning_rate, params,
             SumoConfig(rank=rank, update_freq=update_freq, bucketed=bucketed,
-                       weight_decay=weight_decay, orth_method="polar", **kw),
+                       state_layout=state_layout, weight_decay=weight_decay,
+                       orth_method="polar", **kw),
+            mesh=mesh,
         )
     if name == "sumo-svd":
         return sumo_optimizer(
             learning_rate, params,
             SumoConfig(rank=rank, update_freq=update_freq, bucketed=bucketed,
-                       weight_decay=weight_decay, orth_method="svd", **kw),
+                       state_layout=state_layout, weight_decay=weight_decay,
+                       orth_method="svd", **kw),
+            mesh=mesh,
         )
     if name == "sumo-ns5":
         return sumo_optimizer(
             learning_rate, params,
             SumoConfig(rank=rank, update_freq=update_freq, bucketed=bucketed,
-                       weight_decay=weight_decay, orth_method="ns5", **kw),
+                       state_layout=state_layout, weight_decay=weight_decay,
+                       orth_method="ns5", **kw),
+            mesh=mesh,
         )
     if name == "galore":
         return galore_optimizer(

@@ -101,7 +101,8 @@ def test_moment_rotation_preserves_direction():
     C = jax.random.normal(jax.random.fold_in(key, 1), (r, n))
     G = U @ C
     params = {"w": jnp.zeros((m, n))}
-    cfg = SumoConfig(rank=r, update_freq=1, beta=0.9)   # refresh EVERY step
+    cfg = SumoConfig(rank=r, update_freq=1, beta=0.9,   # refresh EVERY step
+                     state_layout="leaf")               # per-leaf introspection
     tx = sumo(0.01, cfg)
     state = tx.init(params)
     prev_proj = None
@@ -165,7 +166,7 @@ def test_sumo_expert_stack_3d():
     """3D expert stacks get vmapped SUMO treatment."""
     key = jax.random.PRNGKey(3)
     params = {"experts": {"w_gate": jax.random.normal(key, (4, 32, 16))}}
-    tx = sumo(0.1, SumoConfig(rank=4, update_freq=2))
+    tx = sumo(0.1, SumoConfig(rank=4, update_freq=2, state_layout="leaf"))
     state = tx.init(params)
     g = {"experts": {"w_gate": jax.random.normal(key, (4, 32, 16))}}
     u, state = tx.update(g, state, params)
@@ -178,7 +179,7 @@ def test_sumo_expert_stack_3d():
 def test_sumo_projects_long_side():
     """m < n matrices project from the right (paper's transpose remark)."""
     params = {"w": jnp.zeros((16, 64))}
-    tx = sumo(0.1, SumoConfig(rank=4))
+    tx = sumo(0.1, SumoConfig(rank=4, state_layout="leaf"))
     state = tx.init(params)
     assert state.Q["w"].shape == (64, 4)     # long side
     assert state.M["w"].shape == (4, 16)     # r × short

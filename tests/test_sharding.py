@@ -50,6 +50,30 @@ def test_fsdp_adds_data_axis():
     assert spec == P("data", "model")
 
 
+def test_bucket_state_specs():
+    """Bucket-resident SUMO state: B over the bucket axis, Q's long dim over
+    model for the pjit path — and replicated-on-model when the shard_map
+    bucket update owns the state (its body needs the full long dim)."""
+    from repro.parallel import bucket_state_spec
+
+    mesh = _mesh((16, 16))
+    assert bucket_state_spec("opt/matrix/Q/4096x1024", (32, 4096, 128), mesh) \
+        == P("data", "model", None)
+    assert bucket_state_spec("opt/matrix/M/4096x1024", (32, 128, 1024), mesh) \
+        == P("data", None, None)
+    assert bucket_state_spec("opt/matrix/prev_norm/4096x1024", (32,), mesh) \
+        == P("data")
+    # shard_map-compatible placement: long dim stays replicated
+    assert bucket_state_spec("opt/matrix/Q/4096x1024", (32, 4096, 128), mesh,
+                             long_over_model=False) == P("data", None, None)
+    # indivisible B falls back to replicated on that dim
+    assert bucket_state_spec("opt/matrix/Q/4096x1024", (3, 4096, 128), mesh) \
+        == P(None, "model", None)
+    # non-bucket paths are not claimed
+    assert bucket_state_spec("opt/matrix/Q/blocks/wq", (4096, 128), mesh) is None
+    assert bucket_state_spec("opt/fallback/mu/64x32", (2, 64, 32), mesh) is None
+
+
 @pytest.mark.slow
 def test_multi_device_pjit_compiles():
     """Real 8-device (2 data × 4 model) lower+compile of a SUMO train step."""

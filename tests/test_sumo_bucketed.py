@@ -29,12 +29,26 @@ def _tree(key):
 
 def test_bucket_plan_groups_by_matrix_shape():
     plan = build_bucket_plan([(64, 32), (16, 48), (3, 64, 32), None, (64, 32)])
-    assert [b.shape for b in plan] == [(64, 32), (16, 48)]
+    # shapes are canonical (long, short): the wide (16, 48) leaf buckets as
+    # (48, 16) with a transpose flag
+    assert [b.shape for b in plan] == [(64, 32), (48, 16)]
     big, wide = plan
     assert big.leaf_indices == (0, 2, 4)
     assert big.counts == (1, 3, 1)       # expert stack contributes 3 matrices
+    assert big.transposed == (False, False, False)
     assert big.size == 5
+    assert big.key == "64x32"
     assert wide.leaf_indices == (1,) and wide.size == 1
+    assert wide.transposed == (True,)
+
+
+def test_bucket_plan_merges_transpose_partners():
+    """(m, n) and (n, m) leaves share one canonical bucket (w_up/w_down)."""
+    (b,) = build_bucket_plan([(16, 64), (64, 16), (2, 16, 64)])
+    assert b.shape == (64, 16)
+    assert b.leaf_indices == (0, 1, 2)
+    assert b.transposed == (True, False, True)
+    assert b.size == 4
 
 
 def test_bucket_plan_flattens_deep_leading_dims():
@@ -67,7 +81,8 @@ def test_bucketed_bitmatches_per_leaf(steps):
     key = jax.random.PRNGKey(0)
     params = _tree(key)
     grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
-    cfg = SumoConfig(rank=8, update_freq=2, weight_decay=0.01, bucketed=True)
+    cfg = SumoConfig(rank=8, update_freq=2, weight_decay=0.01, bucketed=True,
+                     state_layout="leaf")
     u_b, s_b = _run(cfg, params, grads, steps)
     u_l, s_l = _run(dataclasses.replace(cfg, bucketed=False), params, grads, steps)
     for k in params:
@@ -115,6 +130,7 @@ def test_bucketed_adaptive_refresh_realigns_basis():
 
     def run(quality):
         tx = sumo(0.01, SumoConfig(rank=r, update_freq=1000, bucketed=True,
+                                   state_layout="leaf",
                                    refresh_quality=quality))
         state = tx.init(params)
         _, state = tx.update({"w": U1 @ C}, state, params)
@@ -136,7 +152,8 @@ def test_pallas_projection_matches_reference_in_optimizer():
     params = {"w": jax.random.normal(key, (96, 40)),
               "e": jax.random.normal(jax.random.fold_in(key, 1), (2, 96, 40))}
     grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
-    cfg = SumoConfig(rank=8, update_freq=2, projection="pallas")
+    cfg = SumoConfig(rank=8, update_freq=2, projection="pallas",
+                     state_layout="leaf")
     u_p, s_p = _run(cfg, params, grads, 2)
     u_r, s_r = _run(dataclasses.replace(cfg, projection="reference"),
                     params, grads, 2)

@@ -27,7 +27,7 @@ def test_adaptive_refresh_triggers_on_subspace_rotation():
     params = {"w": jnp.zeros((m, n))}
 
     def run(quality):
-        tx = sumo(0.01, SumoConfig(rank=r, update_freq=1000,
+        tx = sumo(0.01, SumoConfig(rank=r, update_freq=1000, state_layout="leaf",
                                    refresh_quality=quality))
         state = tx.init(params)
         _, state = tx.update({"w": U1 @ C}, state, params)     # step 0: refresh

@@ -1,0 +1,329 @@
+"""Equivalence harness for SUMO's state layouts and update engines.
+
+The optimizer has two independent switches — the update engine
+(``bucketed=True`` stacked buckets vs the per-leaf reference) and the state
+layout (``state_layout="bucket"`` per-bucket stacked Q/M/prev_norm vs
+``"leaf"`` param-tree mirrors). All four combinations must be THE SAME
+optimizer, bit for bit, across a subspace-refresh boundary; layout
+conversion must be a lossless round-trip; and a checkpoint written in one
+layout must restore into the other and continue training as if nothing
+happened. This module pins all of that against the per-leaf/leaf-layout
+reference.
+"""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    SumoConfig,
+    convert_sumo_state,
+    sumo,
+    sumo_optimizer,
+    sumo_state_layout,
+)
+from repro.train import CheckpointManager
+
+IS_NONE = lambda x: x is None
+
+
+def _tree_2d(key):
+    """Same-shape 2D leaves + a wide singleton: two buckets."""
+    return {
+        "a": jax.random.normal(key, (64, 32)),
+        "b": jax.random.normal(jax.random.fold_in(key, 1), (64, 32)),
+        "wide": jax.random.normal(jax.random.fold_in(key, 2), (16, 48)),
+    }
+
+
+def _tree_experts(key):
+    """(E, m, n) expert stack sharing a bucket with 2D leaves."""
+    return {
+        "experts": jax.random.normal(key, (3, 64, 32)),
+        "w": jax.random.normal(jax.random.fold_in(key, 1), (64, 32)),
+        "deep": jax.random.normal(jax.random.fold_in(key, 2), (2, 2, 16, 8)),
+    }
+
+
+def _tree_mixed(key):
+    """None/fallback leaves + transpose partners sharing a canonical bucket."""
+    return {
+        "wq": jax.random.normal(key, (64, 32)),
+        "w_down": jax.random.normal(jax.random.fold_in(key, 1), (32, 64)),
+        "experts": jax.random.normal(jax.random.fold_in(key, 2), (2, 32, 64)),
+        "masked": None,
+        "wide": jax.random.normal(jax.random.fold_in(key, 3), (16, 48)),
+    }
+
+
+TREES = {"2d": _tree_2d, "experts": _tree_experts, "mixed": _tree_mixed}
+
+
+def _assert_tree_equal(a, b, msg=""):
+    fa = jax.tree_util.tree_flatten_with_path(a, is_leaf=IS_NONE)[0]
+    fb = jax.tree_util.tree_flatten_with_path(b, is_leaf=IS_NONE)[0]
+    assert len(fa) == len(fb)
+    for (pa, la), (_, lb) in zip(fa, fb):
+        if la is None or lb is None:
+            assert la is None and lb is None, f"{msg}: None mismatch at {pa}"
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(la), np.asarray(lb), err_msg=f"{msg}: {pa}")
+
+
+def _run(cfg, params, grads, steps, partial=None):
+    tx = sumo(0.01, cfg)
+    state = tx.init(params)
+    updates = []
+    for _ in range(steps):
+        u, state = tx.update(grads, state, partial if partial is not None else params)
+        updates.append(u)
+    return updates, state
+
+
+# ---------------------------------------------------------------------------
+# engine × layout equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tree_name", sorted(TREES))
+@pytest.mark.parametrize(
+    "bucketed,layout",
+    [(True, "leaf"), (True, "bucket"), (False, "bucket")],
+    ids=["bucketed-leaf", "bucketed-bucket", "per_leaf-bucket"],
+)
+def test_layout_engine_equivalence(tree_name, bucketed, layout):
+    """Every engine/layout combination is bit-identical to the per-leaf
+    reference over 5 steps with update_freq=3 — i.e. across the K−1 → K →
+    K+1 refresh boundary (refreshes fire at steps 0 and 3)."""
+    params = TREES[tree_name](jax.random.PRNGKey(0))
+    grads = jax.tree_util.tree_map(
+        lambda x: None if x is None else x * 0.01, params, is_leaf=IS_NONE)
+    cfg = SumoConfig(rank=8, update_freq=3, weight_decay=0.05,
+                     bucketed=bucketed, state_layout=layout)
+    ref_cfg = dataclasses.replace(cfg, bucketed=False, state_layout="leaf")
+
+    us, state = _run(cfg, params, grads, steps=5)
+    ref_us, ref_state = _run(ref_cfg, params, grads, steps=5)
+
+    for step, (u, ru) in enumerate(zip(us, ref_us)):
+        _assert_tree_equal(u, ru, msg=f"step {step} deltas")
+    # states compare in the leaf layout (conversion is pure data movement)
+    state_leaf = (convert_sumo_state(state, params, cfg, "leaf")
+                  if sumo_state_layout(state) == "bucket" else state)
+    _assert_tree_equal(state_leaf.Q, ref_state.Q, msg="Q")
+    _assert_tree_equal(state_leaf.M, ref_state.M, msg="M")
+    _assert_tree_equal(state_leaf.prev_norm, ref_state.prev_norm, msg="prev_norm")
+
+
+@pytest.mark.parametrize("tree_name", sorted(TREES))
+def test_state_layout_round_trip(tree_name):
+    """leaf -> bucket -> leaf conversion is the identity, bit for bit, on a
+    state that has actually trained (non-zero Q/M/prev_norm)."""
+    params = TREES[tree_name](jax.random.PRNGKey(1))
+    grads = jax.tree_util.tree_map(
+        lambda x: None if x is None else x * 0.01, params, is_leaf=IS_NONE)
+    cfg = SumoConfig(rank=8, update_freq=2, state_layout="leaf")
+    _, state = _run(cfg, params, grads, steps=3)
+    assert sumo_state_layout(state) == "leaf"
+
+    bucket = convert_sumo_state(state, params, cfg, "bucket")
+    assert sumo_state_layout(bucket) == "bucket"
+    # canonical keys: every Q stack is (B, long, r) with long >= short
+    for k, q in bucket.Q.items():
+        long_d, short_d = map(int, k.split("x"))
+        assert long_d >= short_d
+        assert q.shape[1] == long_d and bucket.M[k].shape[2] == short_d
+        assert bucket.prev_norm[k].shape == (q.shape[0],)
+
+    back = convert_sumo_state(bucket, params, cfg, "leaf")
+    _assert_tree_equal(back.Q, state.Q, msg="Q round-trip")
+    _assert_tree_equal(back.M, state.M, msg="M round-trip")
+    _assert_tree_equal(back.prev_norm, state.prev_norm, msg="prev_norm round-trip")
+    # converting to the layout a state is already in is a no-op
+    assert convert_sumo_state(bucket, params, cfg, "bucket") is bucket
+
+
+def test_bucket_init_matches_converted_leaf_init():
+    """init in bucket layout == convert(init in leaf layout): the plan is a
+    pure function of the shapes, so the two never disagree."""
+    params = _tree_mixed(jax.random.PRNGKey(2))
+    cfg = SumoConfig(rank=8, state_layout="bucket")
+    s_bucket = sumo(0.01, cfg).init(params)
+    s_leaf = sumo(0.01, dataclasses.replace(cfg, state_layout="leaf")).init(params)
+    conv = convert_sumo_state(s_leaf, params, cfg, "bucket")
+    _assert_tree_equal(s_bucket.Q, conv.Q)
+    _assert_tree_equal(s_bucket.M, conv.M)
+    _assert_tree_equal(s_bucket.prev_norm, conv.prev_norm)
+
+
+# ---------------------------------------------------------------------------
+# weight decay in mixed buckets (regression: decay must be per-member)
+# ---------------------------------------------------------------------------
+
+def test_weight_decay_mixed_orientation_bucket():
+    """A canonical bucket mixing a leaf with its transpose partner — one with
+    a param, one without — must decay exactly like the per-leaf engine: the
+    stacked W transposes with G, and members without a param contribute a
+    zero decay term (not a dropped one)."""
+    key = jax.random.PRNGKey(3)
+    params = {"w_up": jax.random.normal(key, (16, 64)),
+              "w_down": jax.random.normal(jax.random.fold_in(key, 1), (64, 16))}
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    partial = {"w_up": params["w_up"], "w_down": None}
+    cfg = SumoConfig(rank=4, update_freq=2, weight_decay=0.1, bucketed=True)
+
+    for layout in ("leaf", "bucket"):
+        c = dataclasses.replace(cfg, state_layout=layout)
+        u_b, _ = _run(c, params, grads, 2, partial=partial)
+        u_l, _ = _run(dataclasses.replace(c, bucketed=False, state_layout="leaf"),
+                      params, grads, 2, partial=partial)
+        for step, (ub, ul) in enumerate(zip(u_b, u_l)):
+            _assert_tree_equal(ub, ul, msg=f"layout={layout} step={step}")
+
+    # and the decay really bites: the param-carrying leaf differs from a
+    # decay-free run, the param-less one doesn't
+    u_wd, _ = _run(cfg, params, grads, 1, partial=partial)
+    u_nw, _ = _run(dataclasses.replace(cfg, weight_decay=0.0), params, grads, 1,
+                   partial=partial)
+    assert float(jnp.max(jnp.abs(u_wd[0]["w_up"] - u_nw[0]["w_up"]))) > 0
+    np.testing.assert_array_equal(np.asarray(u_wd[0]["w_down"]),
+                                  np.asarray(u_nw[0]["w_down"]))
+
+
+def test_weight_decay_masked_param_carrier():
+    """When the only param-carrying member of a bucket is masked out (None in
+    the init tree and the grads, the multi_transform contract), the remaining
+    member must still match the per-leaf engine: no decay for it — its param
+    is absent — rather than the whole bucket silently inheriting or dropping
+    decay."""
+    key = jax.random.PRNGKey(4)
+    real_a = jax.random.normal(key, (32, 16))
+    b = jax.random.normal(jax.random.fold_in(key, 1), (32, 16))
+    masked = {"a": None, "b": b}                  # what SUMO was init'ed with
+    grads = {"a": None, "b": b * 0.01}
+    partial = {"a": real_a, "b": None}            # the param-carrier is masked
+    cfg = SumoConfig(rank=4, update_freq=2, weight_decay=0.1, bucketed=True)
+    u_b, _ = _run(cfg, masked, grads, 2, partial=partial)
+    u_l, _ = _run(dataclasses.replace(cfg, bucketed=False, state_layout="leaf"),
+                  masked, grads, 2, partial=partial)
+    for step, (ub, ul) in enumerate(zip(u_b, u_l)):
+        assert ub["a"] is None and ul["a"] is None
+        np.testing.assert_array_equal(np.asarray(ub["b"]), np.asarray(ul["b"]),
+                                      err_msg=f"step {step}")
+    # and "b" matches a decay-free run exactly: its param is absent, so the
+    # bucket-level W stacking must not leak "a"'s decay onto it
+    u_nw, _ = _run(dataclasses.replace(cfg, weight_decay=0.0), masked, grads, 1,
+                   partial=partial)
+    np.testing.assert_array_equal(np.asarray(u_b[0]["b"]), np.asarray(u_nw[0]["b"]))
+
+
+@pytest.mark.parametrize("bucketed", [True, False], ids=["bucketed", "per_leaf"])
+def test_bucket_state_rejects_inconsistent_mask(bucketed):
+    """Bucket-resident state is keyed by the static plan: a gradient tree
+    whose None mask changes a bucket's slot count fails loudly under BOTH
+    engines (the leaf layout would silently drop the masked leaf's state).
+    A mask drift that permutes same-shaped leaves is outside what positional
+    slots can detect — the contract is a static mask, as under
+    multi_transform."""
+    key = jax.random.PRNGKey(7)
+    params = {"a": jax.random.normal(key, (32, 16)),
+              "b": jax.random.normal(jax.random.fold_in(key, 1), (32, 16))}
+    tx = sumo(0.01, SumoConfig(rank=4, state_layout="bucket", bucketed=bucketed))
+    state = tx.init(params)
+    with pytest.raises(ValueError, match="bucket 32x16"):
+        tx.update({"a": None, "b": params["b"] * 0.01}, state, params)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint migration (per-leaf ckpt -> bucket template and back)
+# ---------------------------------------------------------------------------
+
+def _ckpt_params(key):
+    """Realistic tree: fallback leaves (embed/norm) mask to None under
+    sumo_optimizer's multi_transform — the __none__ checkpoint encoding —
+    plus a transpose pair that shares a canonical bucket."""
+    return {
+        "embed_tokens": jax.random.normal(key, (50, 8)),
+        "blocks": {
+            "wq": jax.random.normal(jax.random.fold_in(key, 1), (16, 16)),
+            "w_up": jax.random.normal(jax.random.fold_in(key, 2), (16, 32)),
+            "w_down": jax.random.normal(jax.random.fold_in(key, 3), (32, 16)),
+        },
+        "final_norm": {"norm_scale": jnp.ones((16,))},
+    }
+
+
+@pytest.mark.parametrize("src,dst", [("leaf", "bucket"), ("bucket", "leaf")],
+                         ids=["leaf->bucket", "bucket->leaf"])
+def test_checkpoint_layout_migration_resumes_seamlessly(tmp_path, src, dst):
+    """Save SUMO state in one layout, restore into a template built with the
+    other, resume 2 steps: bit-identical to an uninterrupted run. Covers the
+    manifest round-trip and the __none__ masked-leaf encoding."""
+    params = _ckpt_params(jax.random.PRNGKey(5))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    mk = lambda layout: sumo_optimizer(
+        0.01, params,
+        SumoConfig(rank=4, update_freq=3, weight_decay=0.01, state_layout=layout))
+    tx_s, tx_d = mk(src), mk(dst)
+
+    # uninterrupted reference in the destination layout (5 steps: the resume
+    # point, step 3, is a refresh step)
+    sd = tx_d.init(params)
+    ref_us = []
+    for _ in range(5):
+        u, sd = tx_d.update(grads, sd, params)
+        ref_us.append(u)
+
+    ss = tx_s.init(params)
+    for _ in range(3):
+        _, ss = tx_s.update(grads, ss, params)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"params": params, "opt_state": ss}, extra={"layout": src})
+
+    # masked leaves are recorded as __none__ markers: in the leaf layout the
+    # SUMO state itself has them (bucket layout simply omits masked leaves
+    # from the stacks); the AdamW fallback state always does
+    import numpy as _np
+    with _np.load(os.path.join(mgr._step_dir(3), "state.npz")) as z:
+        none_keys = [k for k in z.files if k.startswith("__none__")]
+    assert none_keys
+    if src == "leaf":
+        assert any("embed_tokens" in k and "|Q|" in k for k in none_keys)
+
+    template = {"params": params, "opt_state": tx_d.init(params)}
+    restored, manifest = mgr.restore(template)
+    assert manifest["step"] == 3 and manifest["layout"] == src
+
+    sd2 = restored["opt_state"]
+    for i in (3, 4):
+        u, sd2 = tx_d.update(grads, sd2, params)
+        _assert_tree_equal(u, ref_us[i], msg=f"resumed step {i}")
+
+
+def test_checkpoint_same_layout_unaffected(tmp_path):
+    """No migration when layouts agree — bucket-resident state round-trips
+    through save/restore directly."""
+    params = _ckpt_params(jax.random.PRNGKey(6))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    tx = sumo_optimizer(0.01, params, SumoConfig(rank=4, update_freq=2,
+                                                 state_layout="bucket"))
+    s = tx.init(params)
+    for _ in range(2):
+        _, s = tx.update(grads, s, params)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(2, {"opt_state": s})
+    restored, _ = mgr.restore({"opt_state": tx.init(params)})
+    _assert_tree_equal(restored["opt_state"]["matrix"].Q, s["matrix"].Q)
+    _assert_tree_equal(restored["opt_state"]["matrix"].M, s["matrix"].M)
+
+
+def test_checkpoint_missing_leaf_still_raises(tmp_path):
+    """Migration only fires for layout mismatches: a genuinely missing leaf
+    keeps raising KeyError."""
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, {"w": jnp.zeros((4, 4))})
+    with pytest.raises(KeyError):
+        mgr.restore({"w": jnp.zeros((4, 4)), "extra": jnp.zeros((2,))})

@@ -3,6 +3,15 @@
 # wired in so it is one line from anywhere in the repo.
 #   tools/run_tier1.sh            # full tier-1 run
 #   tools/run_tier1.sh -m 'not slow'   # extra pytest args pass through
+#
+# Pass 1 runs the whole suite on the default single-device backend (the
+# multi-device tests in tests/test_sumo_sharded.py skip there, and their slow
+# subprocess wrapper covers them when slow tests are selected). Pass 2 re-runs
+# the sharded tests in-process on a forced 8-host-device CPU backend, which is
+# the direct, debuggable way to exercise the shard_map bucket-update path.
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" exec python -m pytest -x -q "$@"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+  PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python -m pytest -x -q tests/test_sumo_sharded.py -k "not subprocess"
