@@ -88,6 +88,7 @@ def _ill_conditioned_probe(csv_rows: list) -> None:
     from repro.core import SumoConfig, apply_updates, sumo
 
     key = jax.random.PRNGKey(0)
+    kappa_probe = {}
     m, n, r = 96, 64, 8
     kA, kW = jax.random.split(key, 2)
     UA, _ = jnp.linalg.qr(jax.random.normal(kA, (m, m)))
@@ -105,9 +106,13 @@ def _ill_conditioned_probe(csv_rows: list) -> None:
 
         out = {}
         for method in ("svd", "ns5"):
+            # telemetry probes verify we really are in the κ regime under
+            # test — same SpectralStats the online subsystem emits, not a
+            # private spectrum computation.
             tx = sumo(0.1, SumoConfig(rank=r, update_freq=10,
                                       orth_method=method,
-                                      rms_scale=False, gamma=1e9))
+                                      rms_scale=False, gamma=1e9,
+                                      telemetry=True))
             state = tx.init(params)
             p = params
 
@@ -120,9 +125,11 @@ def _ill_conditioned_probe(csv_rows: list) -> None:
             for _ in range(500):
                 p, state, l = step(p, state)
             out[method] = float(l)
+            kappa_probe[method] = float(state.stats["96x64"].kappa)
         csv_rows.append((
             f"fig2_speedup/illconditioned_kappaA_1e{kappa_exp}",
             0.0,
             f"final_svd={out['svd']:.3e} final_ns5={out['ns5']:.3e} "
-            f"svd_advantage={out['ns5'] / out['svd']:.2f}x",
+            f"svd_advantage={out['ns5'] / out['svd']:.2f}x "
+            f"probe_kappa_MMt_svd={kappa_probe['svd']:.2e}",
         ))

@@ -14,9 +14,9 @@ from repro.core import (
     condition_number,
     newton_schulz_cubic,
     orthogonalize_svd,
-    rank_one_residual,
     sumo,
 )
+from repro.telemetry import rank_one_residual_from_sigma
 
 
 def _conditioned_matrix(key, r, n, kappa):
@@ -49,14 +49,17 @@ def run(csv_rows: list) -> None:
     ))
 
     # --- Fig. 1(a): moment condition number grows during training -----------
-    # run SUMO on a least-squares model and track κ(M) of the projected moment
+    # run SUMO on a least-squares model and track κ(M) of the projected
+    # moment via the SAME spectral probes the telemetry subsystem emits
+    # (SumoConfig.telemetry) — no private re-implementation, no extra SVDs.
     k1, k2 = jax.random.split(key)
     m_dim, n_dim = 64, 48
     Wt = jax.random.normal(k1, (m_dim, n_dim)) / 8
     X = jax.random.normal(k2, (512, m_dim))
     Y = X @ Wt
     params = {"w": jnp.zeros((m_dim, n_dim))}
-    tx = sumo(0.02, SumoConfig(rank=16, update_freq=10, beta=0.95))
+    tx = sumo(0.02, SumoConfig(rank=16, update_freq=10, beta=0.95,
+                               telemetry=True))
     state = tx.init(params)
 
     def loss_grad(p):
@@ -69,9 +72,11 @@ def run(csv_rows: list) -> None:
         g = loss_grad(p)
         u, state = tx.update(g, state, p)
         p = apply_updates(p, u)
-        M = state.M["w"]
-        kappas.append(float(condition_number(M)))
-        res1.append(float(rank_one_residual(M)))
+        probe = state.stats["64x48"]   # the (m, n) leaf's canonical bucket
+        # probe.kappa is κ(MMᵀ) = (σ_max/σ_min_eff)² — the same convention
+        # core.orthogonalize.condition_number used here pre-telemetry.
+        kappas.append(float(probe.kappa))
+        res1.append(rank_one_residual_from_sigma(np.asarray(probe.sigma)))
     t0 = time.perf_counter()
     csv_rows.append((
         "fig1a_moment_condition_number", (time.perf_counter() - t0) * 1e6,

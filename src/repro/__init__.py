@@ -8,6 +8,7 @@ Subpackages:
     parallel  (pod, data, model) sharding rules
     data      deterministic synthetic pipeline
     train     steps, loop, checkpointing, fault tolerance
+    telemetry spectral probes, async sink, rank/refresh controller
     serve     batched prefill/decode engine
     configs   assigned architecture configs
     launch    mesh / dryrun / train / serve entry points

@@ -10,6 +10,7 @@ from .optimizer import (
     Transform,
     apply_updates,
     build_bucket_plan,
+    canonical_dims,
     chain,
     clip_by_global_norm,
     constant_schedule,
@@ -20,15 +21,20 @@ from .optimizer import (
 from .orthogonalize import (
     condition_number,
     effective_rank,
+    gram_spectrum,
     newton_schulz5,
     newton_schulz_cubic,
     orthogonality_error,
     orthogonalize_polar,
+    orthogonalize_polar_with_spectrum,
     orthogonalize_svd,
+    orthogonalize_svd_with_spectrum,
     rank_one_residual,
 )
 from .rsvd import randomized_range_finder, randomized_svd, subspace_overlap, truncated_svd
 from .sumo import (
+    MatrixStats,
+    SpectralStats,
     SumoConfig,
     SumoState,
     convert_sumo_state,
@@ -40,17 +46,19 @@ from .sumo import (
 __all__ = [
     "SumoConfig", "SumoState", "sumo", "sumo_optimizer",
     "convert_sumo_state", "sumo_state_layout",
+    "MatrixStats", "SpectralStats",
     "GaloreConfig", "galore", "galore_optimizer",
     "muon", "muon_optimizer",
     "adamw", "adamw_optimizer",
     "LoraConfig", "init_lora_params", "apply_lora", "extract_adapter",
     "Transform", "chain", "multi_transform", "partition_params",
-    "Bucket", "build_bucket_plan",
+    "Bucket", "build_bucket_plan", "canonical_dims",
     "apply_updates", "clip_by_global_norm", "global_norm",
     "Schedule", "constant_schedule",
     "orthogonalize_svd", "orthogonalize_polar", "newton_schulz5",
     "newton_schulz_cubic", "condition_number", "effective_rank",
-    "rank_one_residual", "orthogonality_error",
+    "rank_one_residual", "orthogonality_error", "gram_spectrum",
+    "orthogonalize_polar_with_spectrum", "orthogonalize_svd_with_spectrum",
     "randomized_range_finder", "randomized_svd", "truncated_svd",
     "subspace_overlap",
     "analytic_state_floats", "model_memory_report", "tree_state_bytes",

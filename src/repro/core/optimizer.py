@@ -168,6 +168,14 @@ def bucket_key(long_d: int, short_d: int) -> str:
     return f"{long_d}x{short_d}"
 
 
+def canonical_dims(shape) -> tuple[int, int]:
+    """Trailing (long, short) dims of a matrix leaf shape — the orientation
+    used everywhere a bucket is identified (plan building, per-bucket
+    rank/update_freq overrides, telemetry settings)."""
+    m, n = int(shape[-2]), int(shape[-1])
+    return (max(m, n), min(m, n))
+
+
 # Matches bucket_key output — import this instead of re-encoding the format.
 BUCKET_KEY_RE = re.compile(r"^\d+x\d+$")
 
@@ -188,7 +196,7 @@ def build_bucket_plan(shapes) -> tuple[Bucket, ...]:
         if len(s) < 2:
             raise ValueError(f"bucket plan needs matrix leaves, got shape {s}")
         m, n = int(s[-2]), int(s[-1])
-        key = (max(m, n), min(m, n))
+        key = canonical_dims(s)
         cnt = 1
         for d in s[:-2]:
             cnt *= int(d)

@@ -37,15 +37,20 @@ def orthogonalize_svd(M: jnp.ndarray) -> jnp.ndarray:
     return U @ Vt
 
 
-def orthogonalize_polar(M: jnp.ndarray, eps: float = _EPS) -> jnp.ndarray:
-    """Exact polar factor via Gram eigendecomposition.
+def orthogonalize_svd_with_spectrum(M: jnp.ndarray):
+    """One SVD, two outputs: (U Vᵀ, σ descending). The telemetry variant of
+    ``orthogonalize_svd`` — same single factorization, the singular values
+    are a free byproduct."""
+    U, s, Vt = jnp.linalg.svd(M.astype(jnp.float32), full_matrices=False)
+    return U @ Vt, s
 
-    For M (r×n) with r <= n: UVᵀ = (MMᵀ)^{-1/2} M, computed with an r×r eigh.
-    For r > n the mirrored identity M (MᵀM)^{-1/2} is used. Rank-deficient
-    directions (λ≈0) are zeroed rather than amplified, matching the
-    pseudo-polar factor that truncated SVD orthogonalization produces.
-    """
-    M32 = M.astype(jnp.float32)
+
+def _polar_gram(M32: jnp.ndarray, eps: float):
+    """Shared Gram-eigh polar core: returns (O, lam) where ``lam`` are the
+    ASCENDING eigenvalues of the min-side Gram matrix (= σ(M)² ascending).
+    Rank-deficient directions (λ≈0) are zeroed rather than amplified,
+    matching the pseudo-polar factor that truncated SVD orthogonalization
+    produces."""
     r, n = M32.shape
     if r <= n:
         Gm = M32 @ M32.T                      # (r, r) PSD
@@ -58,7 +63,6 @@ def orthogonalize_polar(M: jnp.ndarray, eps: float = _EPS) -> jnp.ndarray:
         O = P @ M32
         # one cubic Newton polish: kills the O(√κ·eps_f32) residual of eigh
         O = 1.5 * O - 0.5 * ((O @ O.T) @ O)
-        return O.astype(M.dtype)
     else:
         Gm = M32.T @ M32
         lam, V = jnp.linalg.eigh(Gm)
@@ -68,7 +72,37 @@ def orthogonalize_polar(M: jnp.ndarray, eps: float = _EPS) -> jnp.ndarray:
         P = (V * inv_sqrt[None, :]) @ V.T
         O = M32 @ P
         O = 1.5 * O - 0.5 * (O @ (O.T @ O))
-        return O.astype(M.dtype)
+    return O, lam
+
+
+def orthogonalize_polar(M: jnp.ndarray, eps: float = _EPS) -> jnp.ndarray:
+    """Exact polar factor via Gram eigendecomposition.
+
+    For M (r×n) with r <= n: UVᵀ = (MMᵀ)^{-1/2} M, computed with an r×r eigh.
+    For r > n the mirrored identity M (MᵀM)^{-1/2} is used.
+    """
+    O, _ = _polar_gram(M.astype(jnp.float32), eps)
+    return O.astype(M.dtype)
+
+
+def orthogonalize_polar_with_spectrum(M: jnp.ndarray, eps: float = _EPS):
+    """Polar factor + singular values from the SAME r×r eigh the polar
+    orthogonalization already performs (λ(MMᵀ) = σ(M)²): returns
+    (O, σ descending). O is bit-identical to ``orthogonalize_polar`` — the
+    spectral-telemetry probes ride the existing factorization for free."""
+    O, lam = _polar_gram(M.astype(jnp.float32), eps)
+    sigma = jnp.sqrt(jnp.maximum(lam, 0.0))[::-1]
+    return O.astype(M.dtype), sigma
+
+
+def gram_spectrum(M: jnp.ndarray) -> jnp.ndarray:
+    """σ(M) descending via an eigh of the min-side Gram matrix — the cheap
+    (r×r, no large-matrix SVD) spectrum used when the orthogonalization
+    method does not materialize one itself (NS5)."""
+    M32 = M.astype(jnp.float32)
+    Gm = M32 @ M32.T if M32.shape[0] <= M32.shape[1] else M32.T @ M32
+    lam = jnp.linalg.eigvalsh(Gm)
+    return jnp.sqrt(jnp.maximum(lam, 0.0))[::-1]
 
 
 @partial(jax.jit, static_argnames=("steps",))

@@ -69,12 +69,26 @@ Sharded bucket update
 ---------------------
 Passing a ``jax.sharding.Mesh`` to ``sumo(..., mesh=...)`` runs each bucket
 update under ``shard_map``, sharding the stacked B axis over
-``SumoConfig.bucket_axis`` (default ``"data"``) whenever B divides the axis
-size. Projection, moment update, orthogonalization and the rSVD refresh are
-all per-matrix, so the steady-state update runs entirely shard-local — zero
-collectives; only the delta scatter back to (replicated) params gathers.
-Buckets whose B does not divide the axis fall back to the single-device
-vmap path, so mixed trees still work.
+``SumoConfig.bucket_axis`` (default ``"data"``). Projection, moment update,
+orthogonalization and the rSVD refresh are all per-matrix, so the
+steady-state update runs entirely shard-local — zero collectives; only the
+delta scatter back to (replicated) params gathers. Ragged buckets
+(B % axis_size != 0) are padded with masked zero slots so odd layer counts
+shard too; only singleton (B == 1) buckets keep the single-device vmap path.
+
+Spectral telemetry
+------------------
+``SumoConfig.telemetry=True`` makes the bucketed engine emit one
+``SpectralStats`` per bucket in ``SumoState.stats``: the moment spectrum
+σ(M) (read off the factorization the orthogonalization already performs —
+no extra SVDs), κ(MMᵀ), the energy-capture ratio ‖QᵀG‖_F/‖G‖_F, the
+orthogonality residual ‖OOᵀ−I‖_F/√r, moment/update/grad norms, and whether
+the refresh cond fired. Probes never feed back into the update, so the
+trajectory is bit-identical probes-on vs probes-off. The host-side sink,
+JSONL/CSV schema and the rank/refresh feedback controller that consumes
+these stats live in ``repro.telemetry``; per-bucket rank/cadence decisions
+come back in via ``SumoConfig.bucket_overrides`` — a static config field, so
+shape changes happen only at controlled recompile points.
 """
 from __future__ import annotations
 
@@ -88,12 +102,52 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from ..kernels.ops import subspace_backproject, subspace_project
 from . import optimizer as opt
-from .orthogonalize import newton_schulz5, orthogonalize_polar, orthogonalize_svd
+from .orthogonalize import (
+    gram_spectrum,
+    newton_schulz5,
+    orthogonalize_polar,
+    orthogonalize_polar_with_spectrum,
+    orthogonalize_svd,
+    orthogonalize_svd_with_spectrum,
+)
 from .rsvd import randomized_range_finder
 
 PyTree = opt.PyTree
 
 STATE_LAYOUTS = ("auto", "leaf", "bucket")
+
+
+class MatrixStats(NamedTuple):
+    """Per-matrix spectral probe values, emitted by ``_matrix_update`` when
+    ``SumoConfig.telemetry`` is on. All fields are jit-safe device scalars
+    (``sigma`` is the (r,) moment spectrum); under the bucketed engine they
+    are vmapped to (B, ...) stacks and reduced to one ``SpectralStats`` per
+    bucket. No extra SVDs: the spectrum rides the factorization the
+    orthogonalization already performs (see orthogonalize.py)."""
+
+    sigma: jnp.ndarray           # (r,) σ(M) descending
+    energy: jnp.ndarray          # () ‖QᵀG‖_F / ‖G‖_F — subspace energy capture
+    ortho_residual: jnp.ndarray  # () ‖OOᵀ − I‖_F / √r of the pre-limiter O
+    moment_norm: jnp.ndarray     # () ‖M‖_F (= √Σσ², post moment update)
+    update_norm: jnp.ndarray     # () ‖Δ‖_F of the main term lr·scale·QO
+                                 #    (weight decay excluded)
+    grad_norm: jnp.ndarray       # () ‖G‖_F
+
+
+class SpectralStats(NamedTuple):
+    """Per-bucket reduction of ``MatrixStats`` — the unit the telemetry sink
+    serializes and the rank/refresh controller consumes. Worst-case fields
+    (energy, κ, orthogonality residual) use min/max over the bucket because
+    the controller re-tunes the WHOLE bucket; magnitude fields use means."""
+
+    sigma: jnp.ndarray           # (r,) bucket-mean moment spectrum, descending
+    kappa: jnp.ndarray           # () max over bucket of κ(MMᵀ) = (σ_max/σ_min)²
+    energy: jnp.ndarray          # () min over bucket of ‖QᵀG‖_F/‖G‖_F
+    ortho_residual: jnp.ndarray  # () max over bucket
+    moment_norm: jnp.ndarray     # () mean
+    update_norm: jnp.ndarray     # () mean
+    grad_norm: jnp.ndarray       # () mean
+    refresh_fired: jnp.ndarray   # () int32 — 1 iff the bucket refreshed this step
 
 
 class SumoState(NamedTuple):
@@ -103,6 +157,8 @@ class SumoState(NamedTuple):
                                # (B, long, r) stacks keyed "LONGxSHORT"
     M: PyTree                  # moments: (r, short) per leaf / (B, r, short) per bucket
     prev_norm: PyTree          # limiter memory: () per leaf / (B,) per bucket
+    stats: PyTree = None       # telemetry: {"LONGxSHORT": SpectralStats} when
+                               # SumoConfig.telemetry, else None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -139,6 +195,16 @@ class SumoConfig:
     # matmul elsewhere), "pallas" (force the kernel; interpret mode on CPU),
     # or "reference".
     projection: str = "auto"
+    # Spectral telemetry probes (repro.telemetry): emit per-bucket
+    # SpectralStats as a jit-safe aux output in SumoState.stats. Probes never
+    # feed back into the update, so the trajectory is bit-identical with them
+    # on or off. Requires the bucketed engine.
+    telemetry: bool = False
+    # Per-bucket (rank, update_freq) overrides keyed by the canonical
+    # "LONGxSHORT" bucket id — the knob the RankRefreshController turns.
+    # 0 for either field means "keep the global default". Static (part of the
+    # frozen config), so changing overrides is a controlled recompile point.
+    bucket_overrides: tuple[tuple[str, int, int], ...] = ()
 
     def resolved_state_layout(self) -> str:
         if self.state_layout == "auto":
@@ -147,6 +213,25 @@ class SumoConfig:
             raise ValueError(
                 f"unknown state_layout {self.state_layout!r} (have {STATE_LAYOUTS})")
         return self.state_layout
+
+    def _override(self, long_d: int, short_d: int) -> tuple[int, int]:
+        key = opt.bucket_key(long_d, short_d)
+        for k, r, f in self.bucket_overrides:
+            if k == key:
+                return r, f
+        return 0, 0
+
+    def bucket_rank(self, long_d: int, short_d: int) -> int:
+        """Effective subspace rank for a (long, short) bucket: the per-bucket
+        override when set, else the global default, never above short."""
+        r, _ = self._override(long_d, short_d)
+        base = r if r > 0 else self.rank
+        return max(1, min(base, short_d))
+
+    def bucket_update_freq(self, long_d: int, short_d: int) -> int:
+        """Refresh cadence K for a (long, short) bucket (override or global)."""
+        _, f = self._override(long_d, short_d)
+        return f if f > 0 else self.update_freq
 
 
 def _orth(cfg: SumoConfig, M: jnp.ndarray) -> jnp.ndarray:
@@ -159,10 +244,24 @@ def _orth(cfg: SumoConfig, M: jnp.ndarray) -> jnp.ndarray:
     raise ValueError(f"unknown orth_method {cfg.orth_method!r}")
 
 
+def _orth_with_spectrum(cfg: SumoConfig, M: jnp.ndarray):
+    """(orth(M), σ(M) descending) at zero extra large-matrix factorizations:
+    polar reuses its own r×r Gram eigh, svd reads σ off the one SVD it
+    already runs. NS5 materializes no spectrum, so it pays one r×r Gram
+    eigh — the documented exception (still no SVD of the full moment)."""
+    if cfg.orth_method == "polar":
+        return orthogonalize_polar_with_spectrum(M)
+    if cfg.orth_method == "svd":
+        return orthogonalize_svd_with_spectrum(M)
+    if cfg.orth_method == "ns5":
+        return newton_schulz5(M, steps=cfg.ns_steps), gram_spectrum(M)
+    raise ValueError(f"unknown orth_method {cfg.orth_method!r}")
+
+
 def _leaf_rank(cfg: SumoConfig, shape) -> int:
-    """Effective rank for one matrix: never above the short dim."""
-    m, n = shape[-2], shape[-1]
-    return max(1, min(cfg.rank, min(m, n)))
+    """Effective rank for one matrix leaf (override-aware, never above the
+    short dim)."""
+    return cfg.bucket_rank(*opt.canonical_dims(shape))
 
 
 def _matrix_update(
@@ -176,12 +275,19 @@ def _matrix_update(
     key: jax.Array,
     W: Optional[jnp.ndarray],
     check_quality: bool = True,
+    with_stats: bool = False,
 ):
-    """One SUMO step for a single 2D matrix. Returns (delta, Q, M, prev_norm).
+    """One SUMO step for a single 2D matrix. Returns (delta, Q, M, prev_norm),
+    plus a ``MatrixStats`` as a fifth element when ``with_stats``.
 
     ``check_quality=False`` skips the in-function adaptive-refresh test; the
     bucketed engine evaluates it once per bucket and folds it into
     ``do_refresh`` so the predicate stays unbatched under vmap.
+
+    ``with_stats`` only ADDS probe outputs (norm ratios and the spectrum that
+    the orthogonalization's own factorization already materializes) — every
+    value on the update path is computed by the same ops in the same order,
+    so the trajectory is bit-identical with probes on or off.
     """
     m, n = G.shape
     transpose = m < n            # static
@@ -213,7 +319,21 @@ def _matrix_update(
 
     # ---- Block 2: moment + exact orthogonalization ------------------------
     M = cfg.beta * M + (1.0 - cfg.beta) * G_hat
-    O = _orth(cfg, M)              # (r, short), orthonormal rows
+    if with_stats:
+        O, sigma = _orth_with_spectrum(cfg, M)   # (r, short) + (r,) σ(M)
+    else:
+        O = _orth(cfg, M)          # (r, short), orthonormal rows
+    if with_stats:
+        g_norm = jnp.linalg.norm(Gl)
+        stats_energy = jnp.linalg.norm(G_hat) / (g_norm + 1e-12)
+        # ‖M‖_F² = Σσ² (trace identity) — free from the spectrum, no pass
+        # over M.
+        stats_mnorm = jnp.sqrt(jnp.sum(jnp.square(sigma)))
+        # pre-limiter O: the residual measures the orthogonalizer, not the cap
+        OOt = O @ jnp.swapaxes(O, -1, -2)
+        stats_ortho = jnp.linalg.norm(
+            OOt - jnp.eye(O.shape[0], dtype=O.dtype)
+        ) / jnp.sqrt(float(O.shape[0]))
 
     # ---- Block 3: norm-growth limiter -------------------------------------
     o_norm = jnp.linalg.norm(O)
@@ -233,17 +353,34 @@ def _matrix_update(
     delta = -lr * scale * upd
     if cfg.weight_decay > 0.0 and W is not None:
         delta = delta - lr * cfg.weight_decay * W.astype(jnp.float32)
+    if with_stats:
+        # ‖QO‖_F = ‖O‖_F (Q has orthonormal columns) and the limiter already
+        # computed ‖O_limited‖ = new_prev, so the main-term update norm is
+        # free — no pass over the (long, short) delta. Weight decay is
+        # excluded by construction (it is a separate, exactly-known term).
+        mstats = MatrixStats(
+            sigma=sigma,
+            energy=stats_energy,
+            ortho_residual=stats_ortho,
+            moment_norm=stats_mnorm,
+            update_norm=lr * scale * new_prev,
+            grad_norm=g_norm,
+        )
+        return delta, Q, M, new_prev, mstats
     return delta, Q, M, new_prev
 
 
 def _per_leaf_updates(cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
-                      leaf_keys, lr, do_refresh):
+                      leaf_keys, lr, step):
     """Reference engine: one ``_matrix_update`` (and refresh cond) per leaf.
 
     3D expert stacks vmap over their leading axis; everything else is a
     straight Python loop, so a model with L same-shaped layers compiles L
     separate conds/rSVDs. Kept as the bit-exact oracle for the bucketed
-    engine and for per-leaf adaptive-refresh granularity.
+    engine and for per-leaf adaptive-refresh granularity. The refresh cadence
+    is evaluated per leaf from its bucket's (possibly overridden)
+    ``update_freq`` — identical to the bucketed engine's per-bucket predicate
+    since the cadence is a pure function of the canonical shape.
     """
     out_u, out_Q, out_M, out_pn = [], [], [], []
     for g, Q, M, pn, p, k in zip(
@@ -253,6 +390,8 @@ def _per_leaf_updates(cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
             out_u.append(None); out_Q.append(None)
             out_M.append(None); out_pn.append(None)
             continue
+        freq = cfg.bucket_update_freq(*opt.canonical_dims(g.shape))
+        do_refresh = (step % freq) == 0
         g32 = g.astype(jnp.float32)
         if g.ndim == 2:
             d, Qn, Mn, pnn = _matrix_update(
@@ -402,17 +541,19 @@ def convert_sumo_state(
 # Bucketed engine
 # ---------------------------------------------------------------------------
 
-def _bucket_update_fn(cfg: SumoConfig, with_w: bool):
+def _bucket_update_fn(cfg: SumoConfig, with_w: bool, with_stats: bool = False):
     """The per-bucket batched update: vmap of ``_matrix_update`` over the
     stacked B axis with an UNBATCHED refresh predicate (one cond/rSVD per
     bucket). lr/do_refresh are explicit args so the same function body can be
-    wrapped in ``shard_map`` without closing over traced values."""
+    wrapped in ``shard_map`` without closing over traced values. With
+    ``with_stats`` the vmapped update additionally returns a (B, ...)-stacked
+    ``MatrixStats``."""
 
     def run(lr, do_refresh, G, Q, M, pn, K, W):
         f = jax.vmap(
             lambda G_, Q_, M_, pn_, k_, W_: _matrix_update(
                 cfg, G_, Q_, M_, pn_, lr, do_refresh, k_, W_,
-                check_quality=False,
+                check_quality=False, with_stats=with_stats,
             ),
             in_axes=(0, 0, 0, 0, 0, 0 if with_w else None),
         )
@@ -424,8 +565,38 @@ def _bucket_update_fn(cfg: SumoConfig, with_w: bool):
         lr, do_refresh, G, Q, M, pn, K, None)
 
 
+def _reduce_bucket_stats(ms: MatrixStats, fired) -> SpectralStats:
+    """(B, ...)-stacked per-matrix probes -> one per-bucket SpectralStats.
+
+    κ is the EFFECTIVE condition number: σ_min counts only directions above
+    1e-7·σ_max, so an over-ranked moment (trailing σ ≈ 0 — the controller's
+    SHRINK signal, visible in the tail mass) does not masquerade as the
+    ill-conditioned regime (its TIGHTEN-refresh signal)."""
+    sig = ms.sigma                        # (B, r) descending
+    s0 = sig[:, :1]                       # (B, 1)
+    s_eff_min = jnp.min(
+        jnp.where(sig > 1e-7 * s0, sig, s0), axis=1)
+    kappa = jnp.max(jnp.square(sig[:, 0] / jnp.maximum(s_eff_min, 1e-30)))
+    return SpectralStats(
+        sigma=jnp.mean(sig, axis=0),
+        kappa=kappa,
+        energy=jnp.min(ms.energy),
+        ortho_residual=jnp.max(ms.ortho_residual),
+        moment_norm=jnp.mean(ms.moment_norm),
+        update_norm=jnp.mean(ms.update_norm),
+        grad_norm=jnp.mean(ms.grad_norm),
+        refresh_fired=jnp.asarray(fired).astype(jnp.int32),
+    )
+
+
+def _pad_rows(a: jnp.ndarray, pad: int) -> jnp.ndarray:
+    """Append `pad` zero slots along the stacked B axis."""
+    return jnp.concatenate(
+        [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+
+
 def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
-                      leaf_keys, lr, do_refresh):
+                      leaf_keys, lr, step):
     """Bucketed engine over BUCKET-LAYOUT state: one vmapped
     ``_matrix_update`` per canonical (long, short) bucket.
 
@@ -436,20 +607,32 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
     in bucket-resident mode there is NO per-step state copy at all. Per-matrix
     rSVD keys match the per-leaf engine exactly (same per-leaf key, same
     per-expert split), which is what makes all engine/layout combinations
-    bit-comparable.
+    bit-comparable. The refresh cadence is evaluated per bucket from
+    ``cfg.bucket_update_freq`` (the controller's per-bucket override knob).
 
-    When ``mesh`` is given and ``mesh.shape[cfg.bucket_axis]`` divides a
-    bucket's stacked size, the bucket update runs under ``shard_map`` with B
-    sharded over that axis — every block of the update
-    (projection, moment, orthogonalization, rSVD refresh) is per-matrix, so
-    the sharded update is collective-free.
+    When ``mesh`` is given and ``mesh.shape[cfg.bucket_axis]`` > 1, every
+    bucket with more than one matrix runs under ``shard_map`` with B sharded
+    over that axis — ragged buckets (B % axis_size != 0) are padded with
+    zero slots that are masked out of the adaptive-refresh predicate and
+    sliced off the outputs, so odd layer counts shard too. Every block of the
+    update (projection, moment, orthogonalization, rSVD refresh) is
+    per-matrix, so the sharded update is collective-free in steady state.
+    Singleton (B == 1) buckets keep the single-device vmap path — padding
+    them buys no parallelism.
+
+    Returns (out_updates, Qd, Md, pnd, stats) where ``stats`` is the
+    per-bucket SpectralStats dict when ``cfg.telemetry`` else None.
     """
     n_leaves = len(leaves_g)
     out_u = [None] * n_leaves
     new_Qd, new_Md, new_pnd = {}, {}, {}
+    tel = cfg.telemetry
+    stats_d = {} if tel else None
 
     for bucket in plan:
         long_d, short_d = bucket.shape
+        freq = cfg.bucket_update_freq(long_d, short_d)
+        do_refresh = (step % freq) == 0
         # W only feeds the decoupled weight-decay term: skip the stacking
         # traffic entirely when decay is off or no member has a param. In a
         # mixed bucket, members without a param get zeros — a zero decay
@@ -481,13 +664,14 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
         _check_bucket_slots(Qd, bucket)
         Q, M, pn = Qd[bucket.key], Md[bucket.key], pnd[bucket.key]
 
-        fn = _bucket_update_fn(cfg, with_w=stack_w)
+        fn = _bucket_update_fn(cfg, with_w=stack_w, with_stats=tel)
         axis = cfg.bucket_axis
         n_shards = (
             mesh.shape[axis]
             if isinstance(mesh, Mesh) and axis in mesh.shape else 1
         )
-        if n_shards > 1 and bucket.size % n_shards == 0:
+        ms = dr_out = None
+        if n_shards > 1 and bucket.size > 1:
             # Sharded bucket update. Data-movement discipline: the stacked
             # G/W/keys enter REPLICATED (they are assembled locally from the
             # replicated grads — no resharding collective at the shard_map
@@ -496,9 +680,25 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
             # the only steady-state collective is ONE explicit all_gather of
             # the delta stack (the updates must reach the replicated params).
             # With refresh_quality > 0 the bucket-wide staleness OR adds a
-            # scalar pmax per bucket — the documented exception.
-            blk = bucket.size // n_shards
+            # scalar pmax per bucket — the documented exception; telemetry
+            # adds one tiny all_gather of the per-matrix stat scalars.
+            # Ragged buckets are padded with zero slots up to the axis size:
+            # a zero gradient + zero state produces a zero delta (the polar
+            # rank guard zeroes O), pad slots are masked out of the staleness
+            # predicate, and outputs are sliced back to the true size.
+            pad = (-bucket.size) % n_shards
+            b_padded = bucket.size + pad
+            if pad:
+                G = _pad_rows(G, pad)
+                K = _pad_rows(K, pad)
+                Q = _pad_rows(Q, pad)
+                M = _pad_rows(M, pad)
+                pn = _pad_rows(pn, pad)
+                if stack_w:
+                    W = _pad_rows(W, pad)
+            blk = b_padded // n_shards
             q_thresh = cfg.refresh_quality
+            b_true = bucket.size
 
             def body(lr_, dr_, G_, Q_, M_, pn_, K_, *W_):
                 i0 = jax.lax.axis_index(axis) * blk
@@ -514,11 +714,19 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
                         jnp.matmul(jnp.swapaxes(Q_, -1, -2), G_loc),
                         axis=(-2, -1),
                     ) / g_norms
-                    stale = jnp.any(caps < q_thresh).astype(jnp.int32)
+                    stale_mask = caps < q_thresh
+                    if pad:
+                        stale_mask = stale_mask & ((i0 + jnp.arange(blk)) < b_true)
+                    stale = jnp.any(stale_mask).astype(jnp.int32)
                     dr_ = jnp.logical_or(dr_, jax.lax.pmax(stale, axis) > 0)
-                d_loc, Qn, Mn, pnn = fn(lr_, dr_, G_loc, Q_, M_, pn_, K_loc,
-                                        *W_loc)
+                out = fn(lr_, dr_, G_loc, Q_, M_, pn_, K_loc, *W_loc)
+                d_loc, Qn, Mn, pnn = out[:4]
                 d_full = jax.lax.all_gather(d_loc, axis, axis=0, tiled=True)
+                if tel:
+                    ms_full = jax.tree_util.tree_map(
+                        lambda a: jax.lax.all_gather(a, axis, axis=0, tiled=True),
+                        out[4])
+                    return d_full, Qn, Mn, pnn, ms_full, dr_
                 return d_full, Qn, Mn, pnn
 
             s3 = P(axis, None, None)
@@ -526,12 +734,22 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
             in_specs = (P(), P(), rep3, s3, s3, P(axis), rep2)
             if stack_w:
                 in_specs = in_specs + (rep3,)
+            out_specs = (rep3, s3, s3, P(axis))
+            if tel:
+                out_specs = out_specs + (MatrixStats(*([P()] * 6)), P())
             call = shard_map(
                 body, mesh=mesh, in_specs=in_specs,
-                out_specs=(rep3, s3, s3, P(axis)), check_rep=False,
+                out_specs=out_specs, check_rep=False,
             )
             args = (lr, do_refresh, G, Q, M, pn, K) + ((W,) if stack_w else ())
-            d, Qn, Mn, pnn = call(*args)
+            out = call(*args)
+            d, Qn, Mn, pnn = out[:4]
+            if tel:
+                ms, dr_out = out[4], out[5]
+            if pad:
+                d, Qn, Mn, pnn = (a[:b_true] for a in (d, Qn, Mn, pnn))
+                if tel:
+                    ms = jax.tree_util.tree_map(lambda a: a[:b_true], ms)
         else:
             # Bucket-level adaptive refresh: refresh the whole bucket when
             # ANY member's basis has gone stale. Keeping the predicate
@@ -547,8 +765,13 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
                     do_refresh, jnp.any(caps < cfg.refresh_quality)
                 )
             args = (lr, do_refresh_b, G, Q, M, pn, K) + ((W,) if stack_w else ())
-            d, Qn, Mn, pnn = fn(*args)
+            out = fn(*args)
+            d, Qn, Mn, pnn = out[:4]
+            if tel:
+                ms, dr_out = out[4], do_refresh_b
 
+        if tel:
+            stats_d[bucket.key] = _reduce_bucket_stats(ms, dr_out)
         new_Qd[bucket.key] = Qn
         new_Md[bucket.key] = Mn
         new_pnd[bucket.key] = pnn
@@ -559,7 +782,7 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
             off += cnt
             di = jnp.swapaxes(d[sl], -1, -2) if tr else d[sl]
             out_u[i] = di.reshape(leaves_g[i].shape)
-    return out_u, new_Qd, new_Md, new_pnd
+    return out_u, new_Qd, new_Md, new_pnd, stats_d
 
 
 def sumo(
@@ -576,6 +799,10 @@ def sumo(
     lr_fn = learning_rate if callable(learning_rate) else (lambda s: jnp.asarray(learning_rate))
     cfg = config
     layout = cfg.resolved_state_layout()
+    if cfg.telemetry and not cfg.bucketed:
+        raise ValueError(
+            "SumoConfig.telemetry requires the bucketed engine "
+            "(spectral probes are emitted per bucket)")
 
     def _leaf_init(leaf):
         if leaf is None:
@@ -587,15 +814,33 @@ def sumo(
             jnp.zeros(batch, jnp.float32),
         )
 
+    def _init_stats(plan):
+        """Zero-filled SpectralStats per bucket — gives SumoState a stable
+        tree structure from init onward (no recompile after the first step)."""
+        out = {}
+        for b in plan:
+            r = cfg.bucket_rank(*b.shape)
+            out[b.key] = SpectralStats(
+                sigma=jnp.zeros((r,), jnp.float32),
+                kappa=jnp.zeros((), jnp.float32),
+                energy=jnp.zeros((), jnp.float32),
+                ortho_residual=jnp.zeros((), jnp.float32),
+                moment_norm=jnp.zeros((), jnp.float32),
+                update_norm=jnp.zeros((), jnp.float32),
+                grad_norm=jnp.zeros((), jnp.float32),
+                refresh_fired=jnp.zeros((), jnp.int32),
+            )
+        return out
+
     def init(params) -> SumoState:
         leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
+        plan = opt.build_bucket_plan(
+            [None if l is None else l.shape for l in leaves])
         if layout == "bucket":
-            plan = opt.build_bucket_plan(
-                [None if l is None else l.shape for l in leaves])
             Qs, Ms, pns = {}, {}, {}
             for b in plan:
                 long_d, short_d = b.shape
-                r = _leaf_rank(cfg, b.shape)
+                r = cfg.bucket_rank(long_d, short_d)
                 Qs[b.key] = jnp.zeros((b.size, long_d, r), jnp.float32)
                 Ms[b.key] = jnp.zeros((b.size, r, short_d), jnp.float32)
                 pns[b.key] = jnp.zeros((b.size,), jnp.float32)
@@ -610,11 +855,11 @@ def sumo(
             Q=Qs,
             M=Ms,
             prev_norm=pns,
+            stats=_init_stats(plan) if cfg.telemetry else None,
         )
 
     def update(grads, state: SumoState, params=None):
         lr = lr_fn(state.step).astype(jnp.float32)
-        do_refresh = (state.step % cfg.update_freq) == 0
 
         leaves_g, treedef = jax.tree_util.tree_flatten(
             grads, is_leaf=lambda x: x is None
@@ -641,9 +886,9 @@ def sumo(
                     treedef.flatten_up_to(state.M),
                     treedef.flatten_up_to(state.prev_norm),
                 )
-            out_u, Qd2, Md2, pnd2 = _bucketed_updates(
+            out_u, Qd2, Md2, pnd2, stats_d = _bucketed_updates(
                 cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
-                leaf_keys, lr, do_refresh,
+                leaf_keys, lr, state.step,
             )
             if layout == "bucket":
                 new_Q, new_M, new_pn = Qd2, Md2, pnd2
@@ -659,9 +904,10 @@ def sumo(
                 leaves_Q = treedef.flatten_up_to(state.Q)
                 leaves_M = treedef.flatten_up_to(state.M)
                 leaves_pn = treedef.flatten_up_to(state.prev_norm)
+            stats_d = None
             out_u, out_Q, out_M, out_pn = _per_leaf_updates(
                 cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
-                leaf_keys, lr, do_refresh,
+                leaf_keys, lr, state.step,
             )
             if layout == "bucket":
                 new_Q, new_M, new_pn = _stack_leaf_state(
@@ -675,6 +921,7 @@ def sumo(
             Q=new_Q,
             M=new_M,
             prev_norm=new_pn,
+            stats=stats_d,
         )
         return unflat(out_u), new_state
 

@@ -37,6 +37,15 @@ def main(argv=None) -> int:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--preempt-at", type=int, nargs="*", default=None,
                     help="simulate preemptions at these steps (fault-tolerance demo)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="emit per-bucket spectral probes (SUMO only)")
+    ap.add_argument("--telemetry-out", default=None,
+                    help="JSONL path for the telemetry sink")
+    ap.add_argument("--controller", action="store_true",
+                    help="adaptive per-bucket rank/refresh controller "
+                         "(implies --telemetry)")
+    ap.add_argument("--controller-interval", type=int, default=0,
+                    help="steps between controller checks (0 = update-freq)")
     args = ap.parse_args(argv)
 
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -45,6 +54,10 @@ def main(argv=None) -> int:
         optimizer=args.optimizer, learning_rate=args.lr, rank=args.rank,
         update_freq=args.update_freq, total_steps=args.steps, accum=args.accum,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        telemetry=args.telemetry or bool(args.telemetry_out),
+        telemetry_out=args.telemetry_out,
+        controller=args.controller,
+        controller_interval=args.controller_interval,
     )
     injector = FaultInjector(preempt_at=args.preempt_at) if args.preempt_at else None
     res = train(arch, shape, tcfg, fault_injector=injector)
@@ -52,6 +65,10 @@ def main(argv=None) -> int:
     last = res.losses[-1][1]
     print(f"\ndone: {res.final_step} steps, loss {first:.4f} -> {last:.4f}, "
           f"restarts {res.restarts}")
+    if res.telemetry_records:
+        dest = args.telemetry_out or "(in-memory)"
+        print(f"telemetry: {res.telemetry_records} records -> {dest}, "
+              f"{len(res.controller_events)} controller events")
     return 0
 
 

@@ -1,0 +1,97 @@
+"""repro.telemetry — spectral telemetry + adaptive per-bucket rank/refresh
+control for SUMO.
+
+SUMO's theory (paper §3) bounds the orthogonalization approximation error by
+the condition number of the moment matrix and motivates a dynamically adapted
+low-dimensional subspace. This package closes that measurement→adaptation
+loop online, in three layers:
+
+1. **On-device probes** (``repro.core.sumo`` + ``probes``): with
+   ``SumoConfig.telemetry=True`` the bucketed engine emits one
+   ``SpectralStats`` per canonical "LONGxSHORT" bucket as a jit-safe aux
+   output in ``SumoState.stats`` — zero extra SVDs (the moment spectrum is
+   read off the factorization the orthogonalization already performs: the
+   polar method's own r×r Gram eigh, the SVD method's own SVD; NS5 pays one
+   r×r Gram eigh) and no host syncs on the hot path. Probes never feed back
+   into the update, so the training trajectory is bit-identical probes-on vs
+   probes-off (pinned by tests/test_telemetry.py).
+
+2. **Host-side async sink** (``sink``): ``TelemetrySink`` buffers the device
+   stats in a bounded ring (emit = lock + append, no sync, no I/O) and a
+   background drain thread converts them to records, appends to pluggable
+   ``JsonlWriter``/``CsvWriter`` outputs, and maintains per-bucket sliding
+   ``WindowAggregate`` windows.
+
+3. **Feedback controller** (``controller``): ``RankRefreshController``
+   consumes the windowed stats and re-tunes each bucket's subspace rank and
+   refresh cadence; decisions flow back as the static
+   ``SumoConfig.bucket_overrides`` plus a host-side pad/truncate of the
+   bucket-resident Q/M stacks (``resize_opt_state``), so state shapes change
+   only at controlled recompile points — applied at refresh boundaries by
+   ``train.loop``.
+
+Record schema (one JSONL object / CSV row per bucket per step)
+--------------------------------------------------------------
+    step            int    optimizer step the stats describe
+    bucket          str    canonical "LONGxSHORT" bucket id
+    rank            int    subspace rank the bucket ran under
+    update_freq     int    refresh cadence K the bucket ran under
+    kappa           float  max over bucket of κ(MMᵀ) = (σ_max/σ_min)²
+    energy          float  min over bucket of ‖QᵀG‖_F/‖G‖_F (energy capture)
+    ortho_residual  float  max over bucket of ‖OOᵀ−I‖_F/√r (pre-limiter O)
+    moment_norm     float  mean ‖M‖_F
+    update_norm     float  mean ‖Δ‖_F of the applied update
+    grad_norm       float  mean ‖G‖_F
+    refresh_fired   int    1 iff the bucket's refresh cond fired this step
+    sigma           list   (rank,) bucket-mean moment spectrum, descending
+
+``probes.validate_record`` enforces this schema; ``sink.read_jsonl`` is the
+round-trip loader.
+
+Controller policy (deterministic; ControllerConfig for the thresholds)
+----------------------------------------------------------------------
+    grow rank    mean energy capture < energy_low      (basis missing mass)
+    shrink rank  trailing tail_frac of σ carries < tail_mass_low of Σσ²
+    tighten K    mean κ(MMᵀ) > kappa_high   (the paper's error-bound regime)
+    relax K      mean κ(MMᵀ) < kappa_low
+
+Wiring: ``TrainConfig(telemetry=True, telemetry_out=..., controller=True)``
+in ``repro.train``, or ``--telemetry/--controller`` on
+``python -m repro.launch.train``.
+"""
+from .controller import (
+    BucketDecision,
+    BucketSetting,
+    ControllerConfig,
+    RankRefreshController,
+    apply_decisions,
+    initial_settings,
+    overrides_from_settings,
+    resize_opt_state,
+    resize_sumo_state,
+)
+from .probes import (
+    RECORD_SCHEMA,
+    extract_stats,
+    kappa_from_sigma,
+    rank_one_residual_from_sigma,
+    stats_to_records,
+    tail_mass,
+    validate_record,
+)
+from .sink import CsvWriter, JsonlWriter, TelemetrySink, WindowAggregate, read_jsonl
+
+# Re-export the on-device stats types (defined next to the engine that emits
+# them, in repro.core.sumo) so telemetry is the one-stop public API.
+from ..core.sumo import MatrixStats, SpectralStats
+
+__all__ = [
+    "SpectralStats", "MatrixStats",
+    "RECORD_SCHEMA", "validate_record", "extract_stats", "stats_to_records",
+    "tail_mass", "kappa_from_sigma", "rank_one_residual_from_sigma",
+    "TelemetrySink", "JsonlWriter", "CsvWriter", "WindowAggregate",
+    "read_jsonl",
+    "RankRefreshController", "ControllerConfig", "BucketSetting",
+    "BucketDecision", "initial_settings", "overrides_from_settings",
+    "resize_sumo_state", "resize_opt_state", "apply_decisions",
+]

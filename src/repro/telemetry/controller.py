@@ -1,0 +1,262 @@
+"""The measurement→adaptation loop: per-bucket rank & refresh-cadence control.
+
+``RankRefreshController.decide`` is a PURE function of the windowed stats and
+the current per-bucket settings — deterministic by construction (no RNG, no
+wall clock), which is what makes controller behaviour testable on synthetic
+moments. Policy (see the package docstring for the rationale against the
+paper's error bound):
+
+  * grow rank   when the window's mean energy capture ‖QᵀG‖_F/‖G‖_F sags
+                below ``energy_low`` — the basis is missing gradient mass;
+  * shrink rank when the trailing ``tail_frac`` of the moment spectrum
+                carries less than ``tail_mass_low`` of Σσ² — dead directions;
+  * tighten K   (halve the refresh interval) when mean κ(MMᵀ) exceeds
+                ``kappa_high`` — the regime where the paper's
+                orthogonalization error bound degrades;
+  * relax K     (double it) when κ stays below ``kappa_low``.
+
+Decisions are applied OUTSIDE the jitted step, at refresh boundaries, via two
+host-side moves: (1) ``SumoConfig.bucket_overrides`` is rebuilt (a static
+config field ⇒ a controlled recompile point), and (2) ``resize_opt_state``
+resizes the bucket-resident Q/M stacks to the new rank. Grown basis columns
+are zero until the bucket's next rSVD refresh re-derives the basis at the
+new rank; shrinking rotates into the moment's own singular basis first, so
+exactly the smallest-σ (negligible-mass) directions that justified the
+shrink are dropped — see ``_spectral_shrink``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..core.optimizer import build_bucket_plan, is_matrix_param, path_str
+from ..core.sumo import SumoState, sumo_state_layout
+from .probes import tail_mass
+from .sink import WindowAggregate
+
+
+@dataclasses.dataclass(frozen=True)
+class ControllerConfig:
+    window: int = 8            # records per bucket required before deciding
+    kappa_high: float = 1e6    # tighten refresh above this mean κ(MMᵀ)
+    kappa_low: float = 1e2     # relax refresh below this
+    energy_low: float = 0.30   # grow rank when mean energy capture sags below
+    tail_frac: float = 0.25    # trailing spectrum fraction inspected for shrink
+    tail_mass_low: float = 1e-3  # shrink rank when tail mass below this
+    rank_step: int = 8         # grow/shrink granularity
+    rank_min: int = 4
+    freq_tighten: int = 2      # divide update_freq by this when κ is high
+    freq_relax: int = 2        # multiply when κ is comfortably low
+    freq_min: int = 5
+    freq_max: int = 2000
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketSetting:
+    """What one bucket currently runs under (+ its static dims)."""
+
+    rank: int
+    update_freq: int
+    long: int
+    short: int
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketDecision:
+    bucket: str
+    rank: int
+    update_freq: int
+    reasons: Tuple[str, ...] = ()
+
+    def changed(self, setting: BucketSetting) -> bool:
+        return (self.rank, self.update_freq) != (setting.rank,
+                                                 setting.update_freq)
+
+
+def initial_settings(params, rank: int, update_freq: int
+                     ) -> Dict[str, BucketSetting]:
+    """Default per-bucket settings for a param tree: the bucket plan of its
+    MATRIX leaves (same classification the optimizer uses) at the global
+    rank/update_freq."""
+    leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+    shapes = [leaf.shape for path, leaf in leaves
+              if is_matrix_param(path_str(path), leaf)]
+    out = {}
+    for b in build_bucket_plan(shapes):
+        long_d, short_d = b.shape          # already canonical (long, short)
+        out[b.key] = BucketSetting(
+            rank=max(1, min(rank, short_d)), update_freq=update_freq,
+            long=long_d, short=short_d)
+    return out
+
+
+def overrides_from_settings(settings: Mapping[str, BucketSetting]
+                            ) -> Tuple[Tuple[str, int, int], ...]:
+    """Settings dict -> the static SumoConfig.bucket_overrides tuple (sorted
+    for a deterministic config hash)."""
+    return tuple(sorted(
+        (k, s.rank, s.update_freq) for k, s in settings.items()))
+
+
+class RankRefreshController:
+    """Consumes windowed SpectralStats, produces per-bucket decisions."""
+
+    def __init__(self, config: ControllerConfig = ControllerConfig()):
+        self.cfg = config
+
+    def decide(self, windows: Mapping[str, WindowAggregate],
+               current: Mapping[str, BucketSetting]
+               ) -> Dict[str, BucketDecision]:
+        cfg = self.cfg
+        out: Dict[str, BucketDecision] = {}
+        for bucket in sorted(current):
+            setting = current[bucket]
+            agg = windows.get(bucket)
+            if agg is None or agg.n < cfg.window:
+                out[bucket] = BucketDecision(bucket, setting.rank,
+                                             setting.update_freq)
+                continue
+            rank, freq = setting.rank, setting.update_freq
+            reasons = []
+            # -- rank: grow on sagging energy capture, else shrink on a
+            #    negligible spectral tail (grow wins — never shrink a basis
+            #    that is already missing gradient mass).
+            if agg.energy_mean < cfg.energy_low:
+                new_rank = min(setting.short, rank + cfg.rank_step)
+                if new_rank != rank:
+                    reasons.append(
+                        f"energy {agg.energy_mean:.3f} < {cfg.energy_low}: "
+                        f"grow rank {rank}->{new_rank}")
+                    rank = new_rank
+            else:
+                tm = tail_mass(agg.sigma_mean, cfg.tail_frac)
+                if tm < cfg.tail_mass_low:
+                    new_rank = max(cfg.rank_min, rank - cfg.rank_step)
+                    if new_rank != rank:
+                        reasons.append(
+                            f"tail mass {tm:.2e} < {cfg.tail_mass_low}: "
+                            f"shrink rank {rank}->{new_rank}")
+                        rank = new_rank
+            # -- refresh cadence from the condition-number regime
+            if agg.kappa_mean > cfg.kappa_high:
+                new_freq = max(cfg.freq_min, freq // cfg.freq_tighten)
+                if new_freq != freq:
+                    reasons.append(
+                        f"kappa {agg.kappa_mean:.2e} > {cfg.kappa_high:.0e}: "
+                        f"tighten refresh {freq}->{new_freq}")
+                    freq = new_freq
+            elif agg.kappa_mean < cfg.kappa_low:
+                new_freq = min(cfg.freq_max, freq * cfg.freq_relax)
+                if new_freq != freq:
+                    reasons.append(
+                        f"kappa {agg.kappa_mean:.2e} < {cfg.kappa_low:.0e}: "
+                        f"relax refresh {freq}->{new_freq}")
+                    freq = new_freq
+            out[bucket] = BucketDecision(bucket, rank, freq, tuple(reasons))
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Applying decisions: bucket-resident state resize (the recompile-point move)
+# ---------------------------------------------------------------------------
+
+def _resize_rows(a: jnp.ndarray, axis: int, new: int) -> jnp.ndarray:
+    old = a.shape[axis]
+    if new == old:
+        return a
+    if new < old:
+        sl = [slice(None)] * a.ndim
+        sl[axis] = slice(0, new)
+        return a[tuple(sl)]
+    pad_shape = list(a.shape)
+    pad_shape[axis] = new - old
+    return jnp.concatenate(
+        [a, jnp.zeros(pad_shape, a.dtype)], axis=axis)
+
+
+def _spectral_shrink(Q: jnp.ndarray, M: jnp.ndarray, r_new: int):
+    """Shrink (Q (B, long, r), M (B, r, short)) to rank ``r_new`` keeping the
+    TOP singular directions of the moment.
+
+    Naive column truncation would assume Q's columns are spectrally ordered —
+    they are not (the rSVD basis is a QR of a random sketch). Instead rotate
+    into M's own singular basis: M = U S Vᵀ gives Q' = Q U[:, :r'] (still
+    orthonormal) and M' = S[:r'] Vᵀ[:r'], so Q'M' is exactly the best
+    rank-r' approximation of the lifted moment QM, whatever the column
+    order. One small (r × short) SVD per bucket member, on the host at
+    decision time — never on the hot path."""
+    U, s, Vt = jnp.linalg.svd(M, full_matrices=False)     # U: (B, r, r)
+    Q_new = jnp.matmul(Q, U[..., :, :r_new])              # (B, long, r')
+    M_new = s[..., :r_new, None] * Vt[..., :r_new, :]     # (B, r', short)
+    return Q_new, M_new
+
+
+def resize_sumo_state(state: SumoState,
+                      rank_map: Mapping[str, int]) -> SumoState:
+    """Resize a BUCKET-layout SumoState's Q/M (and stats.sigma) stacks to the
+    ranks in ``rank_map``, applied between steps. Grow pads zero basis
+    columns (dormant until the bucket's next refresh re-derives the basis at
+    the new rank); shrink rotates into the moment's singular basis first
+    (``_spectral_shrink``) so only the smallest-σ directions are dropped."""
+    if sumo_state_layout(state) != "bucket":
+        raise ValueError(
+            "controller rank resize needs bucket-resident state "
+            "(SumoConfig.state_layout='bucket')")
+    Q, M = dict(state.Q), dict(state.M)
+    stats = dict(state.stats) if isinstance(state.stats, dict) else state.stats
+    for key, r_new in rank_map.items():
+        if key not in Q:
+            raise KeyError(f"rank_map bucket {key!r} not in state "
+                           f"(have {sorted(Q)})")
+        if r_new < Q[key].shape[-1]:
+            Q[key], M[key] = _spectral_shrink(Q[key], M[key], r_new)
+        else:
+            Q[key] = _resize_rows(Q[key], 2, r_new)      # (B, long, r)
+            M[key] = _resize_rows(M[key], 1, r_new)      # (B, r, short)
+        if isinstance(stats, dict) and key in stats:
+            stats[key] = stats[key]._replace(
+                sigma=_resize_rows(stats[key].sigma, 0, r_new))
+    return state._replace(Q=Q, M=M, stats=stats)
+
+
+def resize_opt_state(opt_state, rank_map: Mapping[str, int]):
+    """Apply ``resize_sumo_state`` to every SumoState inside an arbitrary
+    optimizer-state tree (multi_transform dicts, chains, ...)."""
+    return jax.tree_util.tree_map(
+        lambda node: (resize_sumo_state(node, rank_map)
+                      if isinstance(node, SumoState) else node),
+        opt_state,
+        is_leaf=lambda x: isinstance(x, SumoState) or x is None,
+    )
+
+
+def apply_decisions(
+    opt_state,
+    settings: Dict[str, BucketSetting],
+    decisions: Mapping[str, BucketDecision],
+) -> Tuple[Any, Dict[str, BucketSetting], Tuple[Tuple[str, int, int], ...],
+           Dict[str, Tuple[str, ...]]]:
+    """Fold changed decisions into (resized opt_state, new settings,
+    new bucket_overrides tuple, reasons-by-bucket). No-op (same objects,
+    empty reasons) when nothing changed."""
+    changed = {b: d for b, d in decisions.items()
+               if b in settings and d.changed(settings[b])}
+    if not changed:
+        return opt_state, settings, overrides_from_settings(settings), {}
+    new_settings = dict(settings)
+    rank_map = {}
+    reasons: Dict[str, Tuple[str, ...]] = {}
+    for b, d in changed.items():
+        old = settings[b]
+        new_settings[b] = dataclasses.replace(
+            old, rank=d.rank, update_freq=d.update_freq)
+        if d.rank != old.rank:
+            rank_map[b] = d.rank
+        reasons[b] = d.reasons
+    if rank_map:
+        opt_state = resize_opt_state(opt_state, rank_map)
+    return (opt_state, new_settings,
+            overrides_from_settings(new_settings), reasons)

@@ -1,0 +1,145 @@
+"""On-device spectral probes: extraction + host-side record conversion.
+
+The probe VALUES are computed inside the bucketed SUMO engine
+(``repro.core.sumo`` with ``SumoConfig.telemetry=True``) as a jit-safe aux
+output — ``SumoState.stats`` maps each canonical "LONGxSHORT" bucket key to a
+``SpectralStats``. This module is the host-side half: pulling those stats out
+of an arbitrary optimizer-state tree, converting them into schema-stable
+records (the JSONL/CSV unit), and the spectrum arithmetic the controller and
+benchmarks share (tail mass, rank-one residual, κ from σ).
+
+Nothing here runs on the hot path: ``extract_stats`` only re-arranges tree
+references (no host sync), and ``stats_to_records`` — the one device→host
+transfer — is called by the sink's drain, off the critical path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional
+
+import jax
+import numpy as np
+
+from ..core.sumo import SpectralStats, SumoState
+
+PyTree = Any
+
+# The JSONL/CSV record schema, field -> python type. ``sigma`` is the
+# (rank,)-length moment spectrum, descending; everything else is scalar.
+# ``rank`` and ``update_freq`` record the SETTING the bucket ran under, so a
+# controller decision is visible in the stream as a rank/freq step change.
+RECORD_SCHEMA: Dict[str, type] = {
+    "step": int,
+    "bucket": str,
+    "rank": int,
+    "update_freq": int,
+    "kappa": float,
+    "energy": float,
+    "ortho_residual": float,
+    "moment_norm": float,
+    "update_norm": float,
+    "grad_norm": float,
+    "refresh_fired": int,
+    "sigma": list,
+}
+
+
+def validate_record(rec: Mapping[str, Any]) -> None:
+    """Raise ValueError unless ``rec`` matches RECORD_SCHEMA exactly."""
+    missing = set(RECORD_SCHEMA) - set(rec)
+    extra = set(rec) - set(RECORD_SCHEMA)
+    if missing or extra:
+        raise ValueError(
+            f"telemetry record keys mismatch: missing={sorted(missing)} "
+            f"extra={sorted(extra)}")
+    for field, typ in RECORD_SCHEMA.items():
+        v = rec[field]
+        if typ is float:
+            ok = isinstance(v, (int, float)) and not isinstance(v, bool)
+        elif typ is int:
+            ok = isinstance(v, int) and not isinstance(v, bool)
+        elif typ is list:
+            ok = isinstance(v, list) and len(v) >= 1 and all(
+                isinstance(x, (int, float)) for x in v)
+        else:
+            ok = isinstance(v, typ)
+        if not ok:
+            raise ValueError(
+                f"telemetry record field {field!r}: {v!r} is not {typ.__name__}")
+
+
+def extract_stats(opt_state: PyTree) -> Dict[str, SpectralStats]:
+    """Collect the per-bucket SpectralStats dicts from every SumoState in an
+    optimizer-state tree (e.g. the multi_transform dict the train step
+    carries). Pure tree surgery — no device sync. Buckets from different
+    SumoStates merge by key (later wins; in practice there is one SUMO)."""
+    nodes = jax.tree_util.tree_flatten(
+        opt_state, is_leaf=lambda x: isinstance(x, SumoState) or x is None
+    )[0]
+    out: Dict[str, SpectralStats] = {}
+    for node in nodes:
+        if isinstance(node, SumoState) and isinstance(node.stats, dict):
+            out.update(node.stats)
+    return out
+
+
+def stats_to_records(
+    step: int,
+    stats: Mapping[str, SpectralStats],
+    settings: Optional[Mapping[str, Any]] = None,
+    default_update_freq: int = 0,
+) -> List[dict]:
+    """Device stats -> one schema-valid host record per bucket (sorted by
+    bucket key for a deterministic stream). ``settings`` (bucket ->
+    object with .rank/.update_freq, see controller.BucketSetting) stamps the
+    setting each bucket ran under; without it rank falls back to len(sigma)
+    and update_freq to ``default_update_freq``."""
+    host = jax.device_get(dict(stats))   # ONE transfer for the whole step
+    recs = []
+    for bucket in sorted(host):
+        s = host[bucket]
+        sigma = np.asarray(s.sigma, dtype=np.float64)
+        setting = settings.get(bucket) if settings else None
+        recs.append({
+            "step": int(step),
+            "bucket": bucket,
+            "rank": int(setting.rank) if setting else int(sigma.shape[0]),
+            "update_freq": (int(setting.update_freq) if setting
+                            else int(default_update_freq)),
+            "kappa": float(s.kappa),
+            "energy": float(s.energy),
+            "ortho_residual": float(s.ortho_residual),
+            "moment_norm": float(s.moment_norm),
+            "update_norm": float(s.update_norm),
+            "grad_norm": float(s.grad_norm),
+            "refresh_fired": int(s.refresh_fired),
+            "sigma": [float(x) for x in sigma],
+        })
+    return recs
+
+
+# ---------------------------------------------------------------------------
+# Spectrum arithmetic shared by the controller and benchmarks
+# ---------------------------------------------------------------------------
+
+def tail_mass(sigma, tail_frac: float = 0.25) -> float:
+    """Fraction of the spectral energy Σσ² carried by the trailing
+    ``tail_frac`` of the spectrum (σ descending). Near zero ⇒ the last
+    directions are dead weight and the rank can shrink."""
+    s = np.asarray(sigma, dtype=np.float64)
+    k = max(1, int(np.ceil(len(s) * tail_frac)))
+    total = float(np.sum(s ** 2)) + 1e-30
+    return float(np.sum(s[-k:] ** 2)) / total
+
+
+def kappa_from_sigma(sigma) -> float:
+    """κ(MMᵀ) = (σ_max/σ_min)² from a descending spectrum."""
+    s = np.asarray(sigma, dtype=np.float64)
+    return float((s[0] / max(s[-1], 1e-12)) ** 2)
+
+
+def rank_one_residual_from_sigma(sigma) -> float:
+    """Paper Eq. (1): 1 − σ₁²/Σσ² — rank-collapse diagnostic from the same
+    spectrum the probes emit (no private SVD re-implementation needed)."""
+    s = np.asarray(sigma, dtype=np.float64)
+    total = float(np.sum(s ** 2)) + 1e-30
+    return 1.0 - float(s[0] ** 2) / total

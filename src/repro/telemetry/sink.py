@@ -1,0 +1,273 @@
+"""Host-side async telemetry sink: ring buffer + pluggable writers +
+windowed aggregation.
+
+The train loop calls ``emit(step, stats)`` once per step with the DEVICE
+arrays the jitted step returned — emit only appends a reference to a bounded
+ring buffer (no host sync, no I/O). A background drain thread (or an explicit
+``drain()`` call, e.g. right before a controller decision) moves buffered
+stats to the host in one ``jax.device_get`` per step, appends schema-valid
+records to every writer, and maintains per-bucket sliding windows that the
+``RankRefreshController`` consumes.
+
+If the ring buffer overflows (drain thread starved), the OLDEST entries are
+dropped — telemetry never blocks training — and ``dropped`` counts them.
+"""
+from __future__ import annotations
+
+import collections
+import csv
+import dataclasses
+import json
+import threading
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+import numpy as np
+
+from .probes import stats_to_records, validate_record
+
+Record = Dict[str, Any]
+
+
+class JsonlWriter:
+    """One JSON object per line; the canonical round-trippable format."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f = open(path, "w")
+
+    def write(self, rec: Record) -> None:
+        self._f.write(json.dumps(rec) + "\n")
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class CsvWriter:
+    """Flat CSV with the schema's field order; ``sigma`` is JSON-encoded in
+    its column so the row stays one line."""
+
+    def __init__(self, path: str):
+        from .probes import RECORD_SCHEMA
+        self.path = path
+        self._fields = list(RECORD_SCHEMA)
+        self._f = open(path, "w", newline="")
+        self._w = csv.DictWriter(self._f, fieldnames=self._fields)
+        self._w.writeheader()
+
+    def write(self, rec: Record) -> None:
+        row = dict(rec)
+        row["sigma"] = json.dumps(rec["sigma"])
+        self._w.writerow(row)
+
+    def flush(self) -> None:
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+def read_jsonl(path: str) -> List[Record]:
+    """Load a JSONL telemetry file back into records (the round-trip side)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class WindowAggregate:
+    """Sliding-window summary for one bucket — the controller's input."""
+
+    n: int                   # records in the window
+    last_step: int
+    kappa_mean: float
+    kappa_max: float
+    energy_mean: float
+    energy_min: float
+    ortho_max: float
+    sigma_mean: np.ndarray   # (r,) mean spectrum over the window, descending
+    refresh_rate: float      # fraction of window steps whose refresh fired
+
+
+class TelemetrySink:
+    """Ring-buffer collector with pluggable writers and windowed aggregation.
+
+    Thread model: ``emit`` is called from the train loop (cheap, lock +
+    append). ``drain`` may be called from the background thread started by
+    ``start()`` AND explicitly (controller checks, shutdown) — drains and
+    writer access are serialized by a separate drain lock, and the emit lock
+    is never held across device_get or writer I/O.
+    """
+
+    def __init__(self, writers: Sequence[Any] = (), capacity: int = 4096,
+                 window: int = 8, validate: bool = True):
+        self.writers = list(writers)
+        self.window = window
+        self.validate = validate
+        self._buf: collections.deque = collections.deque(maxlen=capacity)
+        self._windows: Dict[str, collections.deque] = {}
+        self._settings: Optional[Mapping[str, Any]] = None
+        self._default_freq = 0
+        self._emitted = 0
+        self.records_written = 0
+        self.dropped = 0
+        self.last_error: Optional[BaseException] = None
+        self._lock = threading.Lock()        # buffer + windows + writers
+        self._drain_lock = threading.Lock()  # serializes drains
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    # -- configuration ------------------------------------------------------
+    def set_settings(self, settings: Mapping[str, Any],
+                     default_freq: int = 0) -> None:
+        """Current per-bucket settings (controller.BucketSetting) stamped
+        into every record drained from now on."""
+        with self._lock:
+            self._settings = dict(settings)
+            self._default_freq = default_freq
+
+    # -- hot path -----------------------------------------------------------
+    def emit(self, step: int, stats: Mapping[str, Any]) -> None:
+        """Buffer one step's device stats. No host sync, no I/O."""
+        with self._lock:
+            if len(self._buf) == self._buf.maxlen:
+                self.dropped += 1
+            self._buf.append((int(step), stats, self._settings,
+                              self._default_freq))
+            self._emitted += 1
+
+    # -- off the critical path ---------------------------------------------
+    def drain(self) -> List[Record]:
+        """Move everything buffered to the host: device_get, write records,
+        update windows. Returns the records drained this call.
+
+        ``self._lock`` is held only for the O(1) buffer swap and the window
+        bookkeeping — never across device_get or writer I/O, so the train
+        loop's ``emit`` cannot block on disk. Writers are serialized by
+        ``self._drain_lock`` (also taken by ``close``)."""
+        with self._drain_lock:
+            with self._lock:
+                items = list(self._buf)
+                self._buf.clear()
+            recs: List[Record] = []
+            for step, stats, settings, default_freq in items:
+                recs.extend(stats_to_records(
+                    step, stats, settings=settings,
+                    default_update_freq=default_freq))
+            if self.validate:
+                for rec in recs:
+                    validate_record(rec)
+            with self._lock:
+                for rec in recs:
+                    win = self._windows.setdefault(
+                        rec["bucket"],
+                        collections.deque(maxlen=self.window))
+                    win.append(rec)
+                self.records_written += len(recs)
+            for w in self.writers:
+                for rec in recs:
+                    w.write(rec)
+            for w in self.writers:
+                w.flush()
+            return recs
+
+    # -- background drain ---------------------------------------------------
+    def start(self, interval: float = 0.25) -> None:
+        """Spawn the daemon drain thread (drains every ``interval`` s).
+        A drain failure (writer I/O error, schema violation) is recorded in
+        ``last_error`` and the thread keeps running — telemetry must never
+        take the training run down with it."""
+        if self._thread is not None:
+            return
+
+        def loop():
+            while not self._stop.wait(interval):
+                try:
+                    self.drain()
+                except Exception as e:
+                    self.last_error = e
+
+        self._thread = threading.Thread(target=loop, daemon=True)
+        self._thread.start()
+
+    def stop(self) -> None:
+        if self._thread is not None:
+            self._stop.set()
+            self._thread.join()
+            self._thread = None
+            self._stop.clear()
+        self.drain()
+
+    def close(self) -> None:
+        """Stop the drain thread, flush everything, close writers."""
+        self.stop()
+        with self._drain_lock:      # serialize against any in-flight drain
+            for w in self.writers:
+                w.close()
+            self.writers = []
+
+    def rewind(self, step: int) -> None:
+        """Forget buffered/windowed records at or after ``step`` — called on
+        fault-recovery restore so the replayed steps don't double-count in
+        the controller's windows. Already-flushed writer output is NOT
+        rewritten: the JSONL/CSV stream has at-least-once semantics and may
+        contain the pre-fault records for replayed steps (dedupe downstream
+        on (step, bucket), keeping the last occurrence)."""
+        with self._drain_lock:
+            with self._lock:
+                kept = [it for it in self._buf if it[0] < step]
+                self._buf.clear()
+                self._buf.extend(kept)
+                for win in self._windows.values():
+                    recs = [r for r in win if r["step"] < step]
+                    win.clear()
+                    win.extend(recs)
+
+    # -- windowed aggregation ----------------------------------------------
+    def window_aggregate(self, bucket: str) -> Optional[WindowAggregate]:
+        with self._lock:
+            win = self._windows.get(bucket)
+            if not win:
+                return None
+            recs = list(win)
+        kappas = np.array([r["kappa"] for r in recs])
+        energies = np.array([r["energy"] for r in recs])
+        orthos = np.array([r["ortho_residual"] for r in recs])
+        # rank may have changed inside the window (controller applied):
+        # aggregate the spectrum over the trailing CONTIGUOUS run of
+        # same-rank records — records before an r→r'→r flip-flop belong to a
+        # different basis regime even when their rank matches.
+        rank = len(recs[-1]["sigma"])
+        sig = []
+        for r in reversed(recs):
+            if len(r["sigma"]) != rank:
+                break
+            sig.append(r["sigma"])
+        sig.reverse()
+        return WindowAggregate(
+            n=len(recs),
+            last_step=recs[-1]["step"],
+            kappa_mean=float(kappas.mean()),
+            kappa_max=float(kappas.max()),
+            energy_mean=float(energies.mean()),
+            energy_min=float(energies.min()),
+            ortho_max=float(orthos.max()),
+            sigma_mean=np.mean(np.asarray(sig, dtype=np.float64), axis=0),
+            refresh_rate=float(np.mean([r["refresh_fired"] for r in recs])),
+        )
+
+    def window_aggregates(self) -> Dict[str, WindowAggregate]:
+        with self._lock:
+            buckets = list(self._windows)
+        out = {}
+        for b in buckets:
+            agg = self.window_aggregate(b)
+            if agg is not None:
+                out[b] = agg
+        return out

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import json
 import os
+import re
 import shutil
 import threading
 from typing import Any, Optional
@@ -32,10 +33,15 @@ import jax
 import numpy as np
 
 from ..core.optimizer import BUCKET_KEY_RE, bucket_key
-from ..core.sumo import SumoState, sumo_state_layout
+from ..core.sumo import SpectralStats, SumoState, sumo_state_layout
 
 PyTree = Any
 _SEP = "|"
+
+# A SumoState.stats leaf in the flattened key space:
+# [<prefix>|]stats|LONGxSHORT|<SpectralStats field>
+_SUMO_STATS_KEY_RE = re.compile(
+    r"(^|\|)stats\|\d+x\d+\|(%s)$" % "|".join(SpectralStats._fields))
 
 
 def _path_key(path) -> str:
@@ -69,6 +75,16 @@ def _unflatten_into(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
             out.append(None)
             continue
         if key not in flat:
+            # Telemetry stats are derived per-step diagnostics, not training
+            # state: a checkpoint written with probes off restores into a
+            # probes-on template by keeping the template's zero-filled stats
+            # (the reverse direction just ignores the extra saved entries).
+            # Anchored to the exact SumoState.stats shape —
+            # ...|stats|LONGxSHORT|<SpectralStats field> — so a model subtree
+            # that happens to be named "stats" still raises on missing leaves.
+            if _SUMO_STATS_KEY_RE.search(key):
+                out.append(leaf)
+                continue
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = flat[key]
         if tuple(arr.shape) != tuple(leaf.shape):
@@ -192,6 +208,16 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         steps = self.all_steps()
         return steps[-1] if steps else None
+
+    def read_manifest(self, step: Optional[int] = None) -> dict:
+        """Manifest alone, without restoring state — lets callers adapt the
+        restore TEMPLATE to what the checkpoint recorded (e.g. the
+        controller's per-bucket settings that shaped the optimizer state)."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.directory}")
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)
 
     # -- save ----------------------------------------------------------------
     def save(self, step: int, state: PyTree, extra: Optional[dict] = None,

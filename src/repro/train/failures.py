@@ -50,6 +50,12 @@ class StragglerMonitor:
         self.times: list[float] = []
         self.events: list[tuple[int, float]] = []
 
+    def note_recompile(self) -> None:
+        """Forget timing history so the warmup exemption re-applies — call
+        after any deliberate recompile (controller rebuild, restart), which
+        would otherwise look like a 100× straggler step."""
+        self.times.clear()
+
     def observe(self, step: int, seconds: float) -> None:
         if not self.enabled:
             return

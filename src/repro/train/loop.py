@@ -1,5 +1,20 @@
 """The training loop: jitted step + checkpointing + fault tolerance +
-deterministic data replay. Used by examples/ and launch/train.py."""
+deterministic data replay + spectral telemetry and the adaptive rank/refresh
+controller. Used by examples/ and launch/train.py.
+
+Telemetry wiring: ``TrainConfig.telemetry`` turns on SUMO's on-device
+spectral probes; each step's per-bucket stats are handed (still as device
+arrays — no extra host sync) to an async ``TelemetrySink`` whose background
+thread drains them to JSONL off the critical path. ``TrainConfig.controller``
+additionally runs a ``RankRefreshController`` every ``controller_interval``
+steps (default: the refresh cadence, so decisions land on refresh
+boundaries): changed decisions rebuild the optimizer with new
+``bucket_overrides`` (a static config ⇒ one controlled recompile), resize the
+bucket-resident state, and are recorded in ``TrainResult.controller_events``.
+Checkpoints record the per-bucket settings that shaped their optimizer state
+in the manifest, and fault recovery adopts them before building the restore
+template — restores work on either side of a controller decision.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -12,6 +27,15 @@ import jax.numpy as jnp
 from ..configs.base import ArchConfig, ShapeConfig
 from ..data import DataConfig, make_batch
 from ..models import init_params
+from ..telemetry import (
+    ControllerConfig,
+    JsonlWriter,
+    RankRefreshController,
+    TelemetrySink,
+    apply_decisions,
+    initial_settings,
+    overrides_from_settings,
+)
 from .checkpoint import CheckpointManager
 from .failures import FaultInjector, StragglerMonitor, supervise
 from .steps import make_optimizer, make_train_step
@@ -36,6 +60,14 @@ class TrainConfig:
     ckpt_async: bool = True
     log_every: int = 10
     seed: int = 0
+    # -- spectral telemetry (SUMO only) ------------------------------------
+    telemetry: bool = False            # emit per-bucket SpectralStats
+    telemetry_out: Optional[str] = None  # JSONL path (None = collect only)
+    telemetry_window: int = 8          # sliding-window size per bucket
+    # -- adaptive rank/refresh controller (implies telemetry) --------------
+    controller: bool = False
+    controller_interval: int = 0       # steps between checks; 0 = update_freq
+    controller_config: Optional[ControllerConfig] = None
 
 
 @dataclasses.dataclass
@@ -45,6 +77,8 @@ class TrainResult:
     restarts: int
     params: object
     opt_state: object
+    telemetry_records: int = 0
+    controller_events: list = dataclasses.field(default_factory=list)
 
 
 def train(
@@ -56,37 +90,120 @@ def train(
 ) -> TrainResult:
     key = jax.random.PRNGKey(tcfg.seed)
     params0 = init_params(arch, key)
-    tx = make_optimizer(
-        tcfg.optimizer, tcfg.learning_rate, params0,
-        rank=tcfg.rank, update_freq=tcfg.update_freq,
-        weight_decay=tcfg.weight_decay, state_layout=tcfg.state_layout,
-    )
-    step_fn = jax.jit(
-        make_train_step(arch, tx, attn_impl=tcfg.attn_impl, accum=tcfg.accum),
-        donate_argnums=(0, 1),
-    )
+
+    telemetry_on = tcfg.telemetry or tcfg.controller
+    if telemetry_on and not tcfg.optimizer.startswith("sumo"):
+        raise ValueError(
+            f"telemetry/controller require a SUMO optimizer, "
+            f"got {tcfg.optimizer!r}")
+    if tcfg.controller and tcfg.state_layout == "leaf":
+        # fail fast: rank resizes need the bucket-resident stacks — don't
+        # let a run crash hours in at the first grow/shrink decision.
+        raise ValueError(
+            "controller rank adaptation requires bucket-resident SUMO state "
+            "(state_layout 'auto' or 'bucket', got 'leaf')")
+
+    # Per-bucket settings (rank/update_freq) — the controller's mutable view.
+    settings = initial_settings(params0, tcfg.rank, tcfg.update_freq)
+
+    def build(overrides):
+        """(tx, jitted step_fn) for the current bucket overrides — each
+        rebuild is the controlled recompile point."""
+        kw = {}
+        if telemetry_on:
+            kw["telemetry"] = True
+            kw["bucket_overrides"] = overrides
+        tx = make_optimizer(
+            tcfg.optimizer, tcfg.learning_rate, params0,
+            rank=tcfg.rank, update_freq=tcfg.update_freq,
+            weight_decay=tcfg.weight_decay, state_layout=tcfg.state_layout,
+            **kw,
+        )
+        step_fn = jax.jit(
+            make_train_step(arch, tx, attn_impl=tcfg.attn_impl,
+                            accum=tcfg.accum),
+            donate_argnums=(0, 1),
+        )
+        return tx, step_fn
+
+    tx, step_fn = build(overrides_from_settings(settings) if telemetry_on
+                        else ())
+
+    sink = ctrl = None
+    ctrl_interval = 0
+    if telemetry_on:
+        ccfg = tcfg.controller_config or ControllerConfig()
+        window = tcfg.telemetry_window
+        if tcfg.controller and window < ccfg.window:
+            # a sink window smaller than the controller's would keep
+            # WindowAggregate.n below the decide threshold forever —
+            # silently disabling the controller. Widen it.
+            window = ccfg.window
+        writers = [JsonlWriter(tcfg.telemetry_out)] if tcfg.telemetry_out else []
+        sink = TelemetrySink(writers=writers, window=window)
+        sink.set_settings(settings, default_freq=tcfg.update_freq)
+        sink.start()
+        if tcfg.controller:
+            ctrl = RankRefreshController(ccfg)
+            ctrl_interval = tcfg.controller_interval or tcfg.update_freq
+
     ckpt = CheckpointManager(tcfg.ckpt_dir, keep=tcfg.ckpt_keep) if tcfg.ckpt_dir else None
     monitor = StragglerMonitor(enabled=fault_injector is not None)
     losses: list = []
     restarts = [0]
     holder = {}
+    controller_events: list = []
 
     def run_from(start_step: int) -> int:
+        nonlocal tx, step_fn, settings
+        # A restart is a fresh process in production: forget step timings so
+        # the resume step's (re)compile doesn't read as a straggler.
+        monitor.note_recompile()
+        # params0 must survive this run's donation (the jitted step donates
+        # its params argument) so later cold restarts and restore templates
+        # still work — hand the loop a copy, keep the original alive.
+        fresh_params = lambda: jax.tree_util.tree_map(
+            lambda x: x.copy(), params0)
         if start_step == -1:  # resume from latest checkpoint
             restarts[0] += 1
             if ckpt.latest_step() is None:
-                params, opt_state = params0, tx.init(params0)
+                params, opt_state = fresh_params(), tx.init(params0)
                 step = 0
                 log_fn(f"[recovery] no checkpoint yet — cold restart (#{restarts[0]})")
             else:
+                if telemetry_on:
+                    # The manifest records the per-bucket settings the
+                    # checkpoint's state was SHAPED by (saved below) — adopt
+                    # them before building the restore template, otherwise a
+                    # checkpoint on the far side of a controller rank change
+                    # would fail the template's shape check.
+                    saved = ckpt.read_manifest().get("bucket_overrides") or []
+                    ckpt_settings = initial_settings(params0, tcfg.rank,
+                                                     tcfg.update_freq)
+                    for b, r, f in saved:
+                        if b in ckpt_settings:
+                            ckpt_settings[b] = dataclasses.replace(
+                                ckpt_settings[b], rank=r, update_freq=f)
+                    if ckpt_settings != settings:
+                        settings = ckpt_settings
+                        sink.set_settings(settings,
+                                          default_freq=tcfg.update_freq)
+                        tx, step_fn = build(overrides_from_settings(settings))
+                        log_fn("[recovery] controller settings restored "
+                               "from checkpoint manifest")
                 template = {"params": params0, "opt_state": tx.init(params0)}
                 state, manifest = ckpt.restore(template)
                 params, opt_state = state["params"], state["opt_state"]
                 step = manifest["step"]
+                if sink is not None:
+                    # replayed steps re-emit: drop their pre-fault records
+                    # from the controller windows (the JSONL stream keeps
+                    # at-least-once semantics — see TelemetrySink.rewind)
+                    sink.rewind(step)
                 log_fn(f"[recovery] restored step {step} after fault "
                        f"(restart #{restarts[0]})")
         else:
-            params, opt_state = params0, tx.init(params0)
+            params, opt_state = fresh_params(), tx.init(params0)
             step = start_step
 
         while step < tcfg.total_steps:
@@ -95,6 +212,16 @@ def train(
             batch = make_batch(step, shape, arch, DataConfig(seed=tcfg.seed))
             t0 = time.perf_counter()
             params, opt_state, metrics = step_fn(params, opt_state, batch)
+            tel = metrics.pop("telemetry", None)
+            if sink is not None and tel is not None:
+                # Device-side copy before buffering: the stats in metrics
+                # alias SumoState.stats, whose buffers are DONATED back into
+                # the next step — without the copy the async drain could
+                # device_get already-deleted buffers on backends where
+                # donation is real (TPU/GPU). Tiny arrays, async, no host
+                # sync.
+                sink.emit(step, jax.tree_util.tree_map(
+                    lambda x: x.copy(), tel))
             loss = float(metrics["loss"])
             monitor.observe(step, time.perf_counter() - t0)
             losses.append((step, loss))
@@ -102,24 +229,51 @@ def train(
                 log_fn(f"step {step:5d} loss {loss:.4f} "
                        f"gnorm {float(metrics['grad_norm']):.3f}")
             step += 1
+            if ctrl is not None and step % ctrl_interval == 0:
+                sink.drain()   # decisions see everything up to this step
+                decisions = ctrl.decide(sink.window_aggregates(), settings)
+                opt_state, settings, overrides, reasons = apply_decisions(
+                    opt_state, settings, decisions)
+                if reasons:
+                    sink.set_settings(settings,
+                                      default_freq=tcfg.update_freq)
+                    tx, step_fn = build(overrides)
+                    monitor.note_recompile()   # next step pays a compile
+                    for bucket, why in sorted(reasons.items()):
+                        controller_events.append((step, bucket) + why)
+                        log_fn(f"[controller] step {step} {bucket}: "
+                               + "; ".join(why))
             if ckpt and (step % tcfg.ckpt_every == 0 or step == tcfg.total_steps):
+                extra = {"arch": arch.name, "optimizer": tcfg.optimizer}
+                if telemetry_on:
+                    # shape provenance for the recovery path above
+                    extra["bucket_overrides"] = [
+                        list(o) for o in overrides_from_settings(settings)]
                 ckpt.save(step, {"params": params, "opt_state": opt_state},
-                          extra={"arch": arch.name, "optimizer": tcfg.optimizer},
-                          blocking=not tcfg.ckpt_async)
+                          extra=extra, blocking=not tcfg.ckpt_async)
         if ckpt:
             ckpt.wait()
         holder["params"], holder["opt_state"] = params, opt_state
         return step
 
-    if fault_injector is not None:
-        if ckpt is None:
-            raise ValueError("fault tolerance requires ckpt_dir")
-        report = supervise(run_from)
-        final = report.final_step
-    else:
-        final = run_from(0)
+    try:
+        if fault_injector is not None:
+            if ckpt is None:
+                raise ValueError("fault tolerance requires ckpt_dir")
+            report = supervise(run_from)
+            final = report.final_step
+        else:
+            final = run_from(0)
+    finally:
+        if sink is not None:
+            try:
+                sink.close()
+            except Exception as e:   # telemetry must never eat the result
+                log_fn(f"[telemetry] sink close failed: {e!r}")
 
     return TrainResult(
         losses=losses, final_step=final, restarts=restarts[0],
         params=holder.get("params"), opt_state=holder.get("opt_state"),
+        telemetry_records=sink.records_written if sink is not None else 0,
+        controller_events=controller_events,
     )

@@ -20,6 +20,7 @@ from ..core import (
     sumo_optimizer,
 )
 from ..models import loss_fn
+from ..telemetry.probes import extract_stats
 
 
 def make_optimizer(name: str, learning_rate, params, cfg: Optional[ArchConfig] = None,
@@ -33,7 +34,9 @@ def make_optimizer(name: str, learning_rate, params, cfg: Optional[ArchConfig] =
     ``state_layout`` picks where SUMO's Q/M/prev_norm live ("auto" =
     bucket-resident under the bucketed engine, per-leaf otherwise); ``mesh``
     enables SUMO's shard_map bucket-update path. Non-SUMO optimizers ignore
-    all three.
+    all three. Extra ``**kw`` reach SumoConfig — notably ``telemetry=True``
+    (spectral probes) and ``bucket_overrides`` (the controller's per-bucket
+    rank/refresh settings).
     """
     name = name.lower()
     if name == "sumo":
@@ -112,6 +115,11 @@ def make_train_step(cfg: ArchConfig, tx, attn_impl: str = "flash",
             "grad_norm": global_norm(grads),
             "update_norm": global_norm(updates),
         }
+        # Spectral telemetry rides along as ordinary jit outputs (device
+        # arrays, no host sync here); the loop hands them to the async sink.
+        tel = extract_stats(new_opt_state)
+        if tel:
+            metrics["telemetry"] = tel
         return new_params, new_opt_state, metrics
 
     return train_step

@@ -11,11 +11,15 @@ What is pinned here:
     bucketed engine across a refresh boundary (the rSVD sketch, projection,
     moment and orthogonalization are all per-matrix, so sharding B changes
     nothing);
-  * buckets whose stacked size does not divide the mesh axis fall back to
-    the vmap path and still match;
+  * RAGGED buckets (B % axis_size != 0, e.g. an odd layer count) run under
+    shard_map via masked zero-padding slots and still bit-match — only
+    singleton (B == 1) buckets keep the vmap fallback;
   * steady state moves NO optimizer state across devices: the only
     collective in the compiled update is the explicit all-gather of the
-    delta stacks (asserted via the roofline HLO cost parser).
+    delta stacks (asserted via the roofline HLO cost parser);
+  * spectral telemetry probes (SumoConfig.telemetry) are bit-identical
+    between the sharded and unsharded engines (per-matrix stats are
+    all-gathered and reduced by the same host-visible code path).
 """
 import os
 import subprocess
@@ -76,6 +80,63 @@ def test_shard_map_matches_single_device(refresh_quality):
                 err_msg=f"step {step} leaf {k}")
     for fa, fb in zip(jax.tree_util.tree_leaves(ss), jax.tree_util.tree_leaves(sp)):
         np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+@needs_8_devices
+@pytest.mark.parametrize("refresh_quality", [0.0, 0.5],
+                         ids=["cadence-only", "adaptive"])
+def test_ragged_bucket_pads_and_matches(refresh_quality):
+    """Odd layer count: 5× (64, 32) leaves -> a B=5 bucket on an 8-device
+    axis. The shard_map path pads to B=8 with masked zero slots (which must
+    NOT trip the adaptive-refresh predicate) and stays bit-identical to the
+    unsharded engine across a refresh boundary."""
+    from repro.core import SumoConfig, sumo
+
+    mesh = jax.make_mesh((8,), ("data",))
+    key = jax.random.PRNGKey(3)
+    params = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (64, 32))
+              for i in range(5)}
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=8, update_freq=3, weight_decay=0.05,
+                     refresh_quality=refresh_quality)
+
+    us, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 5)
+    up, sp = _run(sumo(0.01, cfg), params, grads, 5)
+
+    for step, (a, b) in enumerate(zip(us, up)):
+        for k in params:
+            np.testing.assert_array_equal(
+                np.asarray(a[k]), np.asarray(b[k]),
+                err_msg=f"step {step} leaf {k}")
+    for fa, fb in zip(jax.tree_util.tree_leaves(ss),
+                      jax.tree_util.tree_leaves(sp)):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+    assert ss.Q["64x32"].shape == (5, 64, 8)   # state itself is NOT padded
+
+
+@needs_8_devices
+def test_sharded_telemetry_stats_match_unsharded():
+    """SpectralStats from the shard_map path (per-matrix stats all-gathered,
+    reduced outside the shard) are bit-identical to the unsharded engine's,
+    for divisible, ragged and fallback-singleton buckets alike."""
+    from repro.core import SumoConfig, sumo
+
+    mesh = jax.make_mesh((8,), ("data",))
+    key = jax.random.PRNGKey(4)
+    params = _params(key)                       # B=16, B=1 buckets
+    params["ragged"] = jax.random.normal(jax.random.fold_in(key, 7), (3, 80, 24))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=8, update_freq=3, telemetry=True)
+
+    _, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 4)
+    _, sp = _run(sumo(0.01, cfg), params, grads, 4)
+    assert set(ss.stats) == set(sp.stats) == {"64x32", "48x16", "80x24"}
+    for bucket in ss.stats:
+        for field, a, b in zip(ss.stats[bucket]._fields, ss.stats[bucket],
+                               sp.stats[bucket]):
+            np.testing.assert_array_equal(
+                np.asarray(a), np.asarray(b),
+                err_msg=f"{bucket}.{field}")
 
 
 @needs_8_devices

@@ -9,9 +9,20 @@
 # subprocess wrapper covers them when slow tests are selected). Pass 2 re-runs
 # the sharded tests in-process on a forced 8-host-device CPU backend, which is
 # the direct, debuggable way to exercise the shard_map bucket-update path.
+# Pass 3 is the telemetry smoke: a short probes+sink+controller train run
+# must emit a non-empty, schema-valid JSONL stream (tools/telemetry_smoke.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+# Guard: compiled bytecode must never be tracked (PR 3 untracked the last).
+if git ls-files -- '*.pyc' '*.pyo' | grep -q .; then
+  echo "ERROR: tracked Python bytecode files:" >&2
+  git ls-files -- '*.pyc' '*.pyo' >&2
+  exit 1
+fi
+
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q tests/test_sumo_sharded.py -k "not subprocess"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tools/telemetry_smoke.py
