@@ -163,3 +163,74 @@ def run(csv_rows: list) -> None:
         * 100,
         "un-amortized optimizer-only overhead (informational)",
     ))
+
+    _run_2d_mesh_axis(csv_rows)
+
+
+def _run_2d_mesh_axis(csv_rows: list) -> None:
+    """2D-mesh (data=2, model=4) refresh-cost axis: step time for the
+    steady-state and every-step-refresh regimes of the model-sharded bucket
+    update, plus an HLO collective-bytes audit (roofline/hlo_cost, which
+    charges the worst-case cond branch — i.e. the refresh's r-width panels).
+
+    Needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8 on
+    CPU); under the default single-device container it emits a skip row so
+    the CSV schema is stable. Wall times on forced host devices are
+    relative numbers only — the collective-bytes rows are the portable
+    signal (they are what the interconnect pays at any scale).
+    """
+    if jax.device_count() < 8:
+        csv_rows.append(("sumo_2d_mesh/SKIPPED", 0.0,
+                         "needs >= 8 devices (XLA_FLAGS host count)"))
+        return
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import SumoConfig, sumo
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel import opt_state_specs
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    mesh = make_host_mesh(model=4)
+    key = jax.random.PRNGKey(3)
+    # 8× (256, 64): one B=8 bucket, long 256 sharded 4-way, B 2-way.
+    p2d = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (256, 64))
+           for i in range(8)}
+    g2d = jax.tree_util.tree_map(lambda x: x * 0.01, p2d)
+    delta_bytes = sum(int(x.size) * 4 for x in p2d.values())
+
+    cost = None
+    for regime, freq in (("steady", 1000), ("refresh_every_step", 1)):
+        tx = sumo(1e-3, SumoConfig(rank=16, update_freq=freq), mesh=mesh)
+        st = tx.init(p2d)
+        named = lambda tree: jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        st_sh = named(opt_state_specs(st, mesh))
+        rep = jax.tree_util.tree_map(
+            lambda _: NamedSharding(mesh, P()), g2d)
+        upd = jax.jit(lambda g, s, p: tx.update(g, s, p),
+                      in_shardings=(rep, st_sh, rep))
+        if cost is None:
+            # one audit serves both regimes: the refresh lives in a cond
+            # branch of the SAME program, and analyze_hlo charges the
+            # worst-case branch — so this is the refresh-step bound.
+            cost = analyze_hlo(upd.lower(g2d, st, p2d).compile().as_text())
+        _, st = upd(g2d, st, p2d)          # compile + move past step 0
+        us = _time_step(upd, g2d, st, p2d) * 1e6
+        csv_rows.append((f"sumo_2d_mesh/step_us/{regime}", us,
+                         "8x(256,64) r=16 (data=2,model=4)"))
+    brk = ";".join(f"{k}={int(v)}" for k, v in
+                   sorted(cost.collective_breakdown.items()))
+    csv_rows.append(("sumo_2d_mesh/collective_bytes", cost.collective_bytes,
+                     f"worst-case(refresh) {brk} delta_bytes={delta_bytes}"))
+    # the portable headline: cross-shard traffic beyond the delta gather is
+    # r-width — report the ratio so regressions (an accidental full-matrix
+    # psum or re-gather) jump out of the CSV. The expected delta gathers
+    # move delta_bytes (the B-axis gather of the full stack) plus
+    # delta_bytes / data_size (the model-axis gather of each data shard's
+    # B-block) — hlo_cost counts result-buffer sizes.
+    expected_gather = delta_bytes * (1 + 1 / mesh.shape["data"])
+    csv_rows.append((
+        "sumo_2d_mesh/nondelta_collective_frac",
+        max(0.0, cost.collective_bytes - expected_gather) / delta_bytes,
+        "refresh-regime collective bytes beyond the delta gathers, / delta",
+    ))

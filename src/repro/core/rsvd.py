@@ -1,19 +1,47 @@
-"""Truncated randomized SVD (Halko, Martinsson, Tropp 2010) — jittable.
+"""Truncated randomized SVD (Halko, Martinsson, Tropp 2010) — jittable,
+single-device or row-sharded across a named mesh axis.
 
 Used by SUMO / GaLore Block 1 to compute the rank-r orthonormal basis Q of the
 gradient every K steps at O(mnr + mr^2) instead of full-SVD O(mn^2).
 
-All functions are pure and jit/vmap/shard_map friendly. The only non-matmul
-op is the QR factorization of the m×r (or n×r) sketch.
+All functions are pure and jit/vmap/shard_map friendly.
 
-Distributed note: G may be sharded over its rows (model axis). ``G @ Omega``
-and ``G.T @ Y`` are tall-skinny matmuls that pjit auto-partitions with a
-single reduce-scatter/all-gather of an r-width panel — this is why the
-subspace refresh costs O(r(m+n)) in collective bytes, not O(mn).
+Truncation: the oversampled sketch basis comes out of an orthogonalization
+whose columns are NOT ordered by singular mass, so slicing ``Q[:, :rank]``
+would throw the oversampling away (and can miss top directions outright when
+the sketch mixes them into trailing columns). Both entry points therefore
+truncate through the small factorization ``B = QᵀG``: ``svd(B) = Ub·s·Vt``
+rotates the basis into singular order and ``Q @ Ub[:, :rank]`` keeps exactly
+the top-rank directions of the oversampled subspace.
+``randomized_range_finder`` and ``randomized_svd`` share this factorization
+(``_halko_factor``), so the U they return is the same array computed by the
+same ops — the range finder is simply the SVD with s/Vt discarded.
+
+Distributed path (``axis_name``): G may arrive row-sharded over a shard_map
+mesh axis — each shard holds a contiguous (m_loc, n) row block and the full
+matrix is NEVER gathered. The collectives are all r-width panels:
+
+  * ``G @ Omega`` and ``G @ Z`` are shard-local tall-skinny matmuls (Omega/Z
+    are replicated (n, l) panels) — zero collectives;
+  * ``Gᵀ @ Q`` and ``B = Qᵀ @ G`` produce per-shard partial (n, l)/(l, n)
+    panels finished with one ``psum`` each — O(l·n) bytes, not O(m·n);
+  * the thin-QR of the row-sharded (m, l) sketch is replaced by a
+    CholeskyQR2-style Gram factorization: ``psum(YᵀY)`` (an l×l panel) +
+    a small host-free Cholesky triangular solve, iterated twice for fp32
+    stability (one pass loses ~κ(Y)² digits; the second restores
+    orthonormality to fp32 roundoff).
+
+So a refresh of a sharded (m, n) matrix costs O(l·(m/p + n)) local work and
+O(l·(n + l)) collective bytes per power iteration — the r-width-collective
+discipline GaLore-style methods rely on. The distributed path assumes the
+canonical long-first orientation (global m ≥ n, SUMO's convention), so the
+sketch width l is clamped by n alone. With ``axis_name=None`` the code is the
+plain single-device Halko pipeline (thin jnp QR, no collectives).
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,48 +53,130 @@ def _orthonormalize(Y: jnp.ndarray) -> jnp.ndarray:
     return Q
 
 
-@partial(jax.jit, static_argnames=("rank", "n_iter", "oversample"))
+def _cholesky_qr2(Y: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """Orthonormalize a row-sharded tall-skinny panel without gathering it.
+
+    Y is the local (m_loc, l) row block of a global (m, l) panel sharded over
+    ``axis_name``. Each pass forms the GLOBAL Gram matrix with an l×l psum,
+    factors it (Cholesky) and applies the inverse triangular factor locally:
+    Q = Y·L⁻ᵀ satisfies QᵀQ = L⁻¹(YᵀY)L⁻ᵀ = I. One pass is accurate to
+    ~κ(Y)²·eps; the second pass (CholeskyQR2) runs on an already
+    near-orthonormal panel (κ ≈ 1) and lands on fp32 roundoff.
+
+    The Gram matrix carries a tiny relative shift before factoring so
+    rank-deficient panels (zero gradients, the bucketed engine's masked pad
+    slots) stay finite — they come back as zero columns instead of NaNs, and
+    for well-conditioned panels the second pass absorbs the perturbation.
+    """
+    l = Y.shape[-1]
+    eye = jnp.eye(l, dtype=jnp.float32)
+    for _ in range(2):
+        gram = jax.lax.psum(Y.T @ Y, axis_name)          # (l, l) panel
+        shift = 1e-12 * (jnp.trace(gram) / l) + 1e-30
+        L = jnp.linalg.cholesky(gram + shift * eye)
+        # Y <- Y L^-T, i.e. solve L X = Yᵀ and transpose back.
+        Y = jax.scipy.linalg.solve_triangular(L, Y.T, lower=True).T
+    return Y
+
+
+def _sketch_basis(
+    G32: jnp.ndarray,
+    key: jax.Array,
+    l: int,
+    n_iter: int,
+    axis_name: Optional[str],
+) -> jnp.ndarray:
+    """Orthonormal basis (m, l) of the oversampled range sketch, with power
+    iteration. G32 is fp32, row-sharded over ``axis_name`` when given (the
+    random Omega is generated identically on every shard from the shared
+    key, so no broadcast is needed)."""
+    n = G32.shape[1]
+    ortho = (
+        (lambda Y: _cholesky_qr2(Y, axis_name))
+        if axis_name is not None
+        else _orthonormalize
+    )
+    Omega = jax.random.normal(key, (n, l), dtype=jnp.float32)
+    Q = ortho(G32 @ Omega)                    # (m, l), shard-local matmul
+    for _ in range(n_iter):
+        # subspace/power iteration with re-orthonormalization for stability
+        Z = G32.T @ Q                         # (n, l) partial per shard
+        if axis_name is not None:
+            Z = jax.lax.psum(Z, axis_name)    # r-width panel reduce
+        Z = _orthonormalize(Z)                # replicated: plain thin QR
+        Q = ortho(G32 @ Z)                    # (m, l)
+    return Q
+
+
+def _halko_factor(
+    G: jnp.ndarray,
+    key: jax.Array,
+    rank: int,
+    n_iter: int,
+    oversample: int,
+    axis_name: Optional[str],
+):
+    """Shared core of both entry points: sketch basis + small factorization.
+
+    Returns (U, s, Vt) with U = Q_sketch @ Ub — the properly truncated
+    rank-`rank` factors. U is row-sharded like G under ``axis_name``."""
+    m, n = G.shape
+    # Sketch width: oversampled, clamped by the short dim. On the distributed
+    # path m is the LOCAL row count, so the clamp uses n alone (the canonical
+    # long-first orientation guarantees global m >= n >= l).
+    l = min(rank + oversample, n if axis_name is not None else min(m, n))
+    G32 = G.astype(jnp.float32)
+    Q = _sketch_basis(G32, key, l, n_iter, axis_name)    # (m, l)
+    B = Q.T @ G32                                        # (l, n) partial
+    if axis_name is not None:
+        B = jax.lax.psum(B, axis_name)                   # r-width panel
+    Ub, s, Vt = jnp.linalg.svd(B, full_matrices=False)   # small: l x n
+    U = Q @ Ub[:, :rank]                                 # spectral truncation
+    return U, s[:rank], Vt[:rank]
+
+
+@partial(jax.jit, static_argnames=("rank", "n_iter", "oversample", "axis_name"))
 def randomized_range_finder(
     G: jnp.ndarray,
     key: jax.Array,
     rank: int,
     n_iter: int = 2,
     oversample: int = 4,
+    axis_name: Optional[str] = None,
 ) -> jnp.ndarray:
     """Rank-`rank` orthonormal basis Q (m × rank) of the row space of G (m × n).
 
     Power iteration (n_iter) sharpens the spectrum separation; oversampling
-    improves accuracy then truncates back to `rank`.
+    improves accuracy, and the truncation back to `rank` goes through the
+    SVD of the small ``B = QᵀG`` (see module docstring) so the kept columns
+    are the TOP singular directions of the oversampled subspace, in order.
+
+    ``axis_name``: when set, G is the local row block of a matrix sharded
+    over that shard_map mesh axis and Q comes back sharded the same way —
+    only r-width panels cross shards. Requires the canonical long-first
+    orientation (global rows ≥ n).
     """
-    m, n = G.shape
-    l = min(rank + oversample, min(m, n))
-    G32 = G.astype(jnp.float32)
-    Omega = jax.random.normal(key, (n, l), dtype=jnp.float32)
-    Y = G32 @ Omega                       # (m, l)
-    Q = _orthonormalize(Y)
-    for _ in range(n_iter):
-        # subspace/power iteration with re-orthonormalization for stability
-        Z = G32.T @ Q                     # (n, l)
-        Z = _orthonormalize(Z)
-        Y = G32 @ Z                       # (m, l)
-        Q = _orthonormalize(Y)
-    return Q[:, :rank]
+    U, _, _ = _halko_factor(G, key, rank, n_iter, oversample, axis_name)
+    return U
 
 
-@partial(jax.jit, static_argnames=("rank", "n_iter", "oversample"))
+@partial(jax.jit, static_argnames=("rank", "n_iter", "oversample", "axis_name"))
 def randomized_svd(
     G: jnp.ndarray,
     key: jax.Array,
     rank: int,
     n_iter: int = 2,
     oversample: int = 4,
+    axis_name: Optional[str] = None,
 ):
-    """Truncated rSVD: returns (U (m,r), s (r,), Vt (r,n))."""
-    Q = randomized_range_finder(G, key, rank, n_iter, oversample)  # (m, r)
-    B = Q.T @ G.astype(jnp.float32)       # (r, n) — small
-    Ub, s, Vt = jnp.linalg.svd(B, full_matrices=False)
-    U = Q @ Ub
-    return U[:, :rank], s[:rank], Vt[:rank]
+    """Truncated rSVD: returns (U (m,r), s (r,), Vt (r,n)).
+
+    Reuses the range finder's factorization (same sketch, same small SVD):
+    ``randomized_svd(G, ...)[0]`` and ``randomized_range_finder(G, ...)``
+    are the same ops in the same order. Under ``axis_name`` U is row-sharded
+    like G; s and Vt are replicated.
+    """
+    return _halko_factor(G, key, rank, n_iter, oversample, axis_name)
 
 
 @partial(jax.jit, static_argnames=("rank",))
@@ -77,6 +187,13 @@ def truncated_svd(G: jnp.ndarray, rank: int):
 
 
 def subspace_overlap(Q1: jnp.ndarray, Q2: jnp.ndarray) -> jnp.ndarray:
-    """‖Q1ᵀQ2‖_F² / r ∈ [0,1] — how aligned two orthonormal bases are."""
-    r = Q1.shape[1]
+    """‖Q1ᵀQ2‖_F² / min(r1, r2) ∈ [0,1] — how aligned two orthonormal bases
+    are.
+
+    Normalizing by min(r1, r2) keeps the score in [0, 1] and symmetric for
+    bases of DIFFERENT ranks (exactly what a controller rank resize
+    produces): ‖Q1ᵀQ2‖_F² sums min(r1, r2) squared principal cosines, so 1.0
+    means the smaller subspace is contained in the larger one.
+    """
+    r = min(Q1.shape[1], Q2.shape[1])
     return jnp.sum(jnp.square(Q1.T @ Q2)) / r

@@ -76,6 +76,27 @@ delta scatter back to (replicated) params gathers. Ragged buckets
 (B % axis_size != 0) are padded with masked zero slots so odd layer counts
 shard too; only singleton (B == 1) buckets keep the single-device vmap path.
 
+2D mesh: when the mesh ALSO has a ``SumoConfig.model_axis`` (default
+``"model"``) of size > 1 and a bucket's long dim divides it, that bucket
+runs the 2D path — each matrix's long dim is sharded over `model` on top of
+B over `data`, so buckets whose MATRICES are themselves model-sharded
+(embed/lm_head/MoE experts at 22B+ scale) refresh without ever re-gathering
+the (long, short) gradient. Q enters and leaves as ``opt_state_specs``
+places it, ``P(data, model, None)``; G/W enter with their long dim sliced
+over `model`; M/prev_norm/O stay replicated over `model` (r-width bytes —
+the point of the paper). The refresh calls the distributed range finder
+(``core.rsvd`` with ``axis_name``: CholeskyQR2 Gram orthogonalization, all
+collectives r-width panels), the projection Ĝ = QᵀG finishes with one
+r-width psum over `model`, the back-projection QO is collective-free, and
+the only full-size transfer remains the explicit delta all-gather (`model`
+rows first, then the B-axis gather). Singleton (B == 1) buckets — exactly
+the embed/lm_head shapes that need model sharding most — run the 2D path
+with B replicated. The `model=1` mesh (or an indivisible long dim) keeps
+the paths above bit-identically: CholeskyQR2 differs from thin QR in the
+last ulp, so it only runs when the matrices are actually sharded; with
+`model>1` the 2D path is pinned to the gathered reference by subspace
+overlap ≥ 1-1e-5 (tests/test_rsvd_sharded.py).
+
 Spectral telemetry
 ------------------
 ``SumoConfig.telemetry=True`` makes the bucketed engine emit one
@@ -191,6 +212,13 @@ class SumoConfig:
     # Mesh axis the shard_map path shards the stacked bucket (B) axis over,
     # when a mesh is passed to sumo(..., mesh=...).
     bucket_axis: str = "data"
+    # Mesh axis the shard_map path shards each matrix's LONG dim over (tensor
+    # parallel). When the mesh has this axis with size > 1 and a bucket's
+    # long dim divides it, the bucket runs the 2D path: Q/G row-sharded over
+    # `model`, the rSVD refresh via the distributed range finder, projection
+    # finished with an r-width psum — no (long, short) collective ever. Long
+    # dims that don't divide the axis fall back to the replicated-long path.
+    model_axis: str = "model"
     # Projection/back-projection impl: "auto" (Pallas on TPU, reference
     # matmul elsewhere), "pallas" (force the kernel; interpret mode on CPU),
     # or "reference".
@@ -200,11 +228,13 @@ class SumoConfig:
     # feed back into the update, so the trajectory is bit-identical with them
     # on or off. Requires the bucketed engine.
     telemetry: bool = False
-    # Per-bucket (rank, update_freq) overrides keyed by the canonical
-    # "LONGxSHORT" bucket id — the knob the RankRefreshController turns.
-    # 0 for either field means "keep the global default". Static (part of the
-    # frozen config), so changing overrides is a controlled recompile point.
-    bucket_overrides: tuple[tuple[str, int, int], ...] = ()
+    # Per-bucket (rank, update_freq[, refresh_quality]) overrides keyed by
+    # the canonical "LONGxSHORT" bucket id — the knob the
+    # RankRefreshController turns. 0 for any field means "keep the global
+    # default"; legacy 3-tuples (no quality entry) are accepted. Static
+    # (part of the frozen config), so changing overrides is a controlled
+    # recompile point.
+    bucket_overrides: tuple[tuple, ...] = ()
 
     def resolved_state_layout(self) -> str:
         if self.state_layout == "auto":
@@ -214,24 +244,34 @@ class SumoConfig:
                 f"unknown state_layout {self.state_layout!r} (have {STATE_LAYOUTS})")
         return self.state_layout
 
-    def _override(self, long_d: int, short_d: int) -> tuple[int, int]:
+    def _override(self, long_d: int, short_d: int) -> tuple[int, int, float]:
         key = opt.bucket_key(long_d, short_d)
-        for k, r, f in self.bucket_overrides:
-            if k == key:
-                return r, f
-        return 0, 0
+        for entry in self.bucket_overrides:
+            if entry[0] == key:
+                k, r, f = entry[:3]
+                q = float(entry[3]) if len(entry) > 3 else 0.0
+                return r, f, q
+        return 0, 0, 0.0
 
     def bucket_rank(self, long_d: int, short_d: int) -> int:
         """Effective subspace rank for a (long, short) bucket: the per-bucket
         override when set, else the global default, never above short."""
-        r, _ = self._override(long_d, short_d)
+        r, _, _ = self._override(long_d, short_d)
         base = r if r > 0 else self.rank
         return max(1, min(base, short_d))
 
     def bucket_update_freq(self, long_d: int, short_d: int) -> int:
         """Refresh cadence K for a (long, short) bucket (override or global)."""
-        _, f = self._override(long_d, short_d)
+        _, f, _ = self._override(long_d, short_d)
         return f if f > 0 else self.update_freq
+
+    def bucket_refresh_quality(self, long_d: int, short_d: int) -> float:
+        """Adaptive-refresh energy threshold ς for a (long, short) bucket
+        (override or global; 0.0 = pure every-K refresh). Both engines
+        evaluate the criterion from this one accessor, so a controller-set
+        per-bucket ς is honored bit-identically by either."""
+        _, _, q = self._override(long_d, short_d)
+        return q if q > 0.0 else self.refresh_quality
 
 
 def _orth(cfg: SumoConfig, M: jnp.ndarray) -> jnp.ndarray:
@@ -274,39 +314,74 @@ def _matrix_update(
     do_refresh: jnp.ndarray,  # bool
     key: jax.Array,
     W: Optional[jnp.ndarray],
-    check_quality: bool = True,
+    quality: float = 0.0,
     with_stats: bool = False,
+    axis_name: Optional[str] = None,
+    full_long: Optional[int] = None,
 ):
     """One SUMO step for a single 2D matrix. Returns (delta, Q, M, prev_norm),
     plus a ``MatrixStats`` as a fifth element when ``with_stats``.
 
-    ``check_quality=False`` skips the in-function adaptive-refresh test; the
-    bucketed engine evaluates it once per bucket and folds it into
-    ``do_refresh`` so the predicate stays unbatched under vmap.
+    ``quality`` is the RESOLVED per-bucket adaptive-refresh threshold ς for
+    the in-function criterion (the per-leaf engine passes its bucket's
+    value); the bucketed engine passes 0.0 and instead evaluates the
+    criterion once per bucket, folding it into ``do_refresh`` so the
+    predicate stays unbatched under vmap.
 
     ``with_stats`` only ADDS probe outputs (norm ratios and the spectrum that
     the orthogonalization's own factorization already materializes) — every
     value on the update path is computed by the same ops in the same order,
     so the trajectory is bit-identical with probes on or off.
+
+    ``axis_name``: the 2D-mesh path. G/Q/W are the local row blocks of
+    matrices whose LONG dim is sharded over that mesh axis, already in the
+    canonical long-first orientation (the caller transposes before slicing,
+    so no orientation inference happens on a row count that is local).
+    M / prev_norm / O are replicated over the axis — every shard runs the
+    identical small-matrix arithmetic on identical operands, and only
+    r-width panels cross shards: the psum finishing Ĝ = QᵀG, the psum
+    finishing the basis rotation R = Q_newᵀQ_old, and the distributed range
+    finder's panels (see core.rsvd). ``full_long`` must then carry the
+    GLOBAL long dim for the rms scale factor.
     """
     m, n = G.shape
-    transpose = m < n            # static
-    Gl = G.T if transpose else G      # (long, short)
+    if axis_name is None:
+        transpose = m < n        # static
+        Gl = G.T if transpose else G      # (long, short)
+        long_d = max(m, n)
+    else:
+        transpose = False        # caller guarantees canonical orientation
+        Gl = G                   # (long_loc, short)
+        long_d = full_long
     r = Q.shape[1]
+
+    def _gnorm(A):
+        """Global ‖A‖_F of a row-sharded matrix (plain norm when unsharded)."""
+        if axis_name is None:
+            return jnp.linalg.norm(A)
+        return jnp.sqrt(jax.lax.psum(jnp.sum(jnp.square(A)), axis_name))
 
     # Alg. 1 alternative criterion: refresh when the stale basis captures too
     # little of the current gradient (‖QᵀG‖ < ς‖G‖).
-    if check_quality and cfg.refresh_quality > 0.0:
-        g_norm = jnp.linalg.norm(Gl) + 1e-12
-        cap = jnp.linalg.norm(Q.T @ Gl) / g_norm
-        do_refresh = jnp.logical_or(do_refresh, cap < cfg.refresh_quality)
+    if quality > 0.0:
+        g_norm = _gnorm(Gl) + 1e-12
+        # the psum inside subspace_project already REPLICATES Ĝ across the
+        # axis, so its norm is global as-is (a _gnorm here would double-psum
+        # and inflate the capture by √axis_size)
+        cap = jnp.linalg.norm(
+            subspace_project(Q, Gl, impl="reference", axis_name=axis_name)
+        ) / g_norm
+        do_refresh = jnp.logical_or(do_refresh, cap < quality)
 
     # ---- Block 1 + 1.1: subspace refresh & moment rotation -------------
     def refresh(_):
         Q_new = randomized_range_finder(
-            Gl, key, r, n_iter=cfg.rsvd_iters, oversample=cfg.rsvd_oversample
+            Gl, key, r, n_iter=cfg.rsvd_iters, oversample=cfg.rsvd_oversample,
+            axis_name=axis_name,
         )
         R = Q_new.T @ Q            # (r, r) rotation old->new basis
+        if axis_name is not None:
+            R = jax.lax.psum(R, axis_name)   # finish the sharded contraction
         return Q_new, R @ M
 
     def keep(_):
@@ -315,7 +390,8 @@ def _matrix_update(
     Q, M = jax.lax.cond(do_refresh, refresh, keep, operand=None)
 
     # ---- project ---------------------------------------------------------
-    G_hat = subspace_project(Q, Gl, impl=cfg.projection)   # (r, short)
+    G_hat = subspace_project(Q, Gl, impl=cfg.projection,
+                             axis_name=axis_name)          # (r, short)
 
     # ---- Block 2: moment + exact orthogonalization ------------------------
     M = cfg.beta * M + (1.0 - cfg.beta) * G_hat
@@ -324,7 +400,7 @@ def _matrix_update(
     else:
         O = _orth(cfg, M)          # (r, short), orthonormal rows
     if with_stats:
-        g_norm = jnp.linalg.norm(Gl)
+        g_norm = _gnorm(Gl)
         stats_energy = jnp.linalg.norm(G_hat) / (g_norm + 1e-12)
         # ‖M‖_F² = Σσ² (trace identity) — free from the spectrum, no pass
         # over M.
@@ -349,7 +425,9 @@ def _matrix_update(
         upd = upd.T                # (m, n)
     scale = cfg.alpha
     if cfg.rms_scale:
-        scale = scale * 0.2 * jnp.sqrt(float(max(m, n)))
+        # long_d is the GLOBAL long dim (full_long under axis_name — the
+        # local row count would mis-scale sharded matrices).
+        scale = scale * 0.2 * jnp.sqrt(float(long_d))
     delta = -lr * scale * upd
     if cfg.weight_decay > 0.0 and W is not None:
         delta = delta - lr * cfg.weight_decay * W.astype(jnp.float32)
@@ -391,11 +469,12 @@ def _per_leaf_updates(cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
             out_M.append(None); out_pn.append(None)
             continue
         freq = cfg.bucket_update_freq(*opt.canonical_dims(g.shape))
+        quality = cfg.bucket_refresh_quality(*opt.canonical_dims(g.shape))
         do_refresh = (step % freq) == 0
         g32 = g.astype(jnp.float32)
         if g.ndim == 2:
             d, Qn, Mn, pnn = _matrix_update(
-                cfg, g32, Q, M, pn, lr, do_refresh, k, p
+                cfg, g32, Q, M, pn, lr, do_refresh, k, p, quality=quality
             )
         else:
             # batched expert stacks (E, m, n) (or deeper): vmap over batch
@@ -412,7 +491,8 @@ def _per_leaf_updates(cfg, leaves_g, leaves_Q, leaves_M, leaves_pn, leaves_p,
             kb = jax.random.split(k, gb.shape[0])
             fn = jax.vmap(
                 lambda G_, Q_, M_, pn_, k_, W_: _matrix_update(
-                    cfg, G_, Q_, M_, pn_, lr, do_refresh, k_, W_
+                    cfg, G_, Q_, M_, pn_, lr, do_refresh, k_, W_,
+                    quality=quality,
                 ),
                 in_axes=(0, 0, 0, 0, 0, 0 if pb is not None else None),
             )
@@ -541,19 +621,25 @@ def convert_sumo_state(
 # Bucketed engine
 # ---------------------------------------------------------------------------
 
-def _bucket_update_fn(cfg: SumoConfig, with_w: bool, with_stats: bool = False):
+def _bucket_update_fn(cfg: SumoConfig, with_w: bool, with_stats: bool = False,
+                      axis_name: Optional[str] = None,
+                      full_long: Optional[int] = None):
     """The per-bucket batched update: vmap of ``_matrix_update`` over the
     stacked B axis with an UNBATCHED refresh predicate (one cond/rSVD per
     bucket). lr/do_refresh are explicit args so the same function body can be
     wrapped in ``shard_map`` without closing over traced values. With
     ``with_stats`` the vmapped update additionally returns a (B, ...)-stacked
-    ``MatrixStats``."""
+    ``MatrixStats``. ``axis_name``/``full_long`` select the 2D-mesh
+    per-matrix path (long dim sharded over ``axis_name`` — the collectives
+    inside vmap batch over B, so the whole bucket's panels move in one psum
+    per collective, not one per member)."""
 
     def run(lr, do_refresh, G, Q, M, pn, K, W):
         f = jax.vmap(
             lambda G_, Q_, M_, pn_, k_, W_: _matrix_update(
                 cfg, G_, Q_, M_, pn_, lr, do_refresh, k_, W_,
-                check_quality=False, with_stats=with_stats,
+                quality=0.0, with_stats=with_stats,
+                axis_name=axis_name, full_long=full_long,
             ),
             in_axes=(0, 0, 0, 0, 0, 0 if with_w else None),
         )
@@ -568,14 +654,23 @@ def _bucket_update_fn(cfg: SumoConfig, with_w: bool, with_stats: bool = False):
 def _reduce_bucket_stats(ms: MatrixStats, fired) -> SpectralStats:
     """(B, ...)-stacked per-matrix probes -> one per-bucket SpectralStats.
 
-    κ is the EFFECTIVE condition number: σ_min counts only directions above
-    1e-7·σ_max, so an over-ranked moment (trailing σ ≈ 0 — the controller's
-    SHRINK signal, visible in the tail mass) does not masquerade as the
-    ill-conditioned regime (its TIGHTEN-refresh signal)."""
+    κ is the EFFECTIVE condition number: an over-ranked moment (trailing
+    σ ≈ 0 — the controller's SHRINK signal, visible in the tail mass) must
+    not masquerade as the ill-conditioned regime (its TIGHTEN-refresh
+    signal). Numerically-dead directions are cut at a spectral CLIFF — the
+    first ≥100× drop between consecutive σ that lands below 1e-3·σ_max —
+    rather than at a fixed magnitude: the spectrally-truncated rSVD basis
+    tracks zero-mass directions at the fp32 moment noise floor (~1e-4·σ_max,
+    rotation/projection roundoff accumulated across refreshes), while a
+    genuinely ill-conditioned but LIVE spectrum decays geometrically with no
+    cliff, so magnitude alone cannot separate the two."""
     sig = ms.sigma                        # (B, r) descending
     s0 = sig[:, :1]                       # (B, 1)
-    s_eff_min = jnp.min(
-        jnp.where(sig > 1e-7 * s0, sig, s0), axis=1)
+    cliff = (sig[:, :-1] > 100.0 * sig[:, 1:]) & (
+        sig[:, 1:] < 1e-3 * s0)           # (B, r-1) drop into dead territory
+    dead = jnp.cumsum(
+        jnp.pad(cliff, ((0, 0), (1, 0))), axis=1) > 0   # dead from 1st cliff
+    s_eff_min = jnp.min(jnp.where(dead, s0, sig), axis=1)
     kappa = jnp.max(jnp.square(sig[:, 0] / jnp.maximum(s_eff_min, 1e-30)))
     return SpectralStats(
         sigma=jnp.mean(sig, axis=0),
@@ -666,12 +761,128 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
 
         fn = _bucket_update_fn(cfg, with_w=stack_w, with_stats=tel)
         axis = cfg.bucket_axis
+        maxis = cfg.model_axis
         n_shards = (
             mesh.shape[axis]
             if isinstance(mesh, Mesh) and axis in mesh.shape else 1
         )
+        m_shards = (
+            mesh.shape[maxis]
+            if isinstance(mesh, Mesh) and maxis in mesh.shape else 1
+        )
+        # 2D path: long dim over `model` (+ B over `data` when it pays).
+        # Indivisible long dims keep the replicated-long 1D path below; a
+        # model axis of size 1 keeps it too, bit-identically (the 2D body's
+        # CholeskyQR2 refresh differs from thin QR in the last ulp, so it
+        # only runs when the matrices are actually sharded).
+        use_model = m_shards > 1 and long_d % m_shards == 0
+        q_thresh = cfg.bucket_refresh_quality(long_d, short_d)
+        b_true = bucket.size
         ms = dr_out = None
-        if n_shards > 1 and bucket.size > 1:
+        if use_model:
+            # 2D-mesh sharded bucket update. Data-movement discipline: the
+            # state enters exactly as ``opt_state_specs`` places it — Q
+            # P(data, model, None) (B over `data`, long over `model`),
+            # M/prev_norm P(data, None, None)/P(data) — and never moves; the
+            # stacked G/W enter with their long dim sharded over `model`
+            # (a local slice of the replicated grads, no collective) and
+            # each data shard slices its own B-block by axis index. Every
+            # cross-shard transfer is an r-width panel (projection psum,
+            # rotation psum, the distributed range finder's Gram/panel
+            # psums) except the one explicit delta all-gather (model axis
+            # first — rows back to full — then the existing B-axis gather).
+            # Singleton buckets (B == 1: embed/lm_head-shaped — the very
+            # matrices that NEED model sharding) run with B replicated and
+            # only the long dim sharded.
+            b_shard = n_shards > 1 and bucket.size > 1
+            pad = (-bucket.size) % n_shards if b_shard else 0
+            b_padded = bucket.size + pad
+            if pad:
+                G = _pad_rows(G, pad)
+                K = _pad_rows(K, pad)
+                Q = _pad_rows(Q, pad)
+                M = _pad_rows(M, pad)
+                pn = _pad_rows(pn, pad)
+                if stack_w:
+                    W = _pad_rows(W, pad)
+            blk = b_padded // n_shards if b_shard else b_padded
+            fn = _bucket_update_fn(cfg, with_w=stack_w, with_stats=tel,
+                                   axis_name=maxis, full_long=long_d)
+
+            # NOTE: body2d mirrors the 1D `body` below (B slicing, masked
+            # staleness predicate, delta/stat gathers) plus the model-axis
+            # psums/gather. They are kept separate because the 1D body is
+            # pinned BIT-identical to the pre-2D engine — fold fixes to the
+            # shared logic into both.
+            def body2d(lr_, dr_, G_, Q_, M_, pn_, K_, *W_):
+                if b_shard:
+                    i0 = jax.lax.axis_index(axis) * blk
+                    G_loc = jax.lax.dynamic_slice_in_dim(G_, i0, blk, axis=0)
+                    K_loc = jax.lax.dynamic_slice_in_dim(K_, i0, blk, axis=0)
+                    W_loc = tuple(
+                        jax.lax.dynamic_slice_in_dim(w, i0, blk, axis=0)
+                        for w in W_
+                    )
+                else:
+                    i0 = 0
+                    G_loc, K_loc, W_loc = G_, K_, W_
+                if q_thresh > 0.0:
+                    # bucket-wide staleness: the energy capture needs global
+                    # norms — two r-width/scalar psums over `model`, then the
+                    # scalar pmax over `data` (the documented exceptions).
+                    g_sq = jax.lax.psum(
+                        jnp.sum(jnp.square(G_loc), axis=(-2, -1)), maxis)
+                    proj = jax.lax.psum(
+                        jnp.matmul(jnp.swapaxes(Q_, -1, -2), G_loc), maxis)
+                    caps = jnp.linalg.norm(proj, axis=(-2, -1)) / (
+                        jnp.sqrt(g_sq) + 1e-12)
+                    stale_mask = caps < q_thresh
+                    if pad:
+                        stale_mask = stale_mask & (
+                            (i0 + jnp.arange(blk)) < b_true)
+                    stale = jnp.any(stale_mask).astype(jnp.int32)
+                    if b_shard:
+                        stale = jax.lax.pmax(stale, axis)
+                    dr_ = jnp.logical_or(dr_, stale > 0)
+                out = fn(lr_, dr_, G_loc, Q_, M_, pn_, K_loc, *W_loc)
+                d_loc, Qn, Mn, pnn = out[:4]
+                d_full = jax.lax.all_gather(d_loc, maxis, axis=1, tiled=True)
+                if b_shard:
+                    d_full = jax.lax.all_gather(d_full, axis, axis=0,
+                                                tiled=True)
+                if tel:
+                    ms_full = out[4]
+                    if b_shard:
+                        ms_full = jax.tree_util.tree_map(
+                            lambda a: jax.lax.all_gather(
+                                a, axis, axis=0, tiled=True), ms_full)
+                    return d_full, Qn, Mn, pnn, ms_full, dr_
+                return d_full, Qn, Mn, pnn
+
+            bax = axis if b_shard else None
+            gspec = P(None, maxis, None)
+            in_specs = (P(), P(), gspec, P(bax, maxis, None),
+                        P(bax, None, None), P(bax), P(None, None))
+            if stack_w:
+                in_specs = in_specs + (gspec,)
+            out_specs = (P(None, None, None), P(bax, maxis, None),
+                         P(bax, None, None), P(bax))
+            if tel:
+                out_specs = out_specs + (MatrixStats(*([P()] * 6)), P())
+            call = shard_map(
+                body2d, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False,
+            )
+            args = (lr, do_refresh, G, Q, M, pn, K) + ((W,) if stack_w else ())
+            out = call(*args)
+            d, Qn, Mn, pnn = out[:4]
+            if tel:
+                ms, dr_out = out[4], out[5]
+            if pad:
+                d, Qn, Mn, pnn = (a[:b_true] for a in (d, Qn, Mn, pnn))
+                if tel:
+                    ms = jax.tree_util.tree_map(lambda a: a[:b_true], ms)
+        elif n_shards > 1 and bucket.size > 1:
             # Sharded bucket update. Data-movement discipline: the stacked
             # G/W/keys enter REPLICATED (they are assembled locally from the
             # replicated grads — no resharding collective at the shard_map
@@ -697,9 +908,9 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
                 if stack_w:
                     W = _pad_rows(W, pad)
             blk = b_padded // n_shards
-            q_thresh = cfg.refresh_quality
-            b_true = bucket.size
 
+            # NOTE: twin of body2d above (which adds the model-axis
+            # collectives) — fold fixes to the shared logic into both.
             def body(lr_, dr_, G_, Q_, M_, pn_, K_, *W_):
                 i0 = jax.lax.axis_index(axis) * blk
                 G_loc = jax.lax.dynamic_slice_in_dim(G_, i0, blk, axis=0)
@@ -756,13 +967,13 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
             # unbatched is what lets vmap preserve the cond (a batched pred
             # would lower to a select that always pays the rSVD).
             do_refresh_b = do_refresh
-            if cfg.refresh_quality > 0.0:
+            if q_thresh > 0.0:
                 g_norms = jnp.linalg.norm(G, axis=(-2, -1)) + 1e-12
                 caps = jnp.linalg.norm(
                     jnp.matmul(jnp.swapaxes(Q, -1, -2), G), axis=(-2, -1)
                 ) / g_norms
                 do_refresh_b = jnp.logical_or(
-                    do_refresh, jnp.any(caps < cfg.refresh_quality)
+                    do_refresh, jnp.any(caps < q_thresh)
                 )
             args = (lr, do_refresh_b, G, Q, M, pn, K) + ((W,) if stack_w else ())
             out = fn(*args)

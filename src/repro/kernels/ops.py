@@ -41,19 +41,33 @@ def resolve_projection_impl(impl: str) -> str:
     return impl
 
 
-def subspace_project(Q: jnp.ndarray, G: jnp.ndarray, impl: str = "auto"):
+def subspace_project(Q: jnp.ndarray, G: jnp.ndarray, impl: str = "auto",
+                     axis_name: str | None = None):
     """Ĝ = Qᵀ G for one (long, r) basis against one (long, short) gradient.
 
     Safe under jax.vmap: the Pallas path batches via pallas_call's batching
     rule (an extra grid dimension), the reference path is a plain dot.
+
+    ``axis_name``: when Q and G are row-sharded over a shard_map mesh axis
+    (the 2D-mesh SUMO path, long dim over `model`), each shard's matmul
+    yields a PARTIAL (r, short) panel; one psum over the axis finishes the
+    contraction — an r-width collective, never the (long, short) gradient.
     """
     if resolve_projection_impl(impl) == "pallas":
-        return project(Q, G)
-    return ref.project_ref(Q, G)
+        out = project(Q, G)
+    else:
+        out = ref.project_ref(Q, G)
+    if axis_name is not None:
+        out = jax.lax.psum(out, axis_name)
+    return out
 
 
 def subspace_backproject(Q: jnp.ndarray, O: jnp.ndarray, impl: str = "auto"):
-    """U = Q O (same dispatch contract as subspace_project)."""
+    """U = Q O (same dispatch contract as subspace_project).
+
+    Needs no axis_name: with Q row-sharded and O replicated the product is
+    the local row block of U — the back-projection is collective-free.
+    """
     if resolve_projection_impl(impl) == "pallas":
         return backproject(Q, O)
     return ref.backproject_ref(Q, O)

@@ -20,7 +20,16 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(model: int = 1):
-    """Degenerate mesh on whatever devices exist (tests / examples on CPU)."""
+    """(data, model) mesh on whatever devices exist (tests / examples on CPU).
+
+    ``model`` > 1 gives the 2D mesh the SUMO bucket update's tensor-parallel
+    path runs under — B over `data`, each matrix's long dim over `model`
+    (tier-1 pins (data=2, model=4) on 8 forced host devices, see
+    tests/test_rsvd_sharded.py). A ``model`` that does not divide the device
+    count is clamped to the largest divisor so the mesh always builds.
+    """
     n = len(jax.devices())
-    model = min(model, n)
+    model = max(1, min(model, n))
+    while n % model:
+        model -= 1
     return jax.make_mesh((n // model, model), ("data", "model"))

@@ -46,6 +46,11 @@ def main(argv=None) -> int:
                          "(implies --telemetry)")
     ap.add_argument("--controller-interval", type=int, default=0,
                     help="steps between controller checks (0 = update-freq)")
+    ap.add_argument("--model-parallel", type=int, default=0,
+                    help="model-axis size of the (data, model) host mesh the "
+                         "SUMO bucket update runs under (0 = no mesh; >1 "
+                         "shards B over data and each matrix's long dim over "
+                         "model — the 2D distributed-rSVD path)")
     args = ap.parse_args(argv)
 
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -58,6 +63,7 @@ def main(argv=None) -> int:
         telemetry_out=args.telemetry_out,
         controller=args.controller,
         controller_interval=args.controller_interval,
+        model_parallel=args.model_parallel,
     )
     injector = FaultInjector(preempt_at=args.preempt_at) if args.preempt_at else None
     res = train(arch, shape, tcfg, fault_injector=injector)

@@ -193,7 +193,8 @@ _BUCKET_FIELDS = ("Q", "M", "prev_norm")
 
 def bucket_state_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
                       bucket_axis: str = "data",
-                      long_over_model: bool = True) -> Optional[P]:
+                      long_over_model: bool = True,
+                      model_axis: str = "model") -> Optional[P]:
     """PartitionSpec for one bucket-resident SUMO state leaf, or None if the
     path is not a bucket-state leaf.
 
@@ -201,11 +202,16 @@ def bucket_state_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
     parallelism across the bucket members, matching ``SumoConfig.bucket_axis``
     of the shard_map bucket-update path — and Q's long dim additionally
     shards over `model` (tensor parallel; the r-width moment stays replicated
-    on that axis, negligible bytes). Set ``long_over_model=False`` when the
-    update runs under SUMO's shard_map path on a mesh that ALSO has a `model`
-    axis: the shard_map body needs the full long dim per shard (its in_specs
-    replicate every non-B axis), so model-sharded Q would be re-gathered at
-    the boundary every step."""
+    on that axis, negligible bytes). This is the DEFAULT wiring the 2D
+    shard_map bucket update consumes in place: its in_specs are exactly
+    ``P(bucket_axis, model, None)`` for Q, and the rSVD refresh runs the
+    distributed range finder (core.rsvd ``axis_name``) on the model-sharded
+    rows, so the state never re-gathers (see core.sumo "2D mesh"). The
+    divisibility guard here (long % model == 0) matches the update path's —
+    indivisible buckets replicate their long dim and take the 1D path.
+    ``long_over_model=False`` remains only for meshes whose model axis is
+    repurposed (no tensor parallelism in the update), where sharded Q WOULD
+    be re-gathered at the shard_map boundary every step."""
     parts = path.split("/")
     if len(parts) < 2 or not BUCKET_KEY_RE.match(parts[-1]):
         return None
@@ -215,17 +221,20 @@ def bucket_state_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
     if shape and _divisible(shape[0], mesh, bucket_axis):
         spec[0] = bucket_axis
     if (long_over_model and parts[-2] == "Q" and len(shape) == 3
-            and _divisible(shape[1], mesh, "model")):
-        spec[1] = "model"
+            and _divisible(shape[1], mesh, model_axis)):
+        spec[1] = model_axis
     return P(*spec)
 
 
 def opt_state_specs(state, mesh: Mesh, cfg: Optional[ArchConfig] = None,
                     bucket_axis: str = "data",
-                    bucket_long_over_model: bool = True):
+                    bucket_long_over_model: bool = True,
+                    model_axis: str = "model"):
     """Sharding for optimizer states: bucket-resident SUMO state gets
-    per-bucket specs (B over ``bucket_axis``, Q's long dim over `model` —
-    see ``bucket_state_spec`` for when to disable the latter); everything
+    per-bucket specs (B over ``bucket_axis``, Q's long dim over
+    ``model_axis`` — see ``bucket_state_spec`` for when to disable the
+    latter; ``bucket_axis``/``model_axis`` must match the SumoConfig fields
+    of the same names for the consume-in-place wiring to hold); everything
     else mirrors the generic param rule per leaf; scalars/keys replicated."""
 
     def leaf_spec(path, leaf):
@@ -234,7 +243,8 @@ def opt_state_specs(state, mesh: Mesh, cfg: Optional[ArchConfig] = None,
         shape = getattr(leaf, "shape", ())
         bspec = bucket_state_spec(path_str(path), shape, mesh,
                                   bucket_axis=bucket_axis,
-                                  long_over_model=bucket_long_over_model)
+                                  long_over_model=bucket_long_over_model,
+                                  model_axis=model_axis)
         if bspec is not None:
             return bspec
         if len(shape) <= 1:

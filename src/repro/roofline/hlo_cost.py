@@ -15,6 +15,11 @@ trip counts from loop-condition constants (jax scans lower to
                    all-to-all / collective-permute (+2× for all-reduce),
                    trip-multiplied.
 
+Conditionals charge their worst-case branch (field-wise max): SUMO's K-step
+rSVD refresh — and on the 2D mesh its r-width panel collectives — lives in a
+``lax.cond`` branch, which a pick-one-branch walk would hide entirely.
+
+
 Validated against analytic 6·N·D model FLOPs in tests (agrees within the
 attention/remat overhead margin).
 """
@@ -195,6 +200,20 @@ class HloCostModel:
         m = re.search(key + r"=%?([\w.\-]+)", attrs)
         return m.group(1) if m else None
 
+    def _branch_targets(self, op: Op) -> list[str]:
+        """Branch computations of a conditional: the predicated
+        true/false pair or the indexed branch_computations list."""
+        m = re.search(r"branch_computations=\{([^}]*)\}", op.attrs)
+        if m:
+            return [t for t in re.findall(r"%?([\w.\-]+)", m.group(1))
+                    if t in self.computations]
+        out = []
+        for key in ("true_computation", "false_computation"):
+            t = self._called(op.attrs, key)
+            if t:
+                out.append(t)
+        return out
+
     def _while_trip(self, op: Op) -> Optional[int]:
         """Trip count of a while op: XLA's own loop analysis when present
         (``backend_config={"known_trip_count":{"n":"10"}}``), else the
@@ -288,7 +307,27 @@ class HloCostModel:
                 return c
             return inner.scaled(trip)
 
-        if oc in ("call", "conditional", "async-start"):
+        if oc == "conditional":
+            # One branch executes per call; charge the WORST-CASE branch per
+            # field (a steady-state/refresh pair would otherwise hide the
+            # refresh collectives entirely — SUMO's K-step rSVD lives in a
+            # cond branch). Field-wise max is an upper bound for any single
+            # execution and keeps ≤-style budget asserts sound.
+            worst = Cost()
+            for branch in self._branch_targets(op):
+                c = self.computation_cost(branch)
+                worst.flops = max(worst.flops, c.flops)
+                worst.bytes = max(worst.bytes, c.bytes)
+                worst.collective_bytes = max(worst.collective_bytes,
+                                             c.collective_bytes)
+                for k, v in c.collective_breakdown.items():
+                    worst.collective_breakdown[k] = max(
+                        worst.collective_breakdown.get(k, 0), v)
+                worst.unknown_trip_loops = max(worst.unknown_trip_loops,
+                                               c.unknown_trip_loops)
+            return worst
+
+        if oc in ("call", "async-start"):
             target = self._called(op.attrs, "calls") or self._called(
                 op.attrs, "to_apply"
             )

@@ -23,12 +23,15 @@ loop online, in three layers:
    ``WindowAggregate`` windows.
 
 3. **Feedback controller** (``controller``): ``RankRefreshController``
-   consumes the windowed stats and re-tunes each bucket's subspace rank and
-   refresh cadence; decisions flow back as the static
-   ``SumoConfig.bucket_overrides`` plus a host-side pad/truncate of the
-   bucket-resident Q/M stacks (``resize_opt_state``), so state shapes change
-   only at controlled recompile points — applied at refresh boundaries by
-   ``train.loop``.
+   consumes the windowed stats and re-tunes each bucket's subspace rank,
+   refresh cadence AND in-step adaptive-refresh threshold ς
+   (``refresh_quality`` — armed when the window's worst energy capture sags
+   between refreshes, disarmed on recovery); decisions flow back as the
+   static ``SumoConfig.bucket_overrides`` 4-tuples
+   (bucket, rank, K, ς — both engines honor them bit-identically) plus a
+   host-side pad/truncate of the bucket-resident Q/M stacks
+   (``resize_opt_state``), so state shapes change only at controlled
+   recompile points — applied at refresh boundaries by ``train.loop``.
 
 Record schema (one JSONL object / CSV row per bucket per step)
 --------------------------------------------------------------

@@ -13,7 +13,14 @@ paper's error bound):
   * tighten K   (halve the refresh interval) when mean κ(MMᵀ) exceeds
                 ``kappa_high`` — the regime where the paper's
                 orthogonalization error bound degrades;
-  * relax K     (double it) when κ stays below ``kappa_low``.
+  * relax K     (double it) when κ stays below ``kappa_low``;
+  * arm ς       (the in-step adaptive-refresh threshold
+                ``SumoConfig.refresh_quality``, per bucket) when the
+                window's WORST energy capture sags below ``quality_arm``
+                while the mean stays healthy — the basis goes stale BETWEEN
+                refreshes faster than the cadence can track, so the engines'
+                own ‖QᵀG‖ < ς‖G‖ trigger takes over;
+  * disarm ς    when the worst capture recovers above ``quality_disarm``.
 
 Decisions are applied OUTSIDE the jitted step, at refresh boundaries, via two
 host-side moves: (1) ``SumoConfig.bucket_overrides`` is rebuilt (a static
@@ -52,16 +59,26 @@ class ControllerConfig:
     freq_relax: int = 2        # multiply when κ is comfortably low
     freq_min: int = 5
     freq_max: int = 2000
+    quality_arm: float = 0.50    # arm per-bucket refresh_quality when the
+                                 # window's MIN energy capture sags below this
+    quality_disarm: float = 0.85  # disarm (back to the global default) when
+                                  # the min capture recovers above this
+    quality_target: float = 0.50  # the ς value an armed bucket runs under
 
 
 @dataclasses.dataclass(frozen=True)
 class BucketSetting:
-    """What one bucket currently runs under (+ its static dims)."""
+    """What one bucket currently runs under (+ its static dims).
+
+    ``refresh_quality`` is the per-bucket adaptive-refresh threshold ς;
+    0.0 means "keep SumoConfig.refresh_quality's global default" (same
+    sentinel convention as rank/update_freq overrides of 0)."""
 
     rank: int
     update_freq: int
     long: int
     short: int
+    refresh_quality: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -69,18 +86,20 @@ class BucketDecision:
     bucket: str
     rank: int
     update_freq: int
+    refresh_quality: float = 0.0
     reasons: Tuple[str, ...] = ()
 
     def changed(self, setting: BucketSetting) -> bool:
-        return (self.rank, self.update_freq) != (setting.rank,
-                                                 setting.update_freq)
+        return (self.rank, self.update_freq, self.refresh_quality) != (
+            setting.rank, setting.update_freq, setting.refresh_quality)
 
 
-def initial_settings(params, rank: int, update_freq: int
+def initial_settings(params, rank: int, update_freq: int,
+                     refresh_quality: float = 0.0
                      ) -> Dict[str, BucketSetting]:
     """Default per-bucket settings for a param tree: the bucket plan of its
     MATRIX leaves (same classification the optimizer uses) at the global
-    rank/update_freq."""
+    rank/update_freq (and optionally a global ς)."""
     leaves = jax.tree_util.tree_flatten_with_path(params)[0]
     shapes = [leaf.shape for path, leaf in leaves
               if is_matrix_param(path_str(path), leaf)]
@@ -89,16 +108,19 @@ def initial_settings(params, rank: int, update_freq: int
         long_d, short_d = b.shape          # already canonical (long, short)
         out[b.key] = BucketSetting(
             rank=max(1, min(rank, short_d)), update_freq=update_freq,
-            long=long_d, short=short_d)
+            long=long_d, short=short_d, refresh_quality=refresh_quality)
     return out
 
 
 def overrides_from_settings(settings: Mapping[str, BucketSetting]
-                            ) -> Tuple[Tuple[str, int, int], ...]:
+                            ) -> Tuple[Tuple[str, int, int, float], ...]:
     """Settings dict -> the static SumoConfig.bucket_overrides tuple (sorted
-    for a deterministic config hash)."""
+    for a deterministic config hash). Entries are
+    (bucket, rank, update_freq, refresh_quality); SumoConfig also still
+    accepts legacy 3-entry tuples (e.g. from an old checkpoint manifest)."""
     return tuple(sorted(
-        (k, s.rank, s.update_freq) for k, s in settings.items()))
+        (k, s.rank, s.update_freq, s.refresh_quality)
+        for k, s in settings.items()))
 
 
 class RankRefreshController:
@@ -117,9 +139,11 @@ class RankRefreshController:
             agg = windows.get(bucket)
             if agg is None or agg.n < cfg.window:
                 out[bucket] = BucketDecision(bucket, setting.rank,
-                                             setting.update_freq)
+                                             setting.update_freq,
+                                             setting.refresh_quality)
                 continue
             rank, freq = setting.rank, setting.update_freq
+            quality = setting.refresh_quality
             reasons = []
             # -- rank: grow on sagging energy capture, else shrink on a
             #    negligible spectral tail (grow wins — never shrink a basis
@@ -155,7 +179,33 @@ class RankRefreshController:
                         f"kappa {agg.kappa_mean:.2e} < {cfg.kappa_low:.0e}: "
                         f"relax refresh {freq}->{new_freq}")
                     freq = new_freq
-            out[bucket] = BucketDecision(bucket, rank, freq, tuple(reasons))
+            # -- per-bucket ς: the basis decays between refreshes when the
+            #    WORST in-window capture sags while the mean stays fine
+            #    (the mean case is the grow-rank signal above) — hand the
+            #    engines' own in-step ‖QᵀG‖ < ς‖G‖ trigger the bucket.
+            #    Arming only ever RAISES ς (a user-seeded stricter ς is left
+            #    alone), and disarm resets exactly the value WE armed back
+            #    to the 0.0 sentinel ("use the global default") — if a
+            #    global SumoConfig.refresh_quality is in play, seed it via
+            #    ``initial_settings(..., refresh_quality=)`` so the
+            #    controller sees the effective value, not the sentinel.
+            if (agg.energy_min < cfg.quality_arm
+                    and agg.energy_mean >= cfg.energy_low
+                    and quality < cfg.quality_target):
+                reasons.append(
+                    f"min energy {agg.energy_min:.3f} < {cfg.quality_arm}: "
+                    f"arm refresh_quality {quality:.2f}->"
+                    f"{cfg.quality_target:.2f}")
+                quality = cfg.quality_target
+            elif (quality == cfg.quality_target
+                    and agg.energy_min >= cfg.quality_disarm):
+                reasons.append(
+                    f"min energy {agg.energy_min:.3f} >= "
+                    f"{cfg.quality_disarm}: disarm refresh_quality "
+                    f"{quality:.2f}->0.00")
+                quality = 0.0
+            out[bucket] = BucketDecision(bucket, rank, freq, quality,
+                                         tuple(reasons))
         return out
 
 
@@ -252,7 +302,8 @@ def apply_decisions(
     for b, d in changed.items():
         old = settings[b]
         new_settings[b] = dataclasses.replace(
-            old, rank=d.rank, update_freq=d.update_freq)
+            old, rank=d.rank, update_freq=d.update_freq,
+            refresh_quality=d.refresh_quality)
         if d.rank != old.rank:
             rank_map[b] = d.rank
         reasons[b] = d.reasons

@@ -68,6 +68,12 @@ class TrainConfig:
     controller: bool = False
     controller_interval: int = 0       # steps between checks; 0 = update_freq
     controller_config: Optional[ControllerConfig] = None
+    # -- sharded SUMO bucket update ----------------------------------------
+    # > 0 builds a (data, model) host mesh (launch.mesh.make_host_mesh) and
+    # runs the bucket update under shard_map: B over `data`, and with
+    # model_parallel > 1 each matrix's long dim over `model` (the 2D
+    # distributed-rSVD path). 0 = single-device update (the default).
+    model_parallel: int = 0
 
 
 @dataclasses.dataclass
@@ -106,6 +112,11 @@ def train(
     # Per-bucket settings (rank/update_freq) — the controller's mutable view.
     settings = initial_settings(params0, tcfg.rank, tcfg.update_freq)
 
+    mesh = None
+    if tcfg.model_parallel > 0:
+        from ..launch.mesh import make_host_mesh
+        mesh = make_host_mesh(model=tcfg.model_parallel)
+
     def build(overrides):
         """(tx, jitted step_fn) for the current bucket overrides — each
         rebuild is the controlled recompile point."""
@@ -117,6 +128,7 @@ def train(
             tcfg.optimizer, tcfg.learning_rate, params0,
             rank=tcfg.rank, update_freq=tcfg.update_freq,
             weight_decay=tcfg.weight_decay, state_layout=tcfg.state_layout,
+            mesh=mesh,
             **kw,
         )
         step_fn = jax.jit(
@@ -180,10 +192,14 @@ def train(
                     saved = ckpt.read_manifest().get("bucket_overrides") or []
                     ckpt_settings = initial_settings(params0, tcfg.rank,
                                                      tcfg.update_freq)
-                    for b, r, f in saved:
+                    for entry in saved:
+                        b, r, f = entry[:3]
+                        # legacy pre-quality manifests have 3-entry rows
+                        q = float(entry[3]) if len(entry) > 3 else 0.0
                         if b in ckpt_settings:
                             ckpt_settings[b] = dataclasses.replace(
-                                ckpt_settings[b], rank=r, update_freq=f)
+                                ckpt_settings[b], rank=r, update_freq=f,
+                                refresh_quality=q)
                     if ckpt_settings != settings:
                         settings = ckpt_settings
                         sink.set_settings(settings,

@@ -50,12 +50,73 @@ def test_rsvd_matches_truncated_svd():
     )
 
 
+def test_truncation_is_spectral_not_positional():
+    """Regression for the Q[:, :rank] truncation bug: QR columns of the
+    oversampled sketch are NOT ordered by singular mass, so positional
+    truncation can miss top directions outright. A spiked spectrum with the
+    spike count equal to the kept rank makes the failure deterministic: the
+    fixed truncation (SVD of B = QᵀG) must capture all spikes, while the
+    positional slice of the same sketch basis provably leaks mass."""
+    key = jax.random.PRNGKey(42)
+    m, n, spikes, rank, over = 96, 48, 4, 4, 8
+    k1, k2, k3 = jax.random.split(key, 3)
+    U = jnp.linalg.qr(jax.random.normal(k1, (m, spikes + over)))[0]
+    V = jnp.linalg.qr(jax.random.normal(k2, (n, spikes + over)))[0]
+    # 4 dominant spikes + a shelf of near-ties the oversampled sketch drags
+    # into its basis in QR (= sketch-column) order, not spectral order
+    s = jnp.concatenate([jnp.full((spikes,), 100.0),
+                         jnp.full((over,), 1.0)])
+    G = (U * s[None]) @ V.T
+    # no power iteration: the raw sketch keeps the shelf well-mixed
+    Q = randomized_range_finder(G, k3, rank=rank, n_iter=0, oversample=over)
+    cap = float(jnp.linalg.norm(Q.T @ G)) / float(jnp.linalg.norm(G))
+    # all four spikes captured: energy >= spike mass / total mass
+    spike_frac = float(jnp.sqrt(spikes * 100.0**2 / (spikes * 100.0**2 + over)))
+    assert cap >= spike_frac - 1e-4, (cap, spike_frac)
+    # the OLD truncation on the same sketch: orthonormal basis of the
+    # oversampled range, positionally sliced — demonstrably worse
+    G32 = G.astype(jnp.float32)
+    Omega = jax.random.normal(k3, (n, rank + over), dtype=jnp.float32)
+    Q_old = jnp.linalg.qr(G32 @ Omega)[0][:, :rank]
+    cap_old = float(jnp.linalg.norm(Q_old.T @ G)) / float(jnp.linalg.norm(G))
+    assert cap > cap_old + 1e-3, (cap, cap_old)
+
+
+def test_rsvd_reuses_range_finder_factorization():
+    """randomized_svd's U and randomized_range_finder's Q are the SAME ops in
+    the same order (shared _halko_factor) — bit-identical."""
+    key = jax.random.PRNGKey(5)
+    G = jax.random.normal(key, (80, 40))
+    Q = randomized_range_finder(G, key, rank=8)
+    U, s, Vt = randomized_svd(G, key, rank=8)
+    np.testing.assert_array_equal(np.asarray(Q), np.asarray(U))
+    assert s.shape == (8,) and Vt.shape == (8, 40)
+
+
 def test_subspace_overlap_bounds():
     key = jax.random.PRNGKey(2)
     Q1 = jnp.linalg.qr(jax.random.normal(key, (64, 8)))[0]
     assert abs(float(subspace_overlap(Q1, Q1)) - 1.0) < 1e-5
     Q2 = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1), (64, 8)))[0]
     assert 0.0 <= float(subspace_overlap(Q1, Q2)) <= 1.0
+
+
+def test_subspace_overlap_mixed_ranks():
+    """Regression for the Q1.shape[1]-only normalization: across a rank
+    resize (exactly what the PR-3 controller produces) overlap must stay in
+    [0, 1] and be symmetric; a contained subspace scores 1."""
+    key = jax.random.PRNGKey(3)
+    Q12 = jnp.linalg.qr(jax.random.normal(key, (64, 12)))[0]
+    Q4 = Q12[:, :4]                       # contained rank-4 subspace
+    hi = float(subspace_overlap(Q12, Q4))
+    lo = float(subspace_overlap(Q4, Q12))
+    assert abs(hi - 1.0) < 1e-5           # old code: 4/12 ≈ 0.33 here
+    assert abs(hi - lo) < 1e-6            # symmetric across the resize
+    # unrelated bases stay bounded (old code could exceed 1 with r1 < r2)
+    Qr = jnp.linalg.qr(
+        jax.random.normal(jax.random.fold_in(key, 9), (64, 32)))[0]
+    v = float(subspace_overlap(Q4, Qr))
+    assert 0.0 <= v <= 1.0 + 1e-6
 
 
 def _check_range_finder_orthonormal(m, n, r, seed):

@@ -1,0 +1,334 @@
+"""Distributed rSVD + the 2D-mesh (data × model) SUMO bucket update.
+
+The in-process tests need 8 devices, so they skip under the default
+single-device tier-1 run and execute via either (a) the slow subprocess
+wrapper at the bottom or (b) the second tier-1 invocation in
+tools/run_tier1.sh, which re-runs this file under
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+What is pinned here (the ISSUE-4 acceptance criteria):
+  * the distributed range finder / rSVD on row-sharded matrices match the
+    gathered single-device reference: subspace overlap ≥ 1-1e-5, identical
+    singular values to fp32 tolerance, orthonormal output, and no NaNs on
+    rank-deficient input (zero matrices — the bucketed engine's pad slots);
+  * SUMO on a (data=2, model=4) mesh — B over `data`, each matrix's long dim
+    over `model` — matches the single-device engine: deltas/state allclose,
+    per-matrix basis overlap ≥ 1-1e-5, for divisible, ragged, expert-stack
+    and B=1 (embed/lm_head-shaped) buckets, cadence-only and adaptive;
+  * `model=1` meshes stay BIT-identical to the 1D path (the CholeskyQR2
+    refresh only runs when matrices are actually sharded);
+  * the compiled 2D update moves no (long × short)-sized collective: every
+    all-reduce is an r-width panel; the only large transfers are the
+    explicit delta all-gathers.
+"""
+import os
+import re
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _mesh24():
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+# ---------------------------------------------------------------------------
+# kernel level: core.rsvd axis_name path
+# ---------------------------------------------------------------------------
+
+@needs_8_devices
+def test_distributed_range_finder_matches_gathered():
+    from repro.core import randomized_range_finder, subspace_overlap
+
+    mesh = _mesh24()
+    key = jax.random.PRNGKey(0)
+    G = jax.random.normal(key, (256, 32))
+    Q_ref = randomized_range_finder(G, key, rank=8)
+    f = shard_map(
+        lambda g, k: randomized_range_finder(g, k, 8, axis_name="model"),
+        mesh=mesh, in_specs=(P("model", None), P()),
+        out_specs=P("model", None), check_rep=False)
+    Q = f(G, key)
+    # orthonormal to fp32 roundoff despite never gathering the panel
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(8), atol=1e-5)
+    assert float(subspace_overlap(Q_ref, Q)) >= 1.0 - 1e-5
+
+
+@needs_8_devices
+def test_distributed_rsvd_matches_gathered():
+    from repro.core import randomized_svd, subspace_overlap
+
+    mesh = _mesh24()
+    key = jax.random.PRNGKey(1)
+    G = jax.random.normal(key, (512, 24))
+    U_ref, s_ref, Vt_ref = randomized_svd(G, key, rank=6)
+    U, s, Vt = shard_map(
+        lambda g, k: randomized_svd(g, k, 6, axis_name="model"),
+        mesh=mesh, in_specs=(P("model", None), P()),
+        out_specs=(P("model", None), P(), P()), check_rep=False)(G, key)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-5)
+    assert float(subspace_overlap(U_ref, U)) >= 1.0 - 1e-5
+    # right factors agree up to the same fp32 tolerance (no sign ambiguity:
+    # both factorizations produce U·s·Vt for the SAME G)
+    np.testing.assert_allclose(np.asarray(U @ (s[:, None] * Vt)),
+                               np.asarray(U_ref @ (s_ref[:, None] * Vt_ref)),
+                               atol=1e-3)
+
+
+@needs_8_devices
+def test_distributed_range_finder_rank_deficient_is_finite():
+    """Zero matrices (the sharded bucket path's masked pad slots) must come
+    back as finite zeros, not the NaNs an unshifted Cholesky would give."""
+    from repro.core import randomized_range_finder
+
+    mesh = _mesh24()
+    f = shard_map(
+        lambda g, k: randomized_range_finder(g, k, 4, axis_name="model"),
+        mesh=mesh, in_specs=(P("model", None), P()),
+        out_specs=P("model", None), check_rep=False)
+    Q = f(jnp.zeros((128, 16)), jax.random.PRNGKey(2))
+    assert bool(jnp.all(jnp.isfinite(Q)))
+    assert float(jnp.linalg.norm(Q)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# engine level: the 2D shard_map bucket update
+# ---------------------------------------------------------------------------
+
+def _params_2d(key):
+    """Ragged B=5 bucket of (64, 32) (long 64 % 4 == 0), an expert stack
+    (3, 80, 24), and a B=1 wide leaf (16, 128) — transposed into canonical
+    (128, 16), the embed/lm_head-shaped singleton the model axis exists
+    for."""
+    p = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (64, 32))
+         for i in range(5)}
+    p["experts"] = jax.random.normal(jax.random.fold_in(key, 50), (3, 80, 24))
+    p["wide"] = jax.random.normal(jax.random.fold_in(key, 99), (16, 128))
+    return p
+
+
+def _run(tx, params, grads, steps):
+    state = tx.init(params)
+    out = []
+    for _ in range(steps):
+        u, state = tx.update(grads, state, params)
+        out.append(u)
+    return out, state
+
+
+@needs_8_devices
+@pytest.mark.parametrize("refresh_quality", [0.0, 0.5],
+                         ids=["cadence-only", "adaptive"])
+def test_2d_mesh_matches_single_device(refresh_quality):
+    """5 steps with update_freq=3 (refresh boundary at step 3): deltas and
+    state allclose against the unsharded engine, and every per-matrix basis
+    overlaps its reference ≥ 1-1e-5. Not bit-parity: the model-sharded
+    refresh orthogonalizes via CholeskyQR2 instead of thin QR — but the
+    update itself is within-subspace-rotation invariant (delta = Q·orth(M)
+    with M rotated consistently), so deltas agree to fp32 accumulation."""
+    from repro.core import SumoConfig, subspace_overlap, sumo
+
+    mesh = _mesh24()
+    params = _params_2d(jax.random.PRNGKey(0))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=8, update_freq=3, weight_decay=0.05,
+                     refresh_quality=refresh_quality)
+
+    us, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 5)
+    up, sp = _run(sumo(0.01, cfg), params, grads, 5)
+
+    for step, (a, b) in enumerate(zip(us, up)):
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(a[k]), np.asarray(b[k]), atol=1e-5,
+                err_msg=f"step {step} leaf {k}")
+    for bk in ss.Q:
+        Qs, Qp = np.asarray(ss.Q[bk]), np.asarray(sp.Q[bk])
+        assert Qs.shape == Qp.shape       # state itself is NOT padded
+        for i in range(Qs.shape[0]):
+            ov = float(subspace_overlap(jnp.asarray(Qs[i]),
+                                        jnp.asarray(Qp[i])))
+            assert ov >= 1.0 - 1e-5, (bk, i, ov)
+        np.testing.assert_allclose(np.asarray(ss.prev_norm[bk]),
+                                   np.asarray(sp.prev_norm[bk]), atol=1e-5)
+        # M lives in basis coordinates, where the small SVD's per-column
+        # sign choice is input-dependent — the LIFTED moment QM is the
+        # basis-free quantity and must agree.
+        np.testing.assert_allclose(np.asarray(ss.Q[bk] @ ss.M[bk]),
+                                   np.asarray(sp.Q[bk] @ sp.M[bk]),
+                                   atol=1e-4)
+
+
+@needs_8_devices
+def test_2d_mesh_telemetry_close_to_unsharded():
+    """SpectralStats from the 2D path agree with the unsharded engine's to
+    fp32 tolerance (relative for κ — a squared ratio)."""
+    from repro.core import SumoConfig, sumo
+
+    mesh = _mesh24()
+    params = _params_2d(jax.random.PRNGKey(4))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=8, update_freq=3, telemetry=True)
+    _, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 4)
+    _, sp = _run(sumo(0.01, cfg), params, grads, 4)
+    assert set(ss.stats) == set(sp.stats) == {"64x32", "80x24", "128x16"}
+    for bucket in ss.stats:
+        for field, a, b in zip(ss.stats[bucket]._fields, ss.stats[bucket],
+                               sp.stats[bucket]):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float64), np.asarray(b, np.float64),
+                rtol=1e-3, atol=1e-5, err_msg=f"{bucket}.{field}")
+
+
+@needs_8_devices
+def test_model_axis_of_one_stays_bit_identical():
+    """A mesh WITH a model axis of size 1 must take the existing 1D path
+    bit-exactly — the distributed refresh only runs when matrices are
+    actually sharded."""
+    from repro.core import SumoConfig, sumo
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    params = _params_2d(jax.random.PRNGKey(3))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=8, update_freq=3, weight_decay=0.05)
+    us, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 5)
+    up, sp = _run(sumo(0.01, cfg), params, grads, 5)
+    for step, (a, b) in enumerate(zip(us, up)):
+        for k in params:
+            np.testing.assert_array_equal(
+                np.asarray(a[k]), np.asarray(b[k]),
+                err_msg=f"step {step} leaf {k}")
+    for fa, fb in zip(jax.tree_util.tree_leaves(ss),
+                      jax.tree_util.tree_leaves(sp)):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+@needs_8_devices
+def test_2d_mesh_no_full_matrix_collectives():
+    """Compile the 2D update with state placed by opt_state_specs
+    (Q: P(data, model, None)) and audit the optimized HLO: every all-reduce
+    is an r-width panel (some dim ≤ l = rank + oversample), the all-gathers
+    are exactly the delta gathers, and nothing else moves — refresh branch
+    included (the conditional's collectives are r-width too)."""
+    from repro.core import SumoConfig, sumo
+    from repro.parallel import opt_state_specs
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    mesh = _mesh24()
+    key = jax.random.PRNGKey(1)
+    params = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (256, 16))
+              for i in range(4)}
+    params["wide"] = jax.random.normal(jax.random.fold_in(key, 9), (16, 128))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    rank, over = 4, 4
+    tx = sumo(0.01, SumoConfig(rank=rank, update_freq=4, weight_decay=0.05,
+                               rsvd_oversample=over), mesh=mesh)
+    state = tx.init(params)
+    named = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    st_sh = named(opt_state_specs(state, mesh))
+    assert st_sh.Q["256x16"].spec == P("data", "model", None)
+    assert st_sh.Q["128x16"].spec == P(None, "model", None)   # B=1 singleton
+    rep = NamedSharding(mesh, P())
+    g_sh = jax.tree_util.tree_map(lambda _: rep, grads)
+    compiled = jax.jit(
+        lambda g, s, p: tx.update(g, s, p),
+        in_shardings=(g_sh, st_sh, g_sh),
+    ).lower(grads, state, params).compile()
+    txt = compiled.as_text()
+
+    l = rank + over
+    allowed_gather_shapes = set()
+    for B, long_d, short_d in ((4, 256, 16), (1, 128, 16)):
+        # model gather of the per-data-shard delta block, then the B gather
+        for b in {B, max(1, B // 2)}:
+            allowed_gather_shapes.add((b, long_d, short_d))
+    seen = {"all-reduce": 0, "all-gather": 0}
+    for m in re.finditer(
+            r"=\s*\w+\[([\d,]*)\][^=]*?\s"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start)?\(", txt):
+        dims = tuple(int(d) for d in m.group(1).split(",") if d)
+        kind = m.group(2)
+        assert kind in ("all-reduce", "all-gather"), (kind, dims)
+        seen[kind] += 1
+        if kind == "all-reduce":
+            # r-width panel: Gram (l×l), sketch/B panels (l×short),
+            # rotation (r×r), projection (r×short), scalar norms
+            assert min(dims, default=1) <= l and (
+                not dims or sorted(dims)[-2] <= max(l, 16)), dims
+            assert int(np.prod(dims or (1,))) <= 4 * l * 16, dims
+        else:
+            assert dims in allowed_gather_shapes, (dims, allowed_gather_shapes)
+    assert seen["all-reduce"] > 0 and seen["all-gather"] > 0
+    # aggregate audit via the roofline helper (worst-case cond branch):
+    # collective traffic is bounded by the delta gathers + r-width panels
+    cost = analyze_hlo(txt)
+    assert set(cost.collective_breakdown) <= {"all-reduce", "all-gather"}
+    delta_bytes = sum(int(np.prod(v.shape)) * 4 for v in params.values())
+    assert cost.collective_breakdown["all-gather"] <= 2 * delta_bytes
+    # the psum traffic (projection + the refresh branch's panels, counted
+    # worst-case by the conditional walk) stays strictly sub-delta — a
+    # single full-gradient-stack re-gather would alone exceed this
+    assert cost.collective_breakdown["all-reduce"] <= delta_bytes // 2
+
+
+@needs_8_devices
+def test_2d_mesh_under_jit_close_to_eager():
+    """jit with 2D-sharded state in/out stays numerically equivalent to the
+    eager 2D path (across modes XLA fusion moves the last ulp)."""
+    from repro.core import SumoConfig, sumo
+    from repro.parallel import opt_state_specs
+
+    mesh = _mesh24()
+    params = _params_2d(jax.random.PRNGKey(2))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    tx = sumo(0.01, SumoConfig(rank=8, update_freq=4), mesh=mesh)
+    state = tx.init(params)
+    named = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    st_sh = named(opt_state_specs(state, mesh))
+    rep = NamedSharding(mesh, P())
+    g_sh = jax.tree_util.tree_map(lambda _: rep, grads)
+    u_j, s_j = jax.jit(lambda g, s, p: tx.update(g, s, p),
+                       in_shardings=(g_sh, st_sh, g_sh))(grads, state, params)
+    u_e, s_e = tx.update(grads, state, params)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(u_j[k]), np.asarray(u_e[k]),
+                                   atol=1e-6)
+    for a, b in zip(jax.tree_util.tree_leaves(s_j),
+                    jax.tree_util.tree_leaves(s_e)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(jax.device_count() >= 8,
+                    reason="already running with 8 devices")
+def test_subprocess_8_device_suite():
+    """Run the in-process tests above on a forced 8-host-device CPU backend
+    (the main pytest process must keep 1 device — see tests/conftest.py)."""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         "tests/test_rsvd_sharded.py", "-k", "not subprocess"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]

@@ -307,7 +307,7 @@ def test_apply_decisions_resizes_state_and_training_continues():
     assert new_state.Q["64x32"].shape == (1, 64, 8)
     assert new_state.M["64x32"].shape == (1, 8, 32)
     assert new_state.stats["64x32"].sigma.shape == (8,)
-    assert overrides == (("64x32", 8, 8),)
+    assert overrides == (("64x32", 8, 8, 0.0),)
     # spectral shrink: the new basis stays orthonormal and the lifted moment
     # QM is preserved up to the discarded tail mass (negligible here)
     Qn = np.asarray(new_state.Q["64x32"][0])
@@ -360,6 +360,98 @@ def test_bucket_overrides_bitmatch_across_engines():
             np.testing.assert_array_equal(np.asarray(x[k]), np.asarray(y[k]),
                                           err_msg=f"step {step} {k}")
     assert sa.Q["64x32"].shape[-1] == 4 and sa.Q["48x16"].shape[-1] == 6
+
+
+def test_controller_arms_and_disarms_refresh_quality():
+    """ς policy: the worst in-window energy capture sagging below
+    ``quality_arm`` (while the mean stays healthy — that case grows rank
+    instead) arms the bucket's in-step refresh trigger; a recovered minimum
+    disarms it back to the global default."""
+    base = dict(n=8, last_step=7, kappa_mean=1e4, kappa_max=1e4,
+                ortho_max=1e-6, sigma_mean=np.linspace(1.0, 0.5, 8),
+                refresh_rate=0.25)           # κ between relax and tighten
+    ctrl = RankRefreshController(ControllerConfig(
+        window=8, tail_mass_low=0.0))        # isolate the quality policy
+    settings = {"64x32": BucketSetting(rank=8, update_freq=100,
+                                       long=64, short=32)}
+    sag = WindowAggregate(energy_mean=0.9, energy_min=0.3, **base)
+    d = ctrl.decide({"64x32": sag}, settings)["64x32"]
+    assert d.refresh_quality == 0.5
+    assert d.rank == 8 and d.update_freq == 100   # only ς moved
+    assert any("arm refresh_quality" in r for r in d.reasons)
+    # fold in and recover: the armed setting disarms
+    _, armed, overrides, _ = apply_decisions(
+        {}, settings, {"64x32": d})
+    assert overrides == (("64x32", 8, 100, 0.5),)
+    ok = WindowAggregate(energy_mean=0.95, energy_min=0.9, **base)
+    d2 = ctrl.decide({"64x32": ok}, armed)["64x32"]
+    assert d2.refresh_quality == 0.0
+    assert any("disarm refresh_quality" in r for r in d2.reasons)
+    # a sagging MEAN is the grow-rank case, not the arm case
+    starved = WindowAggregate(energy_mean=0.1, energy_min=0.05, **base)
+    d3 = ctrl.decide({"64x32": starved}, settings)["64x32"]
+    assert d3.refresh_quality == 0.0 and d3.rank == 16
+
+
+def test_bucket_quality_override_bitmatch_across_engines():
+    """A per-bucket ς override (4-tuple bucket_overrides entry) triggers the
+    adaptive refresh for exactly that bucket, bit-identically in the
+    bucketed and per-leaf engines; legacy 3-tuples still parse."""
+    key = jax.random.PRNGKey(11)
+    params = _tree(key)
+    # gradients whose subspace flips mid-run: the stale basis captures ~0
+    g1 = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    g2 = jax.tree_util.tree_map(
+        lambda x: jax.random.normal(jax.random.fold_in(key, 77), x.shape) * 0.01,
+        params)
+    over = (("64x32", 0, 0, 0.5), ("16x48", 4, 2))   # mixed 4- and 3-tuples
+    cfg_b = SumoConfig(rank=8, update_freq=100, telemetry=True,
+                       bucket_overrides=over)
+    cfg_l = SumoConfig(rank=8, update_freq=100, bucket_overrides=over,
+                       bucketed=False, state_layout="bucket")
+    assert cfg_b.bucket_refresh_quality(64, 32) == 0.5
+    assert cfg_b.bucket_refresh_quality(16, 48) == 0.0   # 3-tuple: global
+    assert cfg_b.bucket_rank(16, 48) == 4
+
+    def run(cfg):
+        tx = sumo(0.01, cfg)
+        st = tx.init(params)
+        out = []
+        for t in range(6):
+            u, st = tx.update(g1 if t < 3 else g2, st, params)
+            out.append(u)
+        return out, st
+
+    ub, sb = run(cfg_b)
+    ul, sl = run(cfg_l)
+    for step, (a, b) in enumerate(zip(ub, ul)):
+        for k in params:
+            np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]),
+                                          err_msg=f"step {step} {k}")
+    for x, y in zip(jax.tree_util.tree_leaves(sb.Q),
+                    jax.tree_util.tree_leaves(sl.Q)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # only the ς-armed bucket re-refreshed at the subspace flip (step 3);
+    # the un-armed wide bucket held its stale basis (update_freq=100... but
+    # its 3-tuple override tightened K to 2, so exclude it: check via a
+    # no-override control run instead)
+    _, s_ctl = run(SumoConfig(rank=8, update_freq=100, telemetry=True))
+    assert int(sb.stats["64x32"].refresh_fired) == 0      # steady at step 5
+    tx = sumo(0.01, cfg_b)
+    st = tx.init(params)
+    fired = []
+    for t in range(6):
+        _, st = tx.update(g1 if t < 3 else g2, st, params)
+        fired.append(int(st.stats["64x32"].refresh_fired))
+    assert fired[0] == 1 and fired[3] == 1    # flip re-fired via ς
+    ctl_fired = []
+    st = sumo(0.01, SumoConfig(rank=8, update_freq=100, telemetry=True)
+              ).init(params)
+    tx_ctl = sumo(0.01, SumoConfig(rank=8, update_freq=100, telemetry=True))
+    for t in range(6):
+        _, st = tx_ctl.update(g1 if t < 3 else g2, st, params)
+        ctl_fired.append(int(st.stats["64x32"].refresh_fired))
+    assert ctl_fired[3] == 0                  # without ς the flip is missed
 
 
 def test_train_loop_telemetry_and_controller(tmp_path):

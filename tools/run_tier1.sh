@@ -5,12 +5,14 @@
 #   tools/run_tier1.sh -m 'not slow'   # extra pytest args pass through
 #
 # Pass 1 runs the whole suite on the default single-device backend (the
-# multi-device tests in tests/test_sumo_sharded.py skip there, and their slow
-# subprocess wrapper covers them when slow tests are selected). Pass 2 re-runs
-# the sharded tests in-process on a forced 8-host-device CPU backend, which is
-# the direct, debuggable way to exercise the shard_map bucket-update path.
-# Pass 3 is the telemetry smoke: a short probes+sink+controller train run
-# must emit a non-empty, schema-valid JSONL stream (tools/telemetry_smoke.py).
+# multi-device tests in tests/test_sumo_sharded.py and
+# tests/test_rsvd_sharded.py skip there, and their slow subprocess wrappers
+# cover them when slow tests are selected). Pass 2 re-runs the sharded tests
+# in-process on a forced 8-host-device CPU backend — the 1D (data=8) shard_map
+# bucket path AND the 2D (data=2, model=4) mesh with model-sharded matrices
+# and the distributed rSVD. Pass 3 is the telemetry smoke: a short
+# probes+sink+controller train run must emit a non-empty, schema-valid JSONL
+# stream (tools/telemetry_smoke.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,5 +26,6 @@ fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-  python -m pytest -x -q tests/test_sumo_sharded.py -k "not subprocess"
+  python -m pytest -x -q tests/test_sumo_sharded.py tests/test_rsvd_sharded.py \
+  -k "not subprocess"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tools/telemetry_smoke.py
