@@ -173,6 +173,12 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
     update, plus an HLO collective-bytes audit (roofline/hlo_cost, which
     charges the worst-case cond branch — i.e. the refresh's r-width panels).
 
+    The tree deliberately mixes a divisible bucket (8× (256, 64)) with a
+    RAGGED-long bucket (4× (250, 64): 250 % 4 == 2, edge-padded to 252) so
+    the audit exercises the padded path and reports its overhead — the pad
+    rows ride the delta all-gathers, so the padded-vs-true row ratio is
+    exactly the extra interconnect the raggedness costs.
+
     Needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8 on
     CPU); under the default single-device container it emits a skip row so
     the CSV schema is stable. Wall times on forced host devices are
@@ -184,18 +190,27 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
                          "needs >= 8 devices (XLA_FLAGS host count)"))
         return
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import SumoConfig, sumo
+    from repro.core import SumoConfig, padded_long, sumo
     from repro.launch.mesh import make_host_mesh
     from repro.parallel import opt_state_specs
     from repro.roofline.hlo_cost import analyze_hlo
 
     mesh = make_host_mesh(model=4)
+    m_size = mesh.shape["model"]
     key = jax.random.PRNGKey(3)
-    # 8× (256, 64): one B=8 bucket, long 256 sharded 4-way, B 2-way.
+    # 8× (256, 64): one B=8 bucket, long 256 sharded 4-way, B 2-way; plus
+    # 4× (250, 64): a B=4 ragged-long bucket (250 -> 252 edge-padded).
     p2d = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (256, 64))
            for i in range(8)}
+    for i in range(4):
+        p2d[f"r{i}"] = jax.random.normal(
+            jax.random.fold_in(key, 100 + i), (250, 64))
     g2d = jax.tree_util.tree_map(lambda x: x * 0.01, p2d)
     delta_bytes = sum(int(x.size) * 4 for x in p2d.values())
+    # what the delta gathers actually move: padded rows, not true rows
+    padded_delta_bytes = sum(
+        padded_long(x.shape[0], m_size) * x.shape[1] * 4
+        for x in p2d.values())
 
     cost = None
     for regime, freq in (("steady", 1000), ("refresh_every_step", 1)):
@@ -217,18 +232,28 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
         _, st = upd(g2d, st, p2d)          # compile + move past step 0
         us = _time_step(upd, g2d, st, p2d) * 1e6
         csv_rows.append((f"sumo_2d_mesh/step_us/{regime}", us,
-                         "8x(256,64) r=16 (data=2,model=4)"))
+                         "8x(256,64)+4x(250,64 ragged) r=16 (data=2,model=4)"))
     brk = ";".join(f"{k}={int(v)}" for k, v in
                    sorted(cost.collective_breakdown.items()))
     csv_rows.append(("sumo_2d_mesh/collective_bytes", cost.collective_bytes,
-                     f"worst-case(refresh) {brk} delta_bytes={delta_bytes}"))
+                     f"worst-case(refresh) {brk} delta_bytes={delta_bytes} "
+                     f"padded_delta_bytes={padded_delta_bytes}"))
+    # edge-padding overhead: the ragged bucket's zero pad rows ride the
+    # delta gathers (and the shard-local matmuls) — report padded vs true
+    # rows so a config whose shapes are pathologically ragged on the chosen
+    # model axis shows up as a concrete interconnect tax in the CSV.
+    csv_rows.append((
+        "sumo_2d_mesh/pad_overhead_frac",
+        (padded_delta_bytes - delta_bytes) / delta_bytes,
+        "extra delta-gather bytes from edge-padded ragged long dims, / true",
+    ))
     # the portable headline: cross-shard traffic beyond the delta gather is
     # r-width — report the ratio so regressions (an accidental full-matrix
     # psum or re-gather) jump out of the CSV. The expected delta gathers
-    # move delta_bytes (the B-axis gather of the full stack) plus
-    # delta_bytes / data_size (the model-axis gather of each data shard's
-    # B-block) — hlo_cost counts result-buffer sizes.
-    expected_gather = delta_bytes * (1 + 1 / mesh.shape["data"])
+    # move padded_delta_bytes (the B-axis gather of the full stack) plus
+    # padded_delta_bytes / data_size (the model-axis gather of each data
+    # shard's B-block) — hlo_cost counts result-buffer sizes.
+    expected_gather = padded_delta_bytes * (1 + 1 / mesh.shape["data"])
     csv_rows.append((
         "sumo_2d_mesh/nondelta_collective_frac",
         max(0.0, cost.collective_bytes - expected_gather) / delta_bytes,

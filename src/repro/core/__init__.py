@@ -31,13 +31,20 @@ from .orthogonalize import (
     orthogonalize_svd_with_spectrum,
     rank_one_residual,
 )
-from .rsvd import randomized_range_finder, randomized_svd, subspace_overlap, truncated_svd
+from .rsvd import (
+    randomized_range_finder,
+    randomized_svd,
+    rsvd_effective_rank,
+    subspace_overlap,
+    truncated_svd,
+)
 from .sumo import (
     MatrixStats,
     SpectralStats,
     SumoConfig,
     SumoState,
     convert_sumo_state,
+    padded_long,
     sumo,
     sumo_optimizer,
     sumo_state_layout,
@@ -45,7 +52,7 @@ from .sumo import (
 
 __all__ = [
     "SumoConfig", "SumoState", "sumo", "sumo_optimizer",
-    "convert_sumo_state", "sumo_state_layout",
+    "convert_sumo_state", "sumo_state_layout", "padded_long",
     "MatrixStats", "SpectralStats",
     "GaloreConfig", "galore", "galore_optimizer",
     "muon", "muon_optimizer",
@@ -60,6 +67,6 @@ __all__ = [
     "rank_one_residual", "orthogonality_error", "gram_spectrum",
     "orthogonalize_polar_with_spectrum", "orthogonalize_svd_with_spectrum",
     "randomized_range_finder", "randomized_svd", "truncated_svd",
-    "subspace_overlap",
+    "rsvd_effective_rank", "subspace_overlap",
     "analytic_state_floats", "model_memory_report", "tree_state_bytes",
 ]

@@ -33,10 +33,45 @@ matrix is NEVER gathered. The collectives are all r-width panels:
 
 So a refresh of a sharded (m, n) matrix costs O(l·(m/p + n)) local work and
 O(l·(n + l)) collective bytes per power iteration — the r-width-collective
-discipline GaLore-style methods rely on. The distributed path assumes the
-canonical long-first orientation (global m ≥ n, SUMO's convention), so the
-sketch width l is clamped by n alone. With ``axis_name=None`` the code is the
-plain single-device Halko pipeline (thin jnp QR, no collectives).
+discipline GaLore-style methods rely on. With ``axis_name=None`` the code is
+the plain single-device Halko pipeline (thin jnp QR, no collectives).
+
+Orientation and the padded-rows regime (the distributed invariants)
+-------------------------------------------------------------------
+The distributed path assumes the canonical long-first orientation: the TRUE
+(unpadded) global row count satisfies m ≥ n, so the sketch width l is clamped
+by n alone — the local row count says nothing about the global shape and is
+never consulted for the clamp.
+
+Callers whose global long dim does not divide the mesh axis (SUMO's
+edge-padded ragged buckets) append all-zero pad rows so every shard holds an
+equal row block. Zero rows are INERT through this entire pipeline — no mask
+is needed at any step — because every op either transforms rows
+independently or reduces over rows:
+
+  * ``G @ Omega`` / ``G @ Z``: a zero row of G yields a zero row of the
+    sketch, exactly (0·x = 0 in IEEE);
+  * the CholeskyQR2 Gram panel ``psum(YᵀY)``: zero rows contribute nothing
+    to the Gram matrix, so its trace — and therefore the relative shift
+    derived from it — is identical with or without pad rows;
+  * ``Y L⁻ᵀ`` (the triangular solve applied from the right) transforms each
+    row independently: zero rows stay exactly zero;
+  * the panel reductions ``psum(GᵀQ)`` / ``psum(QᵀG)``: zero rows of G and
+    the matching zero rows of Q contribute zero partial products;
+  * ``Q @ Ub``: zero rows of Q stay zero.
+
+So a basis refreshed from an edge-padded gradient has EXACTLY zero pad rows,
+projections/norms computed through it never see pad contributions, and the
+invariant is self-propagating across refreshes (zero in -> zero out). The
+consumer (core.sumo) still applies a defensive pad-row mask on entry so a
+hand-built or corrupted state cannot silently break the invariant.
+
+Rank clamping: the sketch can never deliver more than l = min(rank +
+oversample, n) directions (n = min(m, n) single-device). ``rank > l`` is
+therefore clamped EXPLICITLY — all three factors come back with
+``rsvd_effective_rank(...)`` columns, never silently fewer than each other —
+so a controller rank-grow on a small-short-dim bucket sees a consistent,
+predictable shape instead of a mis-shaped Q.
 """
 from __future__ import annotations
 
@@ -63,16 +98,31 @@ def _cholesky_qr2(Y: jnp.ndarray, axis_name: str) -> jnp.ndarray:
     ~κ(Y)²·eps; the second pass (CholeskyQR2) runs on an already
     near-orthonormal panel (κ ≈ 1) and lands on fp32 roundoff.
 
-    The Gram matrix carries a tiny relative shift before factoring so
-    rank-deficient panels (zero gradients, the bucketed engine's masked pad
-    slots) stay finite — they come back as zero columns instead of NaNs, and
-    for well-conditioned panels the second pass absorbs the perturbation.
+    The Gram matrix carries a SHIFT before factoring (shifted CholeskyQR2,
+    Fukaya et al.): fp32 Gram roundoff is O(eps·‖Y‖₂²) and an
+    ill-conditioned panel's true λ_min sits below it, so an unshifted (or
+    eps-scale-ignoring) shift lets ``cholesky`` meet a negative pivot and
+    return NaNs — observed in practice when the sketch width hits the short
+    dim (square Omega ⇒ κ(Y) = κ(G)·κ(Omega), a lottery) inside large fused
+    train steps, where XLA's re-association moves the roundoff. Lifting the
+    spectrum by 16·eps·trace ≥ 16·eps·λ_max keeps the factorization PD for
+    ANY finite panel; the first pass then lands at κ ≲ 1/√(16·eps) and the
+    second pass restores orthonormality to fp32 roundoff. The big lift is
+    FIRST-pass only: shifting by s scales columns down by ~s/2, so reusing
+    it in pass two would bias every norm by 16·eps·l (observable at 1e-5
+    tolerances); the second pass sees a near-orthonormal panel (unit-scale
+    diagonal, κ ≈ 1) where a mean-diagonal-scaled eps floor is already
+    PD-safe and the bias is O(eps). Rank-deficient panels (zero gradients,
+    the bucketed engine's masked pad slots) keep trace 0 ⇒ only the 1e-30
+    floor, and come back as exact zero columns instead of NaNs.
     """
     l = Y.shape[-1]
     eye = jnp.eye(l, dtype=jnp.float32)
-    for _ in range(2):
+    eps = float(jnp.finfo(jnp.float32).eps)
+    for i in range(2):
         gram = jax.lax.psum(Y.T @ Y, axis_name)          # (l, l) panel
-        shift = 1e-12 * (jnp.trace(gram) / l) + 1e-30
+        rel = 16.0 * eps if i == 0 else 2.0 * eps / l
+        shift = rel * jnp.trace(gram) + 1e-30
         L = jnp.linalg.cholesky(gram + shift * eye)
         # Y <- Y L^-T, i.e. solve L X = Yᵀ and transpose back.
         Y = jax.scipy.linalg.solve_triangular(L, Y.T, lower=True).T
@@ -96,8 +146,18 @@ def _sketch_basis(
         if axis_name is not None
         else _orthonormalize
     )
-    Omega = jax.random.normal(key, (n, l), dtype=jnp.float32)
-    Q = ortho(G32 @ Omega)                    # (m, l), shard-local matmul
+    if l == n:
+        # A square Omega cannot reduce dimension — range(G @ Omega) is
+        # range(G) exactly — but it DOES multiply the panel's condition
+        # number by κ(Omega), a lottery a square gaussian loses often
+        # enough to break fp32 downstream (the l == n case is exactly
+        # rank + oversample ≥ short dim, common for small-short buckets).
+        # Use G itself as the panel: same subspace, κ(G) conditioning,
+        # one matmul cheaper.
+        Q = ortho(G32)
+    else:
+        Omega = jax.random.normal(key, (n, l), dtype=jnp.float32)
+        Q = ortho(G32 @ Omega)                # (m, l), shard-local matmul
     for _ in range(n_iter):
         # subspace/power iteration with re-orthonormalization for stability
         Z = G32.T @ Q                         # (n, l) partial per shard
@@ -106,6 +166,19 @@ def _sketch_basis(
         Z = _orthonormalize(Z)                # replicated: plain thin QR
         Q = ortho(G32 @ Z)                    # (m, l)
     return Q
+
+
+def rsvd_effective_rank(rank: int, short_dim: int) -> int:
+    """Number of columns the sketch pipeline actually delivers for a
+    requested ``rank``: the sketch width l = min(rank + oversample,
+    short_dim) bounds the subspace, so ``rank > l`` under-delivers — and
+    since oversample ≥ 0, the binding clamp is always just the short dim.
+    All rsvd entry points clamp to this value explicitly (never silently
+    returning fewer columns than requested without the clamp being visible
+    here). ``short_dim`` is min(m, n) single-device, or n on the
+    distributed path (canonical long-first orientation — the true global
+    long dim, pad rows included or not, never enters the clamp)."""
+    return max(1, min(rank, short_dim))
 
 
 def _halko_factor(
@@ -119,12 +192,20 @@ def _halko_factor(
     """Shared core of both entry points: sketch basis + small factorization.
 
     Returns (U, s, Vt) with U = Q_sketch @ Ub — the properly truncated
-    rank-`rank` factors. U is row-sharded like G under ``axis_name``."""
+    factors, all with exactly ``rsvd_effective_rank(rank, ...)`` columns
+    (rank is CLAMPED by the sketch width — see module docstring). U is
+    row-sharded like G under ``axis_name``."""
     m, n = G.shape
     # Sketch width: oversampled, clamped by the short dim. On the distributed
     # path m is the LOCAL row count, so the clamp uses n alone (the canonical
-    # long-first orientation guarantees global m >= n >= l).
-    l = min(rank + oversample, n if axis_name is not None else min(m, n))
+    # long-first orientation guarantees global TRUE rows >= n >= l; zero pad
+    # rows on top of the true rows change nothing — see module docstring).
+    short = n if axis_name is not None else min(m, n)
+    l = min(rank + oversample, short)
+    # The sketch spans at most l directions: rank > l cannot be delivered.
+    # Clamp explicitly so U/s/Vt agree on their width instead of Ub[:, :rank]
+    # silently under-delivering a mis-shaped Q to downstream code.
+    rank = rsvd_effective_rank(rank, short)
     G32 = G.astype(jnp.float32)
     Q = _sketch_basis(G32, key, l, n_iter, axis_name)    # (m, l)
     B = Q.T @ G32                                        # (l, n) partial
@@ -154,7 +235,11 @@ def randomized_range_finder(
     ``axis_name``: when set, G is the local row block of a matrix sharded
     over that shard_map mesh axis and Q comes back sharded the same way —
     only r-width panels cross shards. Requires the canonical long-first
-    orientation (global rows ≥ n).
+    orientation (global TRUE rows ≥ n; all-zero edge-pad rows on top are
+    inert — see module docstring).
+
+    The returned basis has ``rsvd_effective_rank(rank, min(m, n))`` columns
+    — `rank` is clamped by the sketch width, never silently under-delivered.
     """
     U, _, _ = _halko_factor(G, key, rank, n_iter, oversample, axis_name)
     return U
@@ -169,7 +254,10 @@ def randomized_svd(
     oversample: int = 4,
     axis_name: Optional[str] = None,
 ):
-    """Truncated rSVD: returns (U (m,r), s (r,), Vt (r,n)).
+    """Truncated rSVD: returns (U (m,r), s (r,), Vt (r,n)) with
+    r = ``rsvd_effective_rank(rank, min(m, n))`` (the clamp that
+    keeps all three factors consistently shaped when rank exceeds the
+    sketch width).
 
     Reuses the range finder's factorization (same sketch, same small SVD):
     ``randomized_svd(G, ...)[0]`` and ``randomized_range_finder(G, ...)``

@@ -77,25 +77,35 @@ delta scatter back to (replicated) params gathers. Ragged buckets
 shard too; only singleton (B == 1) buckets keep the single-device vmap path.
 
 2D mesh: when the mesh ALSO has a ``SumoConfig.model_axis`` (default
-``"model"``) of size > 1 and a bucket's long dim divides it, that bucket
-runs the 2D path — each matrix's long dim is sharded over `model` on top of
-B over `data`, so buckets whose MATRICES are themselves model-sharded
-(embed/lm_head/MoE experts at 22B+ scale) refresh without ever re-gathering
-the (long, short) gradient. Q enters and leaves as ``opt_state_specs``
-places it, ``P(data, model, None)``; G/W enter with their long dim sliced
-over `model`; M/prev_norm/O stay replicated over `model` (r-width bytes —
-the point of the paper). The refresh calls the distributed range finder
-(``core.rsvd`` with ``axis_name``: CholeskyQR2 Gram orthogonalization, all
-collectives r-width panels), the projection Ĝ = QᵀG finishes with one
-r-width psum over `model`, the back-projection QO is collective-free, and
-the only full-size transfer remains the explicit delta all-gather (`model`
-rows first, then the B-axis gather). Singleton (B == 1) buckets — exactly
-the embed/lm_head shapes that need model sharding most — run the 2D path
-with B replicated. The `model=1` mesh (or an indivisible long dim) keeps
-the paths above bit-identically: CholeskyQR2 differs from thin QR in the
-last ulp, so it only runs when the matrices are actually sharded; with
+``"model"``) of size > 1, EVERY bucket runs the 2D path — each matrix's
+long dim is sharded over `model` on top of B over `data`, so buckets whose
+MATRICES are themselves model-sharded (embed/lm_head/MoE experts at 22B+
+scale) refresh without ever re-gathering the (long, short) gradient.
+Ragged long dims (long % model != 0) EDGE-PAD: the stored Q carries
+all-zero pad rows up to ``padded_long(long, model)`` (the smallest multiple
+of the axis size), G/W pad transiently at stack time, and deltas slice back
+to true rows before the all-gather scatter. Zero pad rows are exactly inert
+through the Gram/psum pipeline (see core.rsvd's module docstring for the
+op-by-op invariant), so padded buckets run the identical code as divisible
+ones — no bucket ever falls back to replicated-long full-matrix residency.
+Q enters and leaves as ``opt_state_specs`` places it,
+``P(data, model, None)`` on the PADDED long dim; G/W enter with their
+(padded) long dim sliced over `model`; M/prev_norm/O stay replicated over
+`model` (r-width bytes — the point of the paper). The refresh calls the
+distributed range finder (``core.rsvd`` with ``axis_name``: CholeskyQR2
+Gram orthogonalization, all collectives r-width panels), the projection
+Ĝ = QᵀG finishes with one r-width psum over `model`, the back-projection QO
+is collective-free, and the only full-size transfer remains the explicit
+delta all-gather (`model` rows first, then the B-axis gather). Singleton
+(B == 1) buckets — exactly the embed/lm_head shapes that need model
+sharding most — run the 2D path with B replicated. The `model=1` mesh
+keeps the paths above bit-identically: CholeskyQR2 differs from thin QR in
+the last ulp, so it only runs when the matrices are actually sharded; with
 `model>1` the 2D path is pinned to the gathered reference by subspace
-overlap ≥ 1-1e-5 (tests/test_rsvd_sharded.py).
+overlap ≥ 1-1e-5, ragged long dims included (tests/test_rsvd_sharded.py).
+Checkpoints restore across mesh shapes: ``train.checkpoint`` re-pads /
+slices the bucket Q stacks against the restore template's mesh (the
+bucket key records the TRUE long dim, so the migration is self-describing).
 
 Spectral telemetry
 ------------------
@@ -213,11 +223,12 @@ class SumoConfig:
     # when a mesh is passed to sumo(..., mesh=...).
     bucket_axis: str = "data"
     # Mesh axis the shard_map path shards each matrix's LONG dim over (tensor
-    # parallel). When the mesh has this axis with size > 1 and a bucket's
-    # long dim divides it, the bucket runs the 2D path: Q/G row-sharded over
-    # `model`, the rSVD refresh via the distributed range finder, projection
-    # finished with an r-width psum — no (long, short) collective ever. Long
-    # dims that don't divide the axis fall back to the replicated-long path.
+    # parallel). When the mesh has this axis with size > 1, EVERY bucket runs
+    # the 2D path: Q/G row-sharded over `model`, the rSVD refresh via the
+    # distributed range finder, projection finished with an r-width psum —
+    # no (long, short) collective ever. Ragged long dims edge-pad with
+    # all-zero (bit-inert) rows to the next axis multiple instead of falling
+    # back to the replicated-long path (see ``padded_long``).
     model_axis: str = "model"
     # Projection/back-projection impl: "auto" (Pallas on TPU, reference
     # matmul elsewhere), "pallas" (force the kernel; interpret mode on CPU),
@@ -558,7 +569,11 @@ def _check_bucket_slots(Qd, bucket):
 
 
 def _unstack_bucket_state(cfg, plan, leaf_shapes, Qd, Md, pnd):
-    """Per-bucket stacked dicts -> per-leaf state lists (inverse of stack)."""
+    """Per-bucket stacked dicts -> per-leaf state lists (inverse of stack).
+
+    Bucket Q stacks may carry the 2D mesh's edge-padded long dim (all-zero
+    pad rows — see ``padded_long``); per-leaf state is always TRUE-shaped,
+    so the pad rows are sliced off here."""
     n_leaves = len(leaf_shapes)
     lQ = [None] * n_leaves
     lM = [None] * n_leaves
@@ -566,6 +581,8 @@ def _unstack_bucket_state(cfg, plan, leaf_shapes, Qd, Md, pnd):
     for b in plan:
         _check_bucket_slots(Qd, b)
         Qb, Mb, pnb = Qd[b.key], Md[b.key], pnd[b.key]
+        if Qb.shape[-2] > b.shape[0]:          # padded long -> true long
+            Qb = Qb[:, : b.shape[0], :]
         off = 0
         for i, cnt in zip(b.leaf_indices, b.counts):
             sl = slice(off, off + cnt)
@@ -588,17 +605,33 @@ def sumo_state_layout(state: SumoState) -> str:
 
 
 def convert_sumo_state(
-    state: SumoState, params: PyTree, cfg: SumoConfig, target: str
+    state: SumoState, params: PyTree, cfg: SumoConfig, target: str,
+    long_pad_to: Optional[int] = None,
 ) -> SumoState:
     """Convert SUMO state between 'leaf' and 'bucket' layouts, bit-exactly.
 
     ``params`` (the masked matrix-param tree the state was initialised from —
     None leaves stay None) supplies the static leaf shapes/treedef the plan
     is derived from; no plan is ever stored in the state itself.
+
+    ``long_pad_to``: the target mesh's model-axis size when converting TO
+    the bucket layout of a 2D mesh — each bucket's Q stack comes back with
+    its long dim edge-padded to exactly ``padded_long(long, long_pad_to)``
+    (re-padding or slicing another mesh's zero pad rows as needed, both
+    lossless; 1 = the unpadded single-device/model=1 layout). The default
+    ``None`` leaves bucket padding untouched — a bucket → bucket conversion
+    is then the identity. The bucket → leaf direction always slices pad
+    rows off (per-leaf state is true-shaped), whatever this is set to.
     """
     if target not in ("leaf", "bucket"):
         raise ValueError(f"unknown target layout {target!r}")
     if sumo_state_layout(state) == target:
+        if target == "bucket" and long_pad_to is not None:
+            leaves, _ = jax.tree_util.tree_flatten(
+                params, is_leaf=lambda x: x is None)
+            plan = opt.build_bucket_plan(
+                [None if l is None else l.shape for l in leaves])
+            return state._replace(Q=_pad_bucket_q(state.Q, plan, long_pad_to))
         return state
     leaves, treedef = jax.tree_util.tree_flatten(params, is_leaf=lambda x: x is None)
     shapes = [None if l is None else l.shape for l in leaves]
@@ -610,7 +643,9 @@ def convert_sumo_state(
             treedef.flatten_up_to(state.M),
             treedef.flatten_up_to(state.prev_norm),
         )
-        return state._replace(Q=Qd, M=Md, prev_norm=pnd)
+        return state._replace(
+            Q=_pad_bucket_q(Qd, plan, long_pad_to or 1),
+            M=Md, prev_norm=pnd)
     lQ, lM, lpn = _unstack_bucket_state(cfg, plan, shapes, state.Q, state.M,
                                         state.prev_norm)
     unflat = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
@@ -690,6 +725,69 @@ def _pad_rows(a: jnp.ndarray, pad: int) -> jnp.ndarray:
         [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
 
 
+def padded_long(long_d: int, m_shards: int) -> int:
+    """Edge-padded long dim: the smallest multiple of ``m_shards`` ≥
+    ``long_d``. This is the stored/working row count of every long-dim array
+    (Q, and transiently G/W/delta) on a mesh whose model axis has
+    ``m_shards`` devices — ragged long dims (long % model != 0) shard by
+    carrying all-zero pad rows at the END of the long dim (so the pads land
+    contiguously on the last model shard). Identity when ``m_shards`` ≤ 1
+    or the long dim already divides."""
+    if m_shards <= 1:
+        return long_d
+    return -(-long_d // m_shards) * m_shards
+
+
+def _model_shards(cfg: SumoConfig, mesh) -> int:
+    """Size of the mesh's model axis as the bucket update sees it (1 when
+    there is no mesh / no such axis — the no-padding 1D regime)."""
+    if isinstance(mesh, Mesh) and cfg.model_axis in mesh.shape:
+        return int(mesh.shape[cfg.model_axis])
+    return 1
+
+
+def _pad_long_rows(a: jnp.ndarray, pad: int) -> jnp.ndarray:
+    """Append `pad` zero rows along the long (second-to-last) dim.
+
+    jnp.pad (HLO Pad), NOT concatenate: when the result's long dim is
+    sharded at the shard_map boundary, GSPMD partitions a Pad locally
+    (iota/select against the scalar pad value) while a concatenate whose
+    seam crosses a shard boundary lowers to dynamic-update-slice + a
+    full-size all-reduce — exactly the (B, long, short) collective the 2D
+    path promises never to move."""
+    if pad <= 0:
+        return a
+    return jnp.pad(a, [(0, 0)] * (a.ndim - 2) + [(0, pad), (0, 0)])
+
+
+def _normalize_long_rows(a: jnp.ndarray, true_long: int,
+                         long_pad: int) -> jnp.ndarray:
+    """Re-pad a long-dim array to exactly ``long_pad`` rows: rows beyond
+    ``true_long`` (another mesh's zero pads — zeros by the engine
+    invariant) are sliced off first, then zero rows are appended. Both
+    directions are lossless; no-op when already at ``long_pad``."""
+    if a.shape[-2] > true_long and a.shape[-2] != long_pad:
+        a = a[..., :true_long, :]
+    if long_pad > a.shape[-2]:
+        a = _pad_long_rows(a, long_pad - a.shape[-2])
+    return a
+
+
+def _pad_bucket_q(Qd: dict, plan, m_shards: int) -> dict:
+    """Normalize every bucket's Q stack to the mesh's edge-padded long dim:
+    zero pad rows appended when the stack is narrower, and rows beyond the
+    TRUE long dim sliced off first when the stack was padded for a LARGER
+    model axis (those rows are zeros by the engine invariant, so both
+    directions are lossless). Keeps bucket-layout state shapes
+    mesh-consistent whichever engine — or previous mesh — produced them."""
+    out = dict(Qd)
+    for b in plan:
+        if b.key in out:
+            out[b.key] = _normalize_long_rows(
+                out[b.key], b.shape[0], padded_long(b.shape[0], m_shards))
+    return out
+
+
 def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
                       leaf_keys, lr, step):
     """Bucketed engine over BUCKET-LAYOUT state: one vmapped
@@ -766,16 +864,19 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
             mesh.shape[axis]
             if isinstance(mesh, Mesh) and axis in mesh.shape else 1
         )
-        m_shards = (
-            mesh.shape[maxis]
-            if isinstance(mesh, Mesh) and maxis in mesh.shape else 1
-        )
-        # 2D path: long dim over `model` (+ B over `data` when it pays).
-        # Indivisible long dims keep the replicated-long 1D path below; a
-        # model axis of size 1 keeps it too, bit-identically (the 2D body's
+        m_shards = _model_shards(cfg, mesh)
+        # 2D path: long dim over `model` (+ B over `data` when it pays) for
+        # EVERY bucket — ragged long dims (long % model != 0) edge-pad with
+        # all-zero rows up to ``padded_long`` so no bucket ever falls back to
+        # the replicated-long 1D path on a model>1 mesh (the GaLore-style
+        # full-matrix residency the memory claims argue against). Zero pad
+        # rows are inert through the whole pipeline (core.rsvd module
+        # docstring proves the invariant op by op), so padded and divisible
+        # buckets run the same code. A model axis of size 1 (or no mesh)
+        # keeps the 1D paths below bit-identically (the 2D body's
         # CholeskyQR2 refresh differs from thin QR in the last ulp, so it
         # only runs when the matrices are actually sharded).
-        use_model = m_shards > 1 and long_d % m_shards == 0
+        use_model = m_shards > 1
         q_thresh = cfg.bucket_refresh_quality(long_d, short_d)
         b_true = bucket.size
         ms = dr_out = None
@@ -794,6 +895,28 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
             # Singleton buckets (B == 1: embed/lm_head-shaped — the very
             # matrices that NEED model sharding) run with B replicated and
             # only the long dim sharded.
+            #
+            # Ragged long dims: G/W edge-pad with zero rows to ``long_pad``
+            # (HLO Pad of the replicated stacks — no collective); the stored
+            # Q is already padded (init/checkpoint restore/leaf restack all
+            # agree on ``padded_long``). The authoritative pad-row mask
+            # lives INSIDE body2d (shard-local jnp.where): it pins the pad
+            # rows of G/Q/W to exact zeros at the point the Gram/psum
+            # pipeline consumes them, which both defends the inertness
+            # invariant against hand-built state AND against the fused-step
+            # partitioner leaving unspecified values in the pad rows at the
+            # shard_map boundary. ``full_long`` stays the TRUE long dim —
+            # the rms scale and every stat must never see pad rows.
+            long_pad = padded_long(long_d, m_shards)
+            lpad = long_pad - long_d
+            if lpad:
+                G = _pad_long_rows(G, lpad)
+                if stack_w:
+                    W = _pad_long_rows(W, lpad)
+            # leaf-layout restack delivers true-long stacks; a state migrated
+            # in-process from a larger model axis arrives over-padded (zero
+            # rows beyond the true long dim). No-op for the stored layout.
+            Q = _normalize_long_rows(Q, long_d, long_pad)
             b_shard = n_shards > 1 and bucket.size > 1
             pad = (-bucket.size) % n_shards if b_shard else 0
             b_padded = bucket.size + pad
@@ -815,6 +938,23 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
             # pinned BIT-identical to the pre-2D engine — fold fixes to the
             # shared logic into both.
             def body2d(lr_, dr_, G_, Q_, M_, pn_, K_, *W_):
+                if lpad:
+                    # Shard-local pad-row mask on everything that feeds the
+                    # Gram/psum pipeline. The global pads above are exact
+                    # zeros SEMANTICALLY, but inside a fused train step the
+                    # partitioner routes internally-padded layouts of the
+                    # cotangents through the pad/stack assembly, and the
+                    # values that land in the pad rows at this boundary are
+                    # then unspecified — jnp.where (not multiply: 0·NaN =
+                    # NaN) pins them to zero where the inertness invariant
+                    # needs them. Only the LAST model shard holds pad rows;
+                    # for well-formed inputs this is an exact identity.
+                    rows_loc = G_.shape[-2]
+                    g0 = jax.lax.axis_index(maxis) * rows_loc
+                    live = ((g0 + jnp.arange(rows_loc)) < long_d)[None, :, None]
+                    G_ = jnp.where(live, G_, 0.0)
+                    Q_ = jnp.where(live, Q_, 0.0)
+                    W_ = tuple(jnp.where(live, w, 0.0) for w in W_)
                 if b_shard:
                     i0 = jax.lax.axis_index(axis) * blk
                     G_loc = jax.lax.dynamic_slice_in_dim(G_, i0, blk, axis=0)
@@ -851,6 +991,18 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
                     d_full = jax.lax.all_gather(d_full, axis, axis=0,
                                                 tiled=True)
                 if tel:
+                    # Stats ride out replicated (out_specs P()) — valid under
+                    # long-dim padding because every long-reduced ingredient
+                    # is a `model`-psum over rows in which the pad rows
+                    # contribute EXACTLY zero (zero G rows, zero Q rows):
+                    # energy capture ‖QᵀG‖/‖G‖, grad/update norms and the
+                    # refresh predicate all reduce the same padded operands
+                    # the update itself consumes, and full_long (not the
+                    # padded row count) feeds the rms scale — so pad rows can
+                    # never dilute a stat. σ/κ/ortho-residual live in the
+                    # r×short space pads never enter. Pinned against the 1D
+                    # engine's probes on a ragged-long bucket in
+                    # tests/test_rsvd_sharded.py.
                     ms_full = out[4]
                     if b_shard:
                         ms_full = jax.tree_util.tree_map(
@@ -882,6 +1034,11 @@ def _bucketed_updates(cfg, mesh, plan, leaves_g, Qd, Md, pnd, leaves_p,
                 d, Qn, Mn, pnn = (a[:b_true] for a in (d, Qn, Mn, pnn))
                 if tel:
                     ms = jax.tree_util.tree_map(lambda a: a[:b_true], ms)
+            if lpad:
+                # deltas slice back to TRUE rows before the scatter to the
+                # (true-shaped) params; Qn keeps the padded long dim — the
+                # stored bucket-resident layout on this mesh.
+                d = d[:, :long_d]
         elif n_shards > 1 and bucket.size > 1:
             # Sharded bucket update. Data-movement discipline: the stacked
             # G/W/keys enter REPLICATED (they are assembled locally from the
@@ -1048,11 +1205,18 @@ def sumo(
         plan = opt.build_bucket_plan(
             [None if l is None else l.shape for l in leaves])
         if layout == "bucket":
+            # On a 2D mesh the stored Q carries the edge-padded long dim
+            # (zero pad rows) so ragged buckets shard P(data, model, None)
+            # in place like divisible ones — opt_state_specs and the update
+            # consume exactly this shape, checkpoints re-pad/slice it
+            # across meshes.
+            m_shards = _model_shards(cfg, mesh)
             Qs, Ms, pns = {}, {}, {}
             for b in plan:
                 long_d, short_d = b.shape
                 r = cfg.bucket_rank(long_d, short_d)
-                Qs[b.key] = jnp.zeros((b.size, long_d, r), jnp.float32)
+                Qs[b.key] = jnp.zeros(
+                    (b.size, padded_long(long_d, m_shards), r), jnp.float32)
                 Ms[b.key] = jnp.zeros((b.size, r, short_d), jnp.float32)
                 pns[b.key] = jnp.zeros((b.size,), jnp.float32)
         else:
@@ -1123,6 +1287,10 @@ def sumo(
             if layout == "bucket":
                 new_Q, new_M, new_pn = _stack_leaf_state(
                     plan, out_Q, out_M, out_pn)
+                # keep the stored layout mesh-consistent: the per-leaf
+                # engine computes on true-long state, but bucket-resident Q
+                # stays edge-padded on a 2D mesh (zero rows — bit-inert)
+                new_Q = _pad_bucket_q(new_Q, plan, _model_shards(cfg, mesh))
             else:
                 new_Q, new_M, new_pn = unflat(out_Q), unflat(out_M), unflat(out_pn)
 

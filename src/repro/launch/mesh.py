@@ -10,26 +10,55 @@ device state (the dry-run must set XLA_FLAGS before first jax init).
 """
 from __future__ import annotations
 
+import math
+import warnings
+
 import jax
 
 
 def make_production_mesh(*, multi_pod: bool = False):
+    """The fixed-shape pod mesh. Validates the device count up front: a
+    mismatch used to surface as an opaque ``jax.make_mesh`` failure deep in
+    launch; now it names the requested shape and what was found."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = math.prod(shape)
+    have = len(jax.devices())
+    if have < need:
+        # jax.make_mesh tolerates extra devices (it truncates — the dry-run
+        # forces 512 and builds the 256-chip mesh from the first half) but
+        # too few only surfaces as an opaque reshape error deep inside it.
+        raise ValueError(
+            f"production mesh {dict(zip(axes, shape))} needs {need} devices, "
+            f"found {have} — run on a "
+            f"{'2-pod' if multi_pod else 'single-pod'} slice or use "
+            "make_host_mesh() for ad-hoc device counts")
     return jax.make_mesh(shape, axes)
 
 
-def make_host_mesh(model: int = 1):
+def make_host_mesh(model: int = 1, strict: bool = False):
     """(data, model) mesh on whatever devices exist (tests / examples on CPU).
 
     ``model`` > 1 gives the 2D mesh the SUMO bucket update's tensor-parallel
     path runs under — B over `data`, each matrix's long dim over `model`
-    (tier-1 pins (data=2, model=4) on 8 forced host devices, see
-    tests/test_rsvd_sharded.py). A ``model`` that does not divide the device
-    count is clamped to the largest divisor so the mesh always builds.
+    (ragged long dims edge-pad; tier-1 pins (data=2, model=4) on 8 forced
+    host devices, see tests/test_rsvd_sharded.py). A ``model`` that does not
+    divide the device count is clamped to the largest divisor so the mesh
+    always builds — with a warning, because a silently smaller model axis
+    changes the memory/collective profile of the whole run. ``strict=True``
+    raises instead (production launches should never train on a different
+    mesh than the one they asked for).
     """
     n = len(jax.devices())
+    requested = model
     model = max(1, min(model, n))
     while n % model:
         model -= 1
+    if model != requested:
+        msg = (f"make_host_mesh: requested model={requested} does not divide "
+               f"the device count ({n}); largest usable divisor is {model}")
+        if strict:
+            raise ValueError(msg + " (strict=True)")
+        warnings.warn(msg + " — clamping. Pass strict=True to fail instead.",
+                      RuntimeWarning, stacklevel=2)
     return jax.make_mesh((n // model, model), ("data", "model"))

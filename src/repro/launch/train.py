@@ -48,9 +48,14 @@ def main(argv=None) -> int:
                     help="steps between controller checks (0 = update-freq)")
     ap.add_argument("--model-parallel", type=int, default=0,
                     help="model-axis size of the (data, model) host mesh the "
-                         "SUMO bucket update runs under (0 = no mesh; >1 "
-                         "shards B over data and each matrix's long dim over "
-                         "model — the 2D distributed-rSVD path)")
+                         "whole run consumes: params placed by the Megatron "
+                         "specs, opt state by opt_state_specs, batches over "
+                         "data, and the SUMO bucket update under shard_map "
+                         "(>1 = the 2D distributed-rSVD path; ragged long "
+                         "dims edge-pad). 0 = no mesh")
+    ap.add_argument("--strict-mesh", action="store_true",
+                    help="fail instead of clamping when --model-parallel "
+                         "does not divide the device count")
     args = ap.parse_args(argv)
 
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -64,6 +69,7 @@ def main(argv=None) -> int:
         controller=args.controller,
         controller_interval=args.controller_interval,
         model_parallel=args.model_parallel,
+        strict_mesh=args.strict_mesh,
     )
     injector = FaultInjector(preempt_at=args.preempt_at) if args.preempt_at else None
     res = train(arch, shape, tcfg, fault_injector=injector)

@@ -206,9 +206,17 @@ def bucket_state_spec(path: str, shape: tuple[int, ...], mesh: Mesh,
     shard_map bucket update consumes in place: its in_specs are exactly
     ``P(bucket_axis, model, None)`` for Q, and the rSVD refresh runs the
     distributed range finder (core.rsvd ``axis_name``) on the model-sharded
-    rows, so the state never re-gathers (see core.sumo "2D mesh"). The
-    divisibility guard here (long % model == 0) matches the update path's —
-    indivisible buckets replicate their long dim and take the 1D path.
+    rows, so the state never re-gathers (see core.sumo "2D mesh").
+
+    Ragged long dims: a state built by ``sumo(..., mesh=...)`` for a
+    model>1 mesh stores Q with its long dim EDGE-PADDED to the next axis
+    multiple (``core.sumo.padded_long`` — the path's last segment keeps the
+    TRUE "LONGxSHORT" key), so the stored row count always divides and the
+    padded Q places over `model` like any divisible bucket — the
+    divisibility test below is then exact, not a fallback. A Q whose row
+    count does NOT divide the model axis is a state that was not built
+    (padded) for this mesh — it stays replicated on `model`, which keeps
+    device_put correct while the checkpoint/convert machinery re-pads it.
     ``long_over_model=False`` remains only for meshes whose model axis is
     repurposed (no tensor parallelism in the update), where sharded Q WOULD
     be re-gathered at the shard_map boundary every step."""
@@ -231,11 +239,11 @@ def opt_state_specs(state, mesh: Mesh, cfg: Optional[ArchConfig] = None,
                     bucket_long_over_model: bool = True,
                     model_axis: str = "model"):
     """Sharding for optimizer states: bucket-resident SUMO state gets
-    per-bucket specs (B over ``bucket_axis``, Q's long dim over
-    ``model_axis`` — see ``bucket_state_spec`` for when to disable the
-    latter; ``bucket_axis``/``model_axis`` must match the SumoConfig fields
-    of the same names for the consume-in-place wiring to hold); everything
-    else mirrors the generic param rule per leaf; scalars/keys replicated."""
+    per-bucket specs (B over ``bucket_axis``, Q's long dim — edge-padded for
+    ragged buckets, see ``bucket_state_spec`` — over ``model_axis``;
+    ``bucket_axis``/``model_axis`` must match the SumoConfig fields of the
+    same names for the consume-in-place wiring to hold); everything else
+    mirrors the generic param rule per leaf; scalars/keys replicated."""
 
     def leaf_spec(path, leaf):
         if leaf is None:

@@ -17,6 +17,16 @@ Design (DESIGN.md §5):
     reverse) via `_migrate_sumo_layouts`: the flat entries are re-stacked /
     re-sliced to the template's layout before unflattening, so flipping
     `SumoConfig.state_layout` between runs never invalidates checkpoints.
+  * cross-MESH-SHAPE restore — bucket-resident Q stacks carry the writing
+    mesh's edge-padded long dim (core.sumo.padded_long: all-zero pad rows so
+    ragged long dims shard over `model`). The bucket key is the TRUE
+    "LONGxSHORT" shape, so `_normalize_sumo_long_pads` can slice a padded
+    stack back to true rows and re-pad it to whatever the restore TEMPLATE's
+    mesh needs, with no mesh metadata stored: a checkpoint written on
+    (data=8, model=1) restores onto (data=2, model=4) and vice versa, bit
+    exactly (pad rows are zero by construction on both sides). The padding
+    each save carries is recorded in the manifest (`sumo_long_pad`) for
+    humans/tooling; restore never needs it.
 
 Format: one .npz of flattened path->array plus a manifest.json.
 """
@@ -42,6 +52,11 @@ _SEP = "|"
 # [<prefix>|]stats|LONGxSHORT|<SpectralStats field>
 _SUMO_STATS_KEY_RE = re.compile(
     r"(^|\|)stats\|\d+x\d+\|(%s)$" % "|".join(SpectralStats._fields))
+
+# A bucket-resident SumoState.Q stack: [<prefix>|]Q|LONGxSHORT. The captured
+# group is the TRUE long dim — the self-describing datum the cross-mesh
+# long-pad migration slices/re-pads against.
+_SUMO_BUCKET_Q_RE = re.compile(r"(?:^|\|)Q\|(\d+)x\d+$")
 
 
 def _path_key(path) -> str:
@@ -93,6 +108,72 @@ def _unflatten_into(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
             )
         out.append(arr.astype(leaf.dtype))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# SUMO cross-mesh long-pad migration (edge-padded bucket Q stacks)
+# ---------------------------------------------------------------------------
+
+def _normalize_sumo_long_pads(template: PyTree, flat: dict) -> dict:
+    """Re-pad/slice bucket-resident SUMO Q stacks against the restore
+    template's mesh padding.
+
+    A Q stack saved as (B, padded_long, r) under key ``...|Q|LONGxSHORT``
+    records its TRUE long dim in the key, so this needs no mesh metadata:
+    pad rows beyond the true long dim are sliced off, then zero rows are
+    appended up to whatever padded long the template (built by
+    ``sumo(..., mesh=...)`` for the CURRENT mesh) expects. Saved pad rows
+    are zero by the engine's invariant, so both directions are lossless;
+    non-bucket entries and matching shapes pass through untouched. Runs
+    before (and, via the caller, after) the layout migration, which only
+    understands true-shaped stacks."""
+    tmpl_longs: dict[str, int] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            template, is_leaf=lambda x: x is None)[0]:
+        key = _path_key(path)
+        if leaf is not None and _SUMO_BUCKET_Q_RE.search(key) \
+                and getattr(leaf, "ndim", 0) == 3:
+            tmpl_longs[key] = int(leaf.shape[-2])
+    out = dict(flat)
+    for key, arr in flat.items():
+        m = _SUMO_BUCKET_Q_RE.search(key)
+        if m is None or arr.ndim != 3:
+            continue
+        true_long = int(m.group(1))
+        if arr.shape[-2] < true_long:
+            # only rows BEYOND the true long dim are pads; fewer rows than
+            # the key promises is a truncated/corrupt stack — zero-filling
+            # it would silently resume training from a basis with missing
+            # rows, so fail loudly like any other shape mismatch.
+            raise ValueError(
+                f"checkpoint bucket stack {key!r} has {arr.shape[-2]} rows "
+                f"but its key records a true long dim of {true_long} — "
+                "truncated or corrupt checkpoint")
+        target = tmpl_longs.get(key, true_long)
+        if arr.shape[-2] == target:
+            continue
+        if arr.shape[-2] > true_long:          # drop the writer's pad rows
+            arr = arr[:, :true_long, :]
+        if target > arr.shape[-2]:             # re-pad for the reader's mesh
+            pad = np.zeros(
+                (arr.shape[0], target - arr.shape[-2], arr.shape[-1]),
+                arr.dtype)
+            arr = np.concatenate([arr, pad], axis=1)
+        out[key] = arr
+    return out
+
+
+def _long_pad_manifest(flat: dict) -> dict:
+    """{flat key: {"true": L, "padded": Lp}} for every bucket Q stack saved
+    with an edge-padded long dim — recorded in the manifest so a human (or
+    external tooling) can see which mesh shape padded the checkpoint;
+    restore itself re-derives everything from the keys."""
+    pads = {}
+    for key, arr in flat.items():
+        m = _SUMO_BUCKET_Q_RE.search(key)
+        if m is not None and arr.ndim == 3 and arr.shape[-2] != int(m.group(1)):
+            pads[key] = {"true": int(m.group(1)), "padded": int(arr.shape[-2])}
+    return pads
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +305,9 @@ class CheckpointManager:
              blocking: bool = True) -> None:
         flat = _flatten(state)   # gather on the caller thread (device -> host)
         manifest = {"step": step, **(extra or {})}
+        pads = _long_pad_manifest(flat)
+        if pads:
+            manifest["sumo_long_pad"] = pads
 
         def _write():
             tmp = os.path.join(self.directory, f"tmp.{step}")
@@ -269,13 +353,21 @@ class CheckpointManager:
             # insertion order == save-time flatten order (zip member order) —
             # the layout migration's slot ordering relies on this.
             flat = {k: z[k] for k in z.files if not k.startswith("__none__")}
+        # Cross-mesh-shape restore: bucket Q stacks re-pad/slice to the
+        # template's edge padding first (the layout migration below only
+        # understands true-shaped stacks, and `_unflatten_into` would reject
+        # a pad-induced shape mismatch as corruption).
+        flat = _normalize_sumo_long_pads(template, flat)
         try:
             state = _unflatten_into(template, flat)
         except KeyError:
             # SUMO state layout changed between save and restore (per-leaf vs
             # bucket-resident): migrate the flat entries, then retry — any
             # genuinely missing leaf still raises from the second attempt.
-            state = _unflatten_into(template, _migrate_sumo_layouts(template, flat))
+            # (Normalize again: a leaf-layout checkpoint restacks to TRUE
+            # long dims, which a 2D-mesh bucket template needs re-padded.)
+            state = _unflatten_into(template, _normalize_sumo_long_pads(
+                template, _migrate_sumo_layouts(template, flat)))
         if shardings is not None:
             state = jax.tree_util.tree_map(
                 lambda x, s: jax.device_put(x, s) if x is not None else None,

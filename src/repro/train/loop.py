@@ -68,12 +68,20 @@ class TrainConfig:
     controller: bool = False
     controller_interval: int = 0       # steps between checks; 0 = update_freq
     controller_config: Optional[ControllerConfig] = None
-    # -- sharded SUMO bucket update ----------------------------------------
-    # > 0 builds a (data, model) host mesh (launch.mesh.make_host_mesh) and
-    # runs the bucket update under shard_map: B over `data`, and with
-    # model_parallel > 1 each matrix's long dim over `model` (the 2D
-    # distributed-rSVD path). 0 = single-device update (the default).
+    # -- sharded training on the (data, model) host mesh -------------------
+    # > 0 builds a (data, model) host mesh (launch.mesh.make_host_mesh) that
+    # the WHOLE step consumes: params are placed by parallel.sharding's
+    # Megatron param specs, optimizer state by opt_state_specs (bucket-
+    # resident SUMO state: B over `data`, Q's edge-padded long dim over
+    # `model` — ragged long dims included), batches shard over `data`, and
+    # the SUMO bucket update runs under shard_map (model_parallel > 1 = the
+    # 2D distributed-rSVD path). Checkpoints restore re-sharded onto this
+    # mesh, including checkpoints written on a different mesh shape.
+    # 0 = single-device (the default).
     model_parallel: int = 0
+    # Raise instead of clamping when model_parallel doesn't divide the
+    # device count (launch.mesh.make_host_mesh strict mode).
+    strict_mesh: bool = False
 
 
 @dataclasses.dataclass
@@ -113,9 +121,38 @@ def train(
     settings = initial_settings(params0, tcfg.rank, tcfg.update_freq)
 
     mesh = None
+    place_params = place_opt = place_batch = lambda x: x
     if tcfg.model_parallel > 0:
         from ..launch.mesh import make_host_mesh
-        mesh = make_host_mesh(model=tcfg.model_parallel)
+        from ..parallel.sharding import (
+            batch_spec,
+            opt_state_specs,
+            tree_param_specs,
+            tree_shardings,
+        )
+        mesh = make_host_mesh(model=tcfg.model_parallel,
+                              strict=tcfg.strict_mesh)
+
+        def _place(tree, specs):
+            """device_put each leaf onto its NamedSharding (None leaves and
+            None specs pass through)."""
+            sh = tree_shardings(specs, mesh)
+            return jax.tree_util.tree_map(
+                lambda x, s: x if x is None or s is None
+                else jax.device_put(x, s),
+                tree, sh, is_leaf=lambda x: x is None)
+
+        place_params = lambda p: _place(p, tree_param_specs(p, mesh, arch))
+        # opt_state_specs re-derives specs from the CURRENT state shapes —
+        # called per placement so controller resizes and padded bucket
+        # stacks always get fresh, consistent specs.
+        place_opt = lambda s: _place(s, opt_state_specs(s, mesh, arch))
+        place_batch = lambda b: {
+            k: jax.device_put(v, jax.sharding.NamedSharding(
+                mesh, batch_spec(mesh, v.ndim,
+                                 v.ndim > 0
+                                 and v.shape[0] % mesh.shape["data"] == 0)))
+            for k, v in b.items()}
 
     def build(overrides):
         """(tx, jitted step_fn) for the current bucket overrides — each
@@ -179,7 +216,8 @@ def train(
         if start_step == -1:  # resume from latest checkpoint
             restarts[0] += 1
             if ckpt.latest_step() is None:
-                params, opt_state = fresh_params(), tx.init(params0)
+                params = place_params(fresh_params())
+                opt_state = place_opt(tx.init(params0))
                 step = 0
                 log_fn(f"[recovery] no checkpoint yet — cold restart (#{restarts[0]})")
             else:
@@ -207,9 +245,14 @@ def train(
                         tx, step_fn = build(overrides_from_settings(settings))
                         log_fn("[recovery] controller settings restored "
                                "from checkpoint manifest")
+                # The template is built by THIS run's optimizer for THIS
+                # run's mesh, so a checkpoint written on a different mesh
+                # shape (differently padded bucket stacks) migrates inside
+                # restore; placement then shards it onto the current mesh.
                 template = {"params": params0, "opt_state": tx.init(params0)}
                 state, manifest = ckpt.restore(template)
-                params, opt_state = state["params"], state["opt_state"]
+                params = place_params(state["params"])
+                opt_state = place_opt(state["opt_state"])
                 step = manifest["step"]
                 if sink is not None:
                     # replayed steps re-emit: drop their pre-fault records
@@ -219,13 +262,15 @@ def train(
                 log_fn(f"[recovery] restored step {step} after fault "
                        f"(restart #{restarts[0]})")
         else:
-            params, opt_state = fresh_params(), tx.init(params0)
+            params = place_params(fresh_params())
+            opt_state = place_opt(tx.init(params0))
             step = start_step
 
         while step < tcfg.total_steps:
             if fault_injector is not None:
                 fault_injector.check(step)
-            batch = make_batch(step, shape, arch, DataConfig(seed=tcfg.seed))
+            batch = place_batch(
+                make_batch(step, shape, arch, DataConfig(seed=tcfg.seed)))
             t0 = time.perf_counter()
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             tel = metrics.pop("telemetry", None)
@@ -250,6 +295,10 @@ def train(
                 decisions = ctrl.decide(sink.window_aggregates(), settings)
                 opt_state, settings, overrides, reasons = apply_decisions(
                     opt_state, settings, decisions)
+                if reasons and mesh is not None:
+                    # resized stacks come back unplaced — re-derive specs
+                    # from the new shapes and re-shard before the recompile
+                    opt_state = place_opt(opt_state)
                 if reasons:
                     sink.set_settings(settings,
                                       default_freq=tcfg.update_freq)

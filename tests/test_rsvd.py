@@ -15,7 +15,13 @@ try:
 except ImportError:
     hypothesis = st = None
 
-from repro.core import randomized_range_finder, randomized_svd, subspace_overlap, truncated_svd
+from repro.core import (
+    randomized_range_finder,
+    randomized_svd,
+    rsvd_effective_rank,
+    subspace_overlap,
+    truncated_svd,
+)
 
 
 def _low_rank(key, m, n, r, decay=0.1):
@@ -80,6 +86,29 @@ def test_truncation_is_spectral_not_positional():
     Q_old = jnp.linalg.qr(G32 @ Omega)[0][:, :rank]
     cap_old = float(jnp.linalg.norm(Q_old.T @ G)) / float(jnp.linalg.norm(G))
     assert cap > cap_old + 1e-3, (cap, cap_old)
+
+
+def test_rank_above_sketch_width_clamps_consistently():
+    """rank > l (sketch width clamped by the short dim) used to silently
+    return fewer than `rank` columns — a controller rank-grow on a
+    small-short-dim bucket would hand downstream code a mis-shaped Q. All
+    factors now clamp to rsvd_effective_rank, consistently."""
+    key = jax.random.PRNGKey(7)
+    G = jax.random.normal(key, (64, 6))
+    r_eff = rsvd_effective_rank(32, 6)
+    assert r_eff == 6
+    U, s, Vt = randomized_svd(G, key, rank=32, oversample=4)
+    assert U.shape == (64, r_eff) and s.shape == (r_eff,) \
+        and Vt.shape == (r_eff, 6)
+    Q = randomized_range_finder(G, key, rank=32, oversample=4)
+    assert Q.shape == (64, r_eff)
+    np.testing.assert_allclose(np.asarray(Q.T @ Q), np.eye(r_eff), atol=1e-5)
+    # with the full short dim delivered, the factorization is near-exact
+    np.testing.assert_allclose(np.asarray(U @ (s[:, None] * Vt)),
+                               np.asarray(G), atol=1e-4)
+    # a representative non-clamped case is unchanged
+    assert rsvd_effective_rank(4, 64) == 4
+    assert randomized_range_finder(G, key, rank=4).shape == (64, 4)
 
 
 def test_rsvd_reuses_range_finder_factorization():

@@ -316,6 +316,229 @@ def test_2d_mesh_under_jit_close_to_eager():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# ragged long dims: edge-padded 2D path (ISSUE-5)
+# ---------------------------------------------------------------------------
+
+def _params_ragged(key):
+    """Every bucket's long dim is RAGGED on model=4: a B=3 bucket of
+    (102, 16) (ragged over data=2 as well), an expert stack (2, 50, 8)
+    (50 % 4 == 2), and a wide B=1 leaf (12, 102) — canonical (100, 12), the
+    embed/lm_head-shaped singleton. No bucket may fall back to the
+    replicated-long 1D path."""
+    p = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (102, 16))
+         for i in range(3)}
+    p["experts"] = jax.random.normal(jax.random.fold_in(key, 50), (2, 50, 8))
+    p["wide"] = jax.random.normal(jax.random.fold_in(key, 99), (12, 102))
+    return p
+
+
+@needs_8_devices
+@pytest.mark.parametrize("refresh_quality", [0.0, 0.5],
+                         ids=["cadence-only", "adaptive"])
+def test_ragged_long_2d_matches_single_device(refresh_quality):
+    """long % model != 0 buckets take the 2D sharded path via edge-padded
+    zero rows: deltas/state allclose against the unsharded engine, per-matrix
+    basis overlap ≥ 1-1e-5, the stored Q is padded to the next model-axis
+    multiple, and its pad rows stay EXACTLY zero across refreshes (the
+    inertness invariant core.rsvd documents)."""
+    from repro.core import SumoConfig, padded_long, subspace_overlap, sumo
+
+    mesh = _mesh24()
+    params = _params_ragged(jax.random.PRNGKey(0))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=6, update_freq=3, weight_decay=0.05,
+                     refresh_quality=refresh_quality)
+
+    us, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 5)
+    up, sp = _run(sumo(0.01, cfg), params, grads, 5)
+
+    for step, (a, b) in enumerate(zip(us, up)):
+        for k in params:
+            np.testing.assert_allclose(
+                np.asarray(a[k]), np.asarray(b[k]), atol=1e-5,
+                err_msg=f"step {step} leaf {k}")
+    for bk, Qp in sp.Q.items():
+        true_long = Qp.shape[1]
+        # the stored stack carries the edge-padded long dim...
+        assert ss.Q[bk].shape[1] == padded_long(true_long, 4) != true_long
+        Qs = np.asarray(ss.Q[bk])
+        # ...whose pad rows are exactly zero after 5 steps incl. refreshes
+        assert float(np.abs(Qs[:, true_long:]).max()) == 0.0, bk
+        for i in range(Qs.shape[0]):
+            ov = float(subspace_overlap(jnp.asarray(Qs[i, :true_long]),
+                                        jnp.asarray(np.asarray(Qp)[i])))
+            assert ov >= 1.0 - 1e-5, (bk, i, ov)
+        np.testing.assert_allclose(np.asarray(ss.prev_norm[bk]),
+                                   np.asarray(sp.prev_norm[bk]), atol=1e-5)
+        # basis-free lifted moment agrees (pad rows of Q kill pad terms)
+        np.testing.assert_allclose(
+            np.asarray(ss.Q[bk][:, :true_long] @ ss.M[bk]),
+            np.asarray(Qp @ sp.M[bk]), atol=1e-4)
+
+
+@needs_8_devices
+def test_ragged_long_model1_stays_bit_identical():
+    """Ragged params on a (data=8, model=1) mesh: no padding, and the 1D
+    path bit-identical to the unsharded engine — the acceptance pin that
+    edge-padding never perturbs the model=1 regime."""
+    from repro.core import SumoConfig, sumo
+
+    mesh = jax.make_mesh((8, 1), ("data", "model"))
+    params = _params_ragged(jax.random.PRNGKey(3))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=6, update_freq=3, weight_decay=0.05)
+    us, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 5)
+    up, sp = _run(sumo(0.01, cfg), params, grads, 5)
+    for step, (a, b) in enumerate(zip(us, up)):
+        for k in params:
+            np.testing.assert_array_equal(
+                np.asarray(a[k]), np.asarray(b[k]),
+                err_msg=f"step {step} leaf {k}")
+    for fa, fb in zip(jax.tree_util.tree_leaves(ss),
+                      jax.tree_util.tree_leaves(sp)):
+        np.testing.assert_array_equal(np.asarray(fa), np.asarray(fb))
+
+
+@needs_8_devices
+def test_ragged_long_telemetry_matches_1d_probes():
+    """SpectralStats under long-dim padding pinned against the 1D engine's
+    probes: the pad rows contribute exactly zero to every psum feeding the
+    replicated stats, so energy capture / ortho residual / norms must not
+    be diluted (ISSUE-5 stat-reduction audit)."""
+    from repro.core import SumoConfig, sumo
+
+    mesh = _mesh24()
+    params = _params_ragged(jax.random.PRNGKey(4))
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    cfg = SumoConfig(rank=6, update_freq=3, telemetry=True)
+    _, ss = _run(sumo(0.01, cfg, mesh=mesh), params, grads, 4)
+    _, sp = _run(sumo(0.01, cfg), params, grads, 4)
+    assert set(ss.stats) == set(sp.stats) == {"102x16", "50x8", "102x12"}
+    for bucket in ss.stats:
+        for field, a, b in zip(ss.stats[bucket]._fields, ss.stats[bucket],
+                               sp.stats[bucket]):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float64), np.asarray(b, np.float64),
+                rtol=1e-3, atol=1e-5, err_msg=f"{bucket}.{field}")
+
+
+@needs_8_devices
+def test_ragged_long_no_full_matrix_collectives():
+    """The edge-padded 2D update compiles with the same collective
+    discipline as divisible buckets: opt_state_specs places the PADDED Q
+    over `model`, every all-reduce is an r-width panel, and the only
+    all-gathers are the (padded-row) delta gathers."""
+    from repro.core import SumoConfig, padded_long, sumo
+    from repro.parallel import opt_state_specs
+    from repro.roofline.hlo_cost import analyze_hlo
+
+    mesh = _mesh24()
+    key = jax.random.PRNGKey(5)
+    params = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (102, 16))
+              for i in range(4)}
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    rank, over = 4, 4
+    tx = sumo(0.01, SumoConfig(rank=rank, update_freq=4, weight_decay=0.05,
+                               rsvd_oversample=over), mesh=mesh)
+    state = tx.init(params)
+    lp = padded_long(102, 4)                      # 104
+    assert state.Q["102x16"].shape == (4, lp, rank)
+    named = lambda tree: jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    st_sh = named(opt_state_specs(state, mesh))
+    assert st_sh.Q["102x16"].spec == P("data", "model", None)
+    rep = NamedSharding(mesh, P())
+    g_sh = jax.tree_util.tree_map(lambda _: rep, grads)
+    compiled = jax.jit(
+        lambda g, s, p: tx.update(g, s, p),
+        in_shardings=(g_sh, st_sh, g_sh),
+    ).lower(grads, state, params).compile()
+    txt = compiled.as_text()
+
+    l = rank + over
+    # model gather of the per-data-shard delta block, then the B gather —
+    # both on PADDED rows (sliced to 100 after the shard_map)
+    allowed_gather_shapes = {(4, lp, 16), (2, lp, 16)}
+    seen = {"all-reduce": 0, "all-gather": 0}
+    for m in re.finditer(
+            r"=\s*\w+\[([\d,]*)\][^=]*?\s"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(-start)?\(", txt):
+        dims = tuple(int(d) for d in m.group(1).split(",") if d)
+        kind = m.group(2)
+        assert kind in ("all-reduce", "all-gather"), (kind, dims)
+        seen[kind] += 1
+        if kind == "all-reduce":
+            assert min(dims, default=1) <= l and (
+                not dims or sorted(dims)[-2] <= max(l, 16)), dims
+            assert int(np.prod(dims or (1,))) <= 4 * l * 16, dims
+        else:
+            assert dims in allowed_gather_shapes, (dims, allowed_gather_shapes)
+    assert seen["all-reduce"] > 0 and seen["all-gather"] > 0
+    cost = analyze_hlo(txt)
+    assert set(cost.collective_breakdown) <= {"all-reduce", "all-gather"}
+    padded_delta_bytes = 4 * lp * 16 * 4
+    assert cost.collective_breakdown["all-gather"] <= 2 * padded_delta_bytes
+    # psum traffic (projection + the refresh branch's panels, worst-case
+    # cond walk) stays strictly below ONE full stack re-gather — at this
+    # deliberately small shape the panels are not tiny relative to the
+    # delta, so the bound is the qualitative one: a single (B, long, short)
+    # collective (like the pre-fix pad-concat all-reduce) would exceed it.
+    assert cost.collective_breakdown["all-reduce"] < padded_delta_bytes
+
+
+@needs_8_devices
+def test_square_sketch_stays_finite_in_fused_step():
+    """Regression: rank + oversample ≥ short dim (l == n, the square-Omega
+    sketch) used to hit NaNs in the sharded refresh inside large fused
+    programs — the Gram's old 1e-12 shift sat ~1000× below fp32 roundoff,
+    so an unlucky κ(G·Omega)² tipped ``cholesky`` into a negative pivot
+    once XLA re-associated the reductions. The sketch now uses G itself
+    when it cannot reduce dimension, and the shifted-CholeskyQR2 lift is
+    eps-scaled. 60×20 @ rank 32 on (data=1, model=8) — the exact shape
+    class that NaN'd — must stay finite for many keys."""
+    from repro.core import SumoConfig, sumo
+
+    mesh = jax.make_mesh((1, 8), ("data", "model"))
+    cfg = SumoConfig(rank=32, update_freq=1)   # refresh every step
+    for seed in range(6):
+        k = jax.random.PRNGKey(seed)
+        params = {f"w{i}": jax.random.normal(jax.random.fold_in(k, i),
+                                             (60, 20)) * 0.01
+                  for i in range(4)}
+        grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+        tx = sumo(0.01, cfg, mesh=mesh)
+        upd = jax.jit(lambda g, s, p: tx.update(g, s, p))
+        state = tx.init(params)
+        for _ in range(3):
+            u, state = upd(grads, state, params)
+        leaves = jax.tree_util.tree_leaves((u, state))
+        assert all(bool(jnp.all(jnp.isfinite(l))) for l in leaves), seed
+
+
+@needs_8_devices
+def test_train_model_parallel_end_to_end():
+    """launch-level wiring: TrainConfig.model_parallel=4 builds the
+    (data=2, model=4) host mesh and the whole step consumes it — params via
+    the Megatron specs, opt state via opt_state_specs (edge-padded SUMO
+    buckets), batch over `data`, SUMO's 2D shard_map update — for a real
+    smoke-model train run."""
+    from repro.configs import get_smoke_config
+    from repro.configs.base import ShapeConfig
+    from repro.train import TrainConfig, train
+
+    arch = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("tiny", seq_len=32, global_batch=4, kind="train")
+    tcfg = TrainConfig(optimizer="sumo", learning_rate=1e-2, rank=4,
+                       update_freq=2, total_steps=3, attn_impl="chunked",
+                       model_parallel=4, log_every=1000)
+    res = train(arch, shape, tcfg, log_fn=lambda s: None)
+    assert res.final_step == 3 and len(res.losses) == 3
+    assert all(np.isfinite(l) for _, l in res.losses)
+
+
 @pytest.mark.slow
 @pytest.mark.skipif(jax.device_count() >= 8,
                     reason="already running with 8 devices")

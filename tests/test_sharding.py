@@ -72,6 +72,51 @@ def test_bucket_state_specs():
     # non-bucket paths are not claimed
     assert bucket_state_spec("opt/matrix/Q/blocks/wq", (4096, 128), mesh) is None
     assert bucket_state_spec("opt/fallback/mu/64x32", (2, 64, 32), mesh) is None
+    # an edge-padded ragged bucket (true long 1000, stored 1008 on model=16):
+    # the PADDED row count is what must divide, and does
+    assert bucket_state_spec("opt/matrix/Q/1000x64", (32, 1008, 16), mesh) \
+        == P("data", "model", None)
+    # a true-shaped Q that does NOT divide (state not built for this mesh)
+    # stays replicated on model so device_put remains correct
+    assert bucket_state_spec("opt/matrix/Q/1000x64", (32, 1000, 16), mesh) \
+        == P("data", None, None)
+
+
+def test_host_mesh_clamp_warns_and_strict_raises():
+    """make_host_mesh silently shrinking the model axis (e.g. model=4 on 6
+    devices -> 2) hid real capacity changes: now it warns, and strict mode
+    refuses to build a different mesh than requested."""
+    import warnings
+    from repro.launch.mesh import make_host_mesh
+
+    n = len(jax.devices())
+    bad = n + 1   # never divides the device count (and exceeds it)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        mesh = make_host_mesh(model=bad)
+    assert any("does not divide" in str(x.message) for x in w)
+    assert mesh.shape["model"] <= n
+    with pytest.raises(ValueError, match="does not divide"):
+        make_host_mesh(model=bad, strict=True)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        mesh = make_host_mesh(model=1)   # always divides: no warning
+    assert not w and mesh.shape["model"] == 1
+
+
+def test_production_mesh_validates_device_count():
+    """make_production_mesh on too small a slice fails with a clear message
+    naming the requested shape, not an opaque make_mesh error. (Extra
+    devices are fine — make_mesh truncates; the dry-run relies on that.)"""
+    from repro.launch.mesh import make_production_mesh
+
+    if len(jax.devices()) >= 256:   # a real slice: should build
+        make_production_mesh()
+        return
+    with pytest.raises(ValueError, match="needs 256 devices"):
+        make_production_mesh()
+    with pytest.raises(ValueError, match="needs 512 devices"):
+        make_production_mesh(multi_pod=True)
 
 
 @pytest.mark.slow

@@ -9,10 +9,12 @@
 # tests/test_rsvd_sharded.py skip there, and their slow subprocess wrappers
 # cover them when slow tests are selected). Pass 2 re-runs the sharded tests
 # in-process on a forced 8-host-device CPU backend — the 1D (data=8) shard_map
-# bucket path AND the 2D (data=2, model=4) mesh with model-sharded matrices
-# and the distributed rSVD. Pass 3 is the telemetry smoke: a short
-# probes+sink+controller train run must emit a non-empty, schema-valid JSONL
-# stream (tools/telemetry_smoke.py).
+# bucket path, the 2D (data=2, model=4) mesh with model-sharded matrices and
+# the distributed rSVD (ragged edge-padded long dims included, plus the
+# end-to-end --model-parallel train wiring), and the cross-mesh-shape
+# checkpoint round trip ((8,1) <-> (2,4)). Pass 3 is the telemetry smoke: a
+# short probes+sink+controller train run must emit a non-empty, schema-valid
+# JSONL stream (tools/telemetry_smoke.py).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -27,5 +29,6 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q tests/test_sumo_sharded.py tests/test_rsvd_sharded.py \
+  "tests/test_checkpoint.py::test_cross_mesh_checkpoint_round_trip_8dev" \
   -k "not subprocess"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tools/telemetry_smoke.py
