@@ -190,13 +190,20 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
                          "needs >= 8 devices (XLA_FLAGS host count)"))
         return
     from jax.sharding import NamedSharding, PartitionSpec as P
-    from repro.core import SumoConfig, padded_long, sumo
+    from repro.analysis.collectives import (
+        audit_hlo,
+        bucket_collective_plan,
+        delta_bytes as plan_delta_bytes,
+        pad_overhead_frac,
+        padded_delta_bytes as plan_padded_delta_bytes,
+        refresh_2d_budget,
+    )
+    from repro.core import SumoConfig, sumo
     from repro.launch.mesh import make_host_mesh
     from repro.parallel import opt_state_specs
     from repro.roofline.hlo_cost import analyze_hlo
 
     mesh = make_host_mesh(model=4)
-    m_size = mesh.shape["model"]
     key = jax.random.PRNGKey(3)
     # 8× (256, 64): one B=8 bucket, long 256 sharded 4-way, B 2-way; plus
     # 4× (250, 64): a B=4 ragged-long bucket (250 -> 252 edge-padded).
@@ -206,13 +213,9 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
         p2d[f"r{i}"] = jax.random.normal(
             jax.random.fold_in(key, 100 + i), (250, 64))
     g2d = jax.tree_util.tree_map(lambda x: x * 0.01, p2d)
-    delta_bytes = sum(int(x.size) * 4 for x in p2d.values())
-    # what the delta gathers actually move: padded rows, not true rows
-    padded_delta_bytes = sum(
-        padded_long(x.shape[0], m_size) * x.shape[1] * 4
-        for x in p2d.values())
 
-    cost = None
+    cfg0 = SumoConfig(rank=16, update_freq=1000)
+    cost = plan = report = None
     for regime, freq in (("steady", 1000), ("refresh_every_step", 1)):
         tx = sumo(1e-3, SumoConfig(rank=16, update_freq=freq), mesh=mesh)
         st = tx.init(p2d)
@@ -226,25 +229,35 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
                       in_shardings=(rep, st_sh, rep))
         if cost is None:
             # one audit serves both regimes: the refresh lives in a cond
-            # branch of the SAME program, and analyze_hlo charges the
-            # worst-case branch — so this is the refresh-step bound.
-            cost = analyze_hlo(upd.lower(g2d, st, p2d).compile().as_text())
+            # branch of the SAME program, and the walker charges the
+            # worst-case branch — so this is the refresh-step bound. The
+            # plan/budget come from repro.analysis.collectives — the SAME
+            # code path the sharded tests and tier-1 lint assert against,
+            # so these CSV numbers cannot drift from the machine check.
+            hlo = upd.lower(g2d, st, p2d).compile().as_text()
+            cost = analyze_hlo(hlo)
+            plan = bucket_collective_plan(st, mesh)
+            report = audit_hlo(hlo, refresh_2d_budget(
+                plan, rank_plus_over=cfg0.rank + cfg0.rsvd_oversample,
+                data_shards=int(mesh.shape["data"])))
         _, st = upd(g2d, st, p2d)          # compile + move past step 0
         us = _time_step(upd, g2d, st, p2d) * 1e6
         csv_rows.append((f"sumo_2d_mesh/step_us/{regime}", us,
                          "8x(256,64)+4x(250,64 ragged) r=16 (data=2,model=4)"))
+    d_bytes = plan_delta_bytes(plan)
+    pd_bytes = plan_padded_delta_bytes(plan)
     brk = ";".join(f"{k}={int(v)}" for k, v in
                    sorted(cost.collective_breakdown.items()))
     csv_rows.append(("sumo_2d_mesh/collective_bytes", cost.collective_bytes,
-                     f"worst-case(refresh) {brk} delta_bytes={delta_bytes} "
-                     f"padded_delta_bytes={padded_delta_bytes}"))
+                     f"worst-case(refresh) {brk} delta_bytes={d_bytes} "
+                     f"padded_delta_bytes={pd_bytes}"))
     # edge-padding overhead: the ragged bucket's zero pad rows ride the
     # delta gathers (and the shard-local matmuls) — report padded vs true
     # rows so a config whose shapes are pathologically ragged on the chosen
     # model axis shows up as a concrete interconnect tax in the CSV.
     csv_rows.append((
         "sumo_2d_mesh/pad_overhead_frac",
-        (padded_delta_bytes - delta_bytes) / delta_bytes,
+        pad_overhead_frac(plan),
         "extra delta-gather bytes from edge-padded ragged long dims, / true",
     ))
     # the portable headline: cross-shard traffic beyond the delta gather is
@@ -252,10 +265,18 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
     # psum or re-gather) jump out of the CSV. The expected delta gathers
     # move padded_delta_bytes (the B-axis gather of the full stack) plus
     # padded_delta_bytes / data_size (the model-axis gather of each data
-    # shard's B-block) — hlo_cost counts result-buffer sizes.
-    expected_gather = padded_delta_bytes * (1 + 1 / mesh.shape["data"])
+    # shard's B-block) — the walker counts result-buffer sizes.
+    expected_gather = pd_bytes * (1 + 1 / mesh.shape["data"])
     csv_rows.append((
         "sumo_2d_mesh/nondelta_collective_frac",
-        max(0.0, cost.collective_bytes - expected_gather) / delta_bytes,
+        max(0.0, cost.collective_bytes - expected_gather) / d_bytes,
         "refresh-regime collective bytes beyond the delta gathers, / delta",
+    ))
+    # the budget verdict itself: 0 violations == the panel-width discipline
+    # the tier-1 lint enforces also holds in this benchmark's exact program
+    csv_rows.append((
+        "sumo_2d_mesh/budget_violations", float(len(report.violations)),
+        f"refresh-2d budget '{report.budget}': "
+        + ("OK" if report.ok else "; ".join(str(v) for v in
+                                            report.violations[:3])),
     ))

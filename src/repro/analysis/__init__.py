@@ -1,0 +1,55 @@
+"""repro.analysis — machine-checked static guarantees.
+
+Four passes over jaxprs and optimized HLO (see ANALYSIS.md):
+
+  collectives  declarative collective-budget lint over compiled HLO
+  inertness    abstract-interpretation proof that edge-pad rows/slots of
+               the bucketed SUMO update stay exactly zero
+  donation     jit donation markers vs compiled input-output aliasing,
+               plus a source lint for donated-buffer reuse
+  recompile    post-warmup recompiles only at controller boundaries
+
+Run all of them: ``python -m repro.analysis`` (or tools/lint_static.py).
+
+Submodule attributes are re-exported lazily so ``import repro.analysis``
+stays cheap (no jax import) — the training loop imports
+``analysis.recompile`` on its hot import path.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # collectives
+    "OpBudget": "collectives", "CollectiveBudget": "collectives",
+    "BudgetViolation": "collectives", "BudgetReport": "collectives",
+    "BudgetError": "collectives", "audit_hlo": "collectives",
+    "assert_budget": "collectives", "BucketPlanEntry": "collectives",
+    "bucket_collective_plan": "collectives", "delta_bytes": "collectives",
+    "padded_delta_bytes": "collectives", "pad_overhead_frac": "collectives",
+    "steady_1d_budget": "collectives", "steady_2d_budget": "collectives",
+    "refresh_2d_budget": "collectives", "restore_budget": "collectives",
+    # inertness
+    "analyze_jaxpr": "inertness", "check_claims": "inertness",
+    "Claim": "inertness", "InertnessError": "inertness",
+    "InertnessResult": "inertness", "prove_update_inertness": "inertness",
+    "prove_refresh_inertness": "inertness",
+    # donation
+    "DonationReport": "donation", "DonationViolation": "donation",
+    "DonationError": "donation", "audit_donation": "donation",
+    "lint_donation_source": "donation", "lint_donation_file": "donation",
+    "audit_train_step_donation": "donation",
+    # recompile
+    "CompileWatcher": "recompile", "CompileEvent": "recompile",
+    "RecompileReport": "recompile", "RecompileError": "recompile",
+    "mark_step": "recompile", "audit_recompiles": "recompile",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name):
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(f".{mod}", __name__), name)

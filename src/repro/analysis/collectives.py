@@ -1,0 +1,455 @@
+"""Collective-budget lint: declarative budgets over compiled HLO.
+
+The steady-state collective discipline is SUMO's distributed contract
+(ANALYSIS.md):
+
+  * 1D (data-only) steady path: the ONLY collective is the all-gather of
+    each sharded bucket's delta stack. No all-reduce, ever.
+  * 2D (data, model) steady path: delta all-gathers (model axis then data
+    axis), plus r-width panel all-reduces (Gram matrices, projections,
+    staleness scalars) whose minor dimensions never exceed l = rank +
+    oversample. Nothing ever moves a full (B, long, short) buffer through
+    an all-reduce — that is exactly the PR 5 concatenate-seam failure.
+  * checkpoint restore (cross-mesh resharding): pure data movement —
+    permutes/gathers bounded by the state size, no reductions.
+
+A :class:`CollectiveBudget` states which collective kinds may appear and,
+per kind, an :class:`OpBudget` of shape/width/count/byte caps.  Kinds not
+named in the budget are forbidden outright.  :func:`audit_hlo` checks a
+compiled program's optimized HLO against a budget using the single shared
+walker ``repro.roofline.hlo_cost.iter_collectives`` (trip-multiplied,
+async-pair-aware, conditional branches included) and returns a
+:class:`BudgetReport` whose violations carry stable machine-readable codes:
+
+  forbidden-collective     a kind the budget does not allow at all
+  shape-not-allowed        op's buffer dims outside the allowed-shapes set
+  panel-width-exceeded     min/second-minor dim above the r-panel caps
+  op-bytes-exceeded        a single instance above max_op_bytes
+  op-count-exceeded        more instances of a kind than max_count
+  kind-total-bytes-exceeded   per-kind trip-multiplied total above cap
+  total-bytes-exceeded     whole-program collective bytes above cap
+  cond-branch-required     op required to live inside a lax.cond branch
+                           (refresh-only collectives) found on the
+                           every-step path
+
+Branch accounting: totals SUM over all conditional branches, an upper bound
+on any single execution — sound for <=-style budgets (and strictly tighter
+than nothing: a forbidden op in an untaken branch still fails, which is the
+point of a static lint).
+
+Tests (tests/test_sumo_sharded.py, tests/test_rsvd_sharded.py),
+benchmarks/step_time.py and the tier-1 static lint (tools/lint_static.py)
+all consume the named budget factories below instead of private regex
+audits.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Iterable, Optional
+
+from ..roofline.hlo_cost import HloCostModel, iter_collectives
+
+__all__ = [
+    "OpBudget", "CollectiveBudget", "BudgetViolation", "BudgetReport",
+    "BudgetError", "audit_hlo", "assert_budget",
+    "bucket_collective_plan", "padded_delta_bytes", "delta_bytes",
+    "pad_overhead_frac", "steady_1d_budget", "steady_2d_budget",
+    "refresh_2d_budget", "restore_budget",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class OpBudget:
+    """Caps for one collective kind. ``None`` means unconstrained."""
+    max_count: Optional[int] = None          # instances (un-multiplied)
+    max_op_bytes: Optional[int] = None       # single-instance payload bytes
+    max_total_bytes: Optional[float] = None  # trip-multiplied kind total
+    allowed_shapes: Optional[frozenset] = None  # exact dims tuples
+    max_min_dim: Optional[int] = None        # smallest buffer dim (r-panel)
+    max_second_dim: Optional[int] = None     # second-smallest buffer dim
+    max_elems: Optional[int] = None          # buffer element count
+    cond_only: bool = False                  # must sit inside a lax.cond
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveBudget:
+    """Named set of per-kind OpBudgets; unlisted kinds are forbidden."""
+    name: str
+    rules: dict  # kind -> OpBudget
+    max_total_bytes: Optional[float] = None  # across all kinds
+    note: str = ""
+
+
+@dataclasses.dataclass(frozen=True)
+class BudgetViolation:
+    code: str        # stable machine-readable code (see module docstring)
+    kind: str        # collective kind ("all-reduce", ...)
+    detail: str      # human-readable specifics
+    shape: str = ""  # raw HLO result type of the offending op
+    source: str = "" # jax op_name metadata
+
+    def __str__(self):
+        loc = f" [{self.source}]" if self.source and self.source != "?" else ""
+        return f"{self.code}: {self.kind} {self.shape}{loc} — {self.detail}"
+
+
+@dataclasses.dataclass
+class BudgetReport:
+    budget: str
+    ok: bool
+    violations: list
+    collectives: list    # the raw iter_collectives entries audited
+    total_bytes: float
+
+    def summary(self) -> str:
+        head = (f"budget '{self.budget}': "
+                f"{'OK' if self.ok else 'FAIL'} — "
+                f"{len(self.collectives)} collective op(s), "
+                f"{self.total_bytes:.0f} trip-multiplied bytes")
+        if self.violations:
+            head += "\n" + "\n".join(f"  ✗ {v}" for v in self.violations)
+        return head
+
+
+class BudgetError(AssertionError):
+    def __init__(self, report: BudgetReport):
+        self.report = report
+        super().__init__(report.summary())
+
+
+def audit_hlo(hlo_text, budget: CollectiveBudget) -> BudgetReport:
+    """Check compiled HLO (text or HloCostModel) against a budget."""
+    entries = iter_collectives(hlo_text)
+    violations: list[BudgetViolation] = []
+    counts: dict[str, int] = {}
+    kind_bytes: dict[str, float] = {}
+    total = 0.0
+
+    for e in entries:
+        kind, dims = e["op"], e["dims"]
+        counts[kind] = counts.get(kind, 0) + 1
+        kind_bytes[kind] = kind_bytes.get(kind, 0.0) + e["bytes"]
+        total += e["bytes"]
+        rule = budget.rules.get(kind)
+        if rule is None:
+            violations.append(BudgetViolation(
+                "forbidden-collective", kind,
+                f"kind not allowed by budget '{budget.name}'",
+                e["shape"], e["source"]))
+            continue
+        if rule.allowed_shapes is not None and dims not in rule.allowed_shapes:
+            violations.append(BudgetViolation(
+                "shape-not-allowed", kind,
+                f"dims {dims} not in allowed set "
+                f"{sorted(rule.allowed_shapes)}", e["shape"], e["source"]))
+        if dims:
+            sdims = sorted(dims)
+            if rule.max_min_dim is not None and sdims[0] > rule.max_min_dim:
+                violations.append(BudgetViolation(
+                    "panel-width-exceeded", kind,
+                    f"min dim {sdims[0]} > {rule.max_min_dim} "
+                    "(not an r-width panel)", e["shape"], e["source"]))
+            if (rule.max_second_dim is not None and len(sdims) > 1
+                    and sdims[1] > rule.max_second_dim):
+                violations.append(BudgetViolation(
+                    "panel-width-exceeded", kind,
+                    f"second-minor dim {sdims[1]} > {rule.max_second_dim}",
+                    e["shape"], e["source"]))
+        if rule.max_elems is not None:
+            n = 1
+            for d in dims:
+                n *= d
+            if n > rule.max_elems:
+                violations.append(BudgetViolation(
+                    "panel-width-exceeded", kind,
+                    f"{n} elements > {rule.max_elems}",
+                    e["shape"], e["source"]))
+        if rule.max_op_bytes is not None and e["payload"] > rule.max_op_bytes:
+            violations.append(BudgetViolation(
+                "op-bytes-exceeded", kind,
+                f"payload {e['payload']} B > {rule.max_op_bytes} B",
+                e["shape"], e["source"]))
+        if rule.cond_only and e["branch_depth"] == 0:
+            violations.append(BudgetViolation(
+                "cond-branch-required", kind,
+                "refresh-only collective found on the every-step path",
+                e["shape"], e["source"]))
+
+    for kind, rule in budget.rules.items():
+        if rule.max_count is not None and counts.get(kind, 0) > rule.max_count:
+            violations.append(BudgetViolation(
+                "op-count-exceeded", kind,
+                f"{counts[kind]} instances > {rule.max_count}"))
+        if (rule.max_total_bytes is not None
+                and kind_bytes.get(kind, 0.0) > rule.max_total_bytes):
+            violations.append(BudgetViolation(
+                "kind-total-bytes-exceeded", kind,
+                f"{kind_bytes[kind]:.0f} B > {rule.max_total_bytes:.0f} B"))
+    if budget.max_total_bytes is not None and total > budget.max_total_bytes:
+        violations.append(BudgetViolation(
+            "total-bytes-exceeded", "*",
+            f"{total:.0f} B > {budget.max_total_bytes:.0f} B"))
+
+    return BudgetReport(budget=budget.name, ok=not violations,
+                        violations=violations, collectives=entries,
+                        total_bytes=total)
+
+
+def assert_budget(hlo_text, budget: CollectiveBudget) -> BudgetReport:
+    """audit_hlo, raising BudgetError on any violation."""
+    report = audit_hlo(hlo_text, budget)
+    if not report.ok:
+        raise BudgetError(report)
+    return report
+
+
+# -- bucket plans: the shapes a budget should expect ------------------------
+
+_KEY_RE = re.compile(r"^(\d+)x(\d+)$")
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlanEntry:
+    key: str          # "LONGxSHORT"
+    b_true: int       # true stacked matrix count
+    b_padded: int     # after zero-slot padding to a multiple of data shards
+    long: int         # true long dim
+    long_padded: int  # after edge-row padding to a multiple of model shards
+    short: int
+    rank: int         # r columns held in Q
+    sharded: bool     # runs under shard_map (vs the vmap fallback)
+    b_gathered: bool  # B is sharded too => a second, data-axis delta gather
+
+    @property
+    def delta_bytes(self) -> int:
+        """fp32 bytes of the TRUE delta stack (no padding)."""
+        return self.b_true * self.long * self.short * 4
+
+    @property
+    def padded_delta_bytes(self) -> int:
+        """fp32 bytes of the padded delta stack actually gathered."""
+        return self.b_padded * self.long_padded * self.short * 4
+
+
+def bucket_collective_plan(state, mesh, *, data_axis: str = "data",
+                           model_axis: str = "model") -> list:
+    """Per-bucket gather footprint, derived from a sumo state's Q/M stacks.
+
+    ``state`` is a SumoState (or anything with ``.Q``/``.M`` dicts keyed
+    "LONGxSHORT"); Q stacks are (B, long_padded, r) and M stacks are
+    (B, r, short). The bucket key carries the TRUE long dim, so padding is
+    recoverable without re-tracing.
+
+    Sharding mirrors core.sumo._bucketed_updates exactly: with a model
+    axis > 1 EVERY bucket runs the 2D shard_map path (B additionally
+    sharded when it pays, i.e. B > 1 on a data axis > 1); on a 1D mesh
+    only B > 1 buckets shard and singletons keep the vmap fallback.
+    """
+    axes = dict(getattr(mesh, "shape", {}) or {})
+    data_sz = int(axes.get(data_axis, 1))
+    model_sz = int(axes.get(model_axis, 1))
+    entries = []
+    for key, q in state.Q.items():
+        m = _KEY_RE.match(key)
+        if not m:
+            continue
+        long_d = int(m.group(1))
+        short_d = int(m.group(2))
+        b_true, long_padded, r = int(q.shape[0]), int(q.shape[1]), \
+            int(q.shape[2])
+        b_gathered = data_sz > 1 and b_true > 1
+        sharded = model_sz > 1 or b_gathered
+        b_padded = b_true
+        if b_gathered and b_true % data_sz:
+            b_padded = -(-b_true // data_sz) * data_sz
+        entries.append(BucketPlanEntry(
+            key=key, b_true=b_true, b_padded=b_padded, long=long_d,
+            long_padded=long_padded if model_sz > 1 else long_d,
+            short=short_d, rank=r, sharded=sharded, b_gathered=b_gathered))
+    return entries
+
+
+def delta_bytes(plan: Iterable) -> int:
+    return sum(e.delta_bytes for e in plan if e.sharded)
+
+
+def padded_delta_bytes(plan: Iterable) -> int:
+    return sum(e.padded_delta_bytes for e in plan if e.sharded)
+
+
+def pad_overhead_frac(plan: Iterable) -> float:
+    """(padded - true) / true delta bytes over the sharded buckets."""
+    d = delta_bytes(plan)
+    return (padded_delta_bytes(plan) - d) / d if d else 0.0
+
+
+# -- named budgets ----------------------------------------------------------
+
+def _gather_shapes(plan, data_shards: int) -> frozenset:
+    """Delta all-gather buffer shapes the 1D/2D paths legitimately emit:
+    the full padded stack (data-axis gather result, and the model-axis
+    result for B-replicated buckets) plus the per-data-shard block stack
+    (model-axis gather result when B is sharded too)."""
+    shapes = set()
+    for e in plan:
+        if not e.sharded:
+            continue
+        shapes.add((e.b_padded, e.long_padded, e.short))
+        if e.b_gathered and data_shards > 1:
+            shapes.add((max(1, e.b_padded // data_shards), e.long_padded,
+                        e.short))
+    return frozenset(shapes)
+
+
+def _state_regather_shapes(plan, data_shards: int) -> frozenset:
+    """State re-gather shapes for RAGGED-B buckets (b_padded != b_true).
+
+    Such a bucket's resident state cannot be data-sharded (B does not
+    divide), so the engine pads and shards internally and XLA gathers the
+    padded Q/M/prev_norm stacks back to the replicated-B layout on the way
+    out. Divisible buckets keep their state sharded end to end and emit
+    none of these."""
+    shapes = set()
+    for e in plan:
+        if not e.sharded or e.b_padded == e.b_true:
+            continue
+        shapes.add((e.b_padded, e.long_padded, e.rank))
+        if data_shards > 1:
+            shapes.add((max(1, e.b_padded // data_shards), e.long_padded,
+                        e.rank))
+        shapes.add((e.b_padded, e.rank, e.short))
+        shapes.add((e.b_padded,))
+    return frozenset(shapes)
+
+
+def _state_regather_bytes(plan, data_shards: int) -> int:
+    total = 0
+    for dims in _state_regather_shapes(plan, data_shards):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * 4
+    return total
+
+
+def steady_1d_budget(plan: Iterable, *, name: str = "steady-1d"
+                     ) -> CollectiveBudget:
+    """Data-only mesh, steady state: delta all-gathers and NOTHING else.
+
+    Q/M/prev_norm are resident; no all-reduce may appear anywhere in the
+    compiled update (refresh is per-matrix on a 1D mesh, so even the cond
+    branch is collective-free beyond the gathers).
+    """
+    plan = list(plan)
+    pdb = padded_delta_bytes(plan)
+    return CollectiveBudget(
+        name=name,
+        rules={
+            "all-gather": OpBudget(
+                allowed_shapes=_gather_shapes(plan, 1),
+                max_total_bytes=float(pdb) if pdb else None,
+            ),
+        },
+        max_total_bytes=float(pdb) if pdb else None,
+        note="1D steady path: only the delta all-gather, bounded by the "
+             "padded delta bytes.",
+    )
+
+
+def _panel_rules(plan, rank_plus_over: int, data_shards: int) -> dict:
+    plan = list(plan)
+    l = rank_plus_over
+    short_max = max((e.short for e in plan if e.sharded), default=0)
+    b_max = max((e.b_padded for e in plan if e.sharded), default=0)
+    pdb = padded_delta_bytes(plan)
+    # Two gathers per bucket (model axis then data axis), each bounded by
+    # the padded delta stack, plus the ragged-B state re-gathers.
+    gather_total = 2.0 * pdb + _state_regather_bytes(plan, data_shards)
+    panel_elems = b_max * l * short_max
+    return {
+        "all-gather": OpBudget(
+            allowed_shapes=_gather_shapes(plan, data_shards)
+            | _state_regather_shapes(plan, data_shards),
+            max_total_bytes=gather_total if pdb else None,
+        ),
+        "all-reduce": OpBudget(
+            # r-width panels only: Grams (blk,l,l), sketch panels
+            # (blk,short,l), projections (blk,r,short), staleness scalars.
+            # The per-instance caps are the machine check that catches a
+            # full (B, long, short) all-reduce (the PR 5 seam failure) —
+            # panel elems are smaller by a factor of long/l.
+            max_min_dim=l,
+            max_second_dim=max(l, short_max),
+            max_elems=panel_elems if b_max else None,
+            max_op_bytes=panel_elems * 4 if b_max else None,
+        ),
+    }
+
+
+def steady_2d_budget(plan: Iterable, rank_plus_over: int, data_shards: int, *,
+                     name: str = "steady-2d") -> CollectiveBudget:
+    """2D (data, model) mesh: delta all-gathers + r-width panel all-reduces.
+
+    ``rank_plus_over`` is l = rank + oversample, the widest legitimate panel
+    minor dim. The compiled update contains the refresh cond branch, so the
+    budget admits its panel all-reduces — but never a full-matrix one: the
+    elems/width caps reject anything (B, long, short)-sized, which is how
+    this budget catches the PR 5 concatenate->all-reduce seam.
+    """
+    plan = list(plan)
+    pdb = padded_delta_bytes(plan)
+    rules = _panel_rules(plan, rank_plus_over, data_shards)
+    # Aggregate cap: gathers + state re-gathers + panel all-reduce traffic.
+    # The panel term is bounded per instance by the width caps; a generous
+    # 1x pdb covers the refresh branch's repeated rounds (summed worst-case
+    # over cond branches) while a single full-matrix all-reduce of the
+    # largest bucket would alone blow the per-instance caps above.
+    total = 3.0 * pdb + _state_regather_bytes(plan, data_shards)
+    return CollectiveBudget(
+        name=name, rules=rules,
+        max_total_bytes=total if pdb else None,
+        note="2D steady path: two delta gathers per bucket plus r-width "
+             "panel all-reduces; full-matrix all-reduce forbidden by the "
+             "width caps.",
+    )
+
+
+def refresh_2d_budget(plan: Iterable, rank_plus_over: int, data_shards: int, *,
+                      name: str = "refresh-2d") -> CollectiveBudget:
+    """Refresh-every-step regime (update_freq=1 benchmarks): same shape
+    discipline as steady-2d but with the per-kind aggregate caps lifted —
+    the rSVD rounds repeat the panel all-reduces, so only the width caps
+    and the gather-shape set are meaningful."""
+    plan = list(plan)
+    pdb = padded_delta_bytes(plan)
+    rules = _panel_rules(plan, rank_plus_over, data_shards)
+    return CollectiveBudget(
+        name=name, rules=rules,
+        max_total_bytes=None,
+        note="Refresh branch: panel-width discipline only; totals scale "
+             f"with rSVD rounds (padded delta bytes = {pdb}).",
+    )
+
+
+def restore_budget(state_bytes: int, *, name: str = "checkpoint-restore"
+                   ) -> CollectiveBudget:
+    """Cross-mesh checkpoint restore: resharding is pure data movement.
+
+    XLA lowers a sharding change to all-gather / all-to-all /
+    collective-permute (possibly with dynamic-slices); a reduction appearing
+    here means state is being ARITHMETICALLY combined across devices — a
+    restore bug, never resharding.
+    """
+    cap = 2.0 * float(state_bytes)
+    return CollectiveBudget(
+        name=name,
+        rules={
+            "all-gather": OpBudget(max_total_bytes=cap),
+            "all-to-all": OpBudget(max_total_bytes=cap),
+            "collective-permute": OpBudget(max_total_bytes=cap),
+            "collective-broadcast": OpBudget(max_total_bytes=cap),
+        },
+        max_total_bytes=cap,
+        note="Restore/resharding: moves, never reduces.",
+    )

@@ -1,0 +1,238 @@
+"""Shared driver for the four static-analysis passes.
+
+``python -m repro.analysis [--mode 1d|2d|all]`` (or tools/lint_static.py)
+runs every pass that the current device count supports and prints one
+PASS/FAIL/SKIP line per check.  Exit code 0 iff nothing FAILed — SKIPs
+(missing devices) are not failures, so the same entry point works on a
+laptop and in the 8-device tier-1 lane.
+
+Train-stack imports stay inside the pass functions: importing this module
+must not pull jax (the ``repro.analysis`` package promises a cheap import
+for the training loop's ``mark_step`` hook).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["run", "main", "CheckResult"]
+
+
+@dataclasses.dataclass
+class CheckResult:
+    name: str
+    status: str   # "PASS" | "FAIL" | "SKIP"
+    detail: str = ""
+
+
+def _devices():
+    import jax
+    return len(jax.devices())
+
+
+def _mesh_1d():
+    import jax
+    n = _devices()
+    return jax.make_mesh((n,), ("data",))
+
+
+def _mesh_2d():
+    import jax
+    return jax.make_mesh((_devices() // 4, 4), ("data", "model"))
+
+
+def _smoke_params(key, ragged: bool):
+    import jax
+    shapes = [("l%d" % i, (64, 32)) for i in range(6)]
+    if ragged:
+        shapes += [("r%d" % i, (102, 16)) for i in range(3)]
+    return {name: jax.random.normal(jax.random.fold_in(key, i), s)
+            for i, (name, s) in enumerate(shapes)}
+
+
+def _compiled_update_hlo(params, cfg, mesh):
+    """Compile the sharded bucketed update with resident state placement
+    (the same incantation the sharded tests use — see
+    parallel.sharding.update_audit_shardings) and return (hlo_text,
+    state)."""
+    import jax
+    from ..core import sumo
+    from ..parallel import update_audit_shardings
+
+    grads = jax.tree_util.tree_map(lambda x: x * 0.01, params)
+    tx = sumo(0.01, cfg, mesh=mesh)
+    state = tx.init(params)
+    g_sh, st_sh = update_audit_shardings(state, grads, mesh)
+    compiled = jax.jit(
+        lambda g, s, p: tx.update(g, s, p),
+        in_shardings=(g_sh, st_sh, g_sh),
+    ).lower(grads, state, params).compile()
+    return compiled.as_text(), state
+
+
+# -- pass 1: collective budgets ---------------------------------------------
+
+def check_collectives_1d() -> CheckResult:
+    import jax
+    from ..core import SumoConfig
+    from .collectives import (assert_budget, bucket_collective_plan,
+                              steady_1d_budget, BudgetError)
+
+    if _devices() < 2:
+        return CheckResult("collectives/steady-1d", "SKIP",
+                           f"needs >=2 devices, have {_devices()}")
+    mesh = _mesh_1d()
+    params = _smoke_params(jax.random.PRNGKey(0), ragged=False)
+    cfg = SumoConfig(rank=8, update_freq=4, weight_decay=0.05)
+    hlo, state = _compiled_update_hlo(params, cfg, mesh)
+    plan = bucket_collective_plan(state, mesh)
+    try:
+        rep = assert_budget(hlo, steady_1d_budget(plan))
+    except BudgetError as e:
+        return CheckResult("collectives/steady-1d", "FAIL",
+                           e.report.summary())
+    return CheckResult("collectives/steady-1d", "PASS", rep.summary())
+
+
+def check_collectives_2d() -> CheckResult:
+    import jax
+    from ..core import SumoConfig
+    from .collectives import (assert_budget, bucket_collective_plan,
+                              steady_2d_budget, BudgetError)
+
+    if _devices() < 8:
+        return CheckResult("collectives/steady-2d", "SKIP",
+                           f"needs >=8 devices, have {_devices()}")
+    mesh = _mesh_2d()
+    params = _smoke_params(jax.random.PRNGKey(0), ragged=True)
+    cfg = SumoConfig(rank=4, update_freq=4, rsvd_oversample=4,
+                     weight_decay=0.05)
+    hlo, state = _compiled_update_hlo(params, cfg, mesh)
+    plan = bucket_collective_plan(state, mesh)
+    budget = steady_2d_budget(
+        plan, rank_plus_over=cfg.rank + cfg.rsvd_oversample,
+        data_shards=int(mesh.shape["data"]))
+    try:
+        rep = assert_budget(hlo, budget)
+    except BudgetError as e:
+        return CheckResult("collectives/steady-2d", "FAIL",
+                           e.report.summary())
+    return CheckResult("collectives/steady-2d", "PASS", rep.summary())
+
+
+# -- pass 2: pad inertness --------------------------------------------------
+
+def check_inertness_refresh() -> CheckResult:
+    from .inertness import prove_refresh_inertness, InertnessError
+    try:
+        prove_refresh_inertness()
+    except InertnessError as e:
+        return CheckResult("inertness/refresh", "FAIL", str(e))
+    return CheckResult("inertness/refresh", "PASS",
+                       "rSVD range finder preserves trailing zero rows")
+
+
+def check_inertness_update(two_d: bool) -> CheckResult:
+    import jax
+    from ..core import SumoConfig
+    from .inertness import prove_update_inertness, InertnessError
+
+    name = "inertness/update-2d" if two_d else "inertness/update-1d"
+    need = 8 if two_d else 2
+    if _devices() < need:
+        return CheckResult(name, "SKIP",
+                           f"needs >={need} devices, have {_devices()}")
+    if two_d:
+        mesh = _mesh_2d()
+        params = {f"r{i}": jax.ShapeDtypeStruct((102, 16), "float32")
+                  for i in range(3)}
+        cfg = SumoConfig(rank=4, update_freq=2, rsvd_oversample=4,
+                         weight_decay=0.05)
+    else:
+        mesh = _mesh_1d()
+        n = int(mesh.shape["data"])
+        params = {f"l{i}": jax.ShapeDtypeStruct((64, 32), "float32")
+                  for i in range(n + 1)}  # ragged B => padded B-slots
+        cfg = SumoConfig(rank=4, update_freq=2, rsvd_oversample=4)
+    try:
+        prove_update_inertness(params, cfg, mesh=mesh)
+    except InertnessError as e:
+        return CheckResult(name, "FAIL", str(e))
+    return CheckResult(name, "PASS",
+                       "edge-pad rows / pad B-slots proven exactly zero")
+
+
+# -- pass 3: donation / aliasing --------------------------------------------
+
+def check_donation() -> CheckResult:
+    from .donation import audit_train_step_donation
+    rep = audit_train_step_donation()
+    if not rep.ok:
+        return CheckResult("donation", "FAIL", rep.summary())
+    return CheckResult("donation", "PASS", rep.summary())
+
+
+# -- pass 4: recompile boundaries -------------------------------------------
+
+def check_recompile() -> CheckResult:
+    from ..configs import get_smoke_config
+    from ..configs.base import ShapeConfig
+    from ..train.loop import TrainConfig, train
+    from .recompile import CompileWatcher, audit_recompiles
+
+    arch = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("lint", seq_len=16, global_batch=2, kind="train")
+    tcfg = TrainConfig(total_steps=4, optimizer="sumo", rank=4,
+                       update_freq=2, log_every=100)
+    with CompileWatcher(fn_name="train_step") as w:
+        result = train(arch, shape, tcfg, log_fn=lambda *_: None)
+    rep = audit_recompiles(
+        w.events, fn_name="train_step", warmup_through=0,
+        allowed_steps=[e[0] for e in result.controller_events])
+    if not rep.ok:
+        return CheckResult("recompile", "FAIL", rep.summary())
+    if not rep.compiles:
+        return CheckResult("recompile", "FAIL",
+                           "no train_step compile observed — the watcher "
+                           "is not seeing jax's compile log")
+    return CheckResult("recompile", "PASS", rep.summary())
+
+
+# -- entry point ------------------------------------------------------------
+
+def run(mode: str = "all", log=print) -> int:
+    checks = []
+    if mode in ("1d", "all"):
+        checks += [check_collectives_1d,
+                   check_inertness_refresh,
+                   lambda: check_inertness_update(two_d=False),
+                   check_donation,
+                   check_recompile]
+    if mode in ("2d", "all"):
+        checks += [check_collectives_2d,
+                   lambda: check_inertness_update(two_d=True)]
+        if mode == "2d":
+            checks.insert(0, check_inertness_refresh)
+    results = [c() for c in checks]
+    width = max(len(r.name) for r in results)
+    failed = False
+    for r in results:
+        log(f"[{r.status:4s}] {r.name:<{width}}  "
+            + (r.detail.splitlines()[0] if r.detail else ""))
+        if r.status == "FAIL":
+            failed = True
+            for line in r.detail.splitlines()[1:]:
+                log(" " * 8 + line)
+    log("static analysis: " + ("FAIL" if failed else "OK")
+        + f" ({sum(r.status == 'PASS' for r in results)} passed, "
+        + f"{sum(r.status == 'SKIP' for r in results)} skipped)")
+    return 1 if failed else 0
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Run the repro static-analysis passes.")
+    ap.add_argument("--mode", choices=("1d", "2d", "all"), default="all")
+    args = ap.parse_args(argv)
+    return run(args.mode)

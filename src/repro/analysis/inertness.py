@@ -1,0 +1,1148 @@
+"""Pad-inertness prover: a structured-zeros abstract interpreter over jaxprs.
+
+The bucketed SUMO update runs on PADDED stacks: ragged long dims gain
+edge-pad rows (zero rows appended so the model axis divides evenly) and
+ragged B dims gain pad slots (zero matrices appended so the data axis
+divides evenly). Correctness of the whole 2D engine rests on one invariant:
+
+    pad rows and pad slots are INERT — exactly zero into every op,
+    exactly zero out of every op, so slicing them off at the end
+    recovers bit-identical unpadded results.
+
+This module proves that mechanically. It interprets the jaxpr of the
+update under an abstract domain that tracks *structured zeros*:
+
+  ``Zeros``  per-dimension trailing-zero slabs ``(count, deps)`` — the
+             trailing ``count`` slices along a dim are exactly zero;
+             ``deps`` is the set of mesh axis names the structure may vary
+             across (empty = shard-uniform).
+  ``Conc``   a concrete scalar (e.g. ``axis_index`` under the last-shard
+             assignment, literals, small integer arithmetic).
+  ``Aff``    an affine integer array ``off + sum_d stride_d * i_d`` (iotas
+             and index arithmetic — the live-row index ramps).
+  ``Mask``   a boolean array that is True everywhere except trailing bands
+             (``i_d < n_d - tfalse_d`` AND-ed over dims) — the live-row
+             masks produced by comparing an ``Aff`` ramp against a bound.
+  ``TOP``    no information.
+
+Shard-local code (inside ``shard_map``) is evaluated under the LAST-shard
+assignment: ``axis_index(a) = size(a) - 1``. A slab with ``deps = {a}``
+therefore reads "on the last ``a``-shard, trailing ``count`` slices are
+zero"; entering ``shard_map`` adds the mapped axes to ``deps``, and a
+zero claim may only be exported back to the global view when its deps are
+covered by the axes that shard that dimension (the trailing global block
+belongs to the last shard).
+
+Soundness caveats — the same explicit axioms the superseded prose proof in
+``core/rsvd.py`` relied on, now stated once, in code:
+
+  * FINITE ARITHMETIC: ``0 * x = 0`` assumes no Inf/NaN operand. The
+    engine masks with ``jnp.where`` (not multiplication) precisely so pad
+    lanes never see non-finite values; the prover inherits the assumption
+    for ``mul``.
+  * NONSINGULAR TRIANGULAR FACTORS: ``triangular_solve`` propagates zero
+    columns/rows of the RHS assuming the triangular factor is invertible —
+    guaranteed by the shifted CholeskyQR2 (the Gram matrix is made
+    strictly SPD before factoring).
+  * EPS-GUARDED DIVISION: ``div`` propagates the numerator's zeros
+    assuming a finite nonzero denominator (all engine denominators are
+    ``+ eps``-guarded).
+
+Decompositions (``qr``/``svd``/``eigh``/``cholesky``) are TOP: the Q
+factor of a zero block is NOT zero (it is an arbitrary orthonormal
+basis), and the prover does not pretend otherwise — the end-to-end claims
+survive because every decomposition output is subsequently multiplied by
+a structured-zero operand, which the ``dot_general`` rule tracks.
+
+Unknown primitives are TOP. Everything here is conservative: the prover
+can fail on a correct program (and then the program should be made more
+obviously correct), but a proved claim holds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+try:
+    from jax.core import Literal as _Literal
+except ImportError:  # pragma: no cover - jax internal layout drift
+    from jax._src.core import Literal as _Literal
+
+__all__ = [
+    "Slab", "Zeros", "Conc", "Aff", "Mask", "TOP",
+    "ShardMapRecord", "InertnessResult", "InertnessError",
+    "analyze_jaxpr", "Claim", "check_claims", "prove_update_inertness",
+    "prove_refresh_inertness",
+]
+
+EMPTY = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class Slab:
+    count: int
+    deps: frozenset = EMPTY
+
+
+class _Top:
+    def __repr__(self):
+        return "TOP"
+
+
+TOP = _Top()
+
+
+@dataclasses.dataclass(frozen=True)
+class Zeros:
+    """Trailing-zero slabs, one per dimension (aligned with the aval)."""
+    slabs: tuple  # tuple[Slab, ...]
+
+    def __repr__(self):
+        return "Zeros(" + ",".join(
+            f"{s.count}{sorted(s.deps) if s.deps else ''}"
+            for s in self.slabs) + ")"
+
+
+@dataclasses.dataclass(frozen=True)
+class Conc:
+    v: object
+    deps: frozenset = EMPTY
+
+
+@dataclasses.dataclass(frozen=True)
+class Aff:
+    """off + sum_d strides[d] * i_d (integer array)."""
+    off: int
+    strides: tuple
+    deps: frozenset = EMPTY
+
+
+@dataclasses.dataclass(frozen=True)
+class Mask:
+    """bool array: True iff i_d < n_d - tfalse[d] for every dim d."""
+    tfalse: tuple
+    deps: frozenset = EMPTY
+
+
+def _shape(v):
+    return tuple(v.aval.shape)
+
+
+def _no_zeros(ndim):
+    return Zeros(tuple(Slab(0) for _ in range(ndim)))
+
+
+def _all_zeros(shape):
+    if not shape:
+        return Conc(0.0)
+    return Zeros(tuple(Slab(n) for n in shape))
+
+
+def as_zeros(av, shape) -> Zeros:
+    """Collapse any abstract value to its zero-slab content."""
+    if isinstance(av, Zeros):
+        return av
+    if isinstance(av, Conc) and not shape and _is_zero_scalar(av.v):
+        return Zeros(())
+    return _no_zeros(len(shape))
+
+
+def _is_zero_scalar(v) -> bool:
+    try:
+        return float(v) == 0.0
+    except (TypeError, ValueError):
+        return False
+
+
+def is_all_zero(av, shape) -> bool:
+    if isinstance(av, Conc):
+        return not shape and _is_zero_scalar(av.v)
+    if not isinstance(av, Zeros):
+        return False
+    if not shape:
+        return False
+    return any(s.count >= n and n > 0 for s, n in zip(av.slabs, shape))
+
+
+def _union_deps(av) -> frozenset:
+    if isinstance(av, Zeros):
+        out = EMPTY
+        for s in av.slabs:
+            out |= s.deps
+        return out
+    return getattr(av, "deps", EMPTY)
+
+
+def _add_deps(av, deps, shape):
+    """Taint an abstract value with extra axis deps (keeps its refinement)."""
+    if not deps:
+        if isinstance(av, (Zeros, Conc, Aff, Mask)):
+            return av
+        return _no_zeros(len(shape))
+    if isinstance(av, Conc):
+        return Conc(av.v, av.deps | deps)
+    if isinstance(av, Aff):
+        return Aff(av.off, av.strides, av.deps | deps)
+    if isinstance(av, Mask):
+        return Mask(av.tfalse, av.deps | deps)
+    z = as_zeros(av, shape)
+    return Zeros(tuple(
+        Slab(s.count, (s.deps | deps) if s.count else EMPTY)
+        for s in z.slabs))
+
+
+def _meet_zeros(a: Zeros, b: Zeros) -> Zeros:
+    return Zeros(tuple(
+        Slab(min(sa.count, sb.count), sa.deps | sb.deps)
+        for sa, sb in zip(a.slabs, b.slabs)))
+
+
+# -- shard_map records and results ------------------------------------------
+
+@dataclasses.dataclass
+class ShardMapRecord:
+    out_shapes: list   # global shapes of the shard_map eqn's outputs
+    out_slabs: list    # globalized Zeros per output
+
+
+@dataclasses.dataclass
+class InertnessResult:
+    out_slabs: list           # Zeros per flat jaxpr output
+    out_shapes: list
+    records: list             # ShardMapRecord per shard_map eqn encountered
+
+
+class InertnessError(AssertionError):
+    pass
+
+
+class _Ctx:
+    def __init__(self):
+        self.axis_sizes: dict[str, int] = {}
+        self.records: list[ShardMapRecord] = []
+
+
+# -- the interpreter --------------------------------------------------------
+
+_ZERO_PRESERVING_UNARY = {
+    "neg", "abs", "sign", "sqrt", "cbrt", "sin", "tan", "sinh", "tanh",
+    "asin", "atan", "asinh", "atanh", "erf", "erf_inv", "expm1", "log1p",
+    "floor", "ceil", "round", "real", "imag", "conj",
+    "convert_element_type", "copy", "stop_gradient", "reduce_precision",
+    "square",
+}
+
+_CALL_PRIMS = {"pjit", "closed_call", "core_call", "xla_call", "remat",
+               "checkpoint", "custom_jvp_call", "custom_vjp_call",
+               "custom_jvp_call_jaxpr", "custom_vjp_call_jaxpr"}
+
+
+def analyze_jaxpr(closed_jaxpr, arg_claims: Optional[list] = None,
+                  axis_sizes: Optional[dict] = None) -> InertnessResult:
+    """Run the prover over a ClosedJaxpr.
+
+    ``arg_claims``: optional list aligned with the flat invars; each entry
+    is None or a dict ``{dim: trailing_zero_count}`` asserting structured
+    zeros of that input (e.g. the inductive hypothesis that a state Q
+    stack's edge-pad rows are zero coming in).
+    """
+    ctx = _Ctx()
+    ctx.axis_sizes.update(axis_sizes or {})
+    jaxpr = closed_jaxpr.jaxpr
+    env: dict = {}
+
+    for var, const in zip(jaxpr.constvars, closed_jaxpr.consts):
+        env[var] = _classify_const(const)
+    for i, var in enumerate(jaxpr.invars):
+        claim = (arg_claims[i] if arg_claims and i < len(arg_claims)
+                 else None)
+        shape = _shape(var)
+        if claim:
+            slabs = [Slab(0)] * len(shape)
+            for d, c in claim.items():
+                slabs[d] = Slab(min(int(c), shape[d]))
+            env[var] = Zeros(tuple(slabs))
+        else:
+            env[var] = _no_zeros(len(shape))
+    _interp(jaxpr, env, ctx)
+    outs = [as_zeros(_read(env, v), _shape(v)) for v in jaxpr.outvars]
+    return InertnessResult(
+        out_slabs=outs, out_shapes=[_shape(v) for v in jaxpr.outvars],
+        records=ctx.records)
+
+
+def _classify_const(c):
+    try:
+        arr = np.asarray(c)
+    except Exception:
+        return TOP
+    if arr.ndim == 0:
+        return Conc(arr.item())
+    if arr.size and not np.any(arr):
+        return _all_zeros(arr.shape)
+    return _no_zeros(arr.ndim)
+
+
+def _read(env, atom):
+    if isinstance(atom, _Literal):
+        return _classify_const(atom.val)
+    return env.get(atom, TOP)
+
+
+def _interp(jaxpr, env, ctx):
+    for eqn in jaxpr.eqns:
+        ins = [_read(env, a) for a in eqn.invars]
+        outs = _eqn(eqn, ins, env, ctx)
+        for var, av in zip(eqn.outvars, outs):
+            env[var] = av
+
+
+def _top_outs(eqn):
+    return [TOP for _ in eqn.outvars]
+
+
+def _eqn(eqn, ins, env, ctx):
+    name = eqn.primitive.name
+    h = _HANDLERS.get(name)
+    if h is not None:
+        return h(eqn, ins, ctx)
+    if name in _ZERO_PRESERVING_UNARY:
+        av = ins[0]
+        if isinstance(av, (Zeros, Conc, Aff, Mask)):
+            if name == "convert_element_type" and isinstance(av, Mask):
+                # bool mask -> numeric: trailing-false bands become zeros
+                return [Zeros(tuple(Slab(t, av.deps) for t in av.tfalse))]
+            return [av if not isinstance(av, Conc) else
+                    Conc(av.v if name != "neg" else _neg(av.v), av.deps)]
+        return _top_outs(eqn)
+    if name in _CALL_PRIMS:
+        return _call(eqn, ins, ctx)
+    return _top_outs(eqn)
+
+
+def _neg(v):
+    try:
+        return -v
+    except TypeError:
+        return v
+
+
+def _call(eqn, ins, ctx):
+    inner = (eqn.params.get("jaxpr") or eqn.params.get("call_jaxpr")
+             or eqn.params.get("fun_jaxpr"))
+    if inner is None:
+        return _top_outs(eqn)
+    closed = inner
+    jaxpr = getattr(closed, "jaxpr", closed)
+    consts = getattr(closed, "consts", ())
+    # custom_jvp/vjp pass extra tracing args before the real operands
+    args = ins[-len(jaxpr.invars):] if len(ins) >= len(jaxpr.invars) else ins
+    sub = {}
+    for var, const in zip(jaxpr.constvars, consts):
+        sub[var] = _classify_const(const)
+    for var, av in zip(jaxpr.invars, args):
+        sub[var] = av
+    _interp(jaxpr, sub, ctx)
+    return [as_zeros(_read(sub, v), _shape(v)) if not isinstance(
+        _read(sub, v), (Conc, Aff, Mask)) else _read(sub, v)
+        for v in jaxpr.outvars][: len(eqn.outvars)] + \
+        [TOP] * max(0, len(eqn.outvars) - len(jaxpr.outvars))
+
+
+# -- elementwise ------------------------------------------------------------
+
+def _bin_zero_sets(a, b, eqn):
+    sa = as_zeros(a, _shape(eqn.invars[0])).slabs
+    sb = as_zeros(b, _shape(eqn.invars[1])).slabs
+    shape = _shape(eqn.outvars[0])
+    # scalar operand against array: treat scalar zeros as nothing /
+    # everything per its concrete value at the call sites below
+    return sa, sb, shape
+
+
+def _h_add(eqn, ins, ctx):
+    a, b = ins
+    out_shape = _shape(eqn.outvars[0])
+    for x, y in ((a, b), (b, a)):
+        if isinstance(x, Conc) and isinstance(y, Aff) and _is_int(x.v):
+            return [Aff(y.off + int(x.v), y.strides, y.deps | x.deps)]
+    if isinstance(a, Aff) and isinstance(b, Aff) and a.strides == b.strides:
+        pass  # adding two ramps doubles strides; rare — fall through
+    if isinstance(a, Conc) and isinstance(b, Conc):
+        try:
+            v = a.v + b.v if eqn.primitive.name == "add" else a.v - b.v
+            return [Conc(v, a.deps | b.deps)]
+        except TypeError:
+            return _top_outs(eqn)
+    for x, y in ((a, b), (b, a)):
+        if isinstance(x, Conc) and _is_zero_scalar(x.v):
+            if eqn.primitive.name == "add" or x is b:
+                return [as_zeros(y, out_shape)]
+    za = as_zeros(a, _shape_of(eqn.invars[0], out_shape))
+    zb = as_zeros(b, _shape_of(eqn.invars[1], out_shape))
+    if len(za.slabs) != len(out_shape) or len(zb.slabs) != len(out_shape):
+        return _top_outs(eqn)
+    return [_meet_zeros(za, zb)]
+
+
+def _shape_of(atom, fallback):
+    s = tuple(atom.aval.shape)
+    return s if s else fallback
+
+
+def _h_mul(eqn, ins, ctx):
+    a, b = ins
+    out_shape = _shape(eqn.outvars[0])
+    if isinstance(a, Conc) and isinstance(b, Conc):
+        try:
+            return [Conc(a.v * b.v, a.deps | b.deps)]
+        except TypeError:
+            return _top_outs(eqn)
+    for x, y in ((a, b), (b, a)):
+        if isinstance(x, Conc) and isinstance(y, Aff) and _is_int(x.v):
+            k = int(x.v)
+            return [Aff(y.off * k, tuple(s * k for s in y.strides),
+                        y.deps | x.deps)]
+        if isinstance(x, Conc) and _is_zero_scalar(x.v):
+            return [_all_zeros(out_shape)]
+        if isinstance(x, Conc):
+            # finite nonzero scalar: preserves the array's zeros
+            return [as_zeros(y, out_shape)]
+    for xi, yv in ((0, b), (1, a)):
+        if not _shape(eqn.invars[xi]) and _shape(eqn.invars[1 - xi]):
+            # unknown scalar times array: zeros survive regardless of the
+            # scalar's value (0 * s = 0, finite-arithmetic axiom)
+            return [as_zeros(yv, out_shape)]
+    za = as_zeros(a, out_shape)
+    zb = as_zeros(b, out_shape)
+    if len(za.slabs) != len(out_shape) or len(zb.slabs) != len(out_shape):
+        return _top_outs(eqn)
+    # 0 * x = 0 (finite-arithmetic axiom): union of zero regions
+    return [Zeros(tuple(
+        Slab(max(sa.count, sb.count),
+             (sa.deps | sb.deps) if max(sa.count, sb.count) else EMPTY)
+        for sa, sb in zip(za.slabs, zb.slabs)))]
+
+
+def _h_div(eqn, ins, ctx):
+    a, _b = ins
+    out_shape = _shape(eqn.outvars[0])
+    if isinstance(a, Conc) and _is_zero_scalar(a.v):
+        return [_all_zeros(out_shape)]
+    za = as_zeros(a, out_shape)
+    if len(za.slabs) != len(out_shape):
+        return _top_outs(eqn)
+    # eps-guarded-denominator axiom: numerator zeros survive
+    return [za]
+
+
+def _is_int(v):
+    try:
+        return float(v) == int(v)
+    except (TypeError, ValueError):
+        return False
+
+
+def _h_minmax(eqn, ins, ctx):
+    a, b = ins
+    out_shape = _shape(eqn.outvars[0])
+    is_min = eqn.primitive.name == "min"
+    for x, y in ((a, b), (b, a)):
+        if isinstance(x, Conc):
+            try:
+                c = float(x.v)
+            except (TypeError, ValueError):
+                return _top_outs(eqn)
+            # min(0, c>=0) = 0 ; max(0, c<=0) = 0
+            if (is_min and c >= 0.0) or (not is_min and c <= 0.0):
+                return [as_zeros(y, out_shape)]
+            return _top_outs(eqn)
+    za, zb = as_zeros(a, out_shape), as_zeros(b, out_shape)
+    if len(za.slabs) == len(zb.slabs) == len(out_shape):
+        # min(0,0)=max(0,0)=0: intersection survives
+        return [_meet_zeros(za, zb)]
+    return _top_outs(eqn)
+
+
+def _h_integer_pow(eqn, ins, ctx):
+    y = eqn.params.get("y", 0)
+    if isinstance(y, (int, float)) and y > 0:
+        return [as_zeros(ins[0], _shape(eqn.outvars[0]))]
+    return _top_outs(eqn)
+
+
+def _h_compare(eqn, ins, ctx):
+    a, b = ins
+    name = eqn.primitive.name
+    if isinstance(a, Conc) and isinstance(b, Conc):
+        try:
+            av, bv = float(a.v), float(b.v)
+            v = {"lt": av < bv, "le": av <= bv, "gt": av > bv,
+                 "ge": av >= bv, "eq": av == bv, "ne": av != bv}[name]
+            return [Conc(v, a.deps | b.deps)]
+        except (TypeError, ValueError):
+            return _top_outs(eqn)
+    # ramp < bound: prefix-true mask (the live-row masks)
+    if name in ("lt", "le") and isinstance(a, Aff) and isinstance(b, Conc):
+        shape = _shape(eqn.outvars[0])
+        nz = [d for d, s in enumerate(a.strides) if s]
+        if len(nz) == 1 and a.strides[nz[0]] > 0 and _is_int(b.v):
+            d, stride = nz[0], a.strides[nz[0]]
+            bound = int(b.v) + (1 if name == "le" else 0)
+            # true while off + stride*i < bound
+            t = (bound - a.off + stride - 1) // stride
+            t = max(0, min(shape[d], t))
+            tfalse = [0] * len(shape)
+            tfalse[d] = shape[d] - t
+            return [Mask(tuple(tfalse), a.deps | b.deps)]
+    return _top_outs(eqn)
+
+
+def _h_and_or(eqn, ins, ctx):
+    a, b = ins
+    if isinstance(a, Mask) and isinstance(b, Mask) \
+            and len(a.tfalse) == len(b.tfalse):
+        f = max if eqn.primitive.name == "and" else min
+        return [Mask(tuple(f(x, y) for x, y in zip(a.tfalse, b.tfalse)),
+                     a.deps | b.deps)]
+    if isinstance(a, Conc) and isinstance(b, Conc):
+        try:
+            v = (bool(a.v) and bool(b.v)) if eqn.primitive.name == "and" \
+                else (bool(a.v) or bool(b.v))
+            return [Conc(v, a.deps | b.deps)]
+        except (TypeError, ValueError):
+            pass
+    return _top_outs(eqn)
+
+
+def _h_select_n(eqn, ins, ctx):
+    pred, *cases = ins
+    out_shape = _shape(eqn.outvars[0])
+    if isinstance(pred, Conc):
+        try:
+            idx = int(pred.v)
+        except (TypeError, ValueError):
+            return _top_outs(eqn)
+        if 0 <= idx < len(cases):
+            # the choice is exact under the last-shard interpretation, but
+            # it depended on pred — taint the result with pred's axis deps
+            return [_add_deps(cases[idx], pred.deps, out_shape)]
+    zs = [as_zeros(c, out_shape) for c in cases]
+    if any(len(z.slabs) != len(out_shape) for z in zs):
+        return _top_outs(eqn)
+    both = zs[0]
+    for z in zs[1:]:
+        both = _meet_zeros(both, z)
+    if isinstance(pred, Mask) and len(cases) == 2 \
+            and len(pred.tfalse) == len(out_shape):
+        # case 0 is selected where pred is False (the trailing bands)
+        c0, c1 = cases[0], cases[1]
+        if is_all_zero(c0, _shape_of(eqn.invars[1], out_shape)) or (
+                isinstance(c0, Conc) and _is_zero_scalar(c0.v)):
+            # rows in the mask's trailing-false band select case 0 (zero);
+            # rows outside it may still be zero via case 1's own slab. Per
+            # dim, deps come only from the source that provides the count.
+            slabs = []
+            for d in range(len(out_shape)):
+                s1 = zs[1].slabs[d]
+                if s1.count >= pred.tfalse[d]:
+                    c, deps = s1.count, s1.deps
+                else:
+                    c, deps = pred.tfalse[d], pred.deps
+                slabs.append(Slab(c, deps if c else EMPTY))
+            return [Zeros(tuple(slabs))]
+    return [both]
+
+
+# -- structural -------------------------------------------------------------
+
+def _h_broadcast_in_dim(eqn, ins, ctx):
+    av = ins[0]
+    out_shape = tuple(eqn.params["shape"])
+    bdims = tuple(eqn.params["broadcast_dimensions"])
+    in_shape = _shape(eqn.invars[0])
+    if isinstance(av, Conc):
+        if _is_zero_scalar(av.v):
+            return [_all_zeros(out_shape)]
+        return [_no_zeros(len(out_shape))]
+    if isinstance(av, Aff):
+        strides = [0] * len(out_shape)
+        ok = True
+        for i, d in enumerate(bdims):
+            if in_shape[i] == out_shape[d]:
+                strides[d] = av.strides[i]
+            elif av.strides[i]:
+                ok = False
+        if ok:
+            return [Aff(av.off, tuple(strides), av.deps)]
+        return _top_outs(eqn)
+    if isinstance(av, Mask):
+        tf = [0] * len(out_shape)
+        ok = True
+        for i, d in enumerate(bdims):
+            if in_shape[i] == out_shape[d]:
+                tf[d] = av.tfalse[i]
+            elif av.tfalse[i]:
+                ok = False  # a size-1 false band replicated: all-false dim
+        if ok:
+            return [Mask(tuple(tf), av.deps)]
+        return _top_outs(eqn)
+    z = as_zeros(av, in_shape)
+    if is_all_zero(av, in_shape):
+        return [_all_zeros(out_shape)]
+    slabs = [Slab(0)] * len(out_shape)
+    for i, d in enumerate(bdims):
+        s = z.slabs[i]
+        if in_shape[i] == out_shape[d]:
+            slabs[d] = s
+        elif s.count >= in_shape[i] and in_shape[i] > 0:
+            slabs[d] = Slab(out_shape[d], s.deps)
+    return [Zeros(tuple(slabs))]
+
+
+def _h_iota(eqn, ins, ctx):
+    d = eqn.params.get("dimension", 0)
+    shape = _shape(eqn.outvars[0])
+    strides = tuple(1 if i == d else 0 for i in range(len(shape)))
+    return [Aff(0, strides)]
+
+
+def _h_axis_index(eqn, ins, ctx):
+    a = eqn.params["axis_name"]
+    size = ctx.axis_sizes.get(a)
+    if size is None:
+        return _top_outs(eqn)
+    return [Conc(size - 1, frozenset({a}))]
+
+
+def _h_concatenate(eqn, ins, ctx):
+    d = eqn.params["dimension"]
+    out_shape = _shape(eqn.outvars[0])
+    shapes = [_shape(v) for v in eqn.invars]
+    zs = [as_zeros(av, s) for av, s in zip(ins, shapes)]
+    if any(len(z.slabs) != len(s) for z, s in zip(zs, shapes)):
+        return _top_outs(eqn)
+    # trailing zeros along d: whole all-zero suffix operands, then the last
+    # non-all-zero operand's own trailing slab
+    count, deps = 0, EMPTY
+    for av, z, s in zip(reversed(ins), reversed(zs), reversed(shapes)):
+        if is_all_zero(av, s):
+            count += s[d]
+            deps |= _union_deps(av)
+            continue
+        count += z.slabs[d].count
+        deps |= z.slabs[d].deps
+        break
+    slabs = []
+    for i in range(len(out_shape)):
+        if i == d:
+            slabs.append(Slab(min(count, out_shape[d]),
+                              deps if count else EMPTY))
+        else:
+            c = min(z.slabs[i].count for z in zs)
+            dd = EMPTY
+            for z in zs:
+                dd |= z.slabs[i].deps
+            slabs.append(Slab(c, dd if c else EMPTY))
+    return [Zeros(tuple(slabs))]
+
+
+def _h_pad(eqn, ins, ctx):
+    av, padval = ins
+    out_shape = _shape(eqn.outvars[0])
+    in_shape = _shape(eqn.invars[0])
+    cfg = eqn.params["padding_config"]
+    pad_is_zero = (isinstance(padval, Conc) and _is_zero_scalar(padval.v)) \
+        or is_all_zero(padval, _shape(eqn.invars[1]))
+    z = as_zeros(av, in_shape)
+    if len(z.slabs) != len(out_shape):
+        return _top_outs(eqn)
+    slabs = []
+    for d, (lo, hi, interior) in enumerate(cfg):
+        s = z.slabs[d]
+        if pad_is_zero:
+            c = hi + (s.count if interior == 0 else 0)
+            slabs.append(Slab(min(c, out_shape[d]), s.deps if c else EMPTY))
+        else:
+            c = s.count if (hi == 0 and interior == 0) else 0
+            slabs.append(Slab(c, s.deps if c else EMPTY))
+    return [Zeros(tuple(slabs))]
+
+
+def _h_transpose(eqn, ins, ctx):
+    perm = eqn.params["permutation"]
+    z = as_zeros(ins[0], _shape(eqn.invars[0]))
+    if len(z.slabs) != len(perm):
+        return _top_outs(eqn)
+    return [Zeros(tuple(z.slabs[p] for p in perm))]
+
+
+def _h_squeeze(eqn, ins, ctx):
+    dims = set(eqn.params["dimensions"])
+    z = as_zeros(ins[0], _shape(eqn.invars[0]))
+    return [Zeros(tuple(s for d, s in enumerate(z.slabs) if d not in dims))]
+
+
+def _h_reshape(eqn, ins, ctx):
+    av = ins[0]
+    in_shape = _shape(eqn.invars[0])
+    out_shape = _shape(eqn.outvars[0])
+    if is_all_zero(av, in_shape):
+        return [_all_zeros(out_shape)]
+    z = as_zeros(av, in_shape)
+    # only unit-dim insertion/removal keeps slab geometry intact
+    in_nonunit = [(d, n) for d, n in enumerate(in_shape) if n != 1]
+    out_nonunit = [(d, n) for d, n in enumerate(out_shape) if n != 1]
+    if [n for _, n in in_nonunit] != [n for _, n in out_nonunit]:
+        return [_no_zeros(len(out_shape))]
+    slabs = [Slab(0)] * len(out_shape)
+    for (di, _), (do, _) in zip(in_nonunit, out_nonunit):
+        slabs[do] = z.slabs[di]
+    return [Zeros(tuple(slabs))]
+
+
+def _h_slice(eqn, ins, ctx):
+    starts = eqn.params["start_indices"]
+    limits = eqn.params["limit_indices"]
+    strides = eqn.params.get("strides") or [1] * len(starts)
+    in_shape = _shape(eqn.invars[0])
+    z = as_zeros(ins[0], in_shape)
+    if len(z.slabs) != len(in_shape):
+        return _top_outs(eqn)
+    slabs = []
+    for d, (s0, lim, st) in enumerate(zip(starts, limits, strides)):
+        sl = z.slabs[d]
+        if st != 1:
+            slabs.append(Slab(0))
+            continue
+        first_zero = in_shape[d] - sl.count
+        c = max(0, min(lim - s0, lim - max(s0, first_zero)))
+        slabs.append(Slab(c, sl.deps if c else EMPTY))
+    return [Zeros(tuple(slabs))]
+
+
+def _h_dynamic_slice(eqn, ins, ctx):
+    av = ins[0]
+    starts = ins[1:]
+    in_shape = _shape(eqn.invars[0])
+    sizes = eqn.params["slice_sizes"]
+    z = as_zeros(av, in_shape)
+    if len(z.slabs) != len(in_shape):
+        return _top_outs(eqn)
+    slabs = []
+    for d, w in enumerate(sizes):
+        sl = z.slabs[d]
+        st = starts[d] if d < len(starts) else TOP
+        if isinstance(st, Conc) and _is_int(st.v):
+            # XLA clamps the start so the window fits
+            s0 = max(0, min(int(st.v), in_shape[d] - w))
+            first_zero = in_shape[d] - sl.count
+            c = max(0, min(w, (s0 + w) - max(s0, first_zero)))
+            slabs.append(Slab(c, (sl.deps | st.deps) if c else EMPTY))
+        elif sl.count >= in_shape[d]:
+            slabs.append(Slab(w, EMPTY))  # slicing an all-zero dim
+        else:
+            slabs.append(Slab(0))
+    return [Zeros(tuple(slabs))]
+
+
+def _h_dynamic_update_slice(eqn, ins, ctx):
+    operand, update = ins[0], ins[1]
+    out_shape = _shape(eqn.outvars[0])
+    if is_all_zero(operand, _shape(eqn.invars[0])) and \
+            is_all_zero(update, _shape(eqn.invars[1])):
+        return [_all_zeros(out_shape)]
+    return _top_outs(eqn)
+
+
+def _h_reduce(eqn, ins, ctx):
+    axes = set(eqn.params["axes"])
+    in_shape = _shape(eqn.invars[0])
+    z = as_zeros(ins[0], in_shape)
+    if len(z.slabs) != len(in_shape):
+        return _top_outs(eqn)
+    # sum/max/min/prod of an all-zero slice is zero; reduced dims vanish
+    return [Zeros(tuple(s for d, s in enumerate(z.slabs) if d not in axes))]
+
+
+def _h_dot_general(eqn, ins, ctx):
+    (lc, rc), (lb, rb) = eqn.params["dimension_numbers"]
+    lshape, rshape = _shape(eqn.invars[0]), _shape(eqn.invars[1])
+    out_shape = _shape(eqn.outvars[0])
+    la, ra = ins
+    if is_all_zero(la, lshape) or is_all_zero(ra, rshape):
+        return [_all_zeros(out_shape)]
+    zl, zr = as_zeros(la, lshape), as_zeros(ra, rshape)
+    if len(zl.slabs) != len(lshape) or len(zr.slabs) != len(rshape):
+        return _top_outs(eqn)
+    lfree = [d for d in range(len(lshape)) if d not in lc and d not in lb]
+    rfree = [d for d in range(len(rshape)) if d not in rc and d not in rb]
+    slabs = []
+    for j in range(len(lb)):
+        a, b = zl.slabs[lb[j]], zr.slabs[rb[j]]
+        c = max(a.count, b.count)
+        slabs.append(Slab(c, (a.deps | b.deps) if c else EMPTY))
+    for d in lfree:
+        slabs.append(zl.slabs[d])
+    for d in rfree:
+        slabs.append(zr.slabs[d])
+    if len(slabs) != len(out_shape):
+        return _top_outs(eqn)
+    return [Zeros(tuple(slabs))]
+
+
+def _h_triangular_solve(eqn, ins, ctx):
+    # Solves with the triangular factor a: result has b's shape. Zero batch
+    # slices and zero slices along the NON-solved matrix dim of b stay zero,
+    # ASSUMING a is nonsingular (shifted-CholeskyQR2 axiom, see module doc).
+    b_shape = _shape(eqn.invars[1])
+    zb = as_zeros(ins[1], b_shape)
+    if len(zb.slabs) != len(b_shape):
+        return _top_outs(eqn)
+    left = eqn.params.get("left_side", True)
+    nd = len(b_shape)
+    slabs = list(zb.slabs)
+    solved_dim = nd - 2 if left else nd - 1
+    slabs[solved_dim] = Slab(0)
+    return [Zeros(tuple(slabs))]
+
+
+# -- collectives and control flow ------------------------------------------
+
+def _axes_set(eqn):
+    axes = eqn.params.get("axes") or eqn.params.get("axis_name")
+    if not isinstance(axes, (tuple, list)):
+        axes = (axes,)
+    out = set()
+    for a in axes:  # axis_name may itself be a tuple of names
+        if isinstance(a, (tuple, list)):
+            out.update(x for x in a if x is not None)
+        elif a is not None:
+            out.add(a)
+    return frozenset(out)
+
+
+def _h_psum(eqn, ins, ctx):
+    axes = _axes_set(eqn)
+    outs = []
+    for av, ov in zip(ins, eqn.outvars):
+        shape = _shape(ov)
+        if isinstance(av, Conc) and av.deps.isdisjoint(axes):
+            outs.append(av)  # uniform scalar across the reduced axes
+            continue
+        z = as_zeros(av, shape)
+        if len(z.slabs) != len(shape):
+            outs.append(TOP)
+            continue
+        # a zero slab survives a cross-shard reduction only if it does not
+        # vary across the reduced axes (sum of per-shard zeros is zero)
+        outs.append(Zeros(tuple(
+            s if s.deps.isdisjoint(axes) else Slab(0) for s in z.slabs)))
+    return outs
+
+
+def _h_all_gather(eqn, ins, ctx):
+    axes = _axes_set(eqn)
+    d = eqn.params.get("all_gather_dimension", 0)
+    tiled = eqn.params.get("tiled", False)
+    av = ins[0]
+    out_shape = _shape(eqn.outvars[0])
+    in_shape = _shape(eqn.invars[0])
+    z = as_zeros(av, in_shape)
+    if len(z.slabs) != len(in_shape):
+        return _top_outs(eqn)
+    slabs_in = list(z.slabs)
+    if not tiled:
+        slabs_in.insert(d, Slab(0))
+    slabs = []
+    for i, s in enumerate(slabs_in):
+        if i == d:
+            # the last shard's block lands at the trailing position, so its
+            # trailing zeros survive; gathering removes the axis dependence
+            slabs.append(Slab(s.count, s.deps - axes))
+        elif s.deps.isdisjoint(axes):
+            slabs.append(s)
+        else:
+            slabs.append(Slab(0))
+    if len(slabs) != len(out_shape):
+        return _top_outs(eqn)
+    return [Zeros(tuple(slabs))]
+
+
+def _h_cond(eqn, ins, ctx):
+    branches = eqn.params["branches"]
+    pred, args = ins[0], ins[1:]
+
+    def run(branch):
+        jaxpr = branch.jaxpr
+        sub = {}
+        for var, const in zip(jaxpr.constvars, branch.consts):
+            sub[var] = _classify_const(const)
+        for var, av in zip(jaxpr.invars, args):
+            sub[var] = av
+        _interp(jaxpr, sub, ctx)
+        return [_read(sub, v) for v in jaxpr.outvars]
+
+    if isinstance(pred, Conc) and _is_int(pred.v):
+        idx = max(0, min(len(branches) - 1, int(pred.v)))
+        outs = run(branches[idx])
+        return [o for o in outs]
+    results = [run(b) for b in branches]
+    outs = []
+    for i, ov in enumerate(eqn.outvars):
+        shape = _shape(ov)
+        z = as_zeros(results[0][i], shape)
+        for r in results[1:]:
+            z2 = as_zeros(r[i], shape)
+            if len(z.slabs) == len(z2.slabs):
+                z = _meet_zeros(z, z2)
+            else:
+                z = _no_zeros(len(shape))
+        outs.append(z)
+    return outs
+
+
+def _h_shard_map(eqn, ins, ctx):
+    mesh = eqn.params.get("mesh")
+    sizes = dict(getattr(mesh, "shape", {}) or {})
+    in_names = eqn.params.get("in_names", ())
+    out_names = eqn.params.get("out_names", ())
+    jaxpr = eqn.params.get("jaxpr")
+    if jaxpr is None:
+        return _top_outs(eqn)
+    inner = getattr(jaxpr, "jaxpr", jaxpr)
+    consts = getattr(jaxpr, "consts", ())
+    saved = dict(ctx.axis_sizes)
+    ctx.axis_sizes.update({k: int(v) for k, v in sizes.items()})
+    try:
+        sub = {}
+        for var, const in zip(inner.constvars, consts):
+            sub[var] = _classify_const(const)
+        for var, av, names in zip(inner.invars, ins, in_names):
+            sub[var] = _localize(av, _shape(var), names, sizes)
+        _interp(inner, sub, ctx)
+        glob = []
+        for var, ov, names in zip(inner.outvars, eqn.outvars, out_names):
+            local = as_zeros(_read(sub, var), _shape(var))
+            glob.append(_globalize(local, _shape(ov), names))
+    finally:
+        ctx.axis_sizes = saved
+    ctx.records.append(ShardMapRecord(
+        out_shapes=[_shape(ov) for ov in eqn.outvars],
+        out_slabs=list(glob)))
+    return glob
+
+
+def _localize(av, local_shape, names, sizes):
+    """Global abstract value -> shard-local view under in_names."""
+    if not isinstance(av, Zeros):
+        return _no_zeros(len(local_shape))
+    if len(av.slabs) != len(local_shape):
+        return _no_zeros(len(local_shape))
+    slabs = []
+    for d, s in enumerate(av.slabs):
+        axes = frozenset(names.get(d, ()))
+        if not axes:
+            slabs.append(s)
+            continue
+        factor = 1
+        for a in axes:
+            factor *= int(sizes.get(a, 1))
+        block = local_shape[d]
+        global_n = block * factor
+        if s.count >= global_n:
+            slabs.append(Slab(block, s.deps))
+        else:
+            c = min(s.count, block)
+            slabs.append(Slab(c, (s.deps | axes) if c else EMPTY))
+    return Zeros(tuple(slabs))
+
+
+def _globalize(local: Zeros, global_shape, names) -> Zeros:
+    """Shard-local zeros -> global claims under out_names.
+
+    A local trailing slab becomes a global one only when every axis it
+    depends on shards THAT dimension — then the trailing global block is
+    the last shard's block, where the slab holds. A slab depending on an
+    axis that shards a different dim (or none) must be dropped: the
+    assembled trailing block comes from other shards of that axis.
+    """
+    if len(local.slabs) != len(global_shape):
+        return _no_zeros(len(global_shape))
+    slabs = []
+    for d, s in enumerate(local.slabs):
+        axes = frozenset(names.get(d, ()))
+        if s.count and s.deps <= axes:
+            slabs.append(Slab(min(s.count, global_shape[d]), EMPTY))
+        else:
+            slabs.append(Slab(0))
+    return Zeros(tuple(slabs))
+
+
+def _h_clamp(eqn, ins, ctx):
+    lo, x, hi = ins
+    out_shape = _shape(eqn.outvars[0])
+    try:
+        lo_ok = isinstance(lo, Conc) and float(lo.v) <= 0.0
+        hi_ok = isinstance(hi, Conc) and float(hi.v) >= 0.0
+    except (TypeError, ValueError):
+        return _top_outs(eqn)
+    if lo_ok and hi_ok:
+        return [as_zeros(x, out_shape)]
+    return _top_outs(eqn)
+
+
+_HANDLERS = {
+    "add": _h_add, "sub": _h_add,
+    "mul": _h_mul, "div": _h_div,
+    "min": _h_minmax, "max": _h_minmax,
+    "integer_pow": _h_integer_pow,
+    "lt": _h_compare, "le": _h_compare, "gt": _h_compare,
+    "ge": _h_compare, "eq": _h_compare, "ne": _h_compare,
+    "and": _h_and_or, "or": _h_and_or,
+    "select_n": _h_select_n,
+    "broadcast_in_dim": _h_broadcast_in_dim,
+    "iota": _h_iota,
+    "axis_index": _h_axis_index,
+    "concatenate": _h_concatenate,
+    "pad": _h_pad,
+    "transpose": _h_transpose,
+    "squeeze": _h_squeeze,
+    "reshape": _h_reshape,
+    "slice": _h_slice,
+    "dynamic_slice": _h_dynamic_slice,
+    "dynamic_update_slice": _h_dynamic_update_slice,
+    "reduce_sum": _h_reduce, "reduce_max": _h_reduce,
+    "reduce_min": _h_reduce, "reduce_prod": _h_reduce,
+    "dot_general": _h_dot_general,
+    "triangular_solve": _h_triangular_solve,
+    "psum": _h_psum, "pmax": _h_psum, "pmin": _h_psum,
+    "all_gather": _h_all_gather,
+    "cond": _h_cond,
+    "shard_map": _h_shard_map,
+    "clamp": _h_clamp,
+}
+
+
+# -- claims -----------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Claim:
+    """"Output (or shard_map output) has >= count trailing zeros on dim."""
+    what: str          # human-readable target, e.g. "state.Q['102x16']"
+    dim: int
+    count: int
+    # where to look: an output index into out_slabs, or a shard_map record
+    # selector (record output shape, output position)
+    out_index: Optional[int] = None
+    record_shape: Optional[tuple] = None
+    record_pos: Optional[int] = None
+
+
+def check_claims(result: InertnessResult, claims: list) -> list:
+    """Returns a list of failure strings (empty = all claims proven)."""
+    failures = []
+    for c in claims:
+        if c.count <= 0:
+            continue
+        z = None
+        where = c.what
+        if c.out_index is not None:
+            if c.out_index >= len(result.out_slabs):
+                failures.append(f"{where}: output index {c.out_index} "
+                                "out of range")
+                continue
+            z = result.out_slabs[c.out_index]
+        else:
+            for rec in result.records:
+                if (c.record_pos is not None
+                        and c.record_pos < len(rec.out_shapes)
+                        and rec.out_shapes[c.record_pos] == c.record_shape):
+                    z = rec.out_slabs[c.record_pos]
+                    break
+            if z is None:
+                failures.append(
+                    f"{where}: no shard_map output of shape "
+                    f"{c.record_shape} at position {c.record_pos}")
+                continue
+        got = z.slabs[c.dim].count if c.dim < len(z.slabs) else 0
+        if got < c.count:
+            failures.append(
+                f"{where}: needs >= {c.count} trailing zeros on dim "
+                f"{c.dim}, proved only {got} ({z})")
+    return failures
+
+
+# -- SUMO-specific proof drivers -------------------------------------------
+
+def prove_update_inertness(params, cfg=None, mesh=None, lr: float = 0.01,
+                           ) -> InertnessResult:
+    """Prove pad inertness of the full bucketed update (the tentpole claim).
+
+    Inductive step: ASSUMING the incoming state Q stacks' edge-pad rows are
+    zero (true at init, where Q is zeros), prove that (a) the new state Q
+    stacks' pad rows are exactly zero, and (b) inside every shard_map, the
+    gathered delta stack's pad rows AND pad B-slots are exactly zero — so
+    the final slice-off recovers the unpadded result bit-exactly.
+
+    Raises InertnessError listing every claim the prover could not
+    establish.
+    """
+    from ..core.sumo import update_closed_jaxpr
+
+    traced = update_closed_jaxpr(params, cfg=cfg, mesh=mesh, lr=lr)
+    result = analyze_jaxpr(traced.closed_jaxpr, traced.arg_claims)
+    claims = []
+    for e in traced.plan:
+        lpad = e["long_padded"] - e["long"]
+        bpad = e["b_padded"] - e["b_true"]
+        if not e["sharded"] or (lpad == 0 and bpad == 0):
+            continue
+        # The interpreter reasons about the LAST shard of each mesh axis,
+        # so a pad band spanning several trailing shards is provable only
+        # up to one shard-block's worth (the pad slots on earlier shards
+        # are still inert — sliced off at unstack — but outside what the
+        # last-shard abstraction can state). Cap the claims accordingly.
+        lprov = min(lpad, e["long_padded"] // max(1, e["model_shards"]))
+        bprov = min(bpad, e["b_padded"] // max(1, e["data_shards"]))
+        delta_shape = (e["b_padded"], e["long_padded"], e["short"])
+        claims.append(Claim(
+            what=f"delta[{e['key']}] pad rows", dim=1, count=lprov,
+            record_shape=delta_shape, record_pos=0))
+        claims.append(Claim(
+            what=f"delta[{e['key']}] pad B-slots", dim=0, count=bprov,
+            record_shape=delta_shape, record_pos=0))
+        if lprov and e["q_out_index"] is not None:
+            claims.append(Claim(
+                what=f"state.Q[{e['key']}] pad rows", dim=1, count=lprov,
+                out_index=e["q_out_index"]))
+    failures = check_claims(result, claims)
+    if failures:
+        raise InertnessError(
+            "pad-inertness proof FAILED:\n  " + "\n  ".join(failures))
+    if not claims:
+        raise InertnessError(
+            "pad-inertness proof is vacuous: no padded sharded bucket in "
+            "the traced configuration")
+    return result
+
+
+def prove_refresh_inertness(rows: int = 102, pad: int = 2, short: int = 16,
+                            l: int = 8) -> InertnessResult:
+    """Standalone single-device proof over the rSVD refresh body: a sketch
+    input with trailing zero rows yields a basis Q with the same trailing
+    zero rows (this replaces the op-by-op prose proof that used to live in
+    core/rsvd.py's docstring)."""
+    from ..core.rsvd import refresh_closed_jaxpr
+
+    closed = refresh_closed_jaxpr(rows + pad, short, l)
+    result = analyze_jaxpr(closed, arg_claims=[{0: pad}, None])
+    failures = check_claims(result, [Claim(
+        what=f"range_finder(G[{rows}+{pad} rows]) pad rows",
+        dim=0, count=pad, out_index=0)])
+    if failures:
+        raise InertnessError(
+            "refresh-inertness proof FAILED:\n  " + "\n  ".join(failures))
+    return result

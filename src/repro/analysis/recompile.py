@@ -1,0 +1,163 @@
+"""Recompile-boundary audit (static pass 4).
+
+The training loop promises that, after warmup, the jitted step recompiles
+ONLY at controller-announced boundaries (rank/refresh rebuilds recorded in
+``TrainResult.controller_events``) and at fault restarts.  An off-boundary
+recompile means a silently unstable jit cache — a shape or static-arg leak
+— and shows up as an unexplained step-time spike in production.
+
+Mechanism: ``jax_log_compiles`` emits a "Compiling <name> ..." log record
+on the ``jax`` logger for every cache-miss compilation.  ``CompileWatcher``
+captures those records (filtered by function name) while the loop runs and
+tags each with the loop's current step, reported via ``mark_step``.
+``audit_recompiles`` then checks every observed compile step against the
+allowed set.
+
+Violation code (stable string): ``off-boundary-recompile``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import re
+from typing import Optional
+
+__all__ = [
+    "CompileEvent", "CompileWatcher", "RecompileReport", "RecompileError",
+    "mark_step", "current_step", "audit_recompiles",
+]
+
+_COMPILING_RE = re.compile(r"Compiling ([\w<>.-]+) ")
+
+# The loop calls mark_step(step) before invoking the jitted step so the
+# watcher can attribute a compile log record to a training step. A plain
+# module global: the loop and the watcher live in the same process, and
+# nested watchers see a consistent value.
+_CURRENT_STEP: list = [None]
+
+
+def mark_step(step: Optional[int]) -> None:
+    """Record the training step about to execute (loop-side hook)."""
+    _CURRENT_STEP[0] = step
+
+
+def current_step() -> Optional[int]:
+    return _CURRENT_STEP[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class CompileEvent:
+    fn_name: str
+    step: Optional[int]   # None = compiled outside any marked step
+    message: str
+
+
+class RecompileError(AssertionError):
+    pass
+
+
+class CompileWatcher(logging.Handler):
+    """Context manager capturing jax compilation log records.
+
+    with CompileWatcher() as w:
+        train(...)
+    events = w.events   # every CompileEvent, step-tagged via mark_step()
+    """
+
+    def __init__(self, fn_name: Optional[str] = None):
+        super().__init__(level=logging.DEBUG)
+        self.fn_name = fn_name
+        self.events: list = []
+        self._logger = logging.getLogger("jax")
+        self._prev_enabled = None
+        self._prev_level = None
+        self._prev_propagate = None
+        self._detached: list = []
+
+    def emit(self, record):
+        msg = record.getMessage()
+        m = _COMPILING_RE.search(msg)
+        if not m:
+            return
+        name = m.group(1)
+        if self.fn_name is not None and self.fn_name not in name:
+            return
+        self.events.append(CompileEvent(
+            fn_name=name, step=current_step(), message=msg.split("\n")[0]))
+
+    def __enter__(self):
+        import jax
+        self._prev_enabled = jax.config.jax_log_compiles
+        jax.config.update("jax_log_compiles", True)
+        self._prev_level = self._logger.level
+        if self._logger.level > logging.WARNING or self._logger.level == 0:
+            self._logger.setLevel(logging.WARNING)
+        # keep the compile chatter out of the user's stderr while we watch:
+        # stop propagation AND park jax's own stderr handler (propagate only
+        # governs ancestors, not sibling handlers on the same logger)
+        self._prev_propagate = self._logger.propagate
+        self._logger.propagate = False
+        self._detached = list(self._logger.handlers)
+        for h in self._detached:
+            self._logger.removeHandler(h)
+        self._logger.addHandler(self)
+        mark_step(None)
+        return self
+
+    def __exit__(self, *exc):
+        import jax
+        self._logger.removeHandler(self)
+        for h in self._detached:
+            self._logger.addHandler(h)
+        self._detached = []
+        jax.config.update("jax_log_compiles", self._prev_enabled)
+        self._logger.setLevel(self._prev_level)
+        self._logger.propagate = self._prev_propagate
+        mark_step(None)
+        return False
+
+
+@dataclasses.dataclass
+class RecompileReport:
+    ok: bool
+    violations: list        # off-boundary CompileEvents
+    compiles: list          # all audited CompileEvents
+    allowed_steps: frozenset
+    warmup_through: int
+
+    def summary(self) -> str:
+        head = "recompile audit: " + ("OK" if self.ok else "FAILED")
+        lines = [head,
+                 f"  compiles observed : {len(self.compiles)}",
+                 f"  warmup through    : step {self.warmup_through}",
+                 f"  allowed boundaries: {sorted(self.allowed_steps)}"]
+        for e in self.violations:
+            lines.append(f"  off-boundary-recompile: {e.fn_name} at step "
+                         f"{e.step}")
+        return "\n".join(lines)
+
+
+def audit_recompiles(events, fn_name: Optional[str] = None,
+                     warmup_through: int = 0,
+                     allowed_steps=()) -> RecompileReport:
+    """Check captured compile events against the allowed boundaries.
+
+    ``warmup_through``: steps <= this (and None-tagged compiles, which
+    happen during tracing/placement before the loop starts stepping) are
+    warmup and always allowed.  ``allowed_steps``: controller-announced
+    rebuild boundaries — a rebuild at step s recompiles when step s+1 runs,
+    so both s and s+1 are accepted.
+    """
+    allowed = frozenset(allowed_steps)
+    audited = [e for e in events
+               if fn_name is None or fn_name in e.fn_name]
+    violations = []
+    for e in audited:
+        if e.step is None or e.step <= warmup_through:
+            continue
+        if e.step in allowed or (e.step - 1) in allowed:
+            continue
+        violations.append(e)
+    return RecompileReport(ok=not violations, violations=violations,
+                           compiles=audited, allowed_steps=allowed,
+                           warmup_through=warmup_through)

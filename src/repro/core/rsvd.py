@@ -45,26 +45,16 @@ never consulted for the clamp.
 
 Callers whose global long dim does not divide the mesh axis (SUMO's
 edge-padded ragged buckets) append all-zero pad rows so every shard holds an
-equal row block. Zero rows are INERT through this entire pipeline — no mask
-is needed at any step — because every op either transforms rows
-independently or reduces over rows:
-
-  * ``G @ Omega`` / ``G @ Z``: a zero row of G yields a zero row of the
-    sketch, exactly (0·x = 0 in IEEE);
-  * the CholeskyQR2 Gram panel ``psum(YᵀY)``: zero rows contribute nothing
-    to the Gram matrix, so its trace — and therefore the relative shift
-    derived from it — is identical with or without pad rows;
-  * ``Y L⁻ᵀ`` (the triangular solve applied from the right) transforms each
-    row independently: zero rows stay exactly zero;
-  * the panel reductions ``psum(GᵀQ)`` / ``psum(QᵀG)``: zero rows of G and
-    the matching zero rows of Q contribute zero partial products;
-  * ``Q @ Ub``: zero rows of Q stay zero.
-
-So a basis refreshed from an edge-padded gradient has EXACTLY zero pad rows,
-projections/norms computed through it never see pad contributions, and the
-invariant is self-propagating across refreshes (zero in -> zero out). The
-consumer (core.sumo) still applies a defensive pad-row mask on entry so a
-hand-built or corrupted state cannot silently break the invariant.
+equal row block. Zero rows are INERT through this entire pipeline — a basis
+refreshed from an edge-padded gradient has EXACTLY zero pad rows, and the
+invariant is self-propagating across refreshes (zero in -> zero out). This
+is no longer argued in prose here: it is a MACHINE-CHECKED theorem.
+``repro.analysis.inertness.prove_refresh_inertness`` runs a structured-zeros
+abstract interpreter over the jaxpr exported by ``refresh_closed_jaxpr``
+below and proves the trailing-zero-rows claim op by op (see ANALYSIS.md for
+the abstract domain and its axioms). The consumer (core.sumo) still applies
+a defensive pad-row mask on entry so a hand-built or corrupted state cannot
+silently break the invariant.
 
 Rank clamping: the sketch can never deliver more than l = min(rank +
 oversample, n) directions (n = min(m, n) single-device). ``rank > l`` is
@@ -272,6 +262,44 @@ def truncated_svd(G: jnp.ndarray, rank: int):
     """Exact truncated SVD (reference / small matrices)."""
     U, s, Vt = jnp.linalg.svd(G.astype(jnp.float32), full_matrices=False)
     return U[:, :rank], s[:rank], Vt[:rank]
+
+
+def refresh_closed_jaxpr(
+    rows: int,
+    short: int,
+    rank: int,
+    n_iter: int = 2,
+    oversample: int = 4,
+    axis_name: str = "model",
+):
+    """Named closed-jaxpr export of the DISTRIBUTED refresh body, for the
+    pad-inertness prover (repro.analysis.inertness.prove_refresh_inertness).
+
+    Traces ``randomized_range_finder`` through a size-1 single-axis
+    shard_map so the jaxpr contains the real 2D-path refresh pipeline —
+    CholeskyQR2 Gram psums + triangular solves, panel psums — rather than
+    the single-device thin-QR path (whose LAPACK Q factor is NOT
+    guaranteed zero-row-preserving for rank-deficient inputs; the
+    distributed invariant is specifically a property of the triangular
+    solve). Tracing needs no extra devices and runs abstractly.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), (axis_name,))
+
+    def body(G, key):
+        return randomized_range_finder(
+            G, key, rank, n_iter=n_iter, oversample=oversample,
+            axis_name=axis_name)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P(axis_name, None), P()),
+                   out_specs=P(axis_name, None), check_rep=False)
+    return jax.make_jaxpr(fn)(
+        jax.ShapeDtypeStruct((rows, short), jnp.float32),
+        jax.ShapeDtypeStruct((2,), jnp.uint32),
+    )
 
 
 def subspace_overlap(Q1: jnp.ndarray, Q2: jnp.ndarray) -> jnp.ndarray:

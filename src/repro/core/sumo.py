@@ -1307,6 +1307,92 @@ def sumo(
     return opt.Transform(init, update)
 
 
+class UpdateTrace(NamedTuple):
+    """Introspection export for repro.analysis (see update_closed_jaxpr)."""
+    closed_jaxpr: object   # ClosedJaxpr of (grads, state, params) -> (u, s')
+    arg_claims: list       # per-flat-invar {dim: trailing_zeros} or None
+    plan: list             # per-bucket pad expectations (dicts)
+    out_shapes: object     # shape pytree of the traced outputs
+
+
+def update_closed_jaxpr(
+    params,
+    cfg: Optional[SumoConfig] = None,
+    mesh: Optional[Mesh] = None,
+    lr: float = 0.01,
+) -> UpdateTrace:
+    """Named closed-jaxpr export of the bucketed update, for static analysis.
+
+    Traces ``sumo(lr, cfg, mesh).update`` on abstract values only (no
+    device computation, but shard_map tracing does require the mesh's
+    devices to exist) and returns, alongside the jaxpr:
+
+      * ``arg_claims`` — the inductive hypothesis for the pad-inertness
+        prover: the flat input positions of the state Q stacks, each
+        claiming its edge-pad rows (beyond the bucket's TRUE long dim) are
+        zero — true at init and re-established by every proved update;
+      * ``plan`` — per bucket: true/padded B and long dims, whether it runs
+        under shard_map, and the flat OUTPUT index of its new-state Q stack
+        (the prover's proof obligation).
+
+    Requires the bucket-resident engine (the only layout with padded
+    stacks to reason about).
+    """
+    cfg = cfg if cfg is not None else SumoConfig()
+    if not cfg.bucketed or cfg.resolved_state_layout() != "bucket":
+        raise ValueError(
+            "update_closed_jaxpr requires the bucketed engine with "
+            "bucket-resident state layout")
+    tx = sumo(lr, cfg, mesh=mesh)
+    as_sds = lambda x: (x if x is None or isinstance(x, jax.ShapeDtypeStruct)
+                        else jax.ShapeDtypeStruct(jnp.shape(x),
+                                                  jnp.asarray(x).dtype))
+    p_sds = jax.tree_util.tree_map(as_sds, params,
+                                   is_leaf=lambda x: x is None)
+    state_sds = jax.eval_shape(tx.init, p_sds)
+    closed, out_shapes = jax.make_jaxpr(
+        lambda g, s, p: tx.update(g, s, p), return_shape=True
+    )(p_sds, state_sds, p_sds)
+
+    leaves = jax.tree_util.tree_flatten(
+        params, is_leaf=lambda x: x is None)[0]
+    bplan = opt.build_bucket_plan(
+        [None if l is None else jnp.shape(l) for l in leaves])
+    n_shards = (int(mesh.shape[cfg.bucket_axis])
+                if isinstance(mesh, Mesh) and cfg.bucket_axis in mesh.shape
+                else 1)
+    m_shards = _model_shards(cfg, mesh)
+
+    # Flat layouts. Inputs: leaves(g) + leaves(state) + leaves(p); outputs:
+    # leaves(updates) + leaves(new_state). SumoState flattens in field order
+    # (step, key, Q, M, prev_norm, stats) and dicts flatten by sorted key.
+    n_g = len(jax.tree_util.tree_leaves(p_sds))
+    q_keys = sorted(state_sds.Q)
+    q_in_base = n_g + 2          # after state.step, state.key
+    q_out_base = n_g + 2         # after updates tree, new step/key
+
+    arg_claims: list = [None] * len(closed.jaxpr.invars)
+    plan_out = []
+    for b in bplan:
+        long_d, short_d = b.shape
+        long_pad = padded_long(long_d, m_shards)
+        b_shard = n_shards > 1 and b.size > 1
+        b_padded = b.size + ((-b.size) % n_shards if b_shard else 0)
+        qi = q_in_base + q_keys.index(b.key)
+        if long_pad > long_d:
+            arg_claims[qi] = {1: long_pad - long_d}
+        plan_out.append({
+            "key": b.key, "b_true": b.size, "b_padded": b_padded,
+            "long": long_d, "long_padded": long_pad, "short": short_d,
+            "sharded": m_shards > 1 or b_shard,
+            "data_shards": n_shards if b_shard else 1,
+            "model_shards": m_shards,
+            "q_out_index": q_out_base + q_keys.index(b.key),
+        })
+    return UpdateTrace(closed_jaxpr=closed, arg_claims=arg_claims,
+                       plan=plan_out, out_shapes=out_shapes)
+
+
 def sumo_optimizer(
     learning_rate,
     params: PyTree,

@@ -13,6 +13,7 @@ from .sharding import (
     data_axes,
     input_specs_sharding,
     opt_state_specs,
+    update_audit_shardings,
     param_spec,
     tree_param_specs,
     tree_shardings,
@@ -20,6 +21,6 @@ from .sharding import (
 
 __all__ = [
     "param_spec", "tree_param_specs", "tree_shardings", "opt_state_specs",
-    "bucket_state_spec",
+    "bucket_state_spec", "update_audit_shardings",
     "cache_specs", "batch_spec", "data_axes", "input_specs_sharding",
 ]

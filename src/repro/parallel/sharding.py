@@ -264,6 +264,31 @@ def opt_state_specs(state, mesh: Mesh, cfg: Optional[ArchConfig] = None,
     )
 
 
+def update_audit_shardings(state, grads, mesh: Mesh,
+                           cfg: Optional[ArchConfig] = None,
+                           bucket_axis: str = "data",
+                           model_axis: str = "model"):
+    """Introspection hook for repro.analysis: the canonical placement for
+    compiling ``tx.update`` in isolation — state resident exactly where
+    ``opt_state_specs`` puts it, grads/params replicated (the update's
+    contract: cotangents arrive replicated, every redistribution inside is
+    the engine's own doing and is what the collective budgets audit).
+
+    Returns ``(grads_shardings, state_shardings)`` NamedSharding trees for
+    ``jax.jit(update, in_shardings=(g_sh, st_sh, g_sh))``. The sharded
+    tests and ``analysis.driver`` share this one incantation so the lint
+    audits the same program the tests pin.
+    """
+    st_specs = opt_state_specs(state, mesh, cfg, bucket_axis=bucket_axis,
+                               model_axis=model_axis)
+    st_sh = jax.tree_util.tree_map(
+        lambda s: None if s is None else NamedSharding(mesh, s), st_specs,
+        is_leaf=lambda x: x is None or isinstance(x, P))
+    rep = NamedSharding(mesh, P())
+    g_sh = jax.tree_util.tree_map(lambda _: rep, grads)
+    return g_sh, st_sh
+
+
 def cache_specs(cache, mesh: Mesh, cfg: Optional[ArchConfig], batch: int):
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: cache_spec(path_str(path), leaf.shape, mesh, cfg, batch),

@@ -12,8 +12,11 @@ trip counts from loop-condition constants (jax scans lower to
   * bytes        — operands + result per top-level (post-fusion) op — the
                    same HBM-traffic convention XLA's own model uses;
   * collective_bytes — result-buffer sizes of all-gather / reduce-scatter /
-                   all-to-all / collective-permute (+2× for all-reduce),
-                   trip-multiplied.
+                   all-to-all / collective-permute / collective-broadcast
+                   (+2× for all-reduce), trip-multiplied. Async pairs
+                   (``all-reduce-start``/``-done`` etc.) charge once, on the
+                   ``-start`` op, using the destination buffer of its tuple
+                   result type — not the whole (operand, result) tuple.
 
 Conditionals charge their worst-case branch (field-wise max): SUMO's K-step
 rSVD refresh — and on the 2D mesh its r-width panel collectives — lives in a
@@ -39,7 +42,7 @@ _DTYPE_BYTES = {
 
 _COLLECTIVES = {
     "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
-    "collective-permute",
+    "collective-permute", "collective-broadcast",
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
@@ -48,6 +51,40 @@ _OP_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*?)\s+([\w\-]+)\("
 )
 _CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _last_shape_info(shape_str: str) -> tuple[int, int, tuple[int, ...]]:
+    """(elements, bytes, dims) of the LAST array shape in the string.
+
+    Async collectives (``all-gather-start`` …) return a ``(operand, result)``
+    tuple; the destination buffer — the wire payload — is the last element.
+    For plain single-shape result types this is just that shape.
+    """
+    last = None
+    for m in _SHAPE_RE.finditer(shape_str):
+        if m.group(1) in _DTYPE_BYTES:
+            last = m
+    if last is None:
+        return 0, 0, ()
+    dims = tuple(int(d) for d in last.group(2).split(",")) if last.group(2) \
+        else ()
+    n = 1
+    for d in dims:
+        n *= d
+    return n, n * _DTYPE_BYTES[last.group(1)], dims
+
+
+def _collective_payload(op: "Op") -> tuple[int, tuple[int, ...]]:
+    """(bytes, dims) a collective op moves, charging async pairs once.
+
+    ``-done`` ops are free (the ``-start`` already paid). ``-start`` ops use
+    the last shape of their tuple result type; synchronous ops have a single
+    result shape so the same rule applies.
+    """
+    if op.opcode.endswith("-done"):
+        return 0, ()
+    _, b, dims = _last_shape_info(op.result_type)
+    return b, dims
 
 
 def _shape_info(shape_str: str) -> tuple[int, int]:
@@ -346,7 +383,8 @@ class HloCostModel:
         if base in _COLLECTIVES:
             if oc.endswith("-done"):
                 return Cost()
-            cb = res_bytes * (2 if base == "all-reduce" else 1)
+            payload, _ = _collective_payload(op)
+            cb = payload * (2 if base == "all-reduce" else 1)
             return Cost(
                 bytes=io_bytes, collective_bytes=cb,
                 collective_breakdown={base: cb},
@@ -515,28 +553,47 @@ def top_bytes(hlo_text: str, k: int = 20) -> list[dict]:
     return entries[:k]
 
 
-def top_collectives(hlo_text: str, k: int = 20) -> list[dict]:
-    """Attribute collective bytes to jax source ops: walks the call graph with
-    trip-count multipliers and returns the top-k collectives by total bytes,
-    each with its HLO shape and the jax op_name metadata (source attribution).
+def iter_collectives(hlo_text) -> list[dict]:
+    """Every collective instance in the program, trip-multiplied.
+
+    Walks the call graph (while bodies × trip count, call/fusion targets, and
+    EVERY branch of a conditional — nested conditionals included), charging
+    async ``-start``/``-done`` pairs once on the ``-start`` op. Each entry:
+
+      op          collective kind ("all-gather", "all-reduce", ...)
+      bytes       payload bytes × trip multiplier (×2 for all-reduce)
+      payload     un-multiplied single-execution payload bytes (no ×2)
+      dims        destination-buffer dims tuple, e.g. (4, 104, 16)
+      mult        trip multiplier
+      shape       raw HLO result-type string
+      source      jax op_name metadata ("?" when absent)
+      branch_depth  0 at top level, ≥1 inside a lax.cond branch
+      computation   HLO computation the op lives in
+
+    This is the single collective walker: ``top_collectives`` and the
+    ``repro.analysis.collectives`` budget lint are both built on it.
+
+    Accepts HLO text or an existing HloCostModel.
     """
-    model = HloCostModel(hlo_text)
+    model = hlo_text if isinstance(hlo_text, HloCostModel) \
+        else HloCostModel(hlo_text)
     entries: list[dict] = []
 
-    def walk(comp: str, mult: float, seen: tuple):
+    def walk(comp: str, mult: float, seen: tuple, branch_depth: int):
         if comp in seen:
             return
-        shapes = model._shapes(comp)
         for op in model.computations.get(comp, []):
             base = op.opcode.replace("-start", "").replace("-done", "")
             if base in _COLLECTIVES and not op.opcode.endswith("-done"):
-                _, rb = _shape_info(op.result_type)
-                b = rb * (2 if base == "all-reduce" else 1)
+                payload, dims = _collective_payload(op)
+                b = payload * (2 if base == "all-reduce" else 1)
                 m = re.search(r'op_name="([^"]*)"', op.raw)
                 entries.append({
-                    "op": base, "bytes": b * mult, "mult": mult,
+                    "op": base, "bytes": b * mult, "payload": payload,
+                    "dims": dims, "mult": mult,
                     "shape": op.result_type.strip(),
                     "source": m.group(1) if m else "?",
+                    "branch_depth": branch_depth, "computation": comp,
                 })
             elif op.opcode == "while":
                 body = model._called(op.attrs, "body")
@@ -544,13 +601,27 @@ def top_collectives(hlo_text: str, k: int = 20) -> list[dict]:
                 trip = model._while_trip(op)
                 for c in (body, cond):
                     if c:
-                        walk(c, mult * (trip or 1), seen + (comp,))
-            elif op.opcode in ("call", "conditional", "fusion"):
+                        walk(c, mult * (trip or 1), seen + (comp,),
+                             branch_depth)
+            elif op.opcode == "conditional":
+                for tgt in model._branch_targets(op):
+                    walk(tgt, mult, seen + (comp,), branch_depth + 1)
+            elif op.opcode in ("call", "fusion", "async-start"):
                 tgt = model._called(op.attrs, "calls") or model._called(
                     op.attrs, "to_apply")
                 if tgt:
-                    walk(tgt, mult, seen + (comp,))
+                    walk(tgt, mult, seen + (comp,), branch_depth)
 
-    walk(model.entry, 1.0, ())
+    if model.entry is not None:
+        walk(model.entry, 1.0, (), 0)
+    return entries
+
+
+def top_collectives(hlo_text: str, k: int = 20) -> list[dict]:
+    """Attribute collective bytes to jax source ops: walks the call graph with
+    trip-count multipliers and returns the top-k collectives by total bytes,
+    each with its HLO shape and the jax op_name metadata (source attribution).
+    """
+    entries = iter_collectives(hlo_text)
     entries.sort(key=lambda e: -e["bytes"])
     return entries[:k]

@@ -36,6 +36,7 @@ from ..telemetry import (
     initial_settings,
     overrides_from_settings,
 )
+from ..analysis.recompile import mark_step
 from .checkpoint import CheckpointManager
 from .failures import FaultInjector, StragglerMonitor, supervise
 from .steps import make_optimizer, make_train_step
@@ -272,6 +273,7 @@ def train(
             batch = place_batch(
                 make_batch(step, shape, arch, DataConfig(seed=tcfg.seed)))
             t0 = time.perf_counter()
+            mark_step(step)  # step-tags compiles for analysis.recompile
             params, opt_state, metrics = step_fn(params, opt_state, batch)
             tel = metrics.pop("telemetry", None)
             if sink is not None and tel is not None:

@@ -1,0 +1,400 @@
+"""Unit tests for the repro.analysis static passes (single-device).
+
+Each pass has at least one NEGATIVE test — the lint must reject the bad
+program with its stable violation code, not just accept the good one:
+
+  * collectives: forbidden kind, disallowed shape, blown panel width, and
+    a steady-path op that must live in a cond branch — over handcrafted
+    HLO so the failure is unambiguous;
+  * hlo_cost walker: async ``-start``/``-done`` pairs charged ONCE (on the
+    destination buffer of the -start tuple), ``collective-broadcast``
+    recognized, and collectives inside a cond-inside-cond charged at the
+    worst case with the right branch_depth;
+  * inertness: a pad followed by ``+ 1.0`` (a non-inert pad write) fails
+    the trailing-zeros claim that the ``* 3.0`` version proves;
+  * donation: a jit call site that keeps using a donated reference is
+    flagged ``donated-arg-not-rebound``; dropped donations are flagged by
+    the HLO cross-check;
+  * recompile: an off-boundary compile event fails the audit, while
+    warmup/boundary-adjacent ones pass.
+
+The sharded end-to-end proofs (2D budgets on compiled HLO, full-update
+inertness, the concatenate-seam regression) live in
+tests/test_analysis_sharded.py under 8 forced host devices.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.collectives import (
+    CollectiveBudget,
+    OpBudget,
+    BudgetError,
+    assert_budget,
+    audit_hlo,
+)
+from repro.analysis.donation import (
+    audit_donation,
+    lint_donation_source,
+)
+from repro.analysis.inertness import (
+    Claim,
+    InertnessError,
+    analyze_jaxpr,
+    check_claims,
+    prove_refresh_inertness,
+)
+from repro.analysis.recompile import (
+    CompileEvent,
+    CompileWatcher,
+    audit_recompiles,
+    mark_step,
+)
+from repro.roofline.hlo_cost import analyze_hlo, iter_collectives
+
+
+# -- handcrafted HLO fixtures ------------------------------------------------
+# Minimal but syntactically faithful optimized-HLO text: computation headers
+# flush-left ending in "{", ops indented, attrs after the operand list.
+
+_ADD = """\
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %r = f32[] add(%a, %b)
+}
+"""
+
+HLO_SYNC = _ADD + """
+ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+  %p0 = f32[8,16] parameter(0)
+  ROOT %ar = f32[8,16] all-reduce(%p0), replica_groups={}, to_apply=%add
+}
+"""
+
+HLO_ASYNC = _ADD + """
+ENTRY %main (p0: f32[16]) -> f32[16] {
+  %p0 = f32[16] parameter(0)
+  %ars = (f32[16], f32[16]) all-reduce-start(%p0), to_apply=%add
+  %ard = f32[16] all-reduce-done(%ars)
+  %ags = (f32[4,16], f32[8,16]) all-gather-start(%p0), dimensions={0}
+  %agd = f32[8,16] all-gather-done(%ags)
+  ROOT %out = f32[16] add(%ard, %p0)
+}
+"""
+
+HLO_BROADCAST = """\
+ENTRY %main (p0: f32[32]) -> f32[32] {
+  %p0 = f32[32] parameter(0)
+  ROOT %cb = f32[32] collective-broadcast(%p0), replica_groups={{0,1}}
+}
+"""
+
+# collective in the TRUE branch of a cond nested inside another cond; the
+# outer FALSE branch holds a smaller gather so worst-case must keep both.
+HLO_NESTED_COND = _ADD + """
+%inner_true (t0: f32[8,16]) -> f32[8,16] {
+  %t0 = f32[8,16] parameter(0)
+  ROOT %ar.i = f32[8,16] all-reduce(%t0), to_apply=%add
+}
+
+%inner_false (f0: f32[8,16]) -> f32[8,16] {
+  ROOT %f0 = f32[8,16] parameter(0)
+}
+
+%outer_true (ot: (pred[], f32[8,16])) -> f32[8,16] {
+  %ot = (pred[], f32[8,16]) parameter(0)
+  %pi = pred[] get-tuple-element(%ot), index=0
+  %xi = f32[8,16] get-tuple-element(%ot), index=1
+  ROOT %ci = f32[8,16] conditional(%pi, %xi, %xi), true_computation=%inner_true, false_computation=%inner_false
+}
+
+%outer_false (of: (pred[], f32[8,16])) -> f32[8,16] {
+  %of = (pred[], f32[8,16]) parameter(0)
+  %xf = f32[8,16] get-tuple-element(%of), index=1
+  ROOT %ag.o = f32[8,16] all-gather(%xf), dimensions={0}
+}
+
+ENTRY %main (p: pred[], x: f32[8,16]) -> f32[8,16] {
+  %p = pred[] parameter(0)
+  %x = f32[8,16] parameter(1)
+  %args = (pred[], f32[8,16]) tuple(%p, %x)
+  ROOT %co = f32[8,16] conditional(%p, %args, %args), true_computation=%outer_true, false_computation=%outer_false
+}
+"""
+
+
+# -- collective-budget lint: violation codes ---------------------------------
+
+def _codes(report):
+    return {v.code for v in report.violations}
+
+
+def test_budget_forbidden_collective():
+    budget = CollectiveBudget(name="gathers-only",
+                              rules={"all-gather": OpBudget()})
+    report = audit_hlo(HLO_SYNC, budget)
+    assert not report.ok
+    assert _codes(report) == {"forbidden-collective"}
+    [v] = report.violations
+    assert v.kind == "all-reduce"
+    with pytest.raises(BudgetError, match="forbidden-collective"):
+        assert_budget(HLO_SYNC, budget)
+
+
+def test_budget_shape_not_allowed():
+    budget = CollectiveBudget(
+        name="one-shape",
+        rules={"all-reduce": OpBudget(allowed_shapes=frozenset({(4, 4)}))})
+    report = audit_hlo(HLO_SYNC, budget)
+    assert _codes(report) == {"shape-not-allowed"}
+
+
+def test_budget_panel_width_and_bytes_caps():
+    budget = CollectiveBudget(
+        name="narrow-panels",
+        rules={"all-reduce": OpBudget(max_min_dim=4, max_elems=64,
+                                      max_op_bytes=256)})
+    report = audit_hlo(HLO_SYNC, budget)   # (8,16): min dim 8, 128 elems
+    assert _codes(report) == {"panel-width-exceeded", "op-bytes-exceeded"}
+
+
+def test_budget_totals_and_counts():
+    budget = CollectiveBudget(
+        name="tight-totals",
+        rules={"all-reduce": OpBudget(max_count=0, max_total_bytes=1.0)},
+        max_total_bytes=1.0)
+    report = audit_hlo(HLO_SYNC, budget)
+    assert _codes(report) == {"op-count-exceeded", "kind-total-bytes-exceeded",
+                              "total-bytes-exceeded"}
+    # all-reduce payload is charged 2x (reduce-scatter + broadcast halves)
+    assert report.total_bytes == 2 * 8 * 16 * 4
+
+
+def test_budget_cond_only_rule():
+    budget = CollectiveBudget(
+        name="refresh-only",
+        rules={"all-reduce": OpBudget(cond_only=True),
+               "all-gather": OpBudget(cond_only=True)})
+    # top-level all-reduce: must be flagged
+    report = audit_hlo(HLO_SYNC, budget)
+    assert _codes(report) == {"cond-branch-required"}
+    # the nested-cond program's collectives all sit inside branches: clean
+    assert audit_hlo(HLO_NESTED_COND, budget).ok
+
+
+def test_budget_accepts_clean_program():
+    budget = CollectiveBudget(
+        name="ok",
+        rules={"all-reduce": OpBudget(
+            allowed_shapes=frozenset({(8, 16)}), max_count=1)})
+    report = assert_budget(HLO_SYNC, budget)
+    assert report.ok and len(report.collectives) == 1
+
+
+# -- hlo_cost walker: async pairs, broadcast, nested conds (satellites 1+2) --
+
+def test_async_pairs_charged_once():
+    entries = iter_collectives(HLO_ASYNC)
+    assert [e["op"] for e in entries] == ["all-reduce", "all-gather"]
+    ar, ag = entries
+    # -start pays, -done is free; all-reduce still gets the 2x factor
+    assert ar["payload"] == 16 * 4 and ar["bytes"] == 2 * 16 * 4
+    assert ar["dims"] == (16,)
+    # the all-gather tuple is (operand, result): payload = DESTINATION buffer
+    assert ag["dims"] == (8, 16) and ag["payload"] == 8 * 16 * 4
+    cost = analyze_hlo(HLO_ASYNC)
+    assert cost.collective_bytes == ar["bytes"] + ag["bytes"]
+    assert cost.collective_breakdown == {
+        "all-reduce": ar["bytes"], "all-gather": ag["bytes"]}
+
+
+def test_collective_broadcast_recognized():
+    [e] = iter_collectives(HLO_BROADCAST)
+    assert e["op"] == "collective-broadcast"
+    assert e["bytes"] == 32 * 4 and e["dims"] == (32,)
+    assert analyze_hlo(HLO_BROADCAST).collective_breakdown == {
+        "collective-broadcast": 32 * 4.0}
+
+
+def test_nested_cond_worst_case_accounting():
+    """cond-inside-cond: the innermost branch's collective is visible to the
+    walker at branch_depth=2, and analyze_hlo's field-wise-max keeps BOTH
+    the inner all-reduce and the other outer branch's all-gather."""
+    entries = iter_collectives(HLO_NESTED_COND)
+    by_op = {e["op"]: e for e in entries}
+    assert set(by_op) == {"all-reduce", "all-gather"}
+    assert by_op["all-reduce"]["branch_depth"] == 2
+    assert by_op["all-reduce"]["computation"] == "inner_true"
+    assert by_op["all-gather"]["branch_depth"] == 1
+    cost = analyze_hlo(HLO_NESTED_COND)
+    buf = 8 * 16 * 4
+    # worst case per kind: the 2x all-reduce through BOTH cond levels and
+    # the sibling branch's gather both survive the max
+    assert cost.collective_breakdown == {"all-reduce": 2.0 * buf,
+                                         "all-gather": 1.0 * buf}
+    assert cost.collective_bytes == 2.0 * buf
+
+
+# -- inertness prover --------------------------------------------------------
+
+def test_refresh_inertness_proof():
+    """The machine proof that replaced core/rsvd.py's prose proof: a sketch
+    with trailing zero rows yields a basis with the same zero rows."""
+    result = prove_refresh_inertness(rows=102, pad=2, short=16, l=8)
+    assert result.out_slabs[0].slabs[0].count >= 2
+
+
+def test_inertness_propagates_through_scaling():
+    def f(x):
+        y = jnp.pad(x, ((0, 2), (0, 0)))
+        return y * 3.0
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((4, 3), jnp.float32))
+    result = analyze_jaxpr(closed)
+    failures = check_claims(result, [
+        Claim(what="pad rows of 3x-scaled pad", dim=0, count=2, out_index=0)])
+    assert failures == []
+
+
+def test_inertness_rejects_nonzero_pad_write():
+    """NEGATIVE: `pad(x) + 1.0` writes 1.0 into the pad rows — the prover
+    must refuse the trailing-zeros claim instead of rubber-stamping it."""
+    def f(x):
+        y = jnp.pad(x, ((0, 2), (0, 0)))
+        return y + 1.0
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((4, 3), jnp.float32))
+    result = analyze_jaxpr(closed)
+    failures = check_claims(result, [
+        Claim(what="pad rows after +1.0", dim=0, count=2, out_index=0)])
+    assert len(failures) == 1
+    assert "pad rows after +1.0" in failures[0]
+
+
+def test_inertness_arg_claims_are_inductive_hypotheses():
+    """arg_claims assert structured zeros of an INPUT (the state coming in);
+    multiplication and masked-add keep them, an unpadded add does not."""
+    def f(q, g):
+        return q * 2.0 + g
+
+    closed = jax.make_jaxpr(f)(jnp.zeros((6, 4), jnp.float32),
+                               jnp.zeros((6, 4), jnp.float32))
+    # both inputs claim 2 trailing zero rows -> sum keeps them
+    ok = analyze_jaxpr(closed, arg_claims=[{0: 2}, {0: 2}])
+    assert check_claims(ok, [Claim("sum", 0, 2, out_index=0)]) == []
+    # only q claims them -> the prover must NOT carry the claim through g
+    bad = analyze_jaxpr(closed, arg_claims=[{0: 2}, None])
+    assert check_claims(bad, [Claim("sum", 0, 2, out_index=0)])
+
+
+def test_inertness_masked_zero_slots():
+    """The engine's ragged-B masking idiom: rows selected OFF by an iota
+    comparison are provably zero even when the payload is arbitrary."""
+    def f(x):
+        keep = jnp.arange(x.shape[0]) < 3
+        return jnp.where(keep[:, None], x, 0.0)
+
+    closed = jax.make_jaxpr(f)(jnp.ones((5, 4), jnp.float32))
+    result = analyze_jaxpr(closed)
+    assert check_claims(result, [
+        Claim("masked-off slots", 0, 2, out_index=0)]) == []
+
+
+# -- donation audit ----------------------------------------------------------
+
+def test_audit_donation_accepts_aliased_step():
+    def step(state, g):
+        return jax.tree_util.tree_map(lambda s, d: s - 0.1 * d, state, g)
+
+    state = {"w": jnp.ones((8, 4)), "b": jnp.ones((4,))}
+    g = {"w": jnp.ones((8, 4)), "b": jnp.ones((4,))}
+    report = audit_donation(step, (state, g), donate_argnums=(0,))
+    assert report.ok, report.summary()
+    assert report.declared_leaves == 2
+    assert len(report.compiled_aliases) >= 2
+
+
+def test_audit_donation_flags_dropped_buffers():
+    """NEGATIVE: donating a buffer no output can alias (shape mismatch)
+    silently drops the donation — the audit must surface it."""
+    def f(x, y):
+        return y * 2.0
+
+    report = audit_donation(
+        f, (jnp.ones((16,)), jnp.ones((4,))), donate_argnums=(0,))
+    assert not report.ok
+    assert {v.code for v in report.violations} == {"donation-dropped"}
+
+
+_GOOD_LOOP = """
+import jax
+
+def make(fn):
+    step = jax.jit(fn, donate_argnums=(0, 1))
+    def run(params, state, batch):
+        for _ in range(3):
+            params, state = step(params, state, batch)
+        return params, state
+    return run
+"""
+
+_BAD_LOOP = """
+import jax
+
+def make(fn):
+    step = jax.jit(fn, donate_argnums=(0, 1))
+    def run(params, state, batch):
+        new_p, new_s = step(params, state, batch)
+        loss = (params["w"] ** 2).sum()   # donated buffer read after call!
+        return new_p, new_s, loss
+    return run
+"""
+
+
+def test_donation_lint_accepts_rebinding_loop():
+    assert lint_donation_source(_GOOD_LOOP, "good.py") == []
+
+
+def test_donation_lint_rejects_use_after_donate():
+    violations = lint_donation_source(_BAD_LOOP, "bad.py")
+    assert violations, "use-after-donate must be flagged"
+    assert {v.code for v in violations} == {"donated-arg-not-rebound"}
+    assert any("params" in v.detail for v in violations)
+
+
+# -- recompile audit ---------------------------------------------------------
+
+def test_compile_watcher_tags_steps():
+    with CompileWatcher() as w:
+        mark_step(5)
+        jax.jit(lambda x: x * 2.0 + 1.0)(jnp.arange(7.0))
+    steps = [e.step for e in w.events]
+    assert 5 in steps, w.events
+
+
+def test_audit_recompiles_allows_warmup_and_boundaries():
+    events = [
+        CompileEvent("train_step", None, "trace-time"),
+        CompileEvent("train_step", 0, "warmup"),
+        CompileEvent("train_step", 12, "at boundary"),
+        CompileEvent("train_step", 13, "boundary takes effect next step"),
+        CompileEvent("other_fn", 99, "different function: not audited"),
+    ]
+    report = audit_recompiles(events, fn_name="train_step",
+                              warmup_through=1, allowed_steps=(12,))
+    assert report.ok, report.summary()
+    assert len(report.compiles) == 4
+
+
+def test_audit_recompiles_rejects_off_boundary():
+    """NEGATIVE: a post-warmup compile at a step the controller never
+    announced is exactly the silent-jit-cache-instability this pass exists
+    to catch."""
+    events = [CompileEvent("train_step", 7, "surprise")]
+    report = audit_recompiles(events, fn_name="train_step",
+                              warmup_through=1, allowed_steps=(12,))
+    assert not report.ok
+    assert [e.step for e in report.violations] == [7]
+    assert "off-boundary-recompile" in report.summary()

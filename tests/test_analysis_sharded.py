@@ -1,0 +1,177 @@
+"""8-device end-to-end checks for the repro.analysis static passes.
+
+These need real multi-device meshes, so they skip under the default
+single-device tier-1 run and execute via (a) the slow subprocess wrapper at
+the bottom or (b) the sharded tier-1 invocation in tools/run_tier1.sh.
+
+What is pinned here:
+  * the pad-inertness prover establishes the FULL bucketed update's
+    invariant on both mesh shapes — edge-pad rows (2D, ragged long) and
+    masked pad B-slots (1D, ragged B) are exactly zero in the outgoing
+    state and the gathered deltas;
+  * the concatenate-seam regression (satellite of the PR 5 bugfix): a
+    ragged stack re-assembled with `concatenate` instead of Pad makes
+    GSPMD move a full (B, long, short) all-reduce, and the steady-2d
+    budget REJECTS it with named violations, while the Pad version of the
+    same computation compiles to zero collectives;
+  * the analysis driver's 2D lane (`python -m repro.analysis --mode 2d`)
+    is green end to end — the same entry point tier-1 pass 4 invokes.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+needs_8_devices = pytest.mark.skipif(
+    jax.device_count() < 8,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8",
+)
+
+
+def _mesh24():
+    return jax.make_mesh((2, 4), ("data", "model"))
+
+
+@needs_8_devices
+def test_update_inertness_2d_ragged_long():
+    """Machine proof over the real 2D bucketed update jaxpr: assuming the
+    incoming Q pad rows are zero (true at init), the outgoing Q pad rows
+    and the gathered delta pad rows are exactly zero."""
+    from repro.analysis.inertness import prove_update_inertness
+    from repro.core import SumoConfig
+
+    params = {f"r{i}": jax.ShapeDtypeStruct((102, 16), "float32")
+              for i in range(3)}
+    cfg = SumoConfig(rank=4, update_freq=2, rsvd_oversample=4,
+                     weight_decay=0.05)
+    result = prove_update_inertness(params, cfg, mesh=_mesh24())
+    assert result.records, "expected a shard_map region in the update"
+
+
+@needs_8_devices
+def test_update_inertness_1d_ragged_b():
+    """1D mesh, B % data != 0: the masked pad B-slots stay exactly zero
+    through the update (up to the one-shard-block abstraction limit the
+    prover documents)."""
+    from repro.analysis.inertness import prove_update_inertness
+    from repro.core import SumoConfig
+
+    mesh = jax.make_mesh((8,), ("data",))
+    params = {f"l{i}": jax.ShapeDtypeStruct((64, 32), "float32")
+              for i in range(9)}  # B=9 on 8 shards -> 7 pad slots
+    cfg = SumoConfig(rank=4, update_freq=2, rsvd_oversample=4)
+    prove_update_inertness(params, cfg, mesh=mesh)
+
+
+@needs_8_devices
+def test_update_inertness_fails_on_false_claim():
+    """NEGATIVE: claiming MORE pad rows than the bucket actually has must
+    raise — the prover is checking something, not rubber-stamping."""
+    from repro.analysis.inertness import Claim, analyze_jaxpr, check_claims
+    from repro.core import SumoConfig
+    from repro.core.sumo import update_closed_jaxpr
+
+    params = {f"r{i}": jax.ShapeDtypeStruct((102, 16), "float32")
+              for i in range(3)}
+    cfg = SumoConfig(rank=4, update_freq=2, rsvd_oversample=4)
+    trace = update_closed_jaxpr(params, cfg, _mesh24(), 0.01)
+    result = analyze_jaxpr(trace.closed_jaxpr, arg_claims=trace.arg_claims)
+    [entry] = trace.plan
+    overclaim = Claim(
+        what="more pad rows than exist", dim=1,
+        count=entry["long_padded"] - entry["long"] + 10,
+        out_index=entry["q_out_index"])
+    failures = check_claims(result, [overclaim])
+    assert failures and "more pad rows than exist" in failures[0]
+
+
+@needs_8_devices
+def test_concat_seam_rejected_by_budget():
+    """The PR 5 seam, as a machine-checked regression: re-zeroing a ragged
+    2D stack's pad rows with `concatenate` (seam crossing the last model
+    shard) makes GSPMD emit a full (B, ~long, short) all-reduce; the SAME
+    steady-2d budget that accepts the real engine rejects it with named
+    violations. The Pad formulation compiles to zero collectives."""
+    from repro.analysis.collectives import (
+        BudgetError,
+        assert_budget,
+        audit_hlo,
+        bucket_collective_plan,
+        steady_2d_budget,
+    )
+    from repro.core import SumoConfig, padded_long, sumo
+
+    mesh = _mesh24()
+    key = jax.random.PRNGKey(5)
+    params = {f"l{i}": jax.random.normal(jax.random.fold_in(key, i), (102, 16))
+              for i in range(4)}
+    rank, over = 4, 4
+    tx = sumo(0.01, SumoConfig(rank=rank, update_freq=4,
+                               rsvd_oversample=over), mesh=mesh)
+    state = tx.init(params)
+    plan = bucket_collective_plan(state, mesh)
+    budget = steady_2d_budget(plan, rank_plus_over=rank + over,
+                              data_shards=int(mesh.shape["data"]))
+
+    lp = padded_long(102, 4)                    # 104, divisible by model=4
+    sh = NamedSharding(mesh, P("data", "model", None))
+    stack = jnp.ones((4, lp, 16))
+
+    def repad_with_pad(x):                      # what the engine does
+        return jnp.pad(x[:, :102, :], ((0, 0), (0, lp - 102), (0, 0)))
+
+    def repad_with_concat(x):                   # the pre-fix seam
+        z = jnp.zeros((4, lp - 102, 16), x.dtype)
+        return jnp.concatenate([x[:, :102, :], z], axis=1)
+
+    def compile_text(f):
+        return jax.jit(f, in_shardings=sh, out_shardings=sh).lower(
+            stack).compile().as_text()
+
+    good = assert_budget(compile_text(repad_with_pad), budget)
+    assert good.ok and not good.collectives    # Pad partitions locally
+
+    report = audit_hlo(compile_text(repad_with_concat), budget)
+    assert not report.ok
+    codes = {v.code for v in report.violations}
+    assert "panel-width-exceeded" in codes and "op-bytes-exceeded" in codes
+    assert all(v.kind == "all-reduce" for v in report.violations)
+    with pytest.raises(BudgetError, match="panel-width-exceeded"):
+        assert_budget(compile_text(repad_with_concat), budget)
+
+
+@needs_8_devices
+def test_driver_2d_lane_green():
+    """`python -m repro.analysis --mode 2d` — the tier-1 pass-4 entry point
+    — runs all its checks green on an 8-device backend."""
+    from repro.analysis.driver import run
+
+    lines = []
+    assert run("2d", log=lines.append) == 0
+    out = "\n".join(lines)
+    assert "[PASS] collectives/steady-2d" in out
+    assert "[PASS] inertness/update-2d" in out
+    assert "FAIL" not in out
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(jax.device_count() >= 8,
+                    reason="already running with 8 devices")
+def test_subprocess_8_device_suite():
+    """Run the in-process tests above on a forced 8-host-device CPU backend
+    (the main pytest process must keep 1 device — see tests/conftest.py)."""
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", "-q", "-p", "no:cacheprovider",
+         "tests/test_analysis_sharded.py", "-k", "not subprocess"],
+        capture_output=True, text=True, timeout=900, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]

@@ -22,7 +22,6 @@ What is pinned here (the ISSUE-4 acceptance criteria):
     explicit delta all-gathers.
 """
 import os
-import re
 import subprocess
 import sys
 
@@ -223,9 +222,14 @@ def test_2d_mesh_no_full_matrix_collectives():
     is an r-width panel (some dim ≤ l = rank + oversample), the all-gathers
     are exactly the delta gathers, and nothing else moves — refresh branch
     included (the conditional's collectives are r-width too)."""
+    from repro.analysis.collectives import (
+        assert_budget,
+        bucket_collective_plan,
+        delta_bytes,
+        steady_2d_budget,
+    )
     from repro.core import SumoConfig, sumo
     from repro.parallel import opt_state_specs
-    from repro.roofline.hlo_cost import analyze_hlo
 
     mesh = _mesh24()
     key = jax.random.PRNGKey(1)
@@ -251,40 +255,22 @@ def test_2d_mesh_no_full_matrix_collectives():
     ).lower(grads, state, params).compile()
     txt = compiled.as_text()
 
-    l = rank + over
-    allowed_gather_shapes = set()
-    for B, long_d, short_d in ((4, 256, 16), (1, 128, 16)):
-        # model gather of the per-data-shard delta block, then the B gather
-        for b in {B, max(1, B // 2)}:
-            allowed_gather_shapes.add((b, long_d, short_d))
-    seen = {"all-reduce": 0, "all-gather": 0}
-    for m in re.finditer(
-            r"=\s*\w+\[([\d,]*)\][^=]*?\s"
-            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-            r"collective-permute)(-start)?\(", txt):
-        dims = tuple(int(d) for d in m.group(1).split(",") if d)
-        kind = m.group(2)
-        assert kind in ("all-reduce", "all-gather"), (kind, dims)
-        seen[kind] += 1
-        if kind == "all-reduce":
-            # r-width panel: Gram (l×l), sketch/B panels (l×short),
-            # rotation (r×r), projection (r×short), scalar norms
-            assert min(dims, default=1) <= l and (
-                not dims or sorted(dims)[-2] <= max(l, 16)), dims
-            assert int(np.prod(dims or (1,))) <= 4 * l * 16, dims
-        else:
-            assert dims in allowed_gather_shapes, (dims, allowed_gather_shapes)
-    assert seen["all-reduce"] > 0 and seen["all-gather"] > 0
-    # aggregate audit via the roofline helper (worst-case cond branch):
-    # collective traffic is bounded by the delta gathers + r-width panels
-    cost = analyze_hlo(txt)
-    assert set(cost.collective_breakdown) <= {"all-reduce", "all-gather"}
-    delta_bytes = sum(int(np.prod(v.shape)) * 4 for v in params.values())
-    assert cost.collective_breakdown["all-gather"] <= 2 * delta_bytes
-    # the psum traffic (projection + the refresh branch's panels, counted
-    # worst-case by the conditional walk) stays strictly sub-delta — a
-    # single full-gradient-stack re-gather would alone exceed this
-    assert cost.collective_breakdown["all-reduce"] <= delta_bytes // 2
+    # The declarative budget (shared with tools/lint_static.py and
+    # benchmarks/step_time.py) replaces the old hand-rolled regex walk: the
+    # bucket plan derives the legitimate gather shapes from the resident
+    # state, the budget allows only those plus r-width panel all-reduces,
+    # and audit_hlo walks the optimized HLO — cond branches included.
+    plan = bucket_collective_plan(state, mesh)
+    budget = steady_2d_budget(plan, rank_plus_over=rank + over,
+                              data_shards=int(mesh.shape["data"]))
+    report = assert_budget(txt, budget)
+    kinds = {e["op"] for e in report.collectives}
+    assert kinds == {"all-reduce", "all-gather"}, kinds
+    # plan mirrors the engine: both buckets shard on a 2D mesh (the B=1
+    # singleton included), none of them pad
+    assert {e.key: e.b_padded for e in plan} == {"256x16": 4, "128x16": 1}
+    assert delta_bytes(plan) == sum(
+        int(np.prod(v.shape)) * 4 for v in params.values())
 
 
 @needs_8_devices
@@ -429,9 +415,14 @@ def test_ragged_long_no_full_matrix_collectives():
     discipline as divisible buckets: opt_state_specs places the PADDED Q
     over `model`, every all-reduce is an r-width panel, and the only
     all-gathers are the (padded-row) delta gathers."""
+    from repro.analysis.collectives import (
+        assert_budget,
+        bucket_collective_plan,
+        pad_overhead_frac,
+        steady_2d_budget,
+    )
     from repro.core import SumoConfig, padded_long, sumo
     from repro.parallel import opt_state_specs
-    from repro.roofline.hlo_cost import analyze_hlo
 
     mesh = _mesh24()
     key = jax.random.PRNGKey(5)
@@ -457,36 +448,21 @@ def test_ragged_long_no_full_matrix_collectives():
     ).lower(grads, state, params).compile()
     txt = compiled.as_text()
 
-    l = rank + over
-    # model gather of the per-data-shard delta block, then the B gather —
-    # both on PADDED rows (sliced to 100 after the shard_map)
-    allowed_gather_shapes = {(4, lp, 16), (2, lp, 16)}
-    seen = {"all-reduce": 0, "all-gather": 0}
-    for m in re.finditer(
-            r"=\s*\w+\[([\d,]*)\][^=]*?\s"
-            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-            r"collective-permute)(-start)?\(", txt):
-        dims = tuple(int(d) for d in m.group(1).split(",") if d)
-        kind = m.group(2)
-        assert kind in ("all-reduce", "all-gather"), (kind, dims)
-        seen[kind] += 1
-        if kind == "all-reduce":
-            assert min(dims, default=1) <= l and (
-                not dims or sorted(dims)[-2] <= max(l, 16)), dims
-            assert int(np.prod(dims or (1,))) <= 4 * l * 16, dims
-        else:
-            assert dims in allowed_gather_shapes, (dims, allowed_gather_shapes)
-    assert seen["all-reduce"] > 0 and seen["all-gather"] > 0
-    cost = analyze_hlo(txt)
-    assert set(cost.collective_breakdown) <= {"all-reduce", "all-gather"}
-    padded_delta_bytes = 4 * lp * 16 * 4
-    assert cost.collective_breakdown["all-gather"] <= 2 * padded_delta_bytes
-    # psum traffic (projection + the refresh branch's panels, worst-case
-    # cond walk) stays strictly below ONE full stack re-gather — at this
-    # deliberately small shape the panels are not tiny relative to the
-    # delta, so the bound is the qualitative one: a single (B, long, short)
-    # collective (like the pre-fix pad-concat all-reduce) would exceed it.
-    assert cost.collective_breakdown["all-reduce"] < padded_delta_bytes
+    # Same declarative budget as the divisible case — the plan recovers the
+    # padded-row gather shapes {(4, 104, 16), (2, 104, 16)} from the state's
+    # padded Q stack and the true long dim in the bucket key, and the
+    # per-instance width caps are what would catch a (B, long, short)
+    # collective like the pre-fix pad-concat all-reduce.
+    plan = bucket_collective_plan(state, mesh)
+    [entry] = plan
+    assert (entry.long, entry.long_padded, entry.b_padded) == (102, lp, 4)
+    assert pad_overhead_frac(plan) == (4 * lp * 16 - 4 * 102 * 16) / (
+        4 * 102 * 16)
+    budget = steady_2d_budget(plan, rank_plus_over=rank + over,
+                              data_shards=int(mesh.shape["data"]))
+    report = assert_budget(txt, budget)
+    kinds = {e["op"] for e in report.collectives}
+    assert kinds == {"all-reduce", "all-gather"}, kinds
 
 
 @needs_8_devices

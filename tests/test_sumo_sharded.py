@@ -146,9 +146,14 @@ def test_sharded_state_is_resident_no_unexpected_collectives():
     is the explicit all-gather of the sharded buckets' delta stacks —
     Q/M/prev_norm never cross devices, and nothing all-reduces."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.analysis.collectives import (
+        assert_budget,
+        bucket_collective_plan,
+        delta_bytes,
+        steady_1d_budget,
+    )
     from repro.core import SumoConfig, sumo
     from repro.parallel import opt_state_specs
-    from repro.roofline.hlo_cost import analyze_hlo
 
     mesh = jax.make_mesh((8,), ("data",))
     params = _params(jax.random.PRNGKey(1))
@@ -171,15 +176,20 @@ def test_sharded_state_is_resident_no_unexpected_collectives():
         lambda g, s, p: tx.update(g, s, p),
         in_shardings=(g_sh, st_sh, g_sh),
     ).lower(grads, state, params).compile()
-    cost = analyze_hlo(compiled.as_text())
 
-    assert set(cost.collective_breakdown) <= {"all-gather"}, (
-        cost.collective_breakdown)
-    # bounded by the sharded buckets' delta bytes (fp32); the unsharded wide
-    # bucket contributes none
+    # the declarative budget (shared with tools/lint_static.py and
+    # benchmarks/step_time.py): only the sharded buckets' delta all-gathers
+    # may appear, bounded by their padded delta bytes
+    plan = bucket_collective_plan(state, mesh)
+    report = assert_budget(compiled.as_text(), steady_1d_budget(plan))
+    assert report.total_bytes > 0
+    # the wide B=1 bucket keeps the vmap fallback: not in the gather plan
+    assert not [e for e in plan if e.key == "48x16" and e.sharded]
+    # plan-derived bound matches the old hand computation (fp32 deltas of
+    # every sharded bucket; divisible buckets pad nothing)
     sharded_delta_bytes = sum(
         int(np.prod(v.shape)) * 4 for k, v in params.items() if k != "wide")
-    assert 0 < cost.collective_bytes <= sharded_delta_bytes
+    assert delta_bytes(plan) == sharded_delta_bytes
 
 
 @needs_8_devices

@@ -1,0 +1,35 @@
+#!/usr/bin/env python
+"""Tier-1 entry point for the repro.analysis static passes.
+
+Sets the host-platform device count BEFORE importing jax, so the same
+script drives both lint lanes:
+
+    python tools/lint_static.py --mode 1d --devices 2
+    python tools/lint_static.py --mode 2d --devices 8
+
+An explicit XLA_FLAGS in the environment wins over --devices.
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", choices=("1d", "2d", "all"), default="all")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (0 = leave XLA alone)")
+    args = ap.parse_args()
+    if args.devices and "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}")
+    from repro.analysis.driver import run
+    return run(args.mode)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

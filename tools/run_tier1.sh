@@ -11,10 +11,16 @@
 # in-process on a forced 8-host-device CPU backend — the 1D (data=8) shard_map
 # bucket path, the 2D (data=2, model=4) mesh with model-sharded matrices and
 # the distributed rSVD (ragged edge-padded long dims included, plus the
-# end-to-end --model-parallel train wiring), and the cross-mesh-shape
-# checkpoint round trip ((8,1) <-> (2,4)). Pass 3 is the telemetry smoke: a
-# short probes+sink+controller train run must emit a non-empty, schema-valid
-# JSONL stream (tools/telemetry_smoke.py).
+# end-to-end --model-parallel train wiring), the cross-mesh-shape
+# checkpoint round trip ((8,1) <-> (2,4)), and the static-analysis sharded
+# suite (inertness proofs + the concatenate-seam budget regression). Pass 3
+# is the telemetry smoke: a short probes+sink+controller train run must emit
+# a non-empty, schema-valid JSONL stream (tools/telemetry_smoke.py). Pass 4
+# is the static lint (ANALYSIS.md): both lanes of tools/lint_static.py —
+# collective budgets, pad-inertness proofs, donation/aliasing audit and the
+# recompile-boundary audit — plus a guard that benchmarks/step_time.py
+# reports its collective numbers through the shared budget API (one code
+# path with the lint, so CSV and CI cannot drift apart).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -29,6 +35,20 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q tests/test_sumo_sharded.py tests/test_rsvd_sharded.py \
+  tests/test_analysis_sharded.py \
   "tests/test_checkpoint.py::test_cross_mesh_checkpoint_round_trip_8dev" \
   -k "not subprocess"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tools/telemetry_smoke.py
+
+# Pass 4: machine-checked static guarantees (ANALYSIS.md). The 1d lane also
+# runs the donation and recompile audits; the 2d lane re-proves inertness
+# and the collective budgets on the (data, model) mesh.
+python tools/lint_static.py --mode 1d --devices 2
+python tools/lint_static.py --mode 2d --devices 8
+# Guard: the benchmark must report collective numbers through the shared
+# budget API, not a private audit that can drift from the lint.
+if ! grep -q "repro.analysis.collectives" benchmarks/step_time.py; then
+  echo "ERROR: benchmarks/step_time.py no longer uses the shared" \
+       "repro.analysis.collectives budget API (see ANALYSIS.md)" >&2
+  exit 1
+fi
