@@ -67,6 +67,85 @@ def run(csv_rows: list) -> None:
     ))
 
     _ill_conditioned_probe(csv_rows)
+    _dp_compression_parity(csv_rows)
+
+
+def _dp_compression_parity(csv_rows: list) -> None:
+    """ROADMAP item 1's convergence gate: the compressed DP gradient exchange
+    (compress → pmean of the r×short payload → decompress, EF residuals)
+    must track the uncompressed run at a ≥8× wire reduction, for BOTH bases
+    (seeded sketch and the SUMO-resident rSVD Q). Runs the REAL sharded path
+    — model_parallel=1 puts the whole step on the (data=N, model=1) mesh
+    with the exchange inside its shard_map — so this is the training loop
+    users get with --dp-compress, not a simulation."""
+    import jax
+
+    from repro.models import init_params
+    from repro.parallel import (
+        CompressionConfig,
+        compression_ratio,
+    )
+
+    if jax.device_count() < 2:
+        csv_rows.append((
+            "dp_compress/parity", 0.0,
+            f"skipped: needs >=2 devices, have {jax.device_count()} "
+            "(run under XLA_FLAGS=--xla_force_host_platform_device_count=8)"))
+        return
+
+    arch = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("dpc", seq_len=64, global_batch=16, kind="train")
+    steps = 60
+    rank = 8
+    # The smoke arch's d_model is 60: min_dim=32 makes every matrix leaf
+    # (attention included) compress, which is what the ≥8× wire gate needs —
+    # at the paper-scale min_dim=256 the smoke model would exchange its
+    # attention blocks exact and cap the measured reduction near 3×.
+    min_dim = 32
+
+    def final_loss(losses):
+        return float(np.array([l for _, l in losses])[-10:].mean())
+
+    curves = {}
+    for label, extra in (
+        ("uncompressed", {}),
+        ("sketch", dict(dp_compress=True, dp_compress_rank=rank,
+                        dp_compress_min_dim=min_dim)),
+        ("sumo-q", dict(dp_compress=True, dp_compress_rank=rank,
+                        dp_compress_min_dim=min_dim,
+                        dp_compress_basis="sumo-q")),
+    ):
+        t0 = time.perf_counter()
+        res = train(
+            arch, shape,
+            TrainConfig(optimizer="sumo", learning_rate=3e-3, rank=rank,
+                        update_freq=20, total_steps=steps, log_every=10**9,
+                        model_parallel=1, **extra),
+            log_fn=lambda s: None,
+        )
+        dt = time.perf_counter() - t0
+        curves[label] = final_loss(res.losses)
+        csv_rows.append((
+            f"dp_compress/{label}", dt / steps * 1e6,
+            f"loss_end={curves[label]:.4f}"))
+
+    # Wire reduction from the byte-accurate plan (the HLO-measured pmean
+    # bytes are cross-checked against this same plan in
+    # tests/test_compression_sharded.py).
+    params = init_params(arch, jax.random.PRNGKey(0))
+    ratio = compression_ratio(
+        params, CompressionConfig(rank=rank, min_dim=min_dim))
+    reduction = 1.0 / max(ratio, 1e-12)
+    gap_sketch = abs(curves["sketch"] - curves["uncompressed"])
+    gap_sumoq = abs(curves["sumo-q"] - curves["uncompressed"])
+    # Parity: final loss within 2% of the uncompressed run's value.
+    tol = 0.02 * abs(curves["uncompressed"])
+    csv_rows.append((
+        "dp_compress/parity", 0.0,
+        f"wire_reduction={reduction:.1f}x (gate >=8) "
+        f"gap_sketch={gap_sketch:.4f} gap_sumo_q={gap_sumoq:.4f} "
+        f"tol={tol:.4f} "
+        f"pass={reduction >= 8.0 and gap_sketch <= tol and gap_sumoq <= tol}"))
 
 
 def _ill_conditioned_probe(csv_rows: list) -> None:

@@ -165,6 +165,7 @@ def run(csv_rows: list) -> None:
     ))
 
     _run_2d_mesh_axis(csv_rows)
+    _run_dp_compress(csv_rows)
 
 
 def _run_2d_mesh_axis(csv_rows: list) -> None:
@@ -277,6 +278,97 @@ def _run_2d_mesh_axis(csv_rows: list) -> None:
     csv_rows.append((
         "sumo_2d_mesh/budget_violations", float(len(report.violations)),
         f"refresh-2d budget '{report.budget}': "
+        + ("OK" if report.ok else "; ".join(str(v) for v in
+                                            report.violations[:3])),
+    ))
+
+
+def _run_dp_compress(csv_rows: list) -> None:
+    """Compressed DP gradient exchange (ROADMAP item 1): wall time and
+    HLO-measured wire bytes of the standalone exchange program
+    (``parallel.compression.make_dp_exchange_fn`` — the same
+    ``exchange_shard`` the train step inlines), against the uncompressed
+    full-gradient pmean on the same tree. The compiled exchange is audited
+    against ``repro.analysis.collectives.steady_dp_compressed_budget`` — a
+    named, machine-checked cap (violation CODES, not regexes) pinning every
+    DP all-reduce to r×short payload bytes — and the measured bytes ratio is
+    reported next to the byte-accurate ``dp_wire_plan`` prediction so the
+    two cannot silently drift apart.
+
+    Needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8 on
+    CPU); emits a skip row otherwise so the CSV schema is stable.
+    """
+    if jax.device_count() < 8:
+        csv_rows.append(("dp_compress_exchange/SKIPPED", 0.0,
+                         "needs >= 8 devices (XLA_FLAGS host count)"))
+        return
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.analysis.collectives import (
+        audit_hlo,
+        steady_dp_compressed_budget,
+    )
+    from repro.launch.mesh import make_host_mesh
+    from repro.parallel import (
+        CompressionConfig,
+        compression_ratio,
+        dp_wire_plan,
+        full_wire_bytes,
+        init_worker_state,
+        make_dp_exchange_fn,
+        wire_bytes,
+    )
+
+    mesh = make_host_mesh(model=1)        # (data=8, model=1): pure DP
+    n_data = int(mesh.shape["data"])
+    arch = get_smoke_config("smollm-360m")
+    params = init_params(arch, jax.random.PRNGKey(0))
+    cfg = CompressionConfig(rank=8, min_dim=32)
+    state = init_worker_state(params, cfg, n_data)
+
+    stack_sh = NamedSharding(mesh, P("data"))
+    rep_sh = NamedSharding(mesh, P())
+    grads = jax.tree_util.tree_map(
+        lambda x: jax.device_put(
+            jnp.broadcast_to(x[None] * 0.01, (n_data,) + x.shape), stack_sh),
+        params)
+    state = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, stack_sh if x.ndim > 0 else rep_sh),
+        state)
+
+    exchange = jax.jit(make_dp_exchange_fn(mesh, cfg))
+    us = _time_step(exchange, grads, state, None) * 1e6
+    csv_rows.append(("dp_compress_exchange/step_us/compressed", us,
+                     f"smoke-model grads r={cfg.rank} data={n_data}"))
+
+    # uncompressed baseline: the classic full-gradient pmean over `data`
+    full_mean = jax.jit(shard_map(
+        lambda g: jax.tree_util.tree_map(
+            lambda x: jax.lax.pmean(x[0], "data")[None], g),
+        mesh, in_specs=(P("data"),), out_specs=P("data"), check_rep=False,
+        auto=frozenset({"model"})))
+    us_full = _time_step(full_mean, grads) * 1e6
+    csv_rows.append(("dp_compress_exchange/step_us/uncompressed", us_full,
+                     "full-gradient pmean on the same tree"))
+
+    from repro.roofline.hlo_cost import analyze_hlo
+    plan = dp_wire_plan(params, cfg)
+    hlo = exchange.lower(grads, state, None).compile().as_text()
+    hlo_full = full_mean.lower(grads).compile().as_text()
+    meas = analyze_hlo(hlo).collective_bytes
+    meas_full = analyze_hlo(hlo_full).collective_bytes
+    ratio_meas = meas / max(meas_full, 1)
+    ratio_plan = compression_ratio(params, cfg)
+    csv_rows.append((
+        "dp_compress_exchange/wire_reduction_x", 1.0 / max(ratio_meas, 1e-12),
+        f"HLO-measured {int(meas)}B vs full {int(meas_full)}B; "
+        f"plan predicts {1.0 / max(ratio_plan, 1e-12):.1f}x "
+        f"({wire_bytes(plan)}B vs {full_wire_bytes(plan)}B payload)"))
+
+    report = audit_hlo(hlo, steady_dp_compressed_budget(plan))
+    csv_rows.append((
+        "dp_compress_exchange/budget_violations", float(len(report.violations)),
+        f"steady-dp budget '{report.budget}': "
         + ("OK" if report.ok else "; ".join(str(v) for v in
                                             report.violations[:3])),
     ))

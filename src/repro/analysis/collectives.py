@@ -55,7 +55,7 @@ __all__ = [
     "BudgetError", "audit_hlo", "assert_budget",
     "bucket_collective_plan", "padded_delta_bytes", "delta_bytes",
     "pad_overhead_frac", "steady_1d_budget", "steady_2d_budget",
-    "refresh_2d_budget", "restore_budget",
+    "refresh_2d_budget", "restore_budget", "steady_dp_compressed_budget",
 ]
 
 
@@ -429,6 +429,65 @@ def refresh_2d_budget(plan: Iterable, rank_plus_over: int, data_shards: int, *,
         max_total_bytes=None,
         note="Refresh branch: panel-width discipline only; totals scale "
              f"with rSVD rounds (padded delta bytes = {pdb}).",
+    )
+
+
+def steady_dp_compressed_budget(wire_plan: Iterable, *,
+                                name: str = "steady-dp-compressed",
+                                with_loss_scalar: bool = True
+                                ) -> CollectiveBudget:
+    """Compressed DP gradient exchange, steady state: r×short pmeans ONLY.
+
+    ``wire_plan`` is ``parallel.compression.dp_wire_plan(grads, cfg,
+    bases=...)`` — one entry per leaf with the pmean buffer's dims and
+    byte-accurate payload sizes. With ``bases`` from the resident SUMO
+    state (``core.sumo.sumo_dp_bases``), the per-leaf ranks are read off
+    the same Q stacks ``bucket_collective_plan`` describes, so this budget
+    composes with the optimizer-side budgets: together they pin the WHOLE
+    sharded step's collective story (the optimizer's gathers/panels by
+    ``steady_{1d,2d}_budget`` on ``tx.update``'s program, the DP wire by
+    this one on the exchange program).
+
+    The caps are the machine check of ROADMAP item 1's bandwidth claim:
+
+      * the only collective kind allowed is ``all-reduce`` (the pmean);
+        a basis gather or broadcast appearing on the steady path — e.g.
+        extracting the sumo-q bases INSIDE the step instead of once per
+        refresh — fails as ``forbidden-collective``;
+      * every buffer must be one of the plan's payload shapes (compressed
+        (…, r, short) for eligible leaves, the raw shape for exact ones, a
+        scalar for the loss when ``with_loss_scalar``) — a full long×short
+        pmean of an eligible leaf fails as ``shape-not-allowed`` AND
+        ``op-bytes-exceeded`` (its payload exceeds the largest legitimate
+        one, since any full-size leaf that large would have been eligible);
+      * the kind/global totals cap the trip-multiplied bytes at the plan's
+        wire total (×2: ``iter_collectives`` charges all-reduce both ways),
+        so even many small illegitimate ops cannot hide.
+    """
+    plan = list(wire_plan)
+    shapes = {tuple(e.payload_dims) for e in plan}
+    if with_loss_scalar:
+        shapes.add(())
+    wire = sum(e.payload_bytes for e in plan)
+    max_payload = max((e.payload_bytes for e in plan), default=0)
+    # the loss scalar rides the same budget: 8 B of slack (f32, ×2)
+    slack = 8.0 if with_loss_scalar else 0.0
+    total = 2.0 * wire + slack
+    return CollectiveBudget(
+        name=name,
+        rules={
+            "all-reduce": OpBudget(
+                allowed_shapes=frozenset(shapes),
+                max_op_bytes=max_payload if max_payload else None,
+                max_count=len(plan) + (1 if with_loss_scalar else 0),
+                max_total_bytes=total if wire else None,
+            ),
+        },
+        max_total_bytes=total if wire else None,
+        note="Compressed DP exchange: one r-width pmean per eligible leaf "
+             "(exact pmean below min_dim), bounded by the wire plan's "
+             "bytes; any full long×short DP collective is rejected by "
+             "shape, per-op bytes and totals at once.",
     )
 
 

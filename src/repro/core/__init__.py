@@ -46,6 +46,7 @@ from .sumo import (
     convert_sumo_state,
     padded_long,
     sumo,
+    sumo_dp_bases,
     sumo_optimizer,
     sumo_state_layout,
 )
@@ -53,6 +54,7 @@ from .sumo import (
 __all__ = [
     "SumoConfig", "SumoState", "sumo", "sumo_optimizer",
     "convert_sumo_state", "sumo_state_layout", "padded_long",
+    "sumo_dp_bases",
     "MatrixStats", "SpectralStats",
     "GaloreConfig", "galore", "galore_optimizer",
     "muon", "muon_optimizer",

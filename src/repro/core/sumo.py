@@ -652,6 +652,48 @@ def convert_sumo_state(
     return state._replace(Q=unflat(lQ), M=unflat(lM), prev_norm=unflat(lpn))
 
 
+def sumo_dp_bases(state: SumoState, params_masked: PyTree) -> PyTree:
+    """Per-leaf bases for DP-gradient compression reuse
+    (``parallel.compression`` with ``use_sketch=False``).
+
+    ``params_masked`` is the matrix-param tree the state was initialised
+    from (the ``multi_transform`` "matrix" mask — None leaves stay None, and
+    come back None here: the exchange falls back to the seeded sketch for
+    them). Returns a matching tree whose leaves are the CURRENT Q in the
+    canonical long-first orientation — ``batch + (long, r)`` float32, TRUE
+    long rows (a 2D mesh's edge-pad rows are sliced off, they are zero by
+    the engine's invariant and would only waste wire) — ready to pass as
+    ``bases=`` to the compression path. cfg-free: every shape is read off
+    the resident stacks themselves, so controller rank resizes are picked
+    up automatically at the next extraction.
+
+    Intentionally a separate tiny program from the train step: the loop
+    jits and runs it once per refresh boundary and replicates the result
+    (the advertised one broadcast per refresh) — extracting inside the
+    step would re-gather the data-sharded bucket stacks EVERY step, which
+    is exactly what ``steady_dp_compressed_budget`` forbids."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        params_masked, is_leaf=lambda x: x is None)
+    shapes = [None if l is None else l.shape for l in leaves]
+    if sumo_state_layout(state) != "bucket":
+        return state.Q
+    plan = opt.build_bucket_plan(shapes)
+    lQ = [None] * len(leaves)
+    for b in plan:
+        _check_bucket_slots(state.Q, b)
+        Qb = state.Q[b.key]
+        true_long = b.shape[0]
+        if Qb.shape[-2] > true_long:       # 2D-mesh edge pads -> true rows
+            Qb = Qb[:, :true_long, :]
+        r = int(Qb.shape[-1])
+        off = 0
+        for i, cnt in zip(b.leaf_indices, b.counts):
+            batch = tuple(int(d) for d in shapes[i][:-2])
+            lQ[i] = Qb[off:off + cnt].reshape(batch + (true_long, r))
+            off += cnt
+    return jax.tree_util.tree_unflatten(treedef, lQ)
+
+
 # ---------------------------------------------------------------------------
 # Bucketed engine
 # ---------------------------------------------------------------------------

@@ -56,6 +56,19 @@ def main(argv=None) -> int:
     ap.add_argument("--strict-mesh", action="store_true",
                     help="fail instead of clamping when --model-parallel "
                          "does not divide the device count")
+    ap.add_argument("--dp-compress", action="store_true",
+                    help="compressed DP gradient exchange: compress -> pmean "
+                         "of the r×short payload -> decompress inside the "
+                         "step's shard_map over `data`, per-worker EF "
+                         "residual in the train state (requires "
+                         "--model-parallel >= 1; 1 = pure data parallelism)")
+    ap.add_argument("--dp-compress-rank", type=int, default=32,
+                    help="subspace rank r of the DP compression payload")
+    ap.add_argument("--dp-compress-basis", default="sketch",
+                    choices=["sketch", "sumo-q"],
+                    help="sketch: zero-coordination seeded basis; sumo-q: "
+                         "reuse the SUMO optimizer's resident rSVD Q "
+                         "(one basis broadcast per refresh)")
     args = ap.parse_args(argv)
 
     arch = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -70,6 +83,9 @@ def main(argv=None) -> int:
         controller_interval=args.controller_interval,
         model_parallel=args.model_parallel,
         strict_mesh=args.strict_mesh,
+        dp_compress=args.dp_compress,
+        dp_compress_rank=args.dp_compress_rank,
+        dp_compress_basis=args.dp_compress_basis,
     )
     injector = FaultInjector(preempt_at=args.preempt_at) if args.preempt_at else None
     res = train(arch, shape, tcfg, fault_injector=injector)

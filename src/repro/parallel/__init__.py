@@ -1,15 +1,26 @@
-"""repro.parallel — mesh/sharding rules for pjit distribution."""
+"""repro.parallel — mesh/sharding rules for pjit distribution and the
+compressed DP gradient exchange."""
 from .compression import (
     CompressionConfig,
+    CompressionState,
     compress_grads,
     compression_ratio,
+    dp_wire_plan,
+    eligible,
+    exchange_shard,
     finalize,
+    full_wire_bytes,
     init_state,
+    init_worker_state,
+    make_dp_exchange_fn,
+    step_bases,
+    wire_bytes,
 )
 from .sharding import (
     batch_spec,
     bucket_state_spec,
     cache_specs,
+    comp_state_specs,
     data_axes,
     input_specs_sharding,
     opt_state_specs,
@@ -21,6 +32,10 @@ from .sharding import (
 
 __all__ = [
     "param_spec", "tree_param_specs", "tree_shardings", "opt_state_specs",
-    "bucket_state_spec", "update_audit_shardings",
+    "bucket_state_spec", "update_audit_shardings", "comp_state_specs",
     "cache_specs", "batch_spec", "data_axes", "input_specs_sharding",
+    "CompressionConfig", "CompressionState", "eligible", "init_state",
+    "init_worker_state", "compress_grads", "finalize", "exchange_shard",
+    "make_dp_exchange_fn", "step_bases", "dp_wire_plan", "wire_bytes", "full_wire_bytes",
+    "compression_ratio",
 ]

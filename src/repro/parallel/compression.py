@@ -1,29 +1,51 @@
-"""Gradient compression for the data-parallel axis (SUMO-aligned).
+"""Compressed data-parallel gradient exchange (SUMO-aligned).
 
 The paper's subspace view gives a natural DP-communication compressor:
 workers exchange the PROJECTED gradient Ĝ = QᵀG (r × short floats) instead
-of the full G (long × short) — an (long/r)× wire reduction. Two design
-choices make this deployable:
+of the full G (long × short) — a (long/r)× wire reduction. This module is
+the REAL training-path implementation consumed by ``train/steps.py``: the
+exchange runs inside the step's shard_map over the ``data`` axis, where
+``exchange_shard`` replaces the full-gradient mean with
 
-  * **Zero-coordination basis.** Q is a seeded random orthonormal sketch
-    regenerated from (seed, step) — every worker derives the same Q without
-    any extra collective (Flora-style). SUMO's own rSVD basis could be reused
-    instead (set ``use_sketch=False`` and pass the optimizer's Q), costing
-    one broadcast per refresh.
-  * **Error feedback (EF).** The per-worker residual e = G − Q Ĝ is carried
-    and added to the next step's gradient before compression, which restores
-    convergence to the uncompressed fixed point (standard EF14/EF21
-    argument; verified empirically in tests/test_compression.py).
+    ĝ    = compress(g + e, basis)            # local, no collective
+    ĝ̄   = jax.lax.pmean(ĝ, "data")          # r·short wire bytes
+    g̃    = decompress(ĝ̄, basis)             # local
+    e'   = (g + e) − decompress(ĝ, basis)    # per-worker EF residual
 
-Integration point: wrap the per-shard gradients inside a shard_map over the
-dp axis —
-    ĝ   = compress(g + e, key)                  # local
-    ĝ̄  = jax.lax.pmean(ĝ, "data")              # r·short wire bytes
-    g̃, e = decompress(ĝ̄, key), (g + e) − decompress(ĝ, key)
-On this container the collective itself is exercised via vmap-simulated
-workers (tests); the compress/decompress path is the real production code.
+Two bases are supported, selected by ``CompressionConfig.use_sketch``:
 
-Only 2D+ "matrix" leaves are compressed; small leaves go through exact.
+  * **Zero-coordination seeded sketch** (default): Q is a seeded random
+    orthonormal sketch regenerated from (seed, step, leaf) — every worker
+    derives the same Q without any extra collective (Flora-style). The
+    regeneration (``step_bases``) runs OUTSIDE the exchange's shard_map —
+    it is deterministic replicated compute, still collective-free, and this
+    jaxlib's partitioner cannot trace QR under a partially-manual shard_map.
+  * **SUMO's resident rSVD basis** (``use_sketch=False``): the optimizer's
+    own Q, already spectrally aligned with the gradient stream, is passed in
+    as a ``bases`` tree (see ``core.sumo.sumo_dp_bases``). It changes only at
+    refresh boundaries, so reuse costs ONE broadcast per refresh and no
+    steady-state collective — machine-checked by
+    ``analysis.collectives.steady_dp_compressed_budget`` on the compiled HLO
+    (tests/test_compression_sharded.py, benchmarks/step_time.py). An
+    all-zero basis leaf (a SUMO state before its first refresh, or a
+    fallback-label leaf with no resident Q) falls back to the seeded sketch
+    at the same rank, so the exchange never has a degenerate zero fixed
+    point.
+
+Error feedback (EF14/EF21): the per-worker residual e' above is purely
+local, carried in ``CompressionState`` (one slot of the train state — the
+loop donates and checkpoints it like any other state; the worker axis is
+the leading dim of each error leaf, sharded over ``data``). EF restores
+convergence to the uncompressed fixed point; verified on the real
+collective in tests/test_compression_sharded.py.
+
+Eligibility is ONE shared predicate, ``eligible(leaf, cfg)``: matrix leaves
+(ndim >= 2) whose canonical long dim reaches ``cfg.min_dim`` compress;
+everything else takes the exact full-size pmean. ``init_state`` /
+``init_worker_state``, ``compress_grads``, ``decompress``/``finalize`` and
+the wire accounting (``dp_wire_plan`` / ``compression_ratio`` — BYTES, not
+elements) all consult it, and a grads tree that does not match the state's
+init template fails loudly instead of silently mis-pairing leaves.
 """
 from __future__ import annotations
 
@@ -40,13 +62,50 @@ PyTree = Any
 class CompressionConfig:
     rank: int = 64
     seed: int = 0
-    min_dim: int = 256     # leaves with long-dim below this go uncompressed
+    min_dim: int = 256     # leaves with canonical long dim below this go exact
     error_feedback: bool = True
+    # True: seeded orthonormal sketch regenerated per (step, leaf) — zero
+    # coordination. False: reuse resident bases passed via ``bases=`` (SUMO's
+    # rSVD Q; sketch fallback per leaf where the basis is absent/all-zero).
+    use_sketch: bool = True
 
 
 class CompressionState(NamedTuple):
     step: jnp.ndarray
-    error: PyTree          # per-leaf EF residual (None for uncompressed leaves)
+    error: PyTree          # per-leaf EF residual; None for exact/EF-off leaves
+
+
+def _orientation(shape) -> tuple[bool, int, int]:
+    """(transpose, long, short) for a matrix leaf's trailing dims — the same
+    canonical long-first convention as ``core.optimizer.canonical_dims``, so
+    SUMO's resident (long, r) bases drop in without re-orientation."""
+    m, n = int(shape[-2]), int(shape[-1])
+    transpose = m < n
+    return transpose, (n if transpose else m), (m if transpose else n)
+
+
+def eligible(leaf, cfg: CompressionConfig) -> bool:
+    """THE eligibility predicate (shared by state init, compression and the
+    wire accounting): matrix leaves whose long dim reaches ``cfg.min_dim``.
+
+    The old ``_eligible``'s ``max(leaf.shape) >= 1`` was vacuously true, so
+    eligibility silently lived in ``init_state``'s error tree alone and any
+    grads/state divergence mis-decided per leaf."""
+    if leaf is None:
+        return False
+    shape = getattr(leaf, "shape", None)
+    if shape is None or len(shape) < 2:
+        return False
+    _, long_d, _ = _orientation(shape)
+    return long_d >= cfg.min_dim
+
+
+def payload_rank(cfg: CompressionConfig, long_dim: int, basis=None) -> int:
+    """r columns actually on the wire for one leaf: the basis's own width
+    when a resident basis is used, else the sketch rank clamped to long."""
+    if basis is not None:
+        return int(basis.shape[-1])
+    return min(cfg.rank, long_dim)
 
 
 def _sketch(key, long_dim: int, r: int) -> jnp.ndarray:
@@ -60,67 +119,197 @@ def _leaf_key(base_key, step, idx: int):
     return jax.random.fold_in(jax.random.fold_in(base_key, step), idx)
 
 
-def _eligible(leaf) -> bool:
-    return leaf is not None and leaf.ndim >= 2 and max(leaf.shape) >= 1
+def _effective_basis(key, long_dim: int, r: int, Q=None) -> jnp.ndarray:
+    """The basis compress/decompress actually use for one leaf.
+
+    ``Q=None`` → the seeded sketch. A provided Q (batch dims allowed:
+    per-expert bases of a 3D stack) is used as-is except where it is
+    ALL-ZERO — a SUMO basis before its first rSVD refresh — which would make
+    the exchange a zero fixed point (zero payload → zero decompressed grads
+    → the optimizer never moves → the basis never refreshes); those matrices
+    fall back to the sketch at the basis's own rank, and EF mops up the
+    sketch's projection error until the real basis arrives.
+
+    Call this (via ``step_bases``) OUTSIDE any partially-manual shard_map:
+    the QR inside ``_sketch`` hard-crashes this jaxlib's SPMD partitioner
+    when traced under a shard_map with auto axes of size > 1
+    (``Check failed: sharding.IsManualSubgroup()``)."""
+    if Q is None:
+        return _sketch(key, long_dim, min(r, long_dim))
+    Q = Q.astype(jnp.float32)
+    sk = _sketch(key, long_dim, min(int(Q.shape[-1]), long_dim))
+    if Q.ndim == 2:
+        return jnp.where(jnp.linalg.norm(Q) > 0.0, Q, sk)
+    flat = Q.reshape((-1,) + Q.shape[-2:])
+    norms = jnp.sqrt(jnp.sum(flat * flat, axis=(1, 2)))
+    return jnp.where((norms > 0.0)[:, None, None], flat, sk[None]).reshape(Q.shape)
 
 
-def init_state(grads_template: PyTree, cfg: CompressionConfig) -> CompressionState:
+def compress_leaf(G: jnp.ndarray, key, r: int, Q=None):
+    """G (…, m, n) -> Ĝ (…, r_eff, short) in the canonical long-first view.
+
+    ``Q``: optional (…, long, r) basis used VERBATIM (``step_bases`` output,
+    or a resident ``core.sumo.sumo_dp_bases`` tree already effectivized);
+    None regenerates the seeded sketch — never transmitted either way.
+    Verbatim matters: inside a partially-manual shard_map body a provided
+    basis is just matmul operands, while regenerating the sketch would trace
+    QR where the partitioner can't handle it (see ``_effective_basis``)."""
+    transpose, long_dim, _ = _orientation(G.shape)
+    Gl = jnp.swapaxes(G, -1, -2) if transpose else G
+    B = (Q.astype(jnp.float32) if Q is not None
+         else _sketch(key, long_dim, min(r, long_dim)))
+    if G.ndim == 2:
+        return B.T @ Gl.astype(jnp.float32)
+    flat = Gl.reshape((-1,) + Gl.shape[-2:]).astype(jnp.float32)
+    if B.ndim == 2:
+        out = jax.vmap(lambda g: B.T @ g)(flat)
+    else:
+        out = jax.vmap(lambda b, g: b.T @ g)(
+            B.reshape((-1,) + B.shape[-2:]), flat)
+    return out.reshape(Gl.shape[:-2] + out.shape[-2:])
+
+
+def decompress_leaf(G_hat: jnp.ndarray, key, shape, Q=None) -> jnp.ndarray:
+    transpose, long_dim, _ = _orientation(shape)
+    r_eff = G_hat.shape[-2]
+    B = (Q.astype(jnp.float32) if Q is not None
+         else _sketch(key, long_dim, min(r_eff, long_dim)))
+    if len(shape) == 2:
+        out = B @ G_hat
+    else:
+        flat = G_hat.reshape((-1,) + G_hat.shape[-2:])
+        if B.ndim == 2:
+            out = jax.vmap(lambda g: B @ g)(flat)
+        else:
+            out = jax.vmap(lambda b, g: b @ g)(
+                B.reshape((-1,) + B.shape[-2:]), flat)
+        out = out.reshape(tuple(shape[:-2]) + out.shape[-2:])
+    return jnp.swapaxes(out, -1, -2) if transpose else out
+
+
+def _flatten_against_state(grads, state: CompressionState, cfg):
+    """Flatten grads and align the state's error tree, failing LOUDLY when
+    the state was initialised from a different template (tree mismatch, a
+    leaf whose eligibility disagrees with its EF slot, or an error leaf of
+    the wrong shape)."""
+    leaves, treedef = jax.tree_util.tree_flatten(
+        grads, is_leaf=lambda x: x is None)
+    try:
+        err_leaves = treedef.flatten_up_to(state.error)
+    except (ValueError, TypeError) as exc:
+        raise ValueError(
+            "CompressionState does not match the grads tree — it was "
+            "initialised from a different template (e.g. params changed "
+            "between init_state and compress_grads): "
+            f"{exc}") from exc
+    for i, (g, e) in enumerate(zip(leaves, err_leaves)):
+        want_err = cfg.error_feedback and eligible(g, cfg)
+        if want_err != (e is not None):
+            raise ValueError(
+                f"CompressionState leaf {i}: eligibility says EF residual "
+                f"{'required' if want_err else 'absent'} but state has "
+                f"{'one' if e is not None else 'none'} — state initialised "
+                "from a different template or CompressionConfig")
+        if e is not None and tuple(e.shape) != tuple(g.shape):
+            raise ValueError(
+                f"CompressionState leaf {i}: EF residual shape "
+                f"{tuple(e.shape)} != grad shape {tuple(g.shape)}")
+    return leaves, err_leaves, treedef
+
+
+def _basis_leaves(bases, treedef, n: int, cfg: CompressionConfig):
+    # A provided bases tree is honored regardless of use_sketch — the train
+    # step precomputes even the SKETCH bases outside its shard_map (via
+    # ``step_bases``) and passes them in. use_sketch only selects what the
+    # caller feeds this: None/seeded sketches vs the resident SUMO Q tree.
+    if bases is None:
+        return [None] * n
+    try:
+        return treedef.flatten_up_to(bases)
+    except (ValueError, TypeError) as exc:
+        raise ValueError(
+            "bases tree does not match the grads tree "
+            f"(see core.sumo.sumo_dp_bases / step_bases): {exc}") from exc
+
+
+def step_bases(grads_template: PyTree, step, cfg: CompressionConfig,
+               bases: Optional[PyTree] = None) -> PyTree:
+    """The per-leaf EFFECTIVE basis tree for one exchange step (None for
+    ineligible leaves) — sketches generated, zero-Q resident bases
+    bootstrapped, everything ready to use verbatim.
+
+    Call this OUTSIDE the exchange's shard_map (ordinary jit: the QRs
+    partition fine there) and hand the result to
+    ``exchange_shard``/``compress_grads`` as ``bases``: inside a
+    partially-manual shard_map body the basis must be a plain operand, not
+    regenerated (see ``_effective_basis``). ``step`` may be traced
+    (``CompressionState.step``); ``bases`` is the resident SUMO tree for
+    ``use_sketch=False``, ignored (sketches win) when ``cfg.use_sketch``."""
+    base = jax.random.PRNGKey(cfg.seed)
+    leaves, treedef = jax.tree_util.tree_flatten(
+        grads_template, is_leaf=lambda x: x is None)
+    basis_leaves = _basis_leaves(
+        bases if not cfg.use_sketch else None, treedef, len(leaves), cfg)
+    out = []
+    for i, (g, Q) in enumerate(zip(leaves, basis_leaves)):
+        if not eligible(g, cfg):
+            out.append(None)
+            continue
+        _, long_d, _ = _orientation(g.shape)
+        r = payload_rank(cfg, long_d, Q)
+        key = _leaf_key(base, step, i)
+        out.append(_effective_basis(key, long_d, r, Q))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def init_state(grads_template: PyTree, cfg: CompressionConfig
+               ) -> CompressionState:
+    """Single-worker EF state (tests / reference). The error tree keeps the
+    SAME structure whether error feedback is on or off — EF-off just stores
+    None everywhere instead of materialising full-size zero residuals."""
     error = jax.tree_util.tree_map(
         lambda g: jnp.zeros(g.shape, jnp.float32)
-        if _eligible(g) and max(g.shape[-2:]) >= cfg.min_dim else None,
+        if cfg.error_feedback and eligible(g, cfg) else None,
         grads_template,
         is_leaf=lambda x: x is None,
     )
     return CompressionState(step=jnp.zeros((), jnp.int32), error=error)
 
 
-def compress_leaf(G: jnp.ndarray, key, r: int):
-    """G (m, n) -> (Ĝ (r, short), basis is regenerated, not transmitted)."""
-    m, n = G.shape[-2], G.shape[-1]
-    transpose = m < n
-    Gl = jnp.swapaxes(G, -1, -2) if transpose else G
-    long_dim = Gl.shape[-2]
-    r_eff = min(r, long_dim)
-    Q = _sketch(key, long_dim, r_eff)
-    if G.ndim == 2:
-        return Q.T @ Gl.astype(jnp.float32)
-    flat = Gl.reshape((-1,) + Gl.shape[-2:]).astype(jnp.float32)
-    return jax.vmap(lambda g: Q.T @ g)(flat).reshape(
-        Gl.shape[:-2] + (r_eff, Gl.shape[-1])
+def init_worker_state(grads_template: PyTree, cfg: CompressionConfig,
+                      n_workers: int) -> CompressionState:
+    """EF state for the real sharded loop: each eligible leaf's residual is
+    (n_workers, *grad_shape) — dim 0 is the DP worker axis, placed over the
+    mesh's ``data`` axis (``parallel.sharding.comp_state_specs``) so the
+    shard_map body sees exactly its own worker's slice."""
+    error = jax.tree_util.tree_map(
+        lambda g: jnp.zeros((n_workers,) + tuple(g.shape), jnp.float32)
+        if cfg.error_feedback and eligible(g, cfg) else None,
+        grads_template,
+        is_leaf=lambda x: x is None,
     )
-
-
-def decompress_leaf(G_hat: jnp.ndarray, key, shape) -> jnp.ndarray:
-    m, n = shape[-2], shape[-1]
-    transpose = m < n
-    long_dim = n if transpose else m
-    r_eff = G_hat.shape[-2]
-    Q = _sketch(key, long_dim, r_eff)
-    if len(shape) == 2:
-        out = Q @ G_hat
-    else:
-        flat = G_hat.reshape((-1,) + G_hat.shape[-2:])
-        out = jax.vmap(lambda g: Q @ g)(flat).reshape(
-            shape[:-2] + (long_dim, shape[-1] if not transpose else shape[-2])
-        )
-    return jnp.swapaxes(out, -1, -2) if transpose else out
+    return CompressionState(step=jnp.zeros((), jnp.int32), error=error)
 
 
 def compress_grads(grads: PyTree, state: CompressionState,
-                   cfg: CompressionConfig):
-    """Returns (payload pytree to be summed across DP workers, new_state_fn).
+                   cfg: CompressionConfig, bases: Optional[PyTree] = None):
+    """Returns (payload tree to be MEANED across DP workers, meta, treedef).
 
-    payload leaves: compressed (r, short) arrays for eligible leaves, raw
-    arrays otherwise. Call ``finalize(payload_mean, state)`` after the
-    cross-worker mean to obtain (decompressed grads, next state).
+    payload leaves: (…, r, short) compressed arrays for eligible leaves, raw
+    arrays otherwise. Each meta entry for an eligible leaf is
+    ``(shape, idx, new_error)`` — the NEXT EF residual, computed HERE from
+    the local quantities (e' = (g+e) − QQᵀ(g+e) never needs the averaged
+    payload), so ``finalize`` only decompresses the mean: one compression
+    per leaf per step, and no second full-size gradient copy rides through
+    the jitted step.
     """
     base = jax.random.PRNGKey(cfg.seed)
-    leaves, treedef = jax.tree_util.tree_flatten(grads, is_leaf=lambda x: x is None)
-    err_leaves = treedef.flatten_up_to(state.error)
+    leaves, err_leaves, treedef = _flatten_against_state(grads, state, cfg)
+    basis_leaves = _basis_leaves(bases, treedef, len(leaves), cfg)
 
     payload, meta = [], []
-    for i, (g, e) in enumerate(zip(leaves, err_leaves)):
-        if g is None or e is None:
+    for i, (g, e, Q) in enumerate(zip(leaves, err_leaves, basis_leaves)):
+        if not eligible(g, cfg):
             payload.append(g)
             meta.append(None)
             continue
@@ -128,34 +317,33 @@ def compress_grads(grads: PyTree, state: CompressionState,
         if cfg.error_feedback:
             g32 = g32 + e
         key = _leaf_key(base, state.step, i)
-        payload.append(compress_leaf(g32, key, cfg.rank))
-        meta.append((g.shape, i, g32))
+        p = compress_leaf(g32, key, cfg.rank, Q=Q)
+        payload.append(p)
+        if cfg.error_feedback:
+            new_err = g32 - decompress_leaf(p, key, g.shape, Q=Q)
+        else:
+            new_err = None
+        meta.append((g.shape, i, new_err))
     return jax.tree_util.tree_unflatten(treedef, payload), meta, treedef
 
 
 def finalize(payload_mean: PyTree, meta, treedef, state: CompressionState,
-             cfg: CompressionConfig):
-    """Decompress the averaged payload; update EF residuals."""
+             cfg: CompressionConfig, bases: Optional[PyTree] = None):
+    """Decompress the averaged payload; install the EF residuals computed by
+    ``compress_grads`` (no re-compression here)."""
     base = jax.random.PRNGKey(cfg.seed)
     p_leaves = treedef.flatten_up_to(payload_mean)
+    basis_leaves = _basis_leaves(bases, treedef, len(p_leaves), cfg)
     out, new_err = [], []
-    for p, m in zip(p_leaves, meta):
+    for p, m, Q in zip(p_leaves, meta, basis_leaves):
         if m is None:
             out.append(p)
             new_err.append(None)
             continue
-        shape, i, g_with_err = m
+        shape, i, err = m
         key = _leaf_key(base, state.step, i)
-        decoded = decompress_leaf(p, key, shape)
-        out.append(decoded.astype(jnp.float32))
-        if cfg.error_feedback:
-            # residual of the LOCAL contribution (what this worker failed to send)
-            local_decoded = decompress_leaf(
-                compress_leaf(g_with_err, key, cfg.rank), key, shape
-            )
-            new_err.append(g_with_err - local_decoded)
-        else:
-            new_err.append(jnp.zeros(shape, jnp.float32))
+        out.append(decompress_leaf(p, key, shape, Q=Q).astype(jnp.float32))
+        new_err.append(err)
     grads = jax.tree_util.tree_unflatten(treedef, out)
     new_state = CompressionState(
         step=state.step + 1,
@@ -164,16 +352,142 @@ def finalize(payload_mean: PyTree, meta, treedef, state: CompressionState,
     return grads, new_state
 
 
-def compression_ratio(grads: PyTree, cfg: CompressionConfig) -> float:
-    """Wire bytes with compression / without (lower is better)."""
-    full = comp = 0
-    for g in jax.tree_util.tree_leaves(grads):
-        n = g.size
-        full += n
-        if g.ndim >= 2 and max(g.shape[-2:]) >= cfg.min_dim:
-            short = min(g.shape[-2], g.shape[-1])
-            batch = n // (g.shape[-2] * g.shape[-1])
-            comp += batch * min(cfg.rank, max(g.shape[-2:])) * short
-        else:
-            comp += n
-    return comp / full
+def exchange_shard(grads: PyTree, state: CompressionState,
+                   cfg: CompressionConfig, axis_name: str,
+                   bases: Optional[PyTree] = None):
+    """The per-worker DP exchange — call INSIDE a shard_map body that is
+    manual over ``axis_name``: compress, ``lax.pmean`` the r×short payloads
+    (exact full-size pmean for ineligible leaves), decompress the mean.
+    Returns (mean grads, next per-worker CompressionState)."""
+    payload, meta, treedef = compress_grads(grads, state, cfg, bases=bases)
+    payload_mean = jax.tree_util.tree_map(
+        lambda x: None if x is None else jax.lax.pmean(x, axis_name),
+        payload, is_leaf=lambda x: x is None)
+    return finalize(payload_mean, meta, treedef, state, cfg, bases=bases)
+
+
+def make_dp_exchange_fn(mesh, cfg: CompressionConfig,
+                        data_axis: str = "data"):
+    """The standalone worker-stacked exchange program (tests + benchmarks
+    compile and budget-audit exactly this; the train step inlines the same
+    ``exchange_shard`` into its own shard_map body).
+
+    Returns ``fn(grads_stacked, state, bases) -> (decoded_stacked, state')``
+    where every grads leaf carries a leading (n_data,) worker dim sharded
+    over ``data_axis`` (``state`` from ``init_worker_state``; ``bases``
+    replicated or None). Isolating the exchange in its own program keeps
+    the optimizer's collectives out of the DP wire budget's scope. The
+    effective bases (sketches included) are prepared by ``step_bases``
+    OUTSIDE the shard_map, so the manual body is pure matmuls + pmeans.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    auto = frozenset(a for a in mesh.axis_names if a != data_axis)
+    none_leaf = lambda x: x is None
+    squeeze = lambda t: jax.tree_util.tree_map(
+        lambda x: None if x is None else x[0], t, is_leaf=none_leaf)
+    expand = lambda t: jax.tree_util.tree_map(
+        lambda x: None if x is None else x[None], t, is_leaf=none_leaf)
+
+    def body(grads_stacked, state, eff_bases):
+        grads = squeeze(grads_stacked)
+        local = CompressionState(step=state.step, error=squeeze(state.error))
+        decoded, new_local = exchange_shard(grads, local, cfg, data_axis,
+                                            bases=eff_bases)
+        new_state = CompressionState(step=new_local.step,
+                                     error=expand(new_local.error))
+        return expand(decoded), new_state
+
+    sharded = P(data_axis)
+    state_spec = CompressionState(step=P(), error=sharded)
+    call = shard_map(
+        body, mesh,
+        in_specs=(sharded, state_spec, P()),
+        out_specs=(sharded, state_spec),
+        check_rep=False,
+        **({"auto": auto} if auto else {}),
+    )
+
+    def fn(grads_stacked, state, bases):
+        eff = step_bases(squeeze(grads_stacked), state.step, cfg,
+                         bases=bases)
+        return call(grads_stacked, state, eff)
+
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Wire accounting (BYTES — the budget factories and CSV rows consume this)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class WirePlanEntry:
+    """One leaf's DP-exchange footprint. ``payload_dims`` is the pmean
+    buffer's dims tuple (compressed or raw), directly comparable against
+    ``roofline.hlo_cost.iter_collectives`` entries."""
+    path: str
+    shape: tuple
+    eligible: bool
+    rank: int                  # r on the wire (0 for exact leaves)
+    payload_dims: tuple        # all-reduce buffer dims
+    payload_bytes: int         # per-step wire bytes (payload is fp32)
+    full_bytes: int            # uncompressed exchange bytes (leaf dtype)
+
+
+def dp_wire_plan(grads_template: PyTree, cfg: CompressionConfig,
+                 bases: Optional[PyTree] = None) -> list:
+    """Per-leaf wire plan for one DP exchange — byte-accurate (fp32 payloads
+    for compressed leaves, the leaf's OWN dtype for exact ones, so bf16
+    grads are no longer counted as if they were fp32), sharing the
+    ``eligible``/orientation/rank logic with the compression itself."""
+    from ..core.optimizer import path_str
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        grads_template, is_leaf=lambda x: x is None)
+    basis_leaves = _basis_leaves(
+        bases,
+        jax.tree_util.tree_structure(grads_template,
+                                     is_leaf=lambda x: x is None),
+        len(leaves), cfg)
+    plan = []
+    for (path, g), Q in zip(leaves, basis_leaves):
+        if g is None:
+            continue
+        shape = tuple(int(d) for d in g.shape)
+        n = 1
+        for d in shape:
+            n *= d
+        itemsize = int(jnp.dtype(g.dtype).itemsize)
+        if not eligible(g, cfg):
+            plan.append(WirePlanEntry(
+                path=path_str(path), shape=shape, eligible=False, rank=0,
+                payload_dims=shape, payload_bytes=n * itemsize,
+                full_bytes=n * itemsize))
+            continue
+        _, long_d, short_d = _orientation(shape)
+        r = payload_rank(cfg, long_d, Q)
+        batch = n // (shape[-2] * shape[-1])
+        pdims = shape[:-2] + (r, short_d)
+        plan.append(WirePlanEntry(
+            path=path_str(path), shape=shape, eligible=True, rank=r,
+            payload_dims=pdims, payload_bytes=batch * r * short_d * 4,
+            full_bytes=n * itemsize))
+    return plan
+
+
+def wire_bytes(plan) -> int:
+    return sum(e.payload_bytes for e in plan)
+
+
+def full_wire_bytes(plan) -> int:
+    return sum(e.full_bytes for e in plan)
+
+
+def compression_ratio(grads: PyTree, cfg: CompressionConfig,
+                      bases: Optional[PyTree] = None) -> float:
+    """Wire BYTES with compression / without (lower is better); the ≥8×
+    reduction gate is ``1 / compression_ratio >= 8``. Cross-checked against
+    the HLO-measured pmean bytes in tests/test_compression_sharded.py."""
+    plan = dp_wire_plan(grads, cfg, bases=bases)
+    return wire_bytes(plan) / max(full_wire_bytes(plan), 1)

@@ -289,6 +289,30 @@ def update_audit_shardings(state, grads, mesh: Mesh,
     return g_sh, st_sh
 
 
+def comp_state_specs(comp_state, mesh: Mesh, data_axis: str = "data"):
+    """Sharding for the DP-compression EF state
+    (``parallel.compression.init_worker_state``): each error leaf's leading
+    dim is the DP WORKER axis — placed over ``data_axis`` so the train
+    step's shard_map body sees exactly its own worker's residual slice (the
+    residual is purely local state; it never moves on the wire). The step
+    counter is replicated; None leaves (exact/EF-off) stay None."""
+    d_ax = data_axis if data_axis in mesh.shape else None
+
+    def err_spec(leaf):
+        if leaf is None:
+            return None
+        if d_ax is not None and getattr(leaf, "ndim", 0) >= 1 \
+                and leaf.shape[0] % _axis_size(mesh, d_ax) == 0:
+            return P(d_ax)
+        return P()
+
+    return type(comp_state)(
+        step=P(),
+        error=jax.tree_util.tree_map(err_spec, comp_state.error,
+                                     is_leaf=lambda x: x is None),
+    )
+
+
 def cache_specs(cache, mesh: Mesh, cfg: Optional[ArchConfig], batch: int):
     return jax.tree_util.tree_map_with_path(
         lambda path, leaf: cache_spec(path_str(path), leaf.shape, mesh, cfg, batch),

@@ -58,6 +58,16 @@ _SUMO_STATS_KEY_RE = re.compile(
 # long-pad migration slices/re-pads against.
 _SUMO_BUCKET_Q_RE = re.compile(r"(?:^|\|)Q\|(\d+)x\d+$")
 
+# The DP-compression CompressionState the train loop saves under the
+# "comp_state" slot. Its EF residuals are a CORRECTION term, not model state:
+# a checkpoint written before dp_compress existed (or with it off) restores
+# into a dp template by keeping the template's zero residuals — EF simply
+# cold-starts, which only costs a few steps of compression error.
+_COMP_STATE_KEY_RE = re.compile(r"^comp_state(\||$)")
+# Worker-stacked EF residuals specifically: comp_state|error|<param path>,
+# leading dim = the writing run's data-axis size.
+_COMP_ERROR_KEY_RE = re.compile(r"^comp_state\|error\|")
+
 
 def _path_key(path) -> str:
     return _SEP.join(str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
@@ -98,6 +108,12 @@ def _unflatten_into(template: PyTree, flat: dict[str, np.ndarray]) -> PyTree:
             # ...|stats|LONGxSHORT|<SpectralStats field> — so a model subtree
             # that happens to be named "stats" still raises on missing leaves.
             if _SUMO_STATS_KEY_RE.search(key):
+                out.append(leaf)
+                continue
+            # Pre-dp (or dp-off) checkpoints carry no comp_state: keep the
+            # template's fresh EF state (zero residuals, step 0) — see
+            # _COMP_STATE_KEY_RE.
+            if _COMP_STATE_KEY_RE.match(key):
                 out.append(leaf)
                 continue
             raise KeyError(f"checkpoint missing leaf {key!r}")
@@ -174,6 +190,45 @@ def _long_pad_manifest(flat: dict) -> dict:
         if m is not None and arr.ndim == 3 and arr.shape[-2] != int(m.group(1)):
             pads[key] = {"true": int(m.group(1)), "padded": int(arr.shape[-2])}
     return pads
+
+
+# ---------------------------------------------------------------------------
+# DP-compression EF residual migration (elastic data-axis size)
+# ---------------------------------------------------------------------------
+
+def _migrate_comp_worker_axis(template: PyTree, flat: dict) -> dict:
+    """Redistribute worker-stacked EF residuals across a different data-axis
+    size.
+
+    ``comp_state|error|...`` entries are (n_workers, *grad_shape) — one EF
+    residual per DP worker. Restoring onto W' != W workers keeps the SUM of
+    the residuals (the quantity the decompressed mean is off by: the mean
+    gradient error equals sum(e_w)/batch-weighting, and compress/EF are
+    linear in e), splitting it evenly: e'_i = sum_w(e_w) / W'. The global
+    correction the next steps apply is then unchanged, only its per-worker
+    attribution resets. Matching worker counts pass through untouched."""
+    tmpl_workers: dict[str, tuple] = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            template, is_leaf=lambda x: x is None)[0]:
+        key = _path_key(path)
+        if leaf is not None and _COMP_ERROR_KEY_RE.match(key):
+            tmpl_workers[key] = tuple(leaf.shape)
+    out = dict(flat)
+    for key, arr in flat.items():
+        if not _COMP_ERROR_KEY_RE.match(key) or key not in tmpl_workers:
+            continue
+        want = tmpl_workers[key]
+        have = tuple(arr.shape)
+        if have == want:
+            continue
+        if arr.ndim != len(want) or have[1:] != want[1:]:
+            raise ValueError(
+                f"comp_state residual {key!r}: ckpt shape {have} vs template "
+                f"{want} — only the leading worker dim may differ")
+        w_new = int(want[0])
+        total = arr.sum(axis=0, dtype=arr.dtype)
+        out[key] = np.broadcast_to(total / w_new, want).astype(arr.dtype)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -358,6 +413,11 @@ class CheckpointManager:
         # understands true-shaped stacks, and `_unflatten_into` would reject
         # a pad-induced shape mismatch as corruption).
         flat = _normalize_sumo_long_pads(template, flat)
+        # Elastic DP restore: worker-stacked EF residuals written with a
+        # different data-axis size redistribute (sum-preserving) BEFORE the
+        # unflatten — a worker-dim mismatch is a ValueError there, not the
+        # KeyError the layout retry path catches.
+        flat = _migrate_comp_worker_axis(template, flat)
         try:
             state = _unflatten_into(template, flat)
         except KeyError:

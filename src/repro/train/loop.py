@@ -83,6 +83,22 @@ class TrainConfig:
     # Raise instead of clamping when model_parallel doesn't divide the
     # device count (launch.mesh.make_host_mesh strict mode).
     strict_mesh: bool = False
+    # -- compressed DP gradient exchange (ROADMAP item 1) ------------------
+    # Replace the full-gradient data-parallel mean with compress -> pmean of
+    # the r×short payload -> decompress inside the step's shard_map over
+    # `data` (parallel.compression.exchange_shard), with the per-worker EF
+    # residual carried as a CompressionState slot of the train state
+    # (donated and checkpointed like the rest). Requires model_parallel > 0
+    # (use 1 for pure DP: the mesh is (data=N, model=1)).
+    dp_compress: bool = False
+    dp_compress_rank: int = 32
+    # "sketch": zero-coordination seeded sketch basis. "sumo-q": reuse the
+    # optimizer's resident rSVD Q (core.sumo.sumo_dp_bases) — extracted and
+    # replicated once per refresh boundary (the one broadcast per refresh),
+    # never inside the steady-state step.
+    dp_compress_basis: str = "sketch"
+    dp_compress_min_dim: int = 256
+    dp_compress_ef: bool = True
 
 
 @dataclasses.dataclass
@@ -121,12 +137,31 @@ def train(
     # Per-bucket settings (rank/update_freq) — the controller's mutable view.
     settings = initial_settings(params0, tcfg.rank, tcfg.update_freq)
 
+    if tcfg.dp_compress:
+        if tcfg.model_parallel <= 0:
+            raise ValueError(
+                "dp_compress runs inside the step's shard_map over the "
+                "(data, model) host mesh — set model_parallel > 0 "
+                "(1 = pure data parallelism)")
+        if tcfg.dp_compress_basis not in ("sketch", "sumo-q"):
+            raise ValueError(
+                f"unknown dp_compress_basis {tcfg.dp_compress_basis!r} "
+                "(have: sketch, sumo-q)")
+        if (tcfg.dp_compress_basis == "sumo-q"
+                and not tcfg.optimizer.startswith("sumo")):
+            raise ValueError(
+                "dp_compress_basis='sumo-q' reuses the optimizer's resident "
+                f"rSVD Q — requires a SUMO optimizer, got {tcfg.optimizer!r}")
+
     mesh = None
-    place_params = place_opt = place_batch = lambda x: x
+    dp = None
+    comp_cfg = None
+    place_params = place_opt = place_batch = place_comp = lambda x: x
     if tcfg.model_parallel > 0:
         from ..launch.mesh import make_host_mesh
         from ..parallel.sharding import (
             batch_spec,
+            comp_state_specs,
             opt_state_specs,
             tree_param_specs,
             tree_shardings,
@@ -155,6 +190,64 @@ def train(
                                  and v.shape[0] % mesh.shape["data"] == 0)))
             for k, v in b.items()}
 
+        if tcfg.dp_compress:
+            from ..parallel.compression import (
+                CompressionConfig,
+                init_worker_state,
+            )
+            from .steps import DpCompression
+            n_data = int(mesh.shape["data"])
+            if shape.global_batch % n_data:
+                raise ValueError(
+                    f"dp_compress shards the batch MANUALLY over data: "
+                    f"global_batch {shape.global_batch} must divide by the "
+                    f"data axis ({n_data})")
+            comp_cfg = CompressionConfig(
+                rank=tcfg.dp_compress_rank, seed=tcfg.seed,
+                min_dim=tcfg.dp_compress_min_dim,
+                error_feedback=tcfg.dp_compress_ef,
+                use_sketch=(tcfg.dp_compress_basis == "sketch"))
+            dp = DpCompression(mesh, comp_cfg)
+            fresh_comp = lambda: init_worker_state(params0, comp_cfg, n_data)
+            place_comp = lambda s: _place(s, comp_state_specs(s, mesh))
+
+    # sumo-q basis reuse: a SEPARATE tiny jitted program extracts the
+    # per-leaf bases from the resident (sharded) bucket stacks, and the
+    # result is replicated once — the advertised one broadcast per refresh.
+    # The steady-state step consumes the replicated tree as a plain input,
+    # so its compiled program has no basis collective at all
+    # (machine-checked by steady_dp_compressed_budget).
+    extract_bases = None
+    if dp is not None and not comp_cfg.use_sketch:
+        from ..core.optimizer import partition_params
+        from ..core.sumo import sumo_dp_bases
+        labels = partition_params(params0)
+        masked_tmpl = jax.tree_util.tree_map(
+            lambda p, lab: p if lab == "matrix" else None, params0, labels)
+        _extract = jax.jit(lambda st: sumo_dp_bases(st, masked_tmpl))
+        rep_sh = jax.sharding.NamedSharding(mesh,
+                                            jax.sharding.PartitionSpec())
+
+        def extract_bases(opt_state):
+            return jax.tree_util.tree_map(
+                lambda x: None if x is None else jax.device_put(x, rep_sh),
+                _extract(opt_state["matrix"]),
+                is_leaf=lambda x: x is None)
+
+    def _refresh_freqs():
+        """Every refresh cadence currently in play (global + per-bucket
+        controller overrides) — after a step s with s % f == 0 for any of
+        them, some bucket's Q may have refreshed, so sumo-q bases re-extract.
+        (Adaptive-quality refreshes can fire off-cadence; the bases then stay
+        stale-but-worker-consistent until the next boundary, which EF
+        absorbs — same contract as a plain sketch basis.)"""
+        freqs = {tcfg.update_freq}
+        for st_ in settings.values():
+            f = getattr(st_, "update_freq", 0)
+            if f:
+                freqs.add(f)
+        return freqs
+
     def build(overrides):
         """(tx, jitted step_fn) for the current bucket overrides — each
         rebuild is the controlled recompile point."""
@@ -171,8 +264,10 @@ def train(
         )
         step_fn = jax.jit(
             make_train_step(arch, tx, attn_impl=tcfg.attn_impl,
-                            accum=tcfg.accum),
-            donate_argnums=(0, 1),
+                            accum=tcfg.accum, dp=dp),
+            # dp adds comp_state as arg 2 — its EF residuals are step-local
+            # scratch between steps, so donate them too.
+            donate_argnums=(0, 1, 2) if dp is not None else (0, 1),
         )
         return tx, step_fn
 
@@ -214,11 +309,14 @@ def train(
         # still work — hand the loop a copy, keep the original alive.
         fresh_params = lambda: jax.tree_util.tree_map(
             lambda x: x.copy(), params0)
+        comp_state = None
         if start_step == -1:  # resume from latest checkpoint
             restarts[0] += 1
             if ckpt.latest_step() is None:
                 params = place_params(fresh_params())
                 opt_state = place_opt(tx.init(params0))
+                if dp is not None:
+                    comp_state = place_comp(fresh_comp())
                 step = 0
                 log_fn(f"[recovery] no checkpoint yet — cold restart (#{restarts[0]})")
             else:
@@ -251,9 +349,17 @@ def train(
                 # shape (differently padded bucket stacks) migrates inside
                 # restore; placement then shards it onto the current mesh.
                 template = {"params": params0, "opt_state": tx.init(params0)}
+                if dp is not None:
+                    # EF residuals restore worker-aware: checkpoint.py
+                    # redistributes a checkpoint written with a different
+                    # data-axis size (sum-preserving) and tolerates a missing
+                    # comp_state entirely (pre-dp checkpoints cold-start EF).
+                    template["comp_state"] = fresh_comp()
                 state, manifest = ckpt.restore(template)
                 params = place_params(state["params"])
                 opt_state = place_opt(state["opt_state"])
+                if dp is not None:
+                    comp_state = place_comp(state["comp_state"])
                 step = manifest["step"]
                 if sink is not None:
                     # replayed steps re-emit: drop their pre-fault records
@@ -265,7 +371,13 @@ def train(
         else:
             params = place_params(fresh_params())
             opt_state = place_opt(tx.init(params0))
+            if dp is not None:
+                comp_state = place_comp(fresh_comp())
             step = start_step
+
+        # sumo-q: bases valid as of the restored/initial optimizer state —
+        # the one broadcast; re-extracted only at refresh boundaries below.
+        bases = extract_bases(opt_state) if extract_bases is not None else None
 
         while step < tcfg.total_steps:
             if fault_injector is not None:
@@ -274,7 +386,11 @@ def train(
                 make_batch(step, shape, arch, DataConfig(seed=tcfg.seed)))
             t0 = time.perf_counter()
             mark_step(step)  # step-tags compiles for analysis.recompile
-            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if dp is not None:
+                params, opt_state, comp_state, metrics = step_fn(
+                    params, opt_state, comp_state, batch, bases)
+            else:
+                params, opt_state, metrics = step_fn(params, opt_state, batch)
             tel = metrics.pop("telemetry", None)
             if sink is not None and tel is not None:
                 # Device-side copy before buffering: the stats in metrics
@@ -292,6 +408,12 @@ def train(
                 log_fn(f"step {step:5d} loss {loss:.4f} "
                        f"gnorm {float(metrics['grad_norm']):.3f}")
             step += 1
+            if extract_bases is not None and any(
+                    (step - 1) % f == 0 for f in _refresh_freqs()):
+                # SUMO refreshes during steps where its internal counter hits
+                # the cadence (loop steps 0, f, 2f, …) — the step that just
+                # ran may have rotated Q, so rebroadcast before the next one.
+                bases = extract_bases(opt_state)
             if ctrl is not None and step % ctrl_interval == 0:
                 sink.drain()   # decisions see everything up to this step
                 decisions = ctrl.decide(sink.window_aggregates(), settings)
@@ -306,6 +428,9 @@ def train(
                                       default_freq=tcfg.update_freq)
                     tx, step_fn = build(overrides)
                     monitor.note_recompile()   # next step pays a compile
+                    if extract_bases is not None:
+                        # resized Q stacks ⇒ stale basis shapes; rebroadcast
+                        bases = extract_bases(opt_state)
                     for bucket, why in sorted(reasons.items()):
                         controller_events.append((step, bucket) + why)
                         log_fn(f"[controller] step {step} {bucket}: "
@@ -316,7 +441,10 @@ def train(
                     # shape provenance for the recovery path above
                     extra["bucket_overrides"] = [
                         list(o) for o in overrides_from_settings(settings)]
-                ckpt.save(step, {"params": params, "opt_state": opt_state},
+                payload = {"params": params, "opt_state": opt_state}
+                if dp is not None:
+                    payload["comp_state"] = comp_state
+                ckpt.save(step, payload,
                           extra=extra, blocking=not tcfg.ckpt_async)
         if ckpt:
             ckpt.wait()

@@ -1,9 +1,11 @@
 """Train/eval step builders: loss + grad + optimizer update, with gradient
-accumulation (microbatch scan) and the optimizer factory used by the
-launcher, benchmarks and examples."""
+accumulation (microbatch scan), the optimizer factory used by the launcher,
+benchmarks and examples, and the compressed data-parallel gradient exchange
+(``dp=``): loss/grad/compress/pmean/decompress run inside a shard_map over
+the mesh's ``data`` axis, the optimizer update outside it."""
 from __future__ import annotations
 
-from typing import Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -76,38 +78,80 @@ def make_optimizer(name: str, learning_rate, params, cfg: Optional[ArchConfig] =
     raise ValueError(f"unknown optimizer {name!r}")
 
 
+class DpCompression(NamedTuple):
+    """Spec for the compressed DP gradient exchange inside the train step:
+    ``mesh`` must carry ``data_axis``; ``cfg`` is the
+    ``parallel.compression.CompressionConfig`` (``use_sketch=False`` expects
+    the resident SUMO bases as the step's ``bases`` argument — see
+    ``core.sumo.sumo_dp_bases``)."""
+    mesh: Any
+    cfg: Any                     # parallel.compression.CompressionConfig
+    data_axis: str = "data"
+
+
 def make_train_step(cfg: ArchConfig, tx, attn_impl: str = "flash",
-                    accum: int = 1) -> Callable:
+                    accum: int = 1, dp: Optional[DpCompression] = None
+                    ) -> Callable:
     """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
 
     accum > 1 splits the batch into `accum` microbatches along dim 0 and
     accumulates grads with a lax.scan — constant memory in accum.
+
+    ``dp`` switches the step to the COMPRESSED data-parallel gradient
+    exchange (ROADMAP item 1): the signature becomes
+    ``train_step(params, opt_state, comp_state, batch, bases)
+    -> (params, opt_state, comp_state, metrics)``. Per-worker gradients are
+    materialized with an EXPLICIT worker axis — the batch reshapes to
+    (n_workers, per_worker, ...) and the loss/backward runs under
+    ``jax.vmap`` with params broadcast, so the gradient stacks come out
+    (n_workers, *shape) with the worker dim sharded over ``data`` and each
+    worker's backward running on its own devices (no cross-``data`` gradient
+    traffic: worker rows are independent). The gradient mean is then
+    replaced by a shard_map that is MANUAL over ``data`` only (every other
+    mesh axis stays automatic, so Megatron-sharded gradient leaves pass
+    through untouched) wrapping ``parallel.compression.exchange_shard`` —
+    compress, ``lax.pmean`` of the r×short payload, decompress, per-worker
+    EF residual into ``comp_state``. ``tx.update`` runs on the replicated
+    mean OUTSIDE the shard_map, so the optimizer's own collective story is
+    untouched (and separately budget-audited). ``bases`` is the replicated
+    resident-basis tree for ``use_sketch=False`` (None under the seeded
+    sketch).
+
+    Why the loss/backward is NOT inside the shard_map: this jaxlib's GSPMD
+    partitioner hard-crashes (``Check failed: sharding.IsManualSubgroup()``)
+    on a ``lax.scan`` whose xs are sharded over an AUTO axis of a
+    partially-manual shard_map — i.e. the transformer block scan over
+    Megatron-sharded stacked weights at model_parallel > 1. The vmapped
+    worker axis expresses the same per-worker computation in fully
+    automatic SPMD, where scan-over-sharded-xs is the long-tested path; the
+    no-full-gradient-collective property this buys is machine-checked by
+    ``analysis.collectives.steady_dp_compressed_budget`` on the compiled
+    step rather than assumed from the program structure.
     """
 
     def loss(p, b):
         return loss_fn(p, cfg, b, attn_impl=attn_impl)
 
-    def train_step(params, opt_state, batch):
+    def loss_and_grads(params, batch):
         if accum == 1:
-            l, grads = jax.value_and_grad(loss)(params, batch)
-        else:
-            micro = jax.tree_util.tree_map(
-                lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
-            )
+            return jax.value_and_grad(loss)(params, batch)
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((accum, x.shape[0] // accum) + x.shape[1:]), batch
+        )
 
-            def body(carry, mb):
-                tot_l, tot_g = carry
-                l, g = jax.value_and_grad(loss)(params, mb)
-                tot_g = jax.tree_util.tree_map(jnp.add, tot_g, g)
-                return (tot_l + l, tot_g), None
+        def body(carry, mb):
+            tot_l, tot_g = carry
+            l, g = jax.value_and_grad(loss)(params, mb)
+            tot_g = jax.tree_util.tree_map(jnp.add, tot_g, g)
+            return (tot_l + l, tot_g), None
 
-            zero_g = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params
-            )
-            (l, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
-            l = l / accum
-            grads = jax.tree_util.tree_map(lambda g: g / accum, grads)
+        zero_g = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+        (l, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zero_g), micro)
+        return l / accum, jax.tree_util.tree_map(lambda g: g / accum, grads)
 
+    def finish(l, grads, params, opt_state):
         updates, new_opt_state = tx.update(grads, opt_state, params)
         new_params = apply_updates(params, updates)
         metrics = {
@@ -122,7 +166,74 @@ def make_train_step(cfg: ArchConfig, tx, attn_impl: str = "flash",
             metrics["telemetry"] = tel
         return new_params, new_opt_state, metrics
 
-    return train_step
+    if dp is None:
+        def train_step(params, opt_state, batch):
+            l, grads = loss_and_grads(params, batch)
+            return finish(l, grads, params, opt_state)
+
+        return train_step
+
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from ..parallel.compression import (
+        CompressionState,
+        exchange_shard,
+        step_bases,
+    )
+
+    axis = dp.data_axis
+    n_workers = int(dp.mesh.shape[axis])
+    auto = frozenset(a for a in dp.mesh.axis_names if a != axis)
+    none_leaf = lambda x: x is None
+    squeeze = lambda t: jax.tree_util.tree_map(
+        lambda x: None if x is None else x[0], t, is_leaf=none_leaf)
+    expand = lambda t: jax.tree_util.tree_map(
+        lambda x: None if x is None else x[None], t, is_leaf=none_leaf)
+
+    def exchange_body(grads, comp_state, bases):
+        # Each shard sees its own worker row: (1, *shape) -> squeeze.
+        local = CompressionState(step=comp_state.step,
+                                 error=squeeze(comp_state.error))
+        mean_g, new_local = exchange_shard(squeeze(grads), local, dp.cfg,
+                                           axis, bases=bases)
+        new_comp = CompressionState(step=new_local.step,
+                                    error=expand(new_local.error))
+        return mean_g, new_comp
+
+    comp_spec = CompressionState(step=P(), error=P(axis))
+    exchange = shard_map(
+        exchange_body, dp.mesh,
+        in_specs=(P(axis), comp_spec, P()),
+        out_specs=(P(), comp_spec),
+        check_rep=False,
+        **({"auto": auto} if auto else {}),
+    )
+
+    def dp_train_step(params, opt_state, comp_state, batch, bases):
+        # Explicit worker axis: (B, ...) -> (W, B/W, ...), loss/backward
+        # vmapped with params broadcast. The worker dim shards over `data`
+        # (the loop enforces global_batch % data == 0), so this is ordinary
+        # data parallelism with the per-worker gradients kept apart instead
+        # of psummed by the partitioner.
+        micro = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_workers, x.shape[0] // n_workers)
+                                + x.shape[1:]), batch)
+        losses, grads = jax.vmap(loss_and_grads, in_axes=(None, 0))(params,
+                                                                    micro)
+        # per-shard means over equal shard sizes -> their mean is the
+        # global per-token mean exactly (one scalar all-reduce).
+        l = jnp.mean(losses)
+        # Effective bases (sketches generated / zero resident Qs
+        # bootstrapped) prepared OUTSIDE the shard_map: replicated
+        # deterministic compute, no collective — see step_bases.
+        eff_bases = step_bases(params, comp_state.step, dp.cfg, bases=bases)
+        grads, new_comp = exchange(grads, comp_state, eff_bases)
+        new_params, new_opt_state, metrics = finish(l, grads, params,
+                                                    opt_state)
+        return new_params, new_opt_state, new_comp, metrics
+
+    return dp_train_step
 
 
 def make_eval_step(cfg: ArchConfig, attn_impl: str = "chunked") -> Callable:

@@ -318,3 +318,62 @@ def test_cross_mesh_checkpoint_round_trip_8dev(tmp_path):
         np.testing.assert_array_equal(np.asarray(u_back[k]),
                                       np.asarray(u_noround[k]),
                                       err_msg=f"round-trip delta {k}")
+
+
+# ---------------------------------------------------------------------------
+# DP-compression comp_state slot: pre-dp leniency + elastic worker axis
+# ---------------------------------------------------------------------------
+
+def _comp_template(n_workers):
+    from repro.parallel import CompressionConfig, init_worker_state
+    grads = {"w": jnp.zeros((128, 16)), "tiny": jnp.zeros((4, 4))}
+    cfg = CompressionConfig(rank=8, min_dim=64)
+    return {"params": grads,
+            "comp_state": init_worker_state(grads, cfg, n_workers)}
+
+
+def test_restore_pre_dp_checkpoint_cold_starts_comp_state(tmp_path):
+    """A checkpoint written WITHOUT dp_compress restores into a dp template:
+    the comp_state slot keeps the template's fresh EF state (zero residuals,
+    step 0) instead of raising — EF is a correction term, not model state —
+    while a genuinely missing PARAM leaf still fails loudly."""
+    state = _comp_template(4)
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(3, {"params": state["params"]})        # pre-dp payload
+    restored, _ = mgr.restore(state)
+    assert int(restored["comp_state"].step) == 0
+    np.testing.assert_array_equal(
+        np.asarray(restored["comp_state"].error["w"]),
+        np.zeros((4, 128, 16), np.float32))
+    with pytest.raises(KeyError):
+        mgr.restore({"params": dict(state["params"], extra=jnp.zeros((2,)))})
+
+
+def test_comp_state_worker_axis_migration_is_sum_preserving(tmp_path):
+    """Elastic DP restore: EF residuals written on W=4 workers restore onto
+    W'=2 with the residual SUM preserved (e'_i = sum_w e_w / W'), so the
+    global correction the next steps apply is unchanged; a non-worker shape
+    mismatch still raises."""
+    state = _comp_template(4)
+    err = jax.random.normal(jax.random.PRNGKey(5), (4, 128, 16))
+    state["comp_state"] = state["comp_state"]._replace(
+        error={"w": err, "tiny": None},
+        step=jnp.asarray(9, jnp.int32))
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(9, state)
+
+    narrow = _comp_template(2)
+    restored, _ = mgr.restore(narrow)
+    got = np.asarray(restored["comp_state"].error["w"])
+    assert got.shape == (2, 128, 16)
+    total = np.asarray(err).sum(0)
+    np.testing.assert_allclose(got.sum(0), total, atol=1e-4)
+    np.testing.assert_allclose(got[0], total / 2, atol=1e-5)
+    assert int(restored["comp_state"].step) == 9
+
+    # same key, mismatched NON-worker dims -> loud failure, not migration
+    bad = _comp_template(4)
+    bad["comp_state"] = bad["comp_state"]._replace(
+        error={"w": jnp.zeros((4, 64, 16)), "tiny": None})
+    with pytest.raises(ValueError, match="worker dim"):
+        mgr.restore(bad)

@@ -1,8 +1,11 @@
 """DP gradient compression: exactness properties, error feedback convergence
-(simulated multi-worker sync), wire-byte ratio."""
+(simulated multi-worker sync), wire-byte ratio, and the regression pins for
+the module's fixed latent bugs (vacuous eligibility, double compression,
+EF-off residual allocation, element-counted ratios)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.parallel.compression import (
     CompressionConfig,
@@ -10,8 +13,11 @@ from repro.parallel.compression import (
     compress_leaf,
     compression_ratio,
     decompress_leaf,
+    dp_wire_plan,
+    eligible,
     finalize,
     init_state,
+    init_worker_state,
 )
 
 
@@ -100,3 +106,110 @@ def test_uncompressed_leaves_pass_through():
     p, m, treedef = compress_grads(grads, state, cfg)
     g, _ = finalize(p, m, treedef, state, cfg)
     np.testing.assert_array_equal(np.asarray(g["w"]), np.ones((64, 32)))
+
+
+# ---------------------------------------------------------------------------
+# Regression pins for the fixed latent bugs
+# ---------------------------------------------------------------------------
+
+def test_eligibility_is_not_vacuous():
+    """Bugfix 1: the old ``max(leaf.shape) >= 1`` was true for EVERYTHING.
+    The shared predicate must actually discriminate: min_dim applies to the
+    CANONICAL long dim (max of the trailing two), ndim < 2 is exact-path,
+    and None is never eligible."""
+    cfg = CompressionConfig(rank=8, min_dim=256)
+    assert not eligible(jnp.zeros((16, 16)), cfg)
+    assert not eligible(jnp.zeros((512,)), cfg)         # 1D, however long
+    assert not eligible(None, cfg)
+    assert eligible(jnp.zeros((300, 8)), cfg)
+    assert eligible(jnp.zeros((8, 300)), cfg)           # transposed view
+    assert eligible(jnp.zeros((4, 300, 8)), cfg)        # batch dims allowed
+    assert not eligible(jnp.zeros((300, 4, 8)), cfg)    # long dim is a batch
+
+
+def test_state_grads_divergence_fails_loudly():
+    """Bugfix 1 (second half): eligibility used to live implicitly in
+    ``init_state``'s error tree, so a grads/state divergence silently
+    mis-decided leaves. Now any mismatch raises."""
+    cfg = CompressionConfig(rank=8, min_dim=64)
+    grads = {"a": jnp.ones((128, 16)), "b": jnp.ones((8, 8))}
+    state = init_state(grads, cfg)
+    # different tree structure
+    with pytest.raises(ValueError, match="different template"):
+        compress_grads({"a": jnp.ones((128, 16))}, state, cfg)
+    # same structure, EF-slot disagreement (state built under a different cfg)
+    with pytest.raises(ValueError, match="EF residual"):
+        compress_grads(
+            grads, state, CompressionConfig(rank=8, min_dim=64,
+                                            error_feedback=False))
+    # same structure, residual of the wrong shape
+    bad = state._replace(error={"a": jnp.zeros((64, 16)), "b": None})
+    with pytest.raises(ValueError, match="shape"):
+        compress_grads(grads, bad, cfg)
+
+
+def test_single_compression_per_leaf_per_step(monkeypatch):
+    """Bugfix 2: ``finalize`` used to RE-compress each gradient to rebuild
+    the EF residual (and ferried the full-size g32 through meta).
+    ``compress_leaf`` must run exactly once per eligible leaf per step, and
+    meta must not carry a full-size gradient copy."""
+    import repro.parallel.compression as comp
+
+    calls = []
+    real = comp.compress_leaf
+    monkeypatch.setattr(
+        comp, "compress_leaf",
+        lambda G, key, r, Q=None: calls.append(G.shape) or real(G, key, r, Q=Q))
+
+    cfg = CompressionConfig(rank=8, min_dim=64)
+    grads = {"a": jnp.ones((128, 16)), "b": jnp.ones((96, 8)),
+             "tiny": jnp.ones((4, 4))}
+    state = init_state(grads, cfg)
+    p, m, treedef = comp.compress_grads(grads, state, cfg)
+    comp.finalize(p, m, treedef, state, cfg)
+    assert calls == [(128, 16), (96, 8)]     # once per eligible leaf, total
+    # meta's only full-size array is the NEXT EF residual, not a g32 copy
+    for entry in m:
+        if entry is None:
+            continue
+        shape, _, err = entry
+        assert err.shape == shape            # exactly one full-size buffer
+
+
+def test_ef_off_stores_none_not_zeros():
+    """Bugfix 3: error_feedback=False used to allocate full-size zero
+    residuals (a dead full-model-size buffer donated through every step).
+    Now the error slots are None — same TREE STRUCTURE, no storage — in
+    both the single- and the worker-stacked init, and stay None through a
+    step."""
+    cfg = CompressionConfig(rank=8, min_dim=64, error_feedback=False)
+    grads = {"a": jnp.ones((128, 16)), "tiny": jnp.ones((4, 4))}
+    for st in (init_state(grads, cfg), init_worker_state(grads, cfg, 4)):
+        assert all(e is None for e in jax.tree_util.tree_leaves(
+            st.error, is_leaf=lambda x: x is None))
+        # structure still mirrors grads (treedef-compatible), so shard_map
+        # specs and donation line up leaf-for-leaf
+        jax.tree_util.tree_structure(grads).flatten_up_to(st.error)
+    state = init_state(grads, cfg)
+    p, m, treedef = compress_grads(grads, state, cfg)
+    _, new_state = finalize(p, m, treedef, state, cfg)
+    assert all(e is None for e in jax.tree_util.tree_leaves(
+        new_state.error, is_leaf=lambda x: x is None))
+
+
+def test_compression_ratio_is_byte_accurate():
+    """Bugfix 4: the ratio used to count ELEMENTS, so bf16 grads were
+    charged as if fp32. The payload is always fp32 (4 B) while an exact
+    leaf ships in its own dtype — a bf16 compressed leaf's true wire ratio
+    is 2× the element ratio."""
+    cfg = CompressionConfig(rank=16, min_dim=128)
+    big16 = {"w": jnp.zeros((1024, 64), jnp.bfloat16)}
+    # fp32 payload 16*64*4 B over bf16 full 1024*64*2 B
+    assert compression_ratio(big16, cfg) == pytest.approx(
+        (16 * 64 * 4) / (1024 * 64 * 2))
+    big32 = {"w": jnp.zeros((1024, 64), jnp.float32)}
+    assert compression_ratio(big32, cfg) == pytest.approx(16 / 1024)
+    # exact leaves keep their own dtype on the wire
+    plan = dp_wire_plan({"t": jnp.zeros((8, 8), jnp.bfloat16)}, cfg)
+    assert plan[0].payload_bytes == 8 * 8 * 2
+    assert not plan[0].eligible

@@ -12,8 +12,11 @@
 # bucket path, the 2D (data=2, model=4) mesh with model-sharded matrices and
 # the distributed rSVD (ragged edge-padded long dims included, plus the
 # end-to-end --model-parallel train wiring), the cross-mesh-shape
-# checkpoint round trip ((8,1) <-> (2,4)), and the static-analysis sharded
-# suite (inertness proofs + the concatenate-seam budget regression). Pass 3
+# checkpoint round trip ((8,1) <-> (2,4)), the compressed DP gradient
+# exchange (pmean parity, EF on the real collective, the steady-dp wire
+# budget on compiled HLO, end-to-end --dp-compress), and the static-analysis
+# sharded suite (inertness proofs + the concatenate-seam budget regression).
+# Pass 3
 # is the telemetry smoke: a short probes+sink+controller train run must emit
 # a non-empty, schema-valid JSONL stream (tools/telemetry_smoke.py). Pass 4
 # is the static lint (ANALYSIS.md): both lanes of tools/lint_static.py —
@@ -35,7 +38,7 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
 XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
   PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
   python -m pytest -x -q tests/test_sumo_sharded.py tests/test_rsvd_sharded.py \
-  tests/test_analysis_sharded.py \
+  tests/test_analysis_sharded.py tests/test_compression_sharded.py \
   "tests/test_checkpoint.py::test_cross_mesh_checkpoint_round_trip_8dev" \
   -k "not subprocess"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python tools/telemetry_smoke.py
