@@ -1,0 +1,331 @@
+"""Open-loop serving benchmark: continuous batching vs static batches.
+
+Requests arrive by a Poisson process (open loop: arrivals don't wait for the
+server) with mixed prompt and output lengths, and the SAME arrival trace is
+served twice — by ``ContinuousEngine`` (paged KV / slot state, per-step
+join/evict) and by ``StaticEngine`` (take up to a batch of arrived requests,
+pad to a fixed shape, ride until the slowest member finishes). Reported per
+engine: generated-token throughput over the makespan, TTFT / end-to-end /
+inter-token latency percentiles. The arrival rate is calibrated from the
+continuous engine's measured steady decode-step time so the run is loaded
+but stable on whatever machine executes it.
+
+Emits ``BENCH_serving.json`` (schema ``serving-bench-v1``, see SERVING.md).
+The continuous runs execute under ``analysis.recompile.CompileWatcher``:
+the audit result is part of the JSON, and ``--smoke`` exits non-zero unless
+the document validates AND the decode step compiled exactly once per arch.
+
+    PYTHONPATH=src python benchmarks/serving.py --out BENCH_serving.json
+    PYTHONPATH=src python benchmarks/serving.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.analysis.recompile import CompileWatcher, audit_recompiles
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import (
+    SERVE_DECODE_FN,
+    ContinuousConfig,
+    ContinuousEngine,
+    ServeConfig,
+    StaticEngine,
+    bucket_len,
+    serving_kind,
+)
+
+SCHEMA = "serving-bench-v1"
+DEFAULT_ARCHS = ("smollm-360m", "xlstm-1.3b", "zamba2-7b")
+ENGINE_METRIC_KEYS = (
+    "n_requests", "total_tokens", "makespan_s", "tok_per_s",
+    "ttft_p50_s", "ttft_p95_s", "e2e_p50_s", "e2e_p95_s",
+    "tpt_p50_s", "tpt_p95_s",
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """One open-loop arrival trace (shared by both engines)."""
+    arrivals: np.ndarray        # (n,) seconds from trace start, sorted
+    prompts: List[np.ndarray]   # per-request token ids
+    max_new: List[int]
+    rate: float                 # offered requests/s
+
+
+def make_trace(n: int, rate: float, vocab: int, prompt_lens, new_tokens,
+               seed: int) -> Trace:
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=n))
+    lo_p, hi_p = prompt_lens
+    lo_n, hi_n = new_tokens
+    prompts = [rng.integers(1, vocab, size=int(rng.integers(lo_p, hi_p + 1)))
+               .astype(np.int32) for _ in range(n)]
+    max_new = [int(rng.integers(lo_n, hi_n + 1)) for _ in range(n)]
+    return Trace(arrivals=arrivals, prompts=prompts, max_new=max_new,
+                 rate=rate)
+
+
+def _percentiles(xs: List[float]):
+    a = np.asarray(xs, np.float64)
+    return float(np.percentile(a, 50)), float(np.percentile(a, 95))
+
+
+def _metrics(reqs: List[dict], makespan: float) -> Dict[str, float]:
+    """reqs: per-request {arrival, ttft, finish, token_times} (absolute s)."""
+    total = sum(len(r["token_times"]) for r in reqs)
+    ttft_p50, ttft_p95 = _percentiles([r["ttft"] - r["arrival"] for r in reqs])
+    e2e_p50, e2e_p95 = _percentiles([r["finish"] - r["arrival"] for r in reqs])
+    deltas: List[float] = []
+    for r in reqs:
+        deltas.extend(np.diff(r["token_times"]).tolist())
+    tpt_p50, tpt_p95 = _percentiles(deltas) if deltas else (0.0, 0.0)
+    return {
+        "n_requests": len(reqs), "total_tokens": total,
+        "makespan_s": makespan,
+        "tok_per_s": total / makespan if makespan > 0 else 0.0,
+        "ttft_p50_s": ttft_p50, "ttft_p95_s": ttft_p95,
+        "e2e_p50_s": e2e_p50, "e2e_p95_s": e2e_p95,
+        "tpt_p50_s": tpt_p50, "tpt_p95_s": tpt_p95,
+    }
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+def _warmup_continuous(eng: ContinuousEngine) -> float:
+    """Compile every admissible prefill bucket and the decode step; returns
+    the measured steady decode-step seconds (slots saturated)."""
+    bs = eng.ccfg.block_size
+    buckets = list(range(bs, bucket_len(eng.ccfg.max_prompt_len, bs) + 1, bs))
+    for b in buckets:
+        eng.submit(np.ones(b, np.int32), max_new_tokens=1)
+    eng.run()
+    # saturate the slots and time steady decode
+    for _ in range(eng.ccfg.num_slots):
+        eng.submit(np.ones(buckets[0], np.int32),
+                   max_new_tokens=eng.ccfg.max_new_cap)
+    eng.step()
+    t0 = time.perf_counter()
+    n = 0
+    while eng.busy and n < 16:
+        eng.step()
+        n += 1
+    step_t = (time.perf_counter() - t0) / max(n, 1)
+    while eng.busy:
+        eng.step()
+    eng.results.clear()
+    eng.requests.clear()
+    return step_t
+
+
+def run_continuous(eng: ContinuousEngine, trace: Trace) -> Dict[str, float]:
+    n = len(trace.prompts)
+    i = 0
+    t_start = time.perf_counter()
+    while i < n or eng.busy:
+        now = time.perf_counter() - t_start
+        while i < n and trace.arrivals[i] <= now:
+            eng.submit(trace.prompts[i], max_new_tokens=trace.max_new[i],
+                       arrival=t_start + float(trace.arrivals[i]))
+            i += 1
+        if not eng.step() and i < n:
+            wait = trace.arrivals[i] - (time.perf_counter() - t_start)
+            if wait > 0:
+                time.sleep(wait)
+    makespan = time.perf_counter() - t_start
+    reqs = [{"arrival": r.arrival, "ttft": r.first_token_time,
+             "finish": r.finish_time, "token_times": r.token_times}
+            for r in eng.requests.values()]
+    assert all(r["ttft"] is not None and r["finish"] is not None for r in reqs)
+    return _metrics(reqs, makespan)
+
+
+def run_static(cfg, params, trace: Trace, batch: int, pad_len: int,
+               max_new_cap: int) -> Dict[str, float]:
+    """Static baseline on the same trace: whenever the engine is free, take
+    up to ``batch`` ARRIVED requests FIFO, left-pad prompts to ``pad_len``,
+    fill empty rows with dummies, decode until the slowest member is done."""
+    eng = StaticEngine(cfg, params, ServeConfig(max_new_tokens=max_new_cap))
+    # warmup batch compiling BOTH prefill and decode so compilation doesn't
+    # pollute the measured trace (stop after two tokens = one decode step)
+    eng.generate(np.zeros((batch, pad_len), np.int32),
+                 stop_counts=[2] * batch)
+
+    n = len(trace.prompts)
+    i = 0
+    done: List[dict] = []
+    t_start = time.perf_counter()
+    while i < n:
+        now = time.perf_counter() - t_start
+        if trace.arrivals[i] > now:
+            time.sleep(trace.arrivals[i] - now)
+            continue
+        now = time.perf_counter() - t_start
+        members = []
+        while i < n and trace.arrivals[i] <= now and len(members) < batch:
+            members.append(i)
+            i += 1
+        prompts = np.zeros((batch, pad_len), np.int32)
+        stop = [1] * batch
+        recs = []
+        for row, j in enumerate(members):
+            p = trace.prompts[j]
+            prompts[row, pad_len - len(p):] = p
+            stop[row] = trace.max_new[j]
+            recs.append({"arrival": t_start + float(trace.arrivals[j]),
+                         "budget": trace.max_new[j], "token_times": []})
+
+        def on_token(step, tok, recs=recs):
+            t = time.perf_counter()
+            for r in recs:
+                if step < r["budget"]:
+                    r["token_times"].append(t)
+
+        eng.generate(prompts, on_token=on_token, stop_counts=stop)
+        for r in recs:
+            r["ttft"] = r["token_times"][0]
+            r["finish"] = r["token_times"][-1]
+            done.append(r)
+    makespan = time.perf_counter() - t_start
+    return _metrics(done, makespan)
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+def validate_bench(doc: dict) -> None:
+    """Raise ValueError unless ``doc`` is a valid serving-bench-v1 report."""
+    if doc.get("schema") != SCHEMA:
+        raise ValueError(f"schema must be {SCHEMA!r}, got {doc.get('schema')!r}")
+    for key in ("smoke", "archs"):
+        if key not in doc:
+            raise ValueError(f"missing top-level key {key!r}")
+    if not doc["archs"]:
+        raise ValueError("no archs in report")
+    for arch, ent in doc["archs"].items():
+        for key in ("family", "kind", "trace", "engines", "recompile_audit",
+                    "continuous_wins"):
+            if key not in ent:
+                raise ValueError(f"{arch}: missing key {key!r}")
+        if ent["kind"] not in ("paged", "slot"):
+            raise ValueError(f"{arch}: bad kind {ent['kind']!r}")
+        for eng in ("continuous", "static"):
+            m = ent["engines"].get(eng)
+            if m is None:
+                raise ValueError(f"{arch}: missing engine {eng!r}")
+            for mk in ENGINE_METRIC_KEYS:
+                v = m.get(mk)
+                if not isinstance(v, (int, float)) or isinstance(v, bool):
+                    raise ValueError(f"{arch}/{eng}: metric {mk!r} bad: {v!r}")
+        audit = ent["recompile_audit"]
+        if not isinstance(audit.get("ok"), bool) or \
+                not isinstance(audit.get("decode_compiles"), int):
+            raise ValueError(f"{arch}: bad recompile_audit {audit!r}")
+
+
+def bench_arch(arch: str, smoke: bool, seed: int) -> dict:
+    cfg = get_smoke_config(arch)
+    kind = serving_kind(cfg)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+
+    num_slots = 4
+    block = 4
+    prompt_lens = (4, 20)
+    new_tokens = (4, 24) if not smoke else (2, 6)
+    n_req = 8 if smoke else 48
+    max_blocks_per_req = -(-(bucket_len(prompt_lens[1], block)
+                             + new_tokens[1]) // block)
+    ccfg = ContinuousConfig(
+        num_slots=num_slots, block_size=block,
+        n_blocks=1 + num_slots * max_blocks_per_req,
+        max_prompt_len=prompt_lens[1], max_new_cap=new_tokens[1],
+        seed=seed)
+    if kind == "paged" and cfg.sliding_window is not None:
+        ccfg.max_prompt_len = min(ccfg.max_prompt_len, cfg.sliding_window)
+
+    with CompileWatcher(fn_name=SERVE_DECODE_FN) as watcher:
+        eng = ContinuousEngine(cfg, params, ccfg)
+        step_t = _warmup_continuous(eng)
+        # offered load: ~80% of the continuous engine's token capacity
+        mean_new = (new_tokens[0] + new_tokens[1]) / 2 + 1
+        rate = 0.8 * num_slots / (mean_new * max(step_t, 1e-4))
+        trace = make_trace(n_req, rate, cfg.vocab, prompt_lens, new_tokens,
+                           seed + 1)
+        cont = run_continuous(eng, trace)
+    audit = audit_recompiles(watcher.events, fn_name=SERVE_DECODE_FN,
+                             warmup_through=0)
+
+    pad_len = bucket_len(max(len(p) for p in trace.prompts), block)
+    static = run_static(cfg, params, trace, batch=num_slots, pad_len=pad_len,
+                        max_new_cap=new_tokens[1])
+
+    wins = (cont["tok_per_s"] > static["tok_per_s"]
+            and cont["e2e_p95_s"] <= static["e2e_p95_s"])
+    return {
+        "family": cfg.family, "kind": kind,
+        "trace": {"n_requests": n_req, "rate_req_s": rate,
+                  "prompt_lens": list(prompt_lens),
+                  "new_tokens": list(new_tokens), "seed": seed,
+                  "steady_decode_step_s": step_t},
+        "engines": {"continuous": cont, "static": static},
+        "recompile_audit": {"ok": bool(audit.ok),
+                            "decode_compiles": len(audit.compiles)},
+        "continuous_wins": wins,
+    }
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--archs", nargs="+", default=list(DEFAULT_ARCHS))
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny traces; exit non-zero unless the JSON "
+                         "validates and decode compiled exactly once")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args(argv)
+
+    archs = args.archs if not args.smoke else ["smollm-360m", "xlstm-1.3b"]
+    doc = {"schema": SCHEMA, "smoke": bool(args.smoke), "archs": {}}
+    for arch in archs:
+        print(f"== {arch}")
+        ent = bench_arch(arch, smoke=args.smoke, seed=args.seed)
+        doc["archs"][arch] = ent
+        c, s = ent["engines"]["continuous"], ent["engines"]["static"]
+        print(f"   continuous: {c['tok_per_s']:8.1f} tok/s  "
+              f"ttft p95 {c['ttft_p95_s'] * 1e3:7.1f} ms  "
+              f"e2e p95 {c['e2e_p95_s'] * 1e3:7.1f} ms")
+        print(f"   static:     {s['tok_per_s']:8.1f} tok/s  "
+              f"ttft p95 {s['ttft_p95_s'] * 1e3:7.1f} ms  "
+              f"e2e p95 {s['e2e_p95_s'] * 1e3:7.1f} ms")
+        print(f"   continuous_wins={ent['continuous_wins']}  "
+              f"decode_compiles={ent['recompile_audit']['decode_compiles']} "
+              f"audit_ok={ent['recompile_audit']['ok']}")
+
+    validate_bench(doc)
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+    print(f"wrote {args.out}")
+
+    if args.smoke:
+        bad = [a for a, e in doc["archs"].items()
+               if not e["recompile_audit"]["ok"]
+               or e["recompile_audit"]["decode_compiles"] != 1]
+        if bad:
+            print(f"SMOKE FAIL: off-boundary/extra decode compiles: {bad}")
+            return 1
+        print("SMOKE OK: schema valid, one decode compile per arch")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

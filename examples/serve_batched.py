@@ -1,32 +1,60 @@
-"""Batched serving across architecture families: parallel prefill (including
-recurrent-state extraction for the SSM/hybrid archs) + KV/state-cache decode.
+"""Serving across architecture families with the continuous-batching engine
+(paged KV for attention archs, slot-indexed state for recurrent archs) —
+``--static`` runs the original padded-batch engine instead.
 
     PYTHONPATH=src python examples/serve_batched.py
+    PYTHONPATH=src python examples/serve_batched.py --static
 """
+import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_smoke_config
 from repro.models import init_params
-from repro.serve import Engine, ServeConfig
+from repro.serve import (ContinuousConfig, ContinuousEngine, ServeConfig,
+                         StaticEngine)
 
 ARCHS = ["qwen3-4b", "mixtral-8x22b", "zamba2-7b", "xlstm-1.3b"]
 
 
 def main():
-    key = jax.random.PRNGKey(0)
-    for arch_id in ARCHS:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--static", action="store_true")
+    args = ap.parse_args()
+
+    root = jax.random.PRNGKey(0)
+    for i, arch_id in enumerate(ARCHS):
+        # fold the arch index in, then split: every arch gets its own params
+        # AND its own prompts (reusing one key for both init_params and the
+        # prompts — and across archs — would correlate weights with inputs)
+        arch_key = jax.random.fold_in(root, i)
+        param_key, prompt_key = jax.random.split(arch_key)
         cfg = get_smoke_config(arch_id)
-        params = init_params(cfg, key)
-        eng = Engine(cfg, params, ServeConfig(max_new_tokens=16, temperature=0.8))
-        prompts = jax.random.randint(key, (4, 12), 0, cfg.vocab)
+        params = init_params(cfg, param_key)
+        prompts = jax.random.randint(prompt_key, (4, 12), 1, cfg.vocab)
+
         t0 = time.perf_counter()
-        out = eng.generate(prompts)
+        if args.static:
+            eng = StaticEngine(cfg, params,
+                               ServeConfig(max_new_tokens=16, temperature=0.8))
+            out = eng.generate(prompts)
+            sample = out[0][:8].tolist()
+            shape = tuple(out.shape)
+        else:
+            ceng = ContinuousEngine(cfg, params, ContinuousConfig(
+                num_slots=3, block_size=4, n_blocks=64,
+                max_prompt_len=12, max_new_cap=16))
+            for p in np.asarray(prompts):
+                ceng.submit(p, max_new_tokens=16, temperature=0.8)
+            results = ceng.run()
+            sample = results[0][:8].tolist()
+            shape = (len(results), 16)
         dt = time.perf_counter() - t0
-        print(f"{arch_id:22s} [{cfg.family:6s}] generated {out.shape} "
-              f"in {dt:5.1f}s  sample={out[0][:8].tolist()}")
+        mode = "static" if args.static else "continuous"
+        print(f"{arch_id:22s} [{cfg.family:6s}] {mode} generated {shape} "
+              f"in {dt:5.1f}s  sample={sample}")
 
 
 if __name__ == "__main__":

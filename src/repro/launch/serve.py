@@ -1,7 +1,14 @@
-"""Serving launcher: batched generation with the KV/recurrent-cache engine.
+"""Serving launcher: continuous batching by default, static padded batches
+with ``--static`` (the original demo path).
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
-        --batch 4 --prompt-len 16 --max-new 32
+        --requests 8 --max-new 32
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \
+        --static --batch 4 --prompt-len 16
+
+With ``--telemetry OUT.jsonl`` the continuous engine streams per-request
+records (queued / prefill / TTFT / finish / decode_step, with queue-depth
+and block-pool gauges) through ``telemetry.TelemetrySink`` — see SERVING.md.
 """
 from __future__ import annotations
 
@@ -9,21 +16,31 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from ..configs import ARCH_IDS, get_config, get_smoke_config
 from ..models import init_params
-from ..serve import Engine, ServeConfig
+from ..serve import ContinuousConfig, ContinuousEngine, ServeConfig, StaticEngine
+from ..telemetry import JsonlWriter, TelemetrySink
+from ..telemetry.serving import serving_stats_to_records, validate_serving_record
 
 
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", choices=list(ARCH_IDS), default="smollm-360m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--static", action="store_true",
+                    help="static padded-batch engine instead of continuous")
+    ap.add_argument("--batch", type=int, default=4,
+                    help="batch rows (static) / decode slots (continuous)")
     ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of requests (continuous)")
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--block-size", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--telemetry", default=None, metavar="OUT.jsonl",
+                    help="stream serving records to this JSONL (continuous)")
     args = ap.parse_args(argv)
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
@@ -31,17 +48,48 @@ def main(argv=None) -> int:
         print(f"{cfg.name} is encoder-only — no decode path")
         return 1
     params = init_params(cfg, jax.random.PRNGKey(0))
-    eng = Engine(cfg, params, ServeConfig(
-        max_new_tokens=args.max_new, temperature=args.temperature))
-    key = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab)
+
+    if args.static:
+        eng = StaticEngine(cfg, params, ServeConfig(
+            max_new_tokens=args.max_new, temperature=args.temperature))
+        key = jax.random.PRNGKey(1)
+        prompts = jax.random.randint(
+            key, (args.batch, args.prompt_len), 0, cfg.vocab)
+        t0 = time.perf_counter()
+        out = eng.generate(prompts)
+        dt = time.perf_counter() - t0
+        print(f"static: generated {out.shape} in {dt:.2f}s "
+              f"({out.size / dt:.1f} tok/s incl. compile)")
+        print("sample:", out[0][:16].tolist())
+        return 0
+
+    sink = None
+    if args.telemetry:
+        sink = TelemetrySink(writers=[JsonlWriter(args.telemetry)],
+                             to_records=serving_stats_to_records,
+                             validate_fn=validate_serving_record)
+    max_blocks = -(-(args.prompt_len + args.max_new) // args.block_size) + 1
+    ccfg = ContinuousConfig(
+        num_slots=args.batch, block_size=args.block_size,
+        n_blocks=1 + args.batch * max_blocks,
+        max_prompt_len=args.prompt_len, max_new_cap=args.max_new)
+    eng = ContinuousEngine(cfg, params, ccfg, sink=sink)
+    rng = np.random.default_rng(1)
     t0 = time.perf_counter()
-    out = eng.generate(prompts)
+    for _ in range(args.requests):
+        eng.submit(rng.integers(1, cfg.vocab,
+                                size=int(rng.integers(1, args.prompt_len + 1))),
+                   max_new_tokens=args.max_new,
+                   temperature=args.temperature)
+    results = eng.run()
     dt = time.perf_counter() - t0
-    n_tok = out.size
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({n_tok / dt:.1f} tok/s incl. compile)")
-    print("sample:", out[0][:16].tolist())
+    n_tok = sum(len(v) for v in results.values())
+    print(f"continuous: served {len(results)} requests, {n_tok} tokens in "
+          f"{dt:.2f}s ({n_tok / dt:.1f} tok/s incl. compile)")
+    print("sample:", results[0][:16].tolist())
+    if sink is not None:
+        sink.close()
+        print(f"telemetry: {sink.records_written} records -> {args.telemetry}")
     return 0
 
 

@@ -5,14 +5,20 @@ from .model import (
     forward_hidden,
     forward_logits,
     init_decode_cache,
+    init_kv_pool,
     init_params,
     input_specs,
     loss_fn,
+    paged_decode_step,
     prefill,
+    slot_decode_step,
+    write_prefill_blocks,
 )
 
 __all__ = [
     "init_params", "forward_hidden", "forward_logits", "loss_fn",
     "init_decode_cache", "decode_step", "prefill",
+    "init_kv_pool", "paged_decode_step", "slot_decode_step",
+    "write_prefill_blocks",
     "input_specs", "decode_cache_specs",
 ]

@@ -88,6 +88,50 @@ def prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
     return tfm.prefill(params, cfg, batch, cache_len, attn_impl)
 
 
+# -- continuous-batching serving (repro.serve) ------------------------------
+#
+# Attention families decode against a paged block pool (per-slot block
+# tables, per-slot lengths); recurrent/hybrid families decode slot-indexed
+# state with per-slot lengths. Both keep the compiled shape fixed while
+# requests join and leave between steps.
+
+def _is_recurrent(cfg: ArchConfig) -> bool:
+    return cfg.family == "hybrid" or (cfg.family == "ssm" and cfg.xlstm is not None)
+
+
+def init_kv_pool(cfg: ArchConfig, n_blocks: int, block_size: int):
+    if _is_recurrent(cfg):
+        raise ValueError(f"{cfg.name}: recurrent families use init_decode_cache "
+                         "slot state, not a paged KV pool")
+    return tfm.init_kv_pool(cfg, n_blocks, block_size)
+
+
+def write_prefill_blocks(k_pool, v_pool, k, v, block_ids):
+    return tfm.write_prefill_blocks(k_pool, v_pool, k, v, block_ids)
+
+
+def paged_decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
+                      k_pool, v_pool, tables, lengths):
+    if _is_recurrent(cfg):
+        raise ValueError(f"{cfg.name}: recurrent families use slot_decode_step")
+    return tfm.paged_decode_step(params, cfg, token, k_pool, v_pool,
+                                 tables, lengths)
+
+
+def slot_decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache,
+                     lengths: jnp.ndarray):
+    """Per-slot-length decode for the O(1)-state families. ``token`` is
+    (S, 1) int32, ``lengths`` (S,) int32. xLSTM state is position-free, so
+    its stock decode_step serves unchanged; zamba2 needs per-slot RoPE
+    positions and ring offsets for its shared-attention window."""
+    if cfg.family == "hybrid":
+        return zb.slot_decode_step(params, cfg, token, cache, lengths)
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        del lengths                     # recurrence is position-free
+        return xl.decode_step(params, cfg, token, cache)
+    raise ValueError(f"{cfg.name}: attention families use paged_decode_step")
+
+
 # ---------------------------------------------------------------------------
 # ShapeDtypeStruct stand-ins for the dry-run (no allocation)
 # ---------------------------------------------------------------------------

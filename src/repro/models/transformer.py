@@ -259,6 +259,84 @@ def prefill(params, cfg: ArchConfig, batch: dict, cache_len: int,
     return logits, cache
 
 
+# ---------------------------------------------------------------------------
+# paged KV-cache serving (serve/: continuous batching)
+# ---------------------------------------------------------------------------
+
+def init_kv_pool(cfg: ArchConfig, n_blocks: int, block_size: int):
+    """Shared K/V block pools: (n_layers, n_blocks, block_size, KV, hd).
+    Block 0 is the reserved null block (serve.kv_cache) — free slots point
+    their whole table at it so their writes never touch a live request."""
+    shape = (cfg.n_layers, n_blocks, block_size, cfg.n_kv_heads, cfg.hd)
+    dt = dtype_of(cfg)
+    return jnp.zeros(shape, dt), jnp.zeros(shape, dt)
+
+
+def write_prefill_blocks(k_pool, v_pool, k, v, block_ids):
+    """Scatter one request's prefilled K/V (n_layers, 1, Lb, KV, hd) into its
+    freshly allocated pool blocks. Lb must be a whole number of blocks (the
+    engine buckets prompts to block multiples)."""
+    nL, _, Lb, KV, hd = k.shape
+    bs = k_pool.shape[2]
+    nb = block_ids.shape[0]
+    kb = k[:, 0].reshape(nL, nb, bs, KV, hd)
+    vb = v[:, 0].reshape(nL, nb, bs, KV, hd)
+    return k_pool.at[:, block_ids].set(kb), v_pool.at[:, block_ids].set(vb)
+
+
+def paged_decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
+                      k_pool, v_pool, tables, lengths):
+    """One decode step for S batch slots against the paged KV pool.
+
+    token: (S,) int32 — current input token per slot.
+    k_pool/v_pool: (nL, n_blocks, bs, KV, hd) shared block pools.
+    tables: (S, max_blocks) int32 — logical block j of slot s lives in
+        physical block ``tables[s, j]`` (0 = null block for free slots and
+        unallocated tail entries).
+    lengths: (S,) int32 — per-slot context length (tokens already cached).
+
+    Per layer: the new token's K/V is scattered to block
+    ``tables[s, lengths[s] // bs]`` offset ``lengths[s] % bs``, then the
+    slot's blocks are gathered in logical order and masked decode attention
+    runs against them with the slot's own length and RoPE position — mixed
+    lengths, joins and evictions are pure data, the compiled shape never
+    changes. Returns (logits (S, V) fp32, k_pool, v_pool).
+    """
+    S = token.shape[0]
+    bs = k_pool.shape[2]
+    n_ctx = tables.shape[1] * bs
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[token[:, None]]       # (S, 1, d)
+    pos = lengths[:, None]                                      # (S, 1)
+    blk = jnp.take_along_axis(tables, (lengths // bs)[:, None], axis=1)[:, 0]
+    off = lengths % bs
+    att_len = (lengths + 1)[:, None, None, None]                # (S,1,1,1)
+
+    def body(x, layer):
+        bp, kp, vp = layer
+        h = apply_norm(bp["attn_norm"], x, cfg)
+        q, k, v = attn_qkv(bp["attn"], h, pos, cfg)             # k: (S,1,KV,hd)
+        kp = kp.at[blk, off].set(k[:, 0])
+        vp = vp.at[blk, off].set(v[:, 0])
+        k_ctx = kp[tables].reshape(S, n_ctx, cfg.n_kv_heads, cfg.hd)
+        v_ctx = vp[tables].reshape(S, n_ctx, cfg.n_kv_heads, cfg.hd)
+        o = decode_attention(q, k_ctx, v_ctx, att_len,
+                             sliding_window=cfg.sliding_window)
+        o = o.reshape(S, 1, cfg.n_heads * cfg.hd) @ bp["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        h = apply_norm(bp["mlp_norm"], x, cfg)
+        if "moe" in bp:
+            y, _ = apply_moe(bp["moe"], h, cfg)
+        else:
+            y = apply_mlp(bp["mlp"], h, cfg)
+        return x + y, (kp, vp)
+
+    x, (kps, vps) = jax.lax.scan(body, x, (params["blocks"], k_pool, v_pool))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x.astype(jnp.float32) @ head_matrix(params, cfg).astype(jnp.float32)
+    return logits[:, 0], kps, vps
+
+
 def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache: TransformerCache):
     """One autoregressive step. token: (B, 1) int32. Returns (logits, cache).
 

@@ -249,3 +249,58 @@ def decode_step(params, cfg: ArchConfig, token: jnp.ndarray, cache: ZambaCache):
         mamba_groups=g_mc, mamba_tail=tail_mc,
         attn_k=ks, attn_v=vs, length=cache.length + 1,
     )
+
+
+def slot_decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
+                     cache: ZambaCache, lengths: jnp.ndarray):
+    """Continuous-batching variant of ``decode_step``: each batch slot
+    carries its OWN context length ``lengths[s]`` (RoPE position, ring
+    write offset and attention mask are all per-slot), so mixed-progress
+    requests can share one fixed-shape compiled step. The Mamba states are
+    O(1) and need no length at all; only the shared-attention ring cares.
+    ``cache.length`` is ignored (the serving engine tracks lengths
+    host-side) and returned incremented for interface compatibility."""
+    B = token.shape[0]
+    dt = dtype_of(cfg)
+    x = params["embed_tokens"].astype(dt)[token]          # (B, 1, d)
+    sp = params["shared_attn"]
+    S = cache.attn_k.shape[2]
+    pos = lengths[:, None]                                # (B, 1)
+    write_at = lengths % S                                # (B,)
+    rows = jnp.arange(B)
+    att_len = (lengths + 1)[:, None, None, None]          # (B,1,1,1)
+
+    def inner(x, layer):
+        bp, mc = layer
+        h = apply_norm(bp["norm"], x, cfg)
+        y, mc_new = decode_mamba2(bp["mamba"], h, mc, cfg)
+        return x + y, mc_new
+
+    def group(x, layer):
+        gp, g_mc, k_cache, v_cache = layer
+        x, mc_new = jax.lax.scan(inner, x, (gp, g_mc))
+        h = apply_norm(sp["attn_norm"], x, cfg)
+        q, k, v = attn_qkv(sp["attn"], h, pos, cfg)
+        k_cache = k_cache.at[rows, write_at].set(k[:, 0])
+        v_cache = v_cache.at[rows, write_at].set(v[:, 0])
+        o = decode_attention(q, k_cache, v_cache, att_len,
+                             sliding_window=cfg.sliding_window, ring=True)
+        o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ sp["attn"]["wo"].astype(x.dtype)
+        x = x + o
+        h = apply_norm(sp["mlp_norm"], x, cfg)
+        x = x + apply_mlp(sp["mlp"], h, cfg)
+        return x, (mc_new, k_cache, v_cache)
+
+    x, (g_mc, ks, vs) = jax.lax.scan(
+        group, x, (params["mamba_groups"], cache.mamba_groups,
+                   cache.attn_k, cache.attn_v)
+    )
+    tail_mc = cache.mamba_tail
+    if "mamba_tail" in params:
+        x, tail_mc = jax.lax.scan(inner, x, (params["mamba_tail"], cache.mamba_tail))
+    x = apply_norm(params["final_norm"], x, cfg)
+    logits = x.astype(jnp.float32) @ params["lm_head"].astype(jnp.float32)
+    return logits[:, 0], ZambaCache(
+        mamba_groups=g_mc, mamba_tail=tail_mc,
+        attn_k=ks, attn_v=vs, length=cache.length + 1,
+    )

@@ -1,4 +1,29 @@
-"""repro.serve — batched prefill/decode serving engine."""
-from .engine import Engine, ServeConfig
+"""repro.serve — serving engines: static padded batches and continuous
+batching over a paged KV / slot-state cache (see SERVING.md)."""
+from .engine import (
+    SERVE_DECODE_FN,
+    ContinuousConfig,
+    ContinuousEngine,
+    Engine,
+    ServeConfig,
+    StaticEngine,
+    serving_kind,
+)
+from .kv_cache import (
+    NULL_BLOCK,
+    BlockPool,
+    SlotStateCache,
+    blocks_for_request,
+    bucket_len,
+    cache_batch_axes,
+    is_recurrent,
+)
+from .scheduler import Request, RequestState, Scheduler
 
-__all__ = ["Engine", "ServeConfig"]
+__all__ = [
+    "Engine", "StaticEngine", "ServeConfig",
+    "ContinuousEngine", "ContinuousConfig", "serving_kind", "SERVE_DECODE_FN",
+    "BlockPool", "SlotStateCache", "NULL_BLOCK",
+    "bucket_len", "blocks_for_request", "cache_batch_axes", "is_recurrent",
+    "Request", "RequestState", "Scheduler",
+]

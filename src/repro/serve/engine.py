@@ -1,21 +1,62 @@
-"""Batched serving engine: prefill + decode with KV/recurrent caches.
+"""Serving engines: static padded batches (reference) and continuous
+batching over a paged KV / slot-state cache.
 
-Serves a batch of requests with a shared-length cache (continuous batching is
-approximated by padding to the batch's max prompt — the standard static-batch
-TPU serving layout). Works for all decode-capable families:
-attention archs take the fast parallel prefill; recurrent/hybrid archs
-prefill by scanning decode steps (their O(1)-state architecture).
+``StaticEngine`` is the original demo path: one batch, padded to the batch
+max, all requests prefilled and decoded in lockstep. ``ContinuousEngine``
+is the production path (SERVING.md): a FIFO scheduler admits requests into
+``num_slots`` fixed batch slots between decode steps, attention context
+lives in a shared block pool indexed by per-slot block tables
+(``serve.kv_cache``), recurrent state is slot-indexed, and per-request
+sampling params (temperature, seed, max_new_tokens) ride per-slot arrays.
+
+No-recompile slot contract: the compiled decode step ``serve_decode`` is
+shaped by (num_slots, table width, pool size) ONLY. Requests joining,
+generating at different lengths, and leaving are pure data changes (tables,
+lengths, temps, keys, tokens). After the first decode compile there are
+zero further ``serve_decode`` compiles — pinned by
+``analysis.recompile.CompileWatcher`` in tests/test_serving.py and the
+benchmarks/serving.py smoke lane. Prefill compiles once per prompt-length
+bucket (prompts round up to whole blocks) under its own function name, so
+the decode audit is unaffected.
+
+Per-request telemetry (queued / prefill / TTFT / finish / decode_step with
+queue-depth and block-pool gauges) streams through the existing
+``telemetry.TelemetrySink`` with the serving record schema
+(``telemetry.serving``).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import time
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from ..analysis.recompile import mark_step
 from ..configs.base import ArchConfig
-from ..models import decode_step, init_decode_cache, prefill
+from ..models import (
+    decode_step,
+    init_kv_pool,
+    paged_decode_step,
+    prefill,
+    slot_decode_step,
+    write_prefill_blocks,
+)
+from ..telemetry.serving import serving_record
+from .kv_cache import (
+    BlockPool,
+    SlotStateCache,
+    blocks_for_request,
+    bucket_len,
+    is_recurrent,
+)
+from .scheduler import Request, RequestState, Scheduler
+
+# The jitted decode entrypoint's compile-log name — audit recompiles with
+# CompileWatcher(fn_name=SERVE_DECODE_FN).
+SERVE_DECODE_FN = "serve_decode"
 
 
 @dataclasses.dataclass
@@ -26,16 +67,39 @@ class ServeConfig:
     attn_impl: str = "chunked"
 
 
-class Engine:
-    def __init__(self, cfg: ArchConfig, params, scfg: ServeConfig = ServeConfig()):
+def serving_kind(cfg: ArchConfig) -> str:
+    """'paged' (attention families, block-table KV) or 'slot' (recurrent)."""
+    if not cfg.has_decode:
+        raise ValueError(f"{cfg.name} is encoder-only; nothing to decode")
+    if is_recurrent(cfg):
+        return "slot"
+    if cfg.frontend != "none":
+        raise ValueError(f"{cfg.name}: frontend-embedding archs are not "
+                         "servable from token prompts")
+    return "paged"
+
+
+class StaticEngine:
+    """Static padded-batch engine (the original demo path, kept as the
+    baseline and parity reference for the continuous engine)."""
+
+    def __init__(self, cfg: ArchConfig, params,
+                 scfg: Optional[ServeConfig] = None):
         if not cfg.has_decode:
             raise ValueError(f"{cfg.name} is encoder-only; nothing to decode")
         self.cfg = cfg
         self.params = params
-        self.scfg = scfg
+        # None + per-instance construction: a `scfg: ServeConfig = ServeConfig()`
+        # default is evaluated ONCE at def time and shared across every
+        # engine — mutating one engine's config would mutate them all.
+        self.scfg = ServeConfig() if scfg is None else scfg
         self._decode = jax.jit(
             lambda p, t, c: decode_step(p, self.cfg, t, c)
         )
+        self._prefill = jax.jit(
+            lambda p, t, L: prefill(p, self.cfg, {"tokens": t}, L,
+                                    self.scfg.attn_impl),
+            static_argnums=2)
 
     def _sample(self, logits: jnp.ndarray, key) -> jnp.ndarray:
         if self.scfg.temperature <= 0.0:
@@ -44,29 +108,293 @@ class Engine:
             key, logits / self.scfg.temperature, axis=-1
         ).astype(jnp.int32)
 
-    def generate(self, prompts: jnp.ndarray) -> jnp.ndarray:
+    def generate(self, prompts: jnp.ndarray,
+                 on_token: Optional[Callable] = None,
+                 stop_counts: Optional[Sequence[int]] = None) -> jnp.ndarray:
         """prompts: (B, Lp) int32 (left-padded with 0 allowed).
-        Returns (B, max_new_tokens) generated ids."""
+        Returns (B, n_steps) generated ids. ``on_token(i, tok)`` is called
+        after each token batch is READY (blocks on the device), so
+        benchmarks can timestamp static serving per token. ``stop_counts``
+        gives per-row token budgets: the batch stops at ``max(stop_counts)``
+        (the static head-of-line cost — every row rides until the slowest
+        member finishes) without changing any compiled shape; rows past
+        their own budget keep decoding garbage the caller truncates."""
         cfg, scfg = self.cfg, self.scfg
         B, Lp = prompts.shape
         total = Lp + scfg.max_new_tokens
         key = jax.random.PRNGKey(scfg.seed)
+        n_steps = scfg.max_new_tokens
+        if stop_counts is not None:
+            n_steps = min(n_steps, max(int(c) for c in stop_counts))
 
         # all families use the parallel prefill (recurrent archs extract their
         # final states from the chunked scans — see models/{zamba2,xlstm}.py)
-        logits, cache = prefill(
-            self.params, cfg, {"tokens": prompts}, cache_len=total,
-            attn_impl=scfg.attn_impl,
-        )
+        logits, cache = self._prefill(self.params, prompts, total)
         logits = logits[:, 0]
 
         outs = []
         tok = self._sample(logits, key)
-        for i in range(scfg.max_new_tokens):
+        for i in range(n_steps):
             outs.append(tok)
-            if i == scfg.max_new_tokens - 1:
+            if on_token is not None:
+                jax.block_until_ready(tok)
+                on_token(i, tok)
+            if i == n_steps - 1:
                 break
             key, sub = jax.random.split(key)
             logits, cache = self._decode(self.params, tok[:, None], cache)
             tok = self._sample(logits, sub)
         return jnp.stack(outs, axis=1)
+
+
+# Backwards-compatible alias for the pre-continuous API.
+Engine = StaticEngine
+
+
+# ---------------------------------------------------------------------------
+# continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ContinuousConfig:
+    """Shapes and policy of the continuous engine. Everything here is a
+    COMPILE-TIME shape parameter; per-request knobs live on Request."""
+    num_slots: int = 4            # decode batch width (fixed jit shape)
+    block_size: int = 8           # tokens per KV block
+    n_blocks: int = 64            # physical pool blocks (incl. null block 0)
+    max_prompt_len: int = 32      # longest admissible prompt
+    max_new_cap: int = 32         # longest admissible per-request generation
+    attn_impl: str = "chunked"
+    seed: int = 0                 # mixed into per-request default seeds
+
+
+class ContinuousEngine:
+    """Continuous-batching engine: FIFO admission, paged/slot cache,
+    per-request sampling, per-request telemetry."""
+
+    def __init__(self, cfg: ArchConfig, params,
+                 ccfg: Optional[ContinuousConfig] = None,
+                 sink=None, clock: Callable[[], float] = time.perf_counter):
+        self.cfg = cfg
+        self.params = params
+        self.ccfg = ccfg = ContinuousConfig() if ccfg is None else ccfg
+        self.kind = serving_kind(cfg)
+        self.sink = sink
+        self._clock = clock
+
+        bs = ccfg.block_size
+        if ccfg.num_slots < 1 or bs < 1 or ccfg.n_blocks < 2:
+            raise ValueError("num_slots >= 1, block_size >= 1, n_blocks >= 2")
+        self._max_total = bucket_len(ccfg.max_prompt_len, bs) + ccfg.max_new_cap
+        self._max_blocks = -(-self._max_total // bs)
+        if (self.kind == "paged" and cfg.sliding_window is not None
+                and bucket_len(ccfg.max_prompt_len, bs) > cfg.sliding_window):
+            raise ValueError(
+                f"{cfg.name}: paged prefill needs bucketed prompts within the "
+                f"sliding window ({cfg.sliding_window}); shrink max_prompt_len")
+
+        self.pool = BlockPool(ccfg.n_blocks, bs)
+        self.scheduler = Scheduler(
+            ccfg.num_slots, self.pool,
+            lambda r: blocks_for_request(cfg, len(r.prompt),
+                                         r.max_new_tokens, bs))
+
+        S = ccfg.num_slots
+        self._lengths = np.zeros(S, np.int32)
+        self._temps = np.zeros(S, np.float32)
+        self._cur_tok = np.zeros(S, np.int32)
+        self._keys = jnp.zeros((S, 2), jnp.uint32)
+        self._step_idx = 0
+        self._next_rid = 0
+        self.results: Dict[int, np.ndarray] = {}
+        self.requests: Dict[int, Request] = {}
+
+        if self.kind == "paged":
+            self._k_pool, self._v_pool = init_kv_pool(cfg, ccfg.n_blocks, bs)
+            self._tables = np.zeros((S, self._max_blocks), np.int32)
+            self._scatter = jax.jit(write_prefill_blocks, donate_argnums=(0, 1))
+
+            def serve_decode(params, k_pool, v_pool, tables, lengths, temps,
+                             keys, token):
+                logits, k_pool, v_pool = paged_decode_step(
+                    params, cfg, token, k_pool, v_pool, tables, lengths)
+                tok, keys = _sample_slots(logits, temps, keys)
+                return tok, k_pool, v_pool, keys
+
+            self._decode = jax.jit(serve_decode, donate_argnums=(1, 2))
+        else:
+            self._slots = SlotStateCache(cfg, S, self._max_total)
+
+            def serve_decode(params, store, lengths, temps, keys, token):
+                logits, store = slot_decode_step(
+                    params, cfg, token[:, None], store, lengths)
+                tok, keys = _sample_slots(logits, temps, keys)
+                return tok, store, keys
+
+            self._decode = jax.jit(serve_decode, donate_argnums=(1,))
+
+        self._prefill = jax.jit(
+            lambda p, t, L: prefill(p, cfg, {"tokens": t}, L, ccfg.attn_impl),
+            static_argnums=2)
+
+    # -- submission ---------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return self.scheduler.has_work
+
+    def submit(self, prompt, max_new_tokens: int = 16,
+               temperature: float = 0.0, seed: Optional[int] = None,
+               arrival: Optional[float] = None) -> int:
+        """Queue one generation request; returns its request id.
+        ``arrival`` (engine-clock seconds) lets open-loop drivers charge
+        queueing delay from the TRACE arrival time rather than the moment
+        the driver got around to calling submit."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if not (1 <= prompt.shape[0] <= self.ccfg.max_prompt_len):
+            raise ValueError(
+                f"prompt length {prompt.shape[0]} outside "
+                f"[1, {self.ccfg.max_prompt_len}]")
+        if not (1 <= max_new_tokens <= self.ccfg.max_new_cap):
+            raise ValueError(
+                f"max_new_tokens {max_new_tokens} outside "
+                f"[1, {self.ccfg.max_new_cap}]")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(
+            rid=rid, prompt=prompt, max_new_tokens=int(max_new_tokens),
+            temperature=float(temperature),
+            seed=int(self.ccfg.seed * 1_000_003 + rid) if seed is None else int(seed),
+            arrival=self._clock() if arrival is None else float(arrival))
+        self.scheduler.submit(req)
+        self.requests[rid] = req
+        self._emit("queued", rid, float(self.scheduler.queue_depth))
+        return rid
+
+    # -- engine loop --------------------------------------------------------
+    def step(self) -> bool:
+        """Admit waiting requests, run ONE decode step over the slot batch,
+        retire finished requests. Returns True while work remains."""
+        for req in self.scheduler.admit():
+            self._join(req)
+        active = dict(self.scheduler.active)
+        if not active:
+            return self.scheduler.has_work
+
+        mark_step(self._step_idx)
+        t0 = self._clock()
+        if self.kind == "paged":
+            tok, self._k_pool, self._v_pool, self._keys = self._decode(
+                self.params, self._k_pool, self._v_pool, self._tables,
+                self._lengths, self._temps, self._keys, self._cur_tok)
+        else:
+            tok, store, self._keys = self._decode(
+                self.params, self._slots.store, self._lengths, self._temps,
+                self._keys, self._cur_tok)
+            self._slots.store = store
+        toks = np.asarray(tok)                       # host sync per step
+        t1 = self._clock()
+        self._step_idx += 1
+
+        finished: List[Request] = []
+        for slot, req in active.items():
+            self._lengths[slot] += 1
+            t = int(toks[slot])
+            req.tokens.append(t)
+            req.token_times.append(t1)
+            self._cur_tok[slot] = t
+            if len(req.tokens) >= req.max_new_tokens:
+                finished.append(req)
+        self._emit("decode_step", -1, t1 - t0)
+        for req in finished:
+            self._retire(req, t1)
+        return self.scheduler.has_work
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drive until idle; returns {rid: generated tokens}. (Open-loop
+        drivers call step() themselves and submit between steps.)"""
+        while self.step():
+            pass
+        return dict(self.results)
+
+    # -- internals ----------------------------------------------------------
+    def _join(self, req: Request) -> None:
+        """Prefill an admitted request and install it into its slot."""
+        t_start = self._clock()
+        bs = self.ccfg.block_size
+        slot = req.slot
+        Lp = req.prompt.shape[0]
+        Lb = bucket_len(Lp, bs)
+        padded = np.zeros(Lb, np.int32)
+        padded[Lb - Lp:] = req.prompt                # left-pad with token 0
+
+        if self.kind == "paged":
+            logits, cache = self._prefill(self.params, padded[None], Lb)
+            ids = np.asarray(req.block_ids[: Lb // bs], np.int32)
+            self._k_pool, self._v_pool = self._scatter(
+                self._k_pool, self._v_pool, cache.k, cache.v, ids)
+            row = np.zeros(self._max_blocks, np.int32)
+            row[: len(req.block_ids)] = req.block_ids
+            self._tables[slot] = row
+        else:
+            logits, cache = self._prefill(self.params, padded[None],
+                                          self._max_total)
+            self._slots.join(slot, cache)
+
+        self._lengths[slot] = Lb
+        self._temps[slot] = req.temperature
+
+        # First token comes straight off the prefill logits; the slot's key
+        # chain starts from the request's own seed.
+        key = jax.random.PRNGKey(req.seed)
+        carry, sub = jax.random.split(key)
+        self._keys = self._keys.at[slot].set(carry)
+        row_logits = np.asarray(logits[0, 0], np.float32)
+        if req.temperature > 0:
+            tok = int(jax.random.categorical(
+                sub, jnp.asarray(row_logits) / max(req.temperature, 1e-6)))
+        else:
+            tok = int(row_logits.argmax())
+        t_tok = self._clock()
+        req.state = RequestState.DECODE
+        req.tokens.append(tok)
+        req.token_times.append(t_tok)
+        req.first_token_time = t_tok
+        self._cur_tok[slot] = tok
+        self._emit("prefill", req.rid, t_tok - t_start)
+        self._emit("ttft", req.rid, t_tok - req.arrival)
+        if len(req.tokens) >= req.max_new_tokens:
+            self._retire(req, t_tok)
+
+    def _retire(self, req: Request, now: float) -> None:
+        slot = req.slot
+        self.scheduler.release(req)                  # frees blocks + slot
+        if self.kind == "paged":
+            self._tables[slot] = 0                   # back to the null block
+        self._lengths[slot] = 0
+        self._temps[slot] = 0.0
+        self._cur_tok[slot] = 0
+        req.finish_time = now
+        self.results[req.rid] = np.asarray(req.tokens, np.int32)
+        self._emit("finish", req.rid, now - req.arrival)
+
+    def _emit(self, event: str, request_id: int, value: float) -> None:
+        if self.sink is None:
+            return
+        rec = serving_record(
+            step=self._step_idx, event=event, request_id=request_id,
+            t=self._clock(), value=value,
+            queue_depth=self.scheduler.queue_depth,
+            active_slots=self.scheduler.num_active,
+            free_blocks=self.pool.num_free)
+        self.sink.emit(self._step_idx, [rec])
+
+
+def _sample_slots(logits, temps, keys):
+    """Per-slot sampling: greedy where temp==0, categorical with the slot's
+    own key chain otherwise. Returns (tokens (S,) int32, advanced keys)."""
+    splits = jax.vmap(lambda k: jax.random.split(k))(keys)     # (S, 2, 2)
+    carry, sub = splits[:, 0], splits[:, 1]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(sub, scaled).astype(jnp.int32)
+    return jnp.where(temps > 0, sampled, greedy), carry

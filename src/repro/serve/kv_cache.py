@@ -1,0 +1,193 @@
+"""Paged KV / recurrent-state cache for continuous-batching serving.
+
+Memory model
+------------
+The device-resident decode cache is a POOL of fixed-size blocks shared by
+every in-flight request, indexed through per-request **block tables** — the
+vLLM paged-KV layout adapted to fixed-shape jit:
+
+* **Attention families** (dense/moe): per layer, K and V pools of shape
+  ``(n_layers, n_blocks, block_size, KV, hd)``. Logical context position
+  ``p`` of the request in slot ``s`` lives at physical
+  ``pool[:, table[s, p // block_size], p % block_size]``. Mixed-length
+  sequences allocate only the blocks they need instead of padding every
+  request to the batch max.
+
+* **Recurrent / hybrid families** (ssm/xlstm, zamba2): decode state is O(1)
+  (plus an O(window) attention ring for the hybrid), stored slot-indexed
+  with a fixed per-request footprint. They go through the SAME allocator
+  API as the degenerate one-block-per-request case, so admission control is
+  uniform across families; the block ids are accounting-only (the state is
+  addressed by slot, not by block).
+
+Physical block 0 is reserved as the **null block**: free slots keep an
+all-zero block table, so the decode step's unconditional per-slot cache
+write lands in a garbage bin instead of a live request's block. Active
+requests are never handed block 0 — this is what makes slot membership a
+pure data change (mask/table contents) with no recompile.
+
+``BlockPool`` and the bucketing helpers are pure Python (unit-testable
+without jax); ``SlotStateCache`` owns the jitted slot join for the
+recurrent families, discovering each cache leaf's batch axis automatically
+by diffing ``init_decode_cache`` shapes across two batch sizes.
+"""
+from __future__ import annotations
+
+import collections
+from typing import Callable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import init_decode_cache
+
+NULL_BLOCK = 0
+
+
+def is_recurrent(cfg: ArchConfig) -> bool:
+    """Families whose decode state is O(1)-per-request (slot-indexed)."""
+    return cfg.family == "hybrid" or (cfg.family == "ssm" and cfg.xlstm is not None)
+
+
+def bucket_len(n: int, block_size: int) -> int:
+    """Round a prompt length up to a whole number of blocks (the prefill
+    shape buckets — bounds prefill compiles to one per bucket and wastes
+    less than one block of pad per request)."""
+    if n <= 0:
+        raise ValueError(f"prompt length must be positive, got {n}")
+    return -(-n // block_size) * block_size
+
+
+def blocks_for_request(cfg: ArchConfig, prompt_len: int, max_new_tokens: int,
+                       block_size: int) -> int:
+    """Worst-case block need of one request, reserved in full at admission
+    (no mid-decode allocation ⇒ an admitted request can never OOM the pool).
+
+    Attention: the context grows to bucketed-prompt + generated tokens.
+    Recurrent/hybrid: the degenerate fixed-footprint state, one block.
+    """
+    if is_recurrent(cfg):
+        return 1
+    total = bucket_len(prompt_len, block_size) + max_new_tokens
+    return -(-total // block_size)
+
+
+class BlockPool:
+    """Free-list allocator over ``n_blocks`` fixed-size blocks.
+
+    Pure Python bookkeeping (the device arrays live elsewhere). Block 0 is
+    reserved as the null block and is never handed out. Because requests
+    address blocks through tables, ANY free block satisfies any request —
+    there is no contiguity requirement, so the pool cannot fragment:
+    ``alloc(n)`` succeeds iff ``n <= num_free`` regardless of the
+    alloc/free interleaving (pinned by tests/test_serving.py).
+    """
+
+    def __init__(self, n_blocks: int, block_size: int):
+        if n_blocks < 2:
+            raise ValueError("need at least 2 blocks (one is the null block)")
+        if block_size < 1:
+            raise ValueError("block_size must be >= 1")
+        self.n_blocks = n_blocks
+        self.block_size = block_size
+        self._free: collections.deque = collections.deque(range(1, n_blocks))
+        self._allocated: set = set()
+
+    @property
+    def capacity(self) -> int:
+        """Usable blocks (the null block is not allocatable)."""
+        return self.n_blocks - 1
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._allocated)
+
+    def occupancy(self) -> float:
+        return self.num_allocated / self.capacity
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop ``n`` blocks, or None (and no side effect) if unavailable."""
+        if n < 0:
+            raise ValueError(f"cannot allocate {n} blocks")
+        if n > len(self._free):
+            return None
+        ids = [self._free.popleft() for _ in range(n)]
+        self._allocated.update(ids)
+        return ids
+
+    def free(self, ids: Sequence[int]) -> None:
+        for b in ids:
+            if b == NULL_BLOCK:
+                raise ValueError("cannot free the null block")
+            if b not in self._allocated:
+                raise ValueError(f"double free / foreign block {b}")
+            self._allocated.remove(b)
+            self._free.append(b)
+
+
+# ---------------------------------------------------------------------------
+# recurrent-family slot store: batch-axis discovery + jitted slot join
+# ---------------------------------------------------------------------------
+
+def cache_batch_axes(cfg: ArchConfig, seq_len: int) -> List[Optional[int]]:
+    """Per-leaf batch-axis index of the family's decode cache, in
+    tree_flatten order. Discovered mechanically: the axis where the leaf
+    shapes of ``init_decode_cache`` at batch 2 vs batch 3 differ is the
+    batch axis; leaves with identical shapes (e.g. the scalar ``length``)
+    have no batch axis and return None."""
+    s2 = jax.eval_shape(lambda: init_decode_cache(cfg, 2, seq_len))
+    s3 = jax.eval_shape(lambda: init_decode_cache(cfg, 3, seq_len))
+    axes: List[Optional[int]] = []
+    for a, b in zip(jax.tree_util.tree_leaves(s2), jax.tree_util.tree_leaves(s3)):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if len(diff) > 1:
+            raise ValueError(f"ambiguous batch axis for leaf {a.shape} vs {b.shape}")
+        axes.append(diff[0] if diff else None)
+    return axes
+
+
+def make_slot_join(axes: List[Optional[int]]) -> Callable:
+    """Build the jitted join: write one request's (batch=1) prefilled cache
+    into slot ``slot`` of the slot-indexed store. Leaves without a batch
+    axis keep the store's value (per-slot lengths are tracked host-side by
+    the engine)."""
+
+    def join(store, req_cache, slot):
+        ls, treedef = jax.tree_util.tree_flatten(store)
+        lr = jax.tree_util.tree_leaves(req_cache)
+        out = []
+        for s, r, ax in zip(ls, lr, axes):
+            if ax is None:
+                out.append(s)
+            else:
+                out.append(jax.lax.dynamic_update_index_in_dim(s, r, slot, ax))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return jax.jit(join, donate_argnums=0)
+
+
+class SlotStateCache:
+    """Slot-indexed recurrent decode state behind the block-allocator API.
+
+    ``store`` is the family's own ``init_decode_cache(cfg, num_slots, L)``
+    pytree (so the sLSTM stabilizer floor, ring capacities etc. start at
+    their true init values). ``join`` overwrites slot ``s`` with a freshly
+    prefilled request state; eviction needs no device work — a stale slot's
+    state keeps evolving on garbage until the next join overwrites it, and
+    its sampled tokens are discarded (per-slot computation is independent,
+    so garbage slots cannot perturb live ones)."""
+
+    def __init__(self, cfg: ArchConfig, num_slots: int, max_total_len: int):
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_total_len = max_total_len
+        self.store = init_decode_cache(cfg, num_slots, max_total_len)
+        self._join = make_slot_join(cache_batch_axes(cfg, max_total_len))
+
+    def join(self, slot: int, req_cache) -> None:
+        self.store = self._join(self.store, req_cache, slot)

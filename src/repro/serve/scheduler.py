@@ -1,0 +1,127 @@
+"""Continuous-batching request scheduler: FIFO queue + block-budget
+admission control + slot assignment.
+
+Lifecycle (SERVING.md): ``QUEUED -> PREFILL -> DECODE -> DONE``. Requests
+wait in a strict FIFO queue; ``admit()`` moves the head into a free batch
+slot iff the pool can reserve its WORST-CASE block need up front
+(``kv_cache.blocks_for_request``), so an admitted request can never run the
+pool dry mid-decode. The head blocks the line when it doesn't fit — later,
+smaller requests are NOT admitted around it (no starvation of large
+requests; documented trade-off).
+
+The scheduler is pure Python: it owns no device arrays and is fully
+unit-testable without jax. The engine calls ``admit()`` between decode
+steps — joins and evictions land at step boundaries only, as data changes
+(slot tables / masks), never as shape changes.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import enum
+from typing import Callable, Deque, Dict, List, Optional
+
+import numpy as np
+
+from .kv_cache import BlockPool
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request plus its runtime bookkeeping."""
+    rid: int
+    prompt: np.ndarray                  # (Lp,) int32
+    max_new_tokens: int
+    temperature: float = 0.0            # 0 = greedy
+    seed: int = 0
+    arrival: float = 0.0                # submit timestamp (engine clock)
+    # -- runtime (engine/scheduler-owned) ----------------------------------
+    state: RequestState = RequestState.QUEUED
+    slot: int = -1
+    block_ids: List[int] = dataclasses.field(default_factory=list)
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    token_times: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return self.state is RequestState.DONE
+
+
+class Scheduler:
+    """FIFO admission over ``num_slots`` batch slots and a shared BlockPool."""
+
+    def __init__(self, num_slots: int, pool: BlockPool,
+                 block_cost: Callable[[Request], int]):
+        if num_slots < 1:
+            raise ValueError("need at least one slot")
+        self.num_slots = num_slots
+        self.pool = pool
+        self.block_cost = block_cost
+        self.queue: Deque[Request] = collections.deque()
+        self.active: Dict[int, Request] = {}          # slot -> request
+        self._free_slots: List[int] = sorted(range(num_slots), reverse=True)
+
+    # -- properties ---------------------------------------------------------
+    @property
+    def queue_depth(self) -> int:
+        return len(self.queue)
+
+    @property
+    def num_active(self) -> int:
+        return len(self.active)
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self.queue or self.active)
+
+    # -- transitions --------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Queue a request. Raises if it could NEVER be admitted (worst-case
+        block need exceeds the whole pool) — catching the deadlock at submit
+        time instead of wedging the FIFO head forever."""
+        need = self.block_cost(req)
+        if need > self.pool.capacity:
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks but the pool only has "
+                f"{self.pool.capacity} — raise n_blocks or shrink the request")
+        req.state = RequestState.QUEUED
+        self.queue.append(req)
+
+    def admit(self) -> List[Request]:
+        """Move FIFO-head requests into free slots while their worst-case
+        block reservation fits. Returns the newly admitted requests (state
+        PREFILL, slot + block_ids assigned)."""
+        out: List[Request] = []
+        while self.queue and self._free_slots:
+            req = self.queue[0]
+            blocks = self.pool.alloc(self.block_cost(req))
+            if blocks is None:
+                break                       # strict FIFO: head blocks the line
+            self.queue.popleft()
+            req.slot = self._free_slots.pop()
+            req.block_ids = blocks
+            req.state = RequestState.PREFILL
+            self.active[req.slot] = req
+            out.append(req)
+        return out
+
+    def release(self, req: Request) -> None:
+        """Finish a request: free its blocks and recycle its slot."""
+        if self.active.get(req.slot) is not req:
+            raise ValueError(f"request {req.rid} is not active in slot {req.slot}")
+        self.pool.free(req.block_ids)
+        req.block_ids = []
+        del self.active[req.slot]
+        self._free_slots.append(req.slot)
+        self._free_slots.sort(reverse=True)
+        req.slot = -1
+        req.state = RequestState.DONE

@@ -82,6 +82,13 @@ from .probes import (
     tail_mass,
     validate_record,
 )
+from .serving import (
+    SERVING_EVENTS,
+    SERVING_RECORD_SCHEMA,
+    serving_record,
+    serving_stats_to_records,
+    validate_serving_record,
+)
 from .sink import CsvWriter, JsonlWriter, TelemetrySink, WindowAggregate, read_jsonl
 
 # Re-export the on-device stats types (defined next to the engine that emits
@@ -94,6 +101,11 @@ __all__ = [
     "tail_mass", "kappa_from_sigma", "rank_one_residual_from_sigma",
     "TelemetrySink", "JsonlWriter", "CsvWriter", "WindowAggregate",
     "read_jsonl",
+    "SERVING_RECORD_SCHEMA", "SERVING_EVENTS", "serving_record",
+    "serving_stats_to_records", "validate_serving_record",
+]
+
+__all__ += [
     "RankRefreshController", "ControllerConfig", "BucketSetting",
     "BucketDecision", "initial_settings", "overrides_from_settings",
     "resize_sumo_state", "resize_opt_state", "apply_decisions",

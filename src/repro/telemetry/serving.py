@@ -1,0 +1,79 @@
+"""Serving telemetry records — the JSONL schema the continuous-batching
+engine streams through ``TelemetrySink``.
+
+The sink stays the transport (ring buffer, drain thread, writers); serving
+plugs in with ``TelemetrySink(to_records=serving_stats_to_records,
+validate_fn=validate_serving_record)``. Serving records are already
+host-side (latencies are wall-clock measurements), so the record converter
+is a pass-through — no device_get needed on the drain.
+
+Events
+------
+    queued        request entered the FIFO queue          (value: queue depth)
+    prefill       request admitted + prefilled into slot  (value: prefill s)
+    ttft          first token produced                    (value: seconds since arrival)
+    finish        request completed                       (value: e2e seconds)
+    decode_step   one continuous decode step              (value: step wall seconds)
+
+Every record carries the scheduler/pool gauges at emit time (queue depth,
+active slots, free blocks) so queueing behaviour and pool occupancy can be
+read straight off the stream.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+SERVING_RECORD_SCHEMA: Dict[str, type] = {
+    "step": int,            # engine decode-step index at emit time
+    "event": str,           # one of SERVING_EVENTS
+    "request_id": int,      # -1 for engine-level events (decode_step)
+    "t": float,             # engine-clock timestamp (seconds)
+    "value": float,         # event-specific measurement (see module doc)
+    "queue_depth": int,
+    "active_slots": int,
+    "free_blocks": int,
+}
+
+SERVING_EVENTS = ("queued", "prefill", "ttft", "finish", "decode_step")
+
+
+def serving_record(step: int, event: str, request_id: int, t: float,
+                   value: float, queue_depth: int, active_slots: int,
+                   free_blocks: int) -> Dict[str, Any]:
+    return {
+        "step": int(step), "event": str(event), "request_id": int(request_id),
+        "t": float(t), "value": float(value), "queue_depth": int(queue_depth),
+        "active_slots": int(active_slots), "free_blocks": int(free_blocks),
+    }
+
+
+def validate_serving_record(rec: Mapping[str, Any]) -> None:
+    """Raise ValueError unless ``rec`` matches SERVING_RECORD_SCHEMA."""
+    missing = set(SERVING_RECORD_SCHEMA) - set(rec)
+    extra = set(rec) - set(SERVING_RECORD_SCHEMA)
+    if missing or extra:
+        raise ValueError(
+            f"serving record keys mismatch: missing={sorted(missing)} "
+            f"extra={sorted(extra)}")
+    for field, typ in SERVING_RECORD_SCHEMA.items():
+        v = rec[field]
+        if typ is float:
+            ok = isinstance(v, (int, float)) and not isinstance(v, bool)
+        elif typ is int:
+            ok = isinstance(v, int) and not isinstance(v, bool)
+        else:
+            ok = isinstance(v, typ)
+        if not ok:
+            raise ValueError(f"serving record field {field!r}: expected "
+                             f"{typ.__name__}, got {type(v).__name__} ({v!r})")
+    if rec["event"] not in SERVING_EVENTS:
+        raise ValueError(f"unknown serving event {rec['event']!r}; "
+                         f"have {SERVING_EVENTS}")
+
+
+def serving_stats_to_records(step: int, stats: Sequence[Mapping[str, Any]],
+                             settings: Optional[Mapping[str, Any]] = None,
+                             default_update_freq: int = 0) -> List[dict]:
+    """Sink record-converter hook: serving stats are already host records."""
+    del step, settings, default_update_freq
+    return [dict(r) for r in stats]

@@ -106,7 +106,15 @@ class TelemetrySink:
     """
 
     def __init__(self, writers: Sequence[Any] = (), capacity: int = 4096,
-                 window: int = 8, validate: bool = True):
+                 window: int = 8, validate: bool = True,
+                 to_records: Optional[Any] = None,
+                 validate_fn: Optional[Any] = None):
+        # Pluggable record pipeline: the default is the training-side
+        # spectral schema; the serving engine passes
+        # telemetry.serving.{serving_stats_to_records, validate_serving_record}
+        # to stream its own schema through the same transport.
+        self._to_records = to_records if to_records is not None else stats_to_records
+        self._validate_fn = validate_fn if validate_fn is not None else validate_record
         self.writers = list(writers)
         self.window = window
         self.validate = validate
@@ -157,16 +165,19 @@ class TelemetrySink:
                 self._buf.clear()
             recs: List[Record] = []
             for step, stats, settings, default_freq in items:
-                recs.extend(stats_to_records(
+                recs.extend(self._to_records(
                     step, stats, settings=settings,
                     default_update_freq=default_freq))
             if self.validate:
                 for rec in recs:
-                    validate_record(rec)
+                    self._validate_fn(rec)
             with self._lock:
                 for rec in recs:
+                    bucket = rec.get("bucket")
+                    if bucket is None:      # non-bucketed schema (serving)
+                        continue
                     win = self._windows.setdefault(
-                        rec["bucket"],
+                        bucket,
                         collections.deque(maxlen=self.window))
                     win.append(rec)
                 self.records_written += len(recs)

@@ -1,0 +1,367 @@
+"""Continuous-batching serving: allocator/scheduler invariants, paged/slot
+state isolation, static-vs-continuous greedy parity, the zero-recompile slot
+contract, and the serving telemetry round trip (SERVING.md)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.recompile import CompileWatcher, audit_recompiles
+from repro.configs import get_smoke_config
+from repro.models import init_params
+from repro.serve import (
+    NULL_BLOCK,
+    SERVE_DECODE_FN,
+    BlockPool,
+    ContinuousConfig,
+    ContinuousEngine,
+    Request,
+    RequestState,
+    Scheduler,
+    ServeConfig,
+    StaticEngine,
+    blocks_for_request,
+    bucket_len,
+    serving_kind,
+)
+from repro.telemetry import JsonlWriter, TelemetrySink, read_jsonl
+from repro.telemetry.serving import (
+    serving_record,
+    serving_stats_to_records,
+    validate_serving_record,
+)
+
+_PARAMS = {}
+
+
+def _setup(arch_id, seed=0):
+    cfg = get_smoke_config(arch_id)
+    if arch_id not in _PARAMS:
+        _PARAMS[arch_id] = init_params(cfg, jax.random.PRNGKey(seed))
+    return cfg, _PARAMS[arch_id]
+
+
+def _ccfg(**kw):
+    base = dict(num_slots=3, block_size=4, n_blocks=16,
+                max_prompt_len=12, max_new_cap=8)
+    base.update(kw)
+    return ContinuousConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# BlockPool (pure Python)
+# ---------------------------------------------------------------------------
+
+def test_pool_never_hands_out_null_block_and_cannot_fragment():
+    pool = BlockPool(n_blocks=9, block_size=4)
+    assert pool.capacity == 8
+    rng = np.random.default_rng(0)
+    held = []
+    # random alloc/free interleaving: alloc(n) must succeed iff n <= num_free
+    # (table indirection means any free block serves any request)
+    for _ in range(200):
+        if held and rng.random() < 0.5:
+            pool.free(held.pop(rng.integers(len(held))))
+        n = int(rng.integers(1, 4))
+        got = pool.alloc(n)
+        if n <= 8 - sum(len(h) for h in held):
+            assert got is not None and len(got) == n
+            assert NULL_BLOCK not in got
+            held.append(got)
+        else:
+            assert got is None
+    flat = [b for h in held for b in h]
+    assert len(flat) == len(set(flat))          # no block handed out twice
+    assert pool.num_free + pool.num_allocated == pool.capacity
+
+
+def test_pool_exhaustion_returns_none_without_side_effect():
+    pool = BlockPool(n_blocks=4, block_size=2)
+    assert pool.alloc(3) is not None
+    before = pool.num_free
+    assert pool.alloc(1) is None
+    assert pool.num_free == before
+
+
+def test_pool_free_rejects_null_double_and_foreign_blocks():
+    pool = BlockPool(n_blocks=4, block_size=2)
+    ids = pool.alloc(2)
+    pool.free(ids)
+    with pytest.raises(ValueError):
+        pool.free(ids)                          # double free
+    with pytest.raises(ValueError):
+        pool.free([NULL_BLOCK])
+    pool.alloc(1)
+    with pytest.raises(ValueError):
+        pool.free([99])                         # never allocated
+
+
+# ---------------------------------------------------------------------------
+# Scheduler (pure Python)
+# ---------------------------------------------------------------------------
+
+def _req(rid, cost_tokens=4, max_new=4):
+    return Request(rid=rid, prompt=np.ones(cost_tokens, np.int32),
+                   max_new_tokens=max_new)
+
+
+def _mk_sched(num_slots=2, n_blocks=9, per_req=2):
+    pool = BlockPool(n_blocks=n_blocks, block_size=4)
+    return Scheduler(num_slots, pool, lambda r: per_req), pool
+
+
+def test_scheduler_fifo_admission_and_slot_recycling():
+    sched, pool = _mk_sched(num_slots=2, per_req=2)
+    for i in range(4):
+        sched.submit(_req(i))
+    admitted = sched.admit()
+    assert [r.rid for r in admitted] == [0, 1]          # strict FIFO
+    assert {r.slot for r in admitted} == {0, 1}
+    assert all(r.state is RequestState.PREFILL for r in admitted)
+    assert sched.admit() == []                          # no free slots
+    freed_slot = admitted[0].slot
+    sched.release(admitted[0])
+    assert admitted[0].state is RequestState.DONE
+    nxt = sched.admit()
+    assert [r.rid for r in nxt] == [2]
+    assert nxt[0].slot == freed_slot                    # slot recycled
+    assert pool.num_allocated == 4                      # 2 live requests
+
+
+def test_scheduler_head_of_line_blocks_until_blocks_free():
+    # 4 usable blocks; big request (rid 1) needs 3, the others need 1
+    pool = BlockPool(n_blocks=5, block_size=4)
+    external = pool.alloc(2)                            # pool pressure
+    sched = Scheduler(3, pool, lambda r: 3 if r.rid == 1 else 1)
+    for i in range(3):
+        sched.submit(_req(i))
+    assert [r.rid for r in sched.admit()] == [0]        # 1 free block left
+    assert sched.queue_depth == 2                       # head (needs 3) waits
+    sched.release(sched.active[0])
+    assert sched.admit() == []                          # 2 free: still waits,
+    assert sched.queue_depth == 2                       # rid 2 NOT bypassed
+    pool.free(external)                                 # pressure released
+    assert [r.rid for r in sched.admit()] == [1, 2]
+
+
+def test_scheduler_rejects_never_fitting_request_at_submit():
+    sched, _ = _mk_sched(n_blocks=3, per_req=99)
+    with pytest.raises(ValueError):
+        sched.submit(_req(0))
+
+
+def test_blocks_for_request_worst_case():
+    cfg, _ = _setup("smollm-360m")
+    # bucketed prompt 5->8, + 7 generated = 15 tokens -> 4 blocks of 4
+    assert blocks_for_request(cfg, 5, 7, 4) == 4
+    xcfg = get_smoke_config("xlstm-1.3b")
+    assert blocks_for_request(xcfg, 5, 7, 4) == 1       # degenerate slot state
+    with pytest.raises(ValueError):
+        bucket_len(0, 4)
+
+
+# ---------------------------------------------------------------------------
+# engine: parity, isolation, recompiles, pool hygiene
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_id", ["smollm-360m", "xlstm-1.3b", "zamba2-7b"])
+def test_continuous_matches_static_greedy(arch_id):
+    """Same-arrival batch, equal block-multiple prompt lengths, temp 0:
+    the continuous engine must reproduce the static engine token-for-token —
+    including requests that queue and join only after earlier ones retire."""
+    cfg, params = _setup(arch_id)
+    eng = ContinuousEngine(cfg, params, _ccfg())
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(1, cfg.vocab, size=8).astype(np.int32)
+               for _ in range(5)]
+    for p in prompts:
+        eng.submit(p, max_new_tokens=6)
+    res = eng.run()
+    static = np.asarray(
+        StaticEngine(cfg, params, ServeConfig(max_new_tokens=6))
+        .generate(jnp.asarray(np.stack(prompts))))
+    for i in range(5):
+        assert res[i].tolist() == static[i].tolist(), f"request {i} diverged"
+
+
+@pytest.mark.parametrize("arch_id", ["smollm-360m", "xlstm-1.3b"])
+def test_request_isolation_under_churn(arch_id):
+    """A request's tokens must be identical served solo vs served while
+    neighbor slots join, generate and retire around it (no cross-slot leak
+    through the pool/store). MoE archs are excluded by design: expert
+    capacity couples co-batched tokens (see SERVING.md)."""
+    cfg, params = _setup(arch_id)
+    rng = np.random.default_rng(3)
+    target = rng.integers(1, cfg.vocab, size=8).astype(np.int32)
+
+    solo = ContinuousEngine(cfg, params, _ccfg())
+    solo.submit(target, max_new_tokens=8)
+    want = solo.run()[0].tolist()
+
+    churn = ContinuousEngine(cfg, params, _ccfg())
+    rid = churn.submit(target, max_new_tokens=8)
+    # neighbors with different lengths/budgets join and retire mid-flight
+    for i in range(6):
+        churn.submit(rng.integers(1, cfg.vocab, size=int(rng.integers(1, 12))),
+                     max_new_tokens=int(rng.integers(1, 5)),
+                     temperature=0.7)
+    got = churn.run()[rid].tolist()
+    assert got == want
+
+
+@pytest.mark.parametrize("arch_id", ["smollm-360m", "xlstm-1.3b", "zamba2-7b"])
+def test_zero_recompiles_after_warmup_and_pool_drains(arch_id):
+    """The slot contract: after the first decode compile, joins/evictions/
+    mixed lengths/mixed temperatures cause ZERO further serve_decode
+    compiles; when the queue drains, every block returns to the pool."""
+    cfg, params = _setup(arch_id)
+    eng = ContinuousEngine(cfg, params, _ccfg())
+    rng = np.random.default_rng(4)
+    with CompileWatcher(fn_name=SERVE_DECODE_FN) as w:
+        for _ in range(7):
+            eng.submit(rng.integers(1, cfg.vocab, size=int(rng.integers(1, 12))),
+                       max_new_tokens=int(rng.integers(1, 8)),
+                       temperature=float(rng.choice([0.0, 0.9])))
+        eng.run()
+        for _ in range(3):                       # second wave after idle
+            eng.submit(rng.integers(1, cfg.vocab, size=6), max_new_tokens=3)
+        eng.run()
+    rep = audit_recompiles(w.events, fn_name=SERVE_DECODE_FN, warmup_through=0)
+    assert rep.ok, rep.summary()
+    assert len(rep.compiles) == 1, [e.message for e in w.events]
+    assert eng.pool.num_free == eng.pool.capacity
+    assert eng.scheduler.num_active == 0 and eng.scheduler.queue_depth == 0
+    assert sorted(eng.results) == list(range(10))
+
+
+def test_per_request_sampling_params_are_honored():
+    """Greedy and sampled requests coexist in one batch; equal seeds give
+    equal streams, different seeds differ (same prompt, temp > 0)."""
+    cfg, params = _setup("smollm-360m")
+    eng = ContinuousEngine(cfg, params, _ccfg(num_slots=4))
+    p = np.arange(1, 9, dtype=np.int32)
+    r_greedy = eng.submit(p, max_new_tokens=8, temperature=0.0)
+    r_a = eng.submit(p, max_new_tokens=8, temperature=1.5, seed=7)
+    r_b = eng.submit(p, max_new_tokens=8, temperature=1.5, seed=7)
+    r_c = eng.submit(p, max_new_tokens=8, temperature=1.5, seed=8)
+    res = eng.run()
+    static = np.asarray(
+        StaticEngine(cfg, params, ServeConfig(max_new_tokens=8))
+        .generate(jnp.asarray(p)[None]))[0]
+    assert res[r_greedy].tolist() == static.tolist()
+    assert res[r_a].tolist() == res[r_b].tolist()
+    assert res[r_a].tolist() != res[r_c].tolist()
+
+
+def test_admission_control_refuses_oversized_and_engine_validates():
+    cfg, params = _setup("smollm-360m")
+    eng = ContinuousEngine(cfg, params,
+                           _ccfg(n_blocks=4, max_prompt_len=12, max_new_cap=8))
+    with pytest.raises(ValueError):
+        eng.submit(np.ones(13, np.int32))        # prompt too long
+    with pytest.raises(ValueError):
+        eng.submit(np.ones(4, np.int32), max_new_tokens=9)
+    with pytest.raises(ValueError):              # can never fit in 3 blocks
+        eng.submit(np.ones(12, np.int32), max_new_tokens=8)
+
+
+def test_serve_config_instances_are_independent():
+    """Regression: a shared mutable default ServeConfig would alias every
+    engine's settings to one object."""
+    cfg, params = _setup("smollm-360m")
+    a = StaticEngine(cfg, params)
+    b = StaticEngine(cfg, params)
+    assert a.scfg is not b.scfg
+    a.scfg.max_new_tokens = 99
+    assert b.scfg.max_new_tokens != 99
+
+
+# ---------------------------------------------------------------------------
+# serving telemetry
+# ---------------------------------------------------------------------------
+
+def test_serving_record_schema_validation():
+    rec = serving_record(step=1, event="ttft", request_id=0, t=1.0,
+                         value=0.5, queue_depth=0, active_slots=1,
+                         free_blocks=3)
+    validate_serving_record(rec)
+    with pytest.raises(ValueError):
+        validate_serving_record({**rec, "event": "nonsense"})
+    with pytest.raises(ValueError):
+        validate_serving_record({k: v for k, v in rec.items() if k != "t"})
+    with pytest.raises(ValueError):
+        validate_serving_record({**rec, "extra": 1})
+
+
+def test_engine_streams_telemetry_through_sink(tmp_path):
+    """End to end: engine -> TelemetrySink(serving schema) -> JSONL ->
+    read_jsonl round trip, with every lifecycle event present per request."""
+    cfg, params = _setup("smollm-360m")
+    out = tmp_path / "serve.jsonl"
+    sink = TelemetrySink(writers=[JsonlWriter(str(out))],
+                         to_records=serving_stats_to_records,
+                         validate_fn=validate_serving_record)
+    eng = ContinuousEngine(cfg, params, _ccfg(), sink=sink)
+    rids = [eng.submit(np.ones(4, np.int32), max_new_tokens=3)
+            for _ in range(4)]
+    eng.run()
+    sink.close()
+    recs = read_jsonl(str(out))
+    assert recs and sink.records_written == len(recs)
+    for rec in recs:
+        validate_serving_record(rec)
+        json.dumps(rec)                          # JSON-clean types
+    by_event = {}
+    for rec in recs:
+        by_event.setdefault(rec["event"], []).append(rec)
+    for ev in ("queued", "prefill", "ttft", "finish"):
+        assert sorted(r["request_id"] for r in by_event[ev]) == sorted(rids)
+    assert by_event["decode_step"], "no decode_step records"
+    # gauges must reflect the drained end state on the last finish record
+    last_finish = by_event["finish"][-1]
+    assert last_finish["active_slots"] == 0
+    assert last_finish["free_blocks"] == eng.pool.capacity
+
+
+# ---------------------------------------------------------------------------
+# benchmark schema
+# ---------------------------------------------------------------------------
+
+def test_bench_schema_validator_rejects_malformed():
+    import importlib.util
+    import pathlib
+    import sys
+    spec = importlib.util.spec_from_file_location(
+        "serving_bench",
+        pathlib.Path(__file__).resolve().parents[1] / "benchmarks/serving.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["serving_bench"] = mod       # dataclasses need the registry
+    spec.loader.exec_module(mod)
+    metrics = {k: 1.0 for k in mod.ENGINE_METRIC_KEYS}
+    good = {"schema": mod.SCHEMA, "smoke": True, "archs": {
+        "a": {"family": "dense", "kind": "paged", "trace": {},
+              "engines": {"continuous": dict(metrics), "static": dict(metrics)},
+              "recompile_audit": {"ok": True, "decode_compiles": 1},
+              "continuous_wins": True}}}
+    mod.validate_bench(good)
+    with pytest.raises(ValueError):
+        mod.validate_bench({**good, "schema": "nope"})
+    bad = json.loads(json.dumps(good))
+    del bad["archs"]["a"]["engines"]["static"]
+    with pytest.raises(ValueError):
+        mod.validate_bench(bad)
+    bad2 = json.loads(json.dumps(good))
+    bad2["archs"]["a"]["engines"]["continuous"]["tok_per_s"] = "fast"
+    with pytest.raises(ValueError):
+        mod.validate_bench(bad2)
+
+
+def test_serving_kind_split():
+    assert serving_kind(get_smoke_config("smollm-360m")) == "paged"
+    assert serving_kind(get_smoke_config("mixtral-8x22b")) == "paged"
+    assert serving_kind(get_smoke_config("xlstm-1.3b")) == "slot"
+    assert serving_kind(get_smoke_config("zamba2-7b")) == "slot"
+    with pytest.raises(ValueError):
+        serving_kind(get_smoke_config("hubert-xlarge"))  # encoder-only

@@ -23,7 +23,10 @@
 # collective budgets, pad-inertness proofs, donation/aliasing audit and the
 # recompile-boundary audit — plus a guard that benchmarks/step_time.py
 # reports its collective numbers through the shared budget API (one code
-# path with the lint, so CSV and CI cannot drift apart).
+# path with the lint, so CSV and CI cannot drift apart). Pass 5 is the
+# serving smoke (SERVING.md): benchmarks/serving.py --smoke must produce a
+# schema-valid serving-bench-v1 JSON and record exactly one serve_decode
+# compile per arch (the no-recompile slot contract on the real engine).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -55,3 +58,10 @@ if ! grep -q "repro.analysis.collectives" benchmarks/step_time.py; then
        "repro.analysis.collectives budget API (see ANALYSIS.md)" >&2
   exit 1
 fi
+
+# Pass 5: serving smoke — schema-valid open-loop bench JSON + zero
+# off-boundary serve_decode recompiles (exit code carries the verdict).
+SERVING_BENCH_OUT="$(mktemp /tmp/bench_serving.XXXXXX.json)"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+  python benchmarks/serving.py --smoke --out "$SERVING_BENCH_OUT"
+rm -f "$SERVING_BENCH_OUT"
