@@ -1,8 +1,14 @@
 """Paper Table 1: optimizer-state memory + computation comparison.
 
-Analytic per-method state bytes for the paper's LLaMA sizes AND measured
-live-state bytes from the real optimizer pytrees (asserting analytic ==
-measured for SUMO), plus the per-step FLOPs column.
+Analytic per-method state bytes for the paper's LLaMA sizes, PLUS a live
+cross-check on the smoke model: for ALL FIVE optimizers (sumo, muon, galore,
+adamw, lora) the exact layout predictor ``core.memory.predict_state_bytes``
+must equal the bytes of the real optimizer pytree, and the measured
+SUMO-vs-AdamW / SUMO-vs-GaLore ratios must honor the paper's memory-reduction
+claim. Any drift emits a ``memory_violations`` row (same codes as
+``analysis/memory.py``) and raises ``MemoryBudgetError`` so the harness exits
+non-zero — the table cannot silently rot. tests/test_benchmarks_memory.py
+pins both directions.
 """
 from __future__ import annotations
 
@@ -10,16 +16,29 @@ import time
 
 import jax
 
+from repro.analysis.memory import MemoryBudgetError
 from repro.configs.llama_paper import LLAMA_60M, LLAMA_130M, RANK_60M, RANK_130M
-from repro.core import SumoConfig, model_memory_report, sumo_optimizer, tree_state_bytes
+from repro.core import model_memory_report
 from repro.core.memory import analytic_flops_per_step
-from repro.models import init_params
+
+MEASURED_METHODS = ("sumo", "muon", "galore", "adamw", "lora")
+
+
+def check_measured_state(rank: int = 8, arch_id: str = "smollm-360m"):
+    """Measure all five optimizers' live state vs the exact predictor plus
+    the paper's SUMO-vs-baseline ratio caps — one shared code path with the
+    analysis driver (``analysis.memory.audit_table1_state``). Returns
+    ({method: (measured, predicted)}, [MemoryViolation...])."""
+    from repro.analysis.memory import audit_table1_state
+
+    return audit_table1_state(rank=rank, arch_id=arch_id,
+                              methods=MEASURED_METHODS)
 
 
 def run(csv_rows: list) -> None:
     t0 = time.perf_counter()
     for cfg, rank in [(LLAMA_60M, RANK_60M), (LLAMA_130M, RANK_130M)]:
-        params = jax.eval_shape(lambda c=cfg: init_params(c, jax.random.PRNGKey(0)))
+        params = jax.eval_shape(lambda c=cfg: init_params_shape(c))
         rep = model_memory_report(params, rank=rank)
         base = rep["adamw"]
         for method, byts in sorted(rep.items()):
@@ -28,17 +47,21 @@ def run(csv_rows: list) -> None:
                 (time.perf_counter() - t0) * 1e6,
                 f"state_MB={byts / 1e6:.1f} vs_adam={byts / base:.3f}",
             ))
-        # measured live SUMO state on the smoke-scale model (real arrays)
-    from repro.configs import get_smoke_config
-    cfg = get_smoke_config("smollm-360m")
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    tx = sumo_optimizer(1e-3, params, SumoConfig(rank=8))
-    measured = tree_state_bytes(tx.init(params))
-    csv_rows.append((
-        "table1_memory/measured_smoke_sumo_state",
-        (time.perf_counter() - t0) * 1e6,
-        f"bytes={measured}",
-    ))
+    # measured live state for ALL FIVE optimizers vs the exact predictor
+    results, violations = check_measured_state(rank=8)
+    for method, (measured, predicted) in results.items():
+        csv_rows.append((
+            f"table1_memory/measured/{method}",
+            (time.perf_counter() - t0) * 1e6,
+            f"bytes={measured} predicted={predicted} "
+            f"drift={measured - predicted}",
+        ))
+    for v in violations:
+        csv_rows.append((
+            "table1_memory/memory_violations",
+            (time.perf_counter() - t0) * 1e6,
+            f"code={v.code} measured={v.measured:.0f} limit={v.limit:.0f}",
+        ))
     # amortized optimizer FLOPs per step, paper's m=4096 n=4096 example
     for method in ("sumo", "galore", "adam", "muon", "shampoo"):
         fl = analytic_flops_per_step(method, (4096, 4096), rank=128, K=200)
@@ -47,3 +70,12 @@ def run(csv_rows: list) -> None:
             (time.perf_counter() - t0) * 1e6,
             f"mflops_per_step={fl / 1e6:.1f}",
         ))
+    if violations:
+        raise MemoryBudgetError(
+            "Table 1 state-memory drift:\n"
+            + "\n".join(f"  {v}" for v in violations))
+
+
+def init_params_shape(cfg):
+    from repro.models import init_params
+    return init_params(cfg, jax.random.PRNGKey(0))

@@ -29,6 +29,12 @@ from typing import Dict, List, Optional
 import jax
 import numpy as np
 
+from repro.analysis.memory import (
+    MEMORY_VIOLATION_CODES,
+    audit_memory,
+    measure_compiled_memory,
+    serve_decode_memory_budget,
+)
 from repro.analysis.recompile import CompileWatcher, audit_recompiles
 from repro.configs import get_smoke_config
 from repro.models import init_params
@@ -231,6 +237,40 @@ def validate_bench(doc: dict) -> None:
         if not isinstance(audit.get("ok"), bool) or \
                 not isinstance(audit.get("decode_compiles"), int):
             raise ValueError(f"{arch}: bad recompile_audit {audit!r}")
+        mem = ent.get("memory_audit")
+        if mem is not None:          # optional extra (emitted since PR 9)
+            if not isinstance(mem.get("ok"), bool):
+                raise ValueError(f"{arch}: bad memory_audit {mem!r}")
+            for v in mem.get("memory_violations", ()):
+                if v.get("code") not in MEMORY_VIOLATION_CODES:
+                    raise ValueError(f"{arch}: unknown memory violation "
+                                     f"code {v.get('code')!r}")
+
+
+def memory_audit_entry(cfg, ccfg, params, kind: str) -> dict:
+    """Peak-HBM audit of the compiled paged decode at the BENCH pool
+    geometry — the same code path as the analysis driver's
+    ``serve/decode-budget`` check (``repro.analysis.memory``), so the JSON
+    report and the lint cannot drift apart."""
+    if kind != "paged":
+        return {"ok": True, "skipped": f"{kind} path has no KV BlockPool"}
+    from repro.serve.engine import (PAGED_DECODE_DONATE, paged_serve_decode_fn,
+                                    serve_decode_audit_args)
+    fn = paged_serve_decode_fn(cfg)
+    args = serve_decode_audit_args(cfg, ccfg, params)
+    compiled = jax.jit(fn, donate_argnums=PAGED_DECODE_DONATE) \
+        .lower(*args).compile()
+    m = measure_compiled_memory(compiled)
+    rep = audit_memory(m, serve_decode_memory_budget(cfg, ccfg, params))
+    return {
+        "ok": bool(rep.ok),
+        "peak_bytes": int(m.peak_bytes),
+        "alias_bytes": int(m.alias_bytes),
+        "temp_bytes": int(m.temp_bytes),
+        "memory_violations": [
+            {"code": v.code, "measured": float(v.measured),
+             "limit": float(v.limit)} for v in rep.violations],
+    }
 
 
 def bench_arch(arch: str, smoke: bool, seed: int) -> dict:
@@ -264,6 +304,8 @@ def bench_arch(arch: str, smoke: bool, seed: int) -> dict:
         cont = run_continuous(eng, trace)
     audit = audit_recompiles(watcher.events, fn_name=SERVE_DECODE_FN,
                              warmup_through=0)
+    # outside the watcher: the audit re-compiles serve_decode on purpose
+    mem_audit = memory_audit_entry(cfg, ccfg, params, kind)
 
     pad_len = bucket_len(max(len(p) for p in trace.prompts), block)
     static = run_static(cfg, params, trace, batch=num_slots, pad_len=pad_len,
@@ -280,6 +322,7 @@ def bench_arch(arch: str, smoke: bool, seed: int) -> dict:
         "engines": {"continuous": cont, "static": static},
         "recompile_audit": {"ok": bool(audit.ok),
                             "decode_compiles": len(audit.compiles)},
+        "memory_audit": mem_audit,
         "continuous_wins": wins,
     }
 
@@ -309,7 +352,8 @@ def main(argv=None) -> int:
               f"e2e p95 {s['e2e_p95_s'] * 1e3:7.1f} ms")
         print(f"   continuous_wins={ent['continuous_wins']}  "
               f"decode_compiles={ent['recompile_audit']['decode_compiles']} "
-              f"audit_ok={ent['recompile_audit']['ok']}")
+              f"audit_ok={ent['recompile_audit']['ok']}  "
+              f"memory_ok={ent['memory_audit']['ok']}")
 
     validate_bench(doc)
     with open(args.out, "w") as f:
@@ -323,7 +367,14 @@ def main(argv=None) -> int:
         if bad:
             print(f"SMOKE FAIL: off-boundary/extra decode compiles: {bad}")
             return 1
-        print("SMOKE OK: schema valid, one decode compile per arch")
+        bad_mem = [a for a, e in doc["archs"].items()
+                   if not e["memory_audit"]["ok"]]
+        if bad_mem:
+            print(f"SMOKE FAIL: serve_decode memory budget violated: "
+                  f"{bad_mem}")
+            return 1
+        print("SMOKE OK: schema valid, one decode compile per arch, "
+              "decode memory within the BlockPool budget")
     return 0
 
 

@@ -1,15 +1,20 @@
 """repro.analysis — machine-checked static guarantees.
 
-Four passes over jaxprs and optimized HLO (see ANALYSIS.md):
+Five passes over jaxprs and optimized HLO (see ANALYSIS.md):
 
   collectives  declarative collective-budget lint over compiled HLO
   inertness    abstract-interpretation proof that edge-pad rows/slots of
-               the bucketed SUMO update stay exactly zero
+               the bucketed SUMO update stay exactly zero (and that free
+               serving slots write only the null KV block)
   donation     jit donation markers vs compiled input-output aliasing,
-               plus a source lint for donated-buffer reuse
+               plus source lints for donated-buffer reuse and implicit
+               host-buffer dtypes on the serve/train hot paths
   recompile    post-warmup recompiles only at controller boundaries
+  memory       declarative peak-HBM budgets over compiled artifacts
+               (train step, Table-1 state claim, paged serve_decode)
 
-Run all of them: ``python -m repro.analysis`` (or tools/lint_static.py).
+Run all of them: ``python -m repro.analysis`` (or tools/lint_static.py);
+``--json`` emits the machine-readable static-analysis-v1 report.
 
 Submodule attributes are re-exported lazily so ``import repro.analysis``
 stays cheap (no jax import) — the training loop imports
@@ -32,15 +37,30 @@ _EXPORTS = {
     "Claim": "inertness", "InertnessError": "inertness",
     "InertnessResult": "inertness", "prove_update_inertness": "inertness",
     "prove_refresh_inertness": "inertness",
+    "prove_null_block_inertness": "inertness",
     # donation
     "DonationReport": "donation", "DonationViolation": "donation",
     "DonationError": "donation", "audit_donation": "donation",
     "lint_donation_source": "donation", "lint_donation_file": "donation",
     "audit_train_step_donation": "donation",
+    "lint_host_dtype_source": "donation", "lint_host_dtype_file": "donation",
+    "audit_host_dtypes": "donation",
     # recompile
     "CompileWatcher": "recompile", "CompileEvent": "recompile",
     "RecompileReport": "recompile", "RecompileError": "recompile",
     "mark_step": "recompile", "audit_recompiles": "recompile",
+    # memory
+    "MemoryBudget": "memory", "MemoryBudgetError": "memory",
+    "MemoryViolation": "memory", "MemoryReport": "memory",
+    "MemoryMeasurement": "memory", "MEMORY_VIOLATION_CODES": "memory",
+    "BufferTable": "memory", "hlo_buffer_table": "memory",
+    "measure_compiled_memory": "memory", "audit_memory": "memory",
+    "assert_memory_budget": "memory", "audit_state_ratio": "memory",
+    "audit_table1_state": "memory", "BucketMemoryEntry": "memory",
+    "BucketMemoryPlan": "memory", "bucket_memory_plan": "memory",
+    "steady_memory_budget": "memory", "refresh_memory_budget": "memory",
+    "dp_compress_memory_budget": "memory",
+    "serve_decode_memory_budget": "memory",
 }
 
 __all__ = sorted(_EXPORTS)

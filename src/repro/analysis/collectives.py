@@ -468,8 +468,11 @@ def steady_dp_compressed_budget(wire_plan: Iterable, *,
     shapes = {tuple(e.payload_dims) for e in plan}
     if with_loss_scalar:
         shapes.add(())
-    wire = sum(e.payload_bytes for e in plan)
-    max_payload = max((e.payload_bytes for e in plan), default=0)
+    # Caps are over COMPILED HLO, where XLA promotes sub-f32 float
+    # all-reduces to f32 — so a bf16 wire audits at its promoted (hlo)
+    # bytes; the true-wire ``payload_bytes`` back the bandwidth claims.
+    wire = sum(e.hlo_bytes for e in plan)
+    max_payload = max((e.hlo_bytes for e in plan), default=0)
     # the loss scalar rides the same budget: 8 B of slack (f32, ×2)
     slack = 8.0 if with_loss_scalar else 0.0
     total = 2.0 * wire + slack

@@ -33,6 +33,7 @@ from typing import Optional
 __all__ = [
     "DonationViolation", "DonationReport", "DonationError",
     "audit_donation", "lint_donation_source", "lint_donation_file",
+    "lint_host_dtype_source", "lint_host_dtype_file", "audit_host_dtypes",
     "audit_train_step_donation",
 ]
 
@@ -253,6 +254,68 @@ def lint_donation_source(source: str, filename: str = "<string>") -> list:
 def lint_donation_file(path) -> list:
     with open(path) as f:
         return lint_donation_source(f.read(), filename=str(path))
+
+
+# -- host-buffer dtype lint -------------------------------------------------
+
+# numpy constructors whose default dtype is PLATFORM-DERIVED (int64/float64
+# on this host) → the jitted step sees a different aval than the int32/f32
+# the shapes were designed for, and every call recompiles (the PR 8 serving
+# footgun: an int64 lengths array re-tracing serve_decode per step).
+# Positional index where each signature accepts dtype; np.asarray is exempt
+# — it preserves an existing array's dtype, which is the common hot-path use
+# (np.asarray(device_array) host syncs without changing the aval).
+_NP_DTYPE_POS = {"array": 1, "zeros": 1, "ones": 1, "empty": 1,
+                 "full": 2, "arange": 3}
+
+
+def lint_host_dtype_source(source: str, filename: str = "<string>") -> list:
+    """Flag ``np.array/zeros/ones/empty/full/arange`` calls without an
+    explicit dtype in host-side code; returns DonationViolation list with
+    code ``host-buffer-no-dtype``."""
+    tree = ast.parse(source, filename=filename)
+    violations = []
+    for call in ast.walk(tree):
+        if not isinstance(call, ast.Call) \
+                or not isinstance(call.func, ast.Attribute):
+            continue
+        base = call.func.value
+        if not (isinstance(base, ast.Name) and base.id in ("np", "numpy")):
+            continue
+        pos = _NP_DTYPE_POS.get(call.func.attr)
+        if pos is None:
+            continue
+        if any(kw.arg == "dtype" for kw in call.keywords):
+            continue
+        if len(call.args) > pos:        # positional dtype (np.zeros(S, np.int32))
+            continue
+        violations.append(DonationViolation(
+            "host-buffer-no-dtype",
+            f"np.{call.func.attr}(...) at line {call.lineno} has no explicit "
+            "dtype — the platform default (int64/float64) changes the jitted "
+            "aval and recompiles the step on every call",
+            where=f"{filename}:{call.lineno}"))
+    return violations
+
+
+def lint_host_dtype_file(path) -> list:
+    with open(path) as f:
+        return lint_host_dtype_source(f.read(), filename=str(path))
+
+
+def audit_host_dtypes() -> DonationReport:
+    """Run the host-buffer dtype lint over the serving/training hot paths
+    (the modules whose host arrays feed jitted per-step functions)."""
+    from ..serve import engine as _engine
+    from ..serve import kv_cache as _kv
+    from ..serve import scheduler as _sched
+    from ..train import loop as _loop
+    from ..train import steps as _steps
+
+    violations = []
+    for mod in (_engine, _kv, _sched, _loop, _steps):
+        violations.extend(lint_host_dtype_file(mod.__file__))
+    return DonationReport(ok=not violations, violations=violations)
 
 
 # -- repo-specific driver ---------------------------------------------------

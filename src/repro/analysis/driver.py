@@ -1,10 +1,13 @@
-"""Shared driver for the four static-analysis passes.
+"""Shared driver for the five static-analysis passes.
 
-``python -m repro.analysis [--mode 1d|2d|all]`` (or tools/lint_static.py)
-runs every pass that the current device count supports and prints one
-PASS/FAIL/SKIP line per check.  Exit code 0 iff nothing FAILed — SKIPs
-(missing devices) are not failures, so the same entry point works on a
-laptop and in the 8-device tier-1 lane.
+``python -m repro.analysis [--mode 1d|2d|all] [--json]`` (or
+tools/lint_static.py) runs every pass that the current device count
+supports and prints one PASS/FAIL/SKIP line per check — or, with
+``--json``, a machine-readable report (schema ``static-analysis-v1``:
+stable check names, PASS/FAIL/SKIP status, first detail line) consumed by
+tools/run_tier1.sh.  Exit code 0 iff nothing FAILed — SKIPs (missing
+devices) are not failures, so the same entry point works on a laptop and
+in the 8-device tier-1 lane.
 
 Train-stack imports stay inside the pass functions: importing this module
 must not pull jax (the ``repro.analysis`` package promises a cheap import
@@ -14,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["run", "main", "CheckResult"]
+__all__ = ["run", "run_checks", "json_report", "main", "CheckResult",
+           "REPORT_SCHEMA"]
 
 
 @dataclasses.dataclass
@@ -197,22 +201,150 @@ def check_recompile() -> CheckResult:
     return CheckResult("recompile", "PASS", rep.summary())
 
 
+# -- pass 5: memory budgets (train step, Table 1, and the serving path) ------
+
+def _smoke_train_setup():
+    """The lint smoke recipe (same shapes as ``audit_train_step_donation``):
+    SUMO rank=4 update_freq=8 on smollm-360m, seq 16, global batch 2."""
+    import jax
+    from ..configs import get_smoke_config
+    from ..configs.base import ShapeConfig
+    from ..data import DataConfig, make_batch
+    from ..models import init_params
+    from ..train.steps import make_optimizer, make_train_step
+
+    arch = get_smoke_config("smollm-360m")
+    shape = ShapeConfig("lint", seq_len=16, global_batch=2, kind="train")
+    params = init_params(arch, jax.random.PRNGKey(0))
+    tx = make_optimizer("sumo", 3e-3, params, rank=4, update_freq=8)
+    batch = make_batch(0, shape, arch, DataConfig(seed=0))
+    return params, tx.init(params), batch, make_train_step(arch, tx)
+
+
+def check_memory_train() -> CheckResult:
+    import jax
+    from ..configs import get_smoke_config
+    from ..core.memory import (analytic_activation_bytes, predict_state_bytes,
+                               tree_param_bytes, tree_state_bytes)
+    from .memory import (audit_memory, measure_compiled_memory,
+                         steady_memory_budget)
+
+    params, opt_state, batch, step = _smoke_train_setup()
+    compiled = jax.jit(step, donate_argnums=(0, 1)) \
+        .lower(params, opt_state, batch).compile()
+    meas = measure_compiled_memory(compiled)
+    batch_bytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(batch))
+    budget = steady_memory_budget(
+        params, opt_state, batch_bytes=batch_bytes,
+        activation_bytes=analytic_activation_bytes(
+            get_smoke_config("smollm-360m"), 2, 16),
+        state_plan_bytes=predict_state_bytes("sumo", params, rank=4))
+    rep = audit_memory(meas, budget,
+                       param_bytes=tree_param_bytes(params),
+                       state_bytes=tree_state_bytes(opt_state))
+    return CheckResult("memory/train-step",
+                       "PASS" if rep.ok else "FAIL", rep.summary())
+
+
+def check_memory_table1() -> CheckResult:
+    from .memory import audit_table1_state
+
+    results, violations = audit_table1_state(rank=8)
+    if violations:
+        return CheckResult("memory/table1", "FAIL",
+                           "\n".join(str(v) for v in violations))
+    ratio = results["sumo"][0] / results["adamw"][0]
+    return CheckResult(
+        "memory/table1", "PASS",
+        f"5 optimizers' live state == exact layout predictor; "
+        f"sumo/adamw = {ratio:.3f} (<= 0.80 claim)")
+
+
+def check_serve_decode() -> CheckResult:
+    """The serving-path extension: the compiled paged ``serve_decode`` must
+    carry ZERO collectives, realize both KV-pool donations, and fit the
+    BlockPool-derived memory budget (an un-donated pool is exactly a 2×
+    peak bug, caught twice — by the donation audit and the alias floor)."""
+    import jax
+    from ..configs import get_smoke_config
+    from ..models import init_params
+    from ..serve.engine import (ContinuousConfig, PAGED_DECODE_DONATE,
+                                paged_serve_decode_fn, serve_decode_audit_args)
+    from .collectives import CollectiveBudget, audit_hlo
+    from .donation import audit_donation
+    from .memory import (audit_memory, measure_compiled_memory,
+                         serve_decode_memory_budget)
+
+    cfg = get_smoke_config("smollm-360m")
+    ccfg = ContinuousConfig(num_slots=4, block_size=8, n_blocks=32,
+                            max_prompt_len=16, max_new_cap=16)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    fn = paged_serve_decode_fn(cfg)
+    args = serve_decode_audit_args(cfg, ccfg, params)
+
+    don = audit_donation(fn, args, PAGED_DECODE_DONATE)
+    compiled = jax.jit(fn, donate_argnums=PAGED_DECODE_DONATE) \
+        .lower(*args).compile()
+    coll = audit_hlo(compiled.as_text(),
+                     CollectiveBudget(name="serve-decode-zero-collective",
+                                      rules={}))
+    mem = audit_memory(measure_compiled_memory(compiled),
+                       serve_decode_memory_budget(cfg, ccfg, params))
+    lines = [coll.summary().splitlines()[0],
+             don.summary().splitlines()[0],
+             mem.summary().splitlines()[0]]
+    for rep in (coll, don, mem):
+        for v in rep.violations:
+            lines.append(f"  ✗ {v}")
+    ok = don.ok and coll.ok and mem.ok
+    return CheckResult("serve/decode-budget",
+                       "PASS" if ok else "FAIL", "\n".join(lines))
+
+
+def check_inertness_nullblock() -> CheckResult:
+    from .inertness import InertnessError, prove_null_block_inertness
+    try:
+        prove_null_block_inertness()
+    except InertnessError as e:
+        return CheckResult("inertness/null-block", "FAIL", str(e))
+    return CheckResult("inertness/null-block", "PASS",
+                       "free slots' all-zero block tables keep decode writes "
+                       "in the null block (zero-slab proof)")
+
+
+def check_host_dtype() -> CheckResult:
+    from .donation import audit_host_dtypes
+    rep = audit_host_dtypes()
+    return CheckResult("donation/host-dtype",
+                       "PASS" if rep.ok else "FAIL", rep.summary())
+
+
 # -- entry point ------------------------------------------------------------
 
-def run(mode: str = "all", log=print) -> int:
+def run_checks(mode: str = "all") -> list:
+    """Execute every check the mode asks for; returns [CheckResult...]."""
     checks = []
     if mode in ("1d", "all"):
         checks += [check_collectives_1d,
                    check_inertness_refresh,
                    lambda: check_inertness_update(two_d=False),
+                   check_inertness_nullblock,
                    check_donation,
-                   check_recompile]
+                   check_host_dtype,
+                   check_recompile,
+                   check_memory_train,
+                   check_memory_table1,
+                   check_serve_decode]
     if mode in ("2d", "all"):
         checks += [check_collectives_2d,
                    lambda: check_inertness_update(two_d=True)]
         if mode == "2d":
             checks.insert(0, check_inertness_refresh)
-    results = [c() for c in checks]
+    return [c() for c in checks]
+
+
+def run(mode: str = "all", log=print) -> int:
+    results = run_checks(mode)
     width = max(len(r.name) for r in results)
     failed = False
     for r in results:
@@ -228,11 +360,38 @@ def run(mode: str = "all", log=print) -> int:
     return 1 if failed else 0
 
 
+REPORT_SCHEMA = "static-analysis-v1"
+
+
+def json_report(mode: str = "all") -> dict:
+    """Machine-readable run: stable schema + per-check name/status/detail.
+    tools/run_tier1.sh consumes this instead of grepping the human log."""
+    results = run_checks(mode)
+    return {
+        "schema": REPORT_SCHEMA,
+        "mode": mode,
+        "ok": all(r.status != "FAIL" for r in results),
+        "passed": sum(r.status == "PASS" for r in results),
+        "skipped": sum(r.status == "SKIP" for r in results),
+        "failed": sum(r.status == "FAIL" for r in results),
+        "checks": [dataclasses.asdict(r) for r in results],
+    }
+
+
 def main(argv=None) -> int:
     import argparse
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="Run the repro static-analysis passes.")
     ap.add_argument("--mode", choices=("1d", "2d", "all"), default="all")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the machine-readable report on stdout "
+                         "(schema %s) instead of the human log"
+                         % REPORT_SCHEMA)
     args = ap.parse_args(argv)
+    if args.json:
+        import json
+        rep = json_report(args.mode)
+        print(json.dumps(rep, indent=2))
+        return 0 if rep["ok"] else 1
     return run(args.mode)

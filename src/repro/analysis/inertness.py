@@ -1129,6 +1129,49 @@ def prove_update_inertness(params, cfg=None, mesh=None, lr: float = 0.01,
     return result
 
 
+def prove_null_block_inertness(num_slots: int = 4, max_blocks: int = 8,
+                               block_size: int = 8, free_slots: int = 2,
+                               ) -> InertnessResult:
+    """Serving null-block proof: free slots' unconditional decode writes
+    provably land only in physical block 0.
+
+    The continuous engine decodes ALL ``num_slots`` slots every step — free
+    slots included (fixed jit shape, SERVING.md). The safety convention is
+    that a free slot's table row is all zeros and its length is zero, so its
+    per-layer K/V scatter targets the reserved null block and can never
+    corrupt a live request's blocks. This proves that mechanically over the
+    jaxpr of ``models.transformer.paged_write_targets`` — the exact
+    computation ``paged_decode_step`` uses to pick its scatter targets:
+    assuming the trailing ``free_slots`` table rows and lengths are zero
+    (the canonical layout; slots are symmetric), both the physical block
+    index and the in-block offset of those slots are exactly zero.
+
+    Raises InertnessError if the proof does not go through (e.g. someone
+    reintroduces a gather-based lookup, which is TOP to this interpreter).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from ..models.transformer import paged_write_targets
+
+    closed = jax.make_jaxpr(
+        lambda t, ln: paged_write_targets(t, ln, block_size))(
+        jnp.zeros((num_slots, max_blocks), jnp.int32),
+        jnp.zeros((num_slots,), jnp.int32))
+    result = analyze_jaxpr(
+        closed, arg_claims=[{0: free_slots}, {0: free_slots}])
+    failures = check_claims(result, [
+        Claim(what=f"free slots' write block ({free_slots} trailing slots)",
+              dim=0, count=free_slots, out_index=0),
+        Claim(what=f"free slots' write offset ({free_slots} trailing slots)",
+              dim=0, count=free_slots, out_index=1),
+    ])
+    if failures:
+        raise InertnessError(
+            "null-block inertness proof FAILED:\n  " + "\n  ".join(failures))
+    return result
+
+
 def prove_refresh_inertness(rows: int = 102, pad: int = 2, short: int = 16,
                             l: int = 8) -> InertnessResult:
     """Standalone single-device proof over the rSVD refresh body: a sketch

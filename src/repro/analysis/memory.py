@@ -1,0 +1,648 @@
+"""Pass 5 — memory-budget lint over compiled artifacts (ANALYSIS.md).
+
+The paper's headline systems claim — SUMO cuts optimizer-state memory vs
+AdamW and the low-rank SOTA (Table 1) — and the serving path's "the KV pool
+lives on device ONCE" donation story used to be analytic prose. This pass
+makes them machine checks against what XLA actually produced:
+
+  * ``measure_compiled_memory(compiled)`` reads the executable's
+    ``memory_analysis()`` stats (argument/output/temp/alias bytes) and
+    cross-checks them with an HLO buffer-table walk built on the same
+    parser as ``roofline/hlo_cost`` (ENTRY parameters, ROOT result, and the
+    ``input_output_alias`` donation table), so the pass still works — and
+    can't be lied to by one source — when either side is unavailable.
+  * a declarative ``MemoryBudget`` (peak cap, per-category caps for
+    params / opt state / transients, donation-savings floor, an exact
+    opt-state plan) audited by ``audit_memory``; violations carry stable
+    codes::
+
+        peak-bytes-exceeded       donation-not-realized
+        transient-exceeds-plan    state-bytes-mismatch
+
+  * analytic factories — ``steady_memory_budget`` / ``refresh_memory_budget``
+    / ``dp_compress_memory_budget`` for the training path, derived from
+    ``bucket_memory_plan(state, mesh)`` (the resident SumoState stacks), and
+    ``serve_decode_memory_budget`` for serving, derived from the KV
+    ``BlockPool`` geometry — so every cap is a sum of Table-1 / pool terms,
+    not a magic constant.
+
+The donation-savings floor is exact where it matters: a train step that
+donates (params, opt_state) must realize ``param_bytes + state_bytes`` of
+aliasing, and the paged ``serve_decode`` must realize both pools' bytes —
+an un-donated KV pool is precisely a 2× peak-memory bug and fails with
+``donation-not-realized`` (and, at the cap, ``peak-bytes-exceeded``).
+Falsifiability for all codes is pinned in tests/test_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Optional
+
+from ..roofline.hlo_cost import HloCostModel, _shape_info
+from .donation import _ALIAS_PAIR_RE
+
+PyTree = Any
+
+MEMORY_VIOLATION_CODES = (
+    "peak-bytes-exceeded",
+    "donation-not-realized",
+    "transient-exceeds-plan",
+    "state-bytes-mismatch",
+)
+
+_PARAM_NUM_RE = re.compile(r"parameter\((\d+)\)")
+
+
+class MemoryBudgetError(AssertionError):
+    """A compiled program exceeded its declared memory budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryViolation:
+    code: str          # one of MEMORY_VIOLATION_CODES
+    detail: str
+    measured: float    # bytes (or ratio) observed
+    limit: float       # the budget's cap / floor it broke
+
+    def __str__(self):
+        return f"[{self.code}] {self.detail}"
+
+
+# ---------------------------------------------------------------------------
+# measured side: memory_analysis() + the HLO buffer-table walk
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BufferTable:
+    """Entry-computation buffers of one compiled program, from HLO text.
+
+    ``param_bytes`` is indexed by HLO parameter number; ``aliased_params``
+    are the parameter numbers the ``input_output_alias`` table donates into
+    outputs. Parsed with the same HloCostModel the roofline/collective
+    passes use — one parser, no drift.
+    """
+    param_bytes: tuple
+    output_bytes: float
+    aliased_params: tuple
+
+    @property
+    def argument_bytes(self) -> float:
+        return float(sum(self.param_bytes))
+
+    @property
+    def alias_bytes(self) -> float:
+        return float(sum(self.param_bytes[i] for i in self.aliased_params
+                         if i < len(self.param_bytes)))
+
+
+def hlo_buffer_table(hlo_text: str) -> BufferTable:
+    """Walk one program's ENTRY buffers: per-parameter bytes, ROOT output
+    bytes, and which parameters the donation table aliases into outputs."""
+    model = hlo_text if isinstance(hlo_text, HloCostModel) \
+        else HloCostModel(hlo_text)
+    params: dict = {}
+    out_bytes = 0.0
+    for op in model.computations.get(model.entry, []):
+        if op.opcode == "parameter":
+            m = _PARAM_NUM_RE.search(op.raw)
+            if m:
+                params[int(m.group(1))] = float(_shape_info(op.result_type)[1])
+        if "ROOT" in op.raw:
+            out_bytes = float(_shape_info(op.result_type)[1])
+    raw = hlo_text if isinstance(hlo_text, str) else ""
+    aliased = []
+    m = re.search(r"input_output_alias=\{(.*?)\}\s*$",
+                  raw, re.MULTILINE | re.DOTALL)
+    if m is None:
+        m = re.search(r"input_output_alias=\{([^\n]*)", raw)
+    if m is not None:
+        aliased = sorted({int(g) for g in _ALIAS_PAIR_RE.findall(m.group(1))})
+    n = 1 + max(params) if params else 0
+    return BufferTable(
+        param_bytes=tuple(params.get(i, 0.0) for i in range(n)),
+        output_bytes=out_bytes,
+        aliased_params=tuple(aliased))
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryMeasurement:
+    """What one compiled executable holds in HBM, by category (bytes)."""
+    argument_bytes: float
+    output_bytes: float
+    temp_bytes: float
+    alias_bytes: float             # donated input bytes realized as aliases
+    generated_code_bytes: float = 0.0
+    table: Optional[BufferTable] = None
+    from_stats: bool = True        # memory_analysis() was available
+
+    @property
+    def peak_bytes(self) -> float:
+        """Live-set upper bound: arguments + outputs + temps + code, with
+        donated (aliased) bytes — counted in both arguments and outputs —
+        subtracted once. This is what donation buys: an un-donated buffer
+        shows up twice here."""
+        return (self.argument_bytes + self.output_bytes + self.temp_bytes
+                + self.generated_code_bytes - self.alias_bytes)
+
+
+def measure_compiled_memory(compiled, hlo_text: Optional[str] = None
+                            ) -> MemoryMeasurement:
+    """Measure a ``jax.jit(...).lower(...).compile()`` executable.
+
+    Primary source is ``compiled.memory_analysis()`` (the dryrun idiom:
+    attributes read defensively — backends differ); the HLO buffer table is
+    always walked as the cross-check and the fallback when stats are
+    missing. Alias bytes take the MINIMUM of the two sources: a donation the
+    stats report but the alias table dropped (or vice versa) must not be
+    credited to the peak.
+    """
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    table = hlo_buffer_table(text)
+    try:
+        stats = compiled.memory_analysis()
+    except Exception:
+        stats = None
+    arg = getattr(stats, "argument_size_in_bytes", None)
+    out = getattr(stats, "output_size_in_bytes", None)
+    temp = getattr(stats, "temp_size_in_bytes", None)
+    alias = getattr(stats, "alias_size_in_bytes", None)
+    code = getattr(stats, "generated_code_size_in_bytes", None)
+    from_stats = arg is not None
+    if alias is None:
+        alias = table.alias_bytes
+    else:
+        alias = min(float(alias), table.alias_bytes) \
+            if table.aliased_params or alias == 0 else float(alias)
+    return MemoryMeasurement(
+        argument_bytes=float(arg) if arg is not None else table.argument_bytes,
+        output_bytes=float(out) if out is not None else table.output_bytes,
+        temp_bytes=float(temp) if temp is not None else 0.0,
+        alias_bytes=float(alias),
+        generated_code_bytes=float(code or 0.0),
+        table=table, from_stats=from_stats)
+
+
+# ---------------------------------------------------------------------------
+# the budget
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MemoryBudget:
+    """Declarative peak-HBM budget for ONE compiled program.
+
+    Caps are bytes; ``None`` disables a check. ``state_plan_bytes`` is the
+    EXACT analytic opt-state size (Table 1 applied to the live layout, see
+    ``core.memory.predict_state_bytes``) — the measured state tree must
+    match it within ``state_tol_frac`` or the audit fails with
+    ``state-bytes-mismatch``.
+    """
+    name: str
+    max_peak_bytes: Optional[float] = None
+    max_transient_bytes: Optional[float] = None
+    min_alias_bytes: Optional[float] = None       # donation-savings floor
+    max_param_bytes: Optional[float] = None       # per-category caps,
+    max_state_bytes: Optional[float] = None       # checked vs the live trees
+    state_plan_bytes: Optional[float] = None
+    state_tol_frac: float = 0.0
+    note: str = ""
+
+
+@dataclasses.dataclass
+class MemoryReport:
+    budget_name: str
+    violations: list
+    measurement: Optional[MemoryMeasurement] = None
+    ok: bool = True
+
+    def summary(self) -> str:
+        head = f"memory budget '{self.budget_name}': " + \
+            ("OK" if self.ok else f"{len(self.violations)} violation(s)")
+        if self.measurement is not None:
+            m = self.measurement
+            head += (f" (peak={m.peak_bytes:.0f} args={m.argument_bytes:.0f}"
+                     f" out={m.output_bytes:.0f} temp={m.temp_bytes:.0f}"
+                     f" alias={m.alias_bytes:.0f})")
+        return "\n".join([head] + [f"  {v}" for v in self.violations])
+
+
+def audit_memory(measurement: MemoryMeasurement, budget: MemoryBudget, *,
+                 param_bytes: Optional[float] = None,
+                 state_bytes: Optional[float] = None) -> MemoryReport:
+    """Audit one measured executable against a budget.
+
+    ``param_bytes`` / ``state_bytes`` are the live input trees' sizes
+    (``core.memory.tree_param_bytes`` / ``tree_state_bytes``) — the compiled
+    artifact can't label which argument is which category, the caller can.
+    """
+    v: list = []
+
+    def add(code, detail, measured, limit):
+        v.append(MemoryViolation(code=code, detail=detail,
+                                 measured=float(measured), limit=float(limit)))
+
+    m = measurement
+    if budget.max_peak_bytes is not None and m.peak_bytes > budget.max_peak_bytes:
+        add("peak-bytes-exceeded",
+            f"live-set peak {m.peak_bytes:.0f} B exceeds the plan's "
+            f"{budget.max_peak_bytes:.0f} B "
+            f"(args={m.argument_bytes:.0f} out={m.output_bytes:.0f} "
+            f"temp={m.temp_bytes:.0f} alias={m.alias_bytes:.0f})",
+            m.peak_bytes, budget.max_peak_bytes)
+    if budget.max_transient_bytes is not None \
+            and m.temp_bytes > budget.max_transient_bytes:
+        add("transient-exceeds-plan",
+            f"temp buffers {m.temp_bytes:.0f} B exceed the transient "
+            f"allowance {budget.max_transient_bytes:.0f} B",
+            m.temp_bytes, budget.max_transient_bytes)
+    if budget.min_alias_bytes is not None \
+            and m.alias_bytes < budget.min_alias_bytes:
+        add("donation-not-realized",
+            f"only {m.alias_bytes:.0f} B of donated inputs alias outputs; "
+            f"the budget's donation floor is {budget.min_alias_bytes:.0f} B "
+            "(an un-donated buffer is resident TWICE at peak)",
+            m.alias_bytes, budget.min_alias_bytes)
+    if budget.max_param_bytes is not None and param_bytes is not None \
+            and param_bytes > budget.max_param_bytes:
+        add("state-bytes-mismatch",
+            f"category params: {param_bytes:.0f} B exceeds the cap "
+            f"{budget.max_param_bytes:.0f} B",
+            param_bytes, budget.max_param_bytes)
+    if budget.max_state_bytes is not None and state_bytes is not None \
+            and state_bytes > budget.max_state_bytes:
+        add("state-bytes-mismatch",
+            f"category opt-state: {state_bytes:.0f} B exceeds the cap "
+            f"{budget.max_state_bytes:.0f} B",
+            state_bytes, budget.max_state_bytes)
+    if budget.state_plan_bytes is not None and state_bytes is not None:
+        tol = budget.state_tol_frac * budget.state_plan_bytes
+        if abs(state_bytes - budget.state_plan_bytes) > tol:
+            add("state-bytes-mismatch",
+                f"measured opt-state {state_bytes:.0f} B != analytic plan "
+                f"{budget.state_plan_bytes:.0f} B "
+                f"(tol {tol:.0f} B) — Table 1 and the live engine drifted",
+                state_bytes, budget.state_plan_bytes)
+    return MemoryReport(budget_name=budget.name, violations=v,
+                        measurement=measurement, ok=not v)
+
+
+def assert_memory_budget(measurement, budget, **kw) -> MemoryReport:
+    """``audit_memory`` that raises MemoryBudgetError on violations."""
+    report = audit_memory(measurement, budget, **kw)
+    if not report.ok:
+        raise MemoryBudgetError(report.summary())
+    return report
+
+
+def audit_state_ratio(name: str, measured_bytes: float, baseline_bytes: float,
+                      max_ratio: float) -> MemoryReport:
+    """The Table-1 ratio claim as a lint: ``measured / baseline`` must not
+    exceed ``max_ratio`` (e.g. SUMO state vs AdamW state at the paper's
+    >= 20% reduction → max_ratio 0.8). Fails ``state-bytes-mismatch``."""
+    ratio = measured_bytes / max(baseline_bytes, 1.0)
+    v = []
+    if ratio > max_ratio:
+        v.append(MemoryViolation(
+            code="state-bytes-mismatch",
+            detail=f"state-bytes ratio {ratio:.3f} exceeds the analytic "
+                   f"plan's {max_ratio:.3f} "
+                   f"({measured_bytes:.0f} B vs {baseline_bytes:.0f} B "
+                   "baseline) — the paper's memory-reduction claim does "
+                   "not hold on the live trees",
+            measured=ratio, limit=max_ratio))
+    return MemoryReport(budget_name=name, violations=v, ok=not v)
+
+
+def audit_table1_state(rank: int = 8, arch_id: str = "smollm-360m", *,
+                       ratios=(("adamw", 0.80), ("galore", 1.00)),
+                       methods=("sumo", "muon", "galore", "adamw", "lora")
+                       ) -> tuple:
+    """The paper's Table-1 memory claim as a lint, on LIVE optimizer trees.
+
+    For every method, the measured state bytes of the real engine must equal
+    ``core.memory.predict_state_bytes`` exactly (code ``state-bytes-mismatch``
+    on drift); then the measured SUMO bytes must not exceed each baseline's
+    measured bytes × the claimed ratio cap. Returns
+    ({method: (measured, predicted)}, [MemoryViolation...]) — shared by
+    benchmarks/memory_table.py and the analysis driver, so the CSV rows and
+    the PASS/FAIL line cannot diverge.
+    """
+    import jax
+
+    from ..configs import get_smoke_config
+    from ..core.lora import LoraConfig, init_lora_params
+    from ..core.memory import (predict_state_bytes, tree_param_bytes,
+                               tree_state_bytes)
+    from ..models import init_params
+    from ..train.steps import make_optimizer
+
+    cfg = get_smoke_config(arch_id)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    results = {}
+    violations = []
+    for method in methods:
+        if method == "lora":
+            adapters = init_lora_params(params, LoraConfig(rank=rank))
+            tx = make_optimizer("adamw", 1e-3, adapters)
+            measured = tree_param_bytes(adapters) \
+                + tree_state_bytes(tx.init(adapters))
+        else:
+            tx = make_optimizer(method, 1e-3, params, rank=rank,
+                                update_freq=8)
+            measured = tree_state_bytes(tx.init(params))
+        predicted = predict_state_bytes(method, params, rank)
+        results[method] = (measured, predicted)
+        if measured != predicted:
+            violations.append(MemoryViolation(
+                code="state-bytes-mismatch",
+                detail=f"{method}: live engine state {measured} B != exact "
+                       f"layout predictor {predicted} B — Table 1 and the "
+                       "engine drifted",
+                measured=float(measured), limit=float(predicted)))
+    for base, cap in ratios:
+        if base in results and "sumo" in results:
+            rep = audit_state_ratio(
+                f"table1/sumo-vs-{base}", float(results["sumo"][0]),
+                float(results[base][0]), max_ratio=cap)
+            violations.extend(rep.violations)
+    return results, violations
+
+
+# ---------------------------------------------------------------------------
+# analytic plans: resident SumoState decomposition
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BucketMemoryEntry:
+    """Resident bytes of one bucket's optimizer state (padded, as stored)."""
+    key: str            # "LONGxSHORT"
+    b_padded: int
+    long_padded: int
+    short: int
+    rank: int
+    q_bytes: int
+    m_bytes: int
+    norm_bytes: int
+    sharded: bool
+    data_shards: int
+    model_shards: int
+
+    @property
+    def state_bytes(self) -> int:
+        return self.q_bytes + self.m_bytes + self.norm_bytes
+
+    @property
+    def per_shard_bytes(self) -> float:
+        """Bytes resident per device: Q is (B/data, long/model, r); M and
+        prev_norm shard over data only (they are replicated over model)."""
+        d = max(1, self.data_shards)
+        mshards = max(1, self.model_shards) if self.sharded else 1
+        return (self.q_bytes / (d * mshards)
+                + (self.m_bytes + self.norm_bytes) / d)
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketMemoryPlan:
+    entries: tuple
+    fallback_bytes: int     # AdamW mu/nu on non-matrix leaves
+    scalar_bytes: int       # step counters, refresh keys
+
+    @property
+    def bucket_bytes(self) -> int:
+        return sum(e.state_bytes for e in self.entries)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.bucket_bytes + self.fallback_bytes + self.scalar_bytes
+
+
+_KEY_RE = re.compile(r"^(\d+)x(\d+)$")
+
+
+def bucket_memory_plan(state: PyTree, mesh=None) -> BucketMemoryPlan:
+    """Decompose a live optimizer state's resident bytes by bucket/category.
+
+    Mirrors ``bucket_collective_plan``'s reading of the SumoState Q/M stacks
+    (bucket layout: Q "LONGxSHORT" -> (B, long_padded, r)), plus the
+    fallback AdamW states and scalar bookkeeping, so
+    ``plan.total_bytes == tree_state_bytes(state)`` exactly — the budget
+    factories below derive their caps from this decomposition, and
+    ``core.memory.predict_state_bytes`` (params + config only) pins it
+    against the paper's Table-1 model.
+    """
+    import jax
+
+    from ..core.sumo import SumoState
+
+    data_shards = model_shards = 1
+    if mesh is not None:
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        data_shards = int(axis_sizes.get("data", 1))
+        model_shards = int(axis_sizes.get("model", 1))
+
+    entries = []
+    fallback = 0
+    scalars = 0
+
+    def _bytes(leaf) -> int:
+        return int(leaf.size) * leaf.dtype.itemsize if hasattr(leaf, "dtype") \
+            else 0
+
+    def visit(node):
+        nonlocal fallback, scalars
+        if isinstance(node, SumoState):
+            qd = node.Q if isinstance(node.Q, dict) else {}
+            for key in sorted(qd):
+                m = _KEY_RE.match(str(key))
+                q = qd[key]
+                if m is None or getattr(q, "ndim", 0) != 3:
+                    fallback += _bytes(q)
+                    continue
+                mm = node.M[key]
+                pn = node.prev_norm[key]
+                b, lp, r = (int(d) for d in q.shape)
+                short = int(mm.shape[-1])
+                sharded = b > 1 and (b % data_shards == 0
+                                     or data_shards > 1)
+                entries.append(BucketMemoryEntry(
+                    key=str(key), b_padded=b, long_padded=lp, short=short,
+                    rank=r, q_bytes=_bytes(q), m_bytes=_bytes(mm),
+                    norm_bytes=_bytes(pn), sharded=sharded,
+                    data_shards=data_shards, model_shards=model_shards))
+            for other in jax.tree_util.tree_leaves(
+                    (node.step, getattr(node, "key", None))):
+                scalars += _bytes(other)
+            if not isinstance(node.Q, dict):      # leaf layout: charge as-is
+                for leaf in jax.tree_util.tree_leaves(
+                        (node.Q, node.M, node.prev_norm)):
+                    fallback += _bytes(leaf)
+            return
+        if isinstance(node, dict):
+            for k in node:
+                visit(node[k])
+            return
+        if isinstance(node, (list, tuple)) and not hasattr(node, "dtype"):
+            # NamedTuples and plain containers: recurse fields
+            for item in node:
+                visit(item)
+            return
+        b = _bytes(node)
+        if b <= 4 and getattr(node, "ndim", 1) == 0:
+            scalars += b
+        else:
+            fallback += b
+
+    visit(state)
+    return BucketMemoryPlan(entries=tuple(entries),
+                            fallback_bytes=fallback, scalar_bytes=scalars)
+
+
+# ---------------------------------------------------------------------------
+# budget factories
+# ---------------------------------------------------------------------------
+
+def steady_memory_budget(params: PyTree, state: PyTree, mesh=None, *,
+                         batch_bytes: float = 0.0,
+                         activation_bytes: float = 0.0,
+                         transient_mult: float = 3.0,
+                         out_slack_bytes: float = 4096.0,
+                         state_plan_bytes: Optional[float] = None,
+                         name: str = "memory-steady-train") -> MemoryBudget:
+    """Budget for the compiled train/update step with (params, opt_state)
+    donated. Every term is derived from the live trees:
+
+      * donation floor = param + state bytes EXACTLY (both trees are
+        donated and every leaf keeps its shape — anything less means the
+        partitioner dropped an alias and the buffer is resident twice);
+      * transient allowance = ``transient_mult`` × (param + state) +
+        ``batch_bytes`` + ``activation_bytes`` — gradients and the
+        refresh-cond workspace are O(params); the fwd/bwd activation live
+        set scales with batch tokens instead, so callers auditing a real
+        train step pass ``core.memory.analytic_activation_bytes(cfg,
+        batch, seq)`` for it;
+      * peak = the aliased resident set (params + state counted ONCE) +
+        batch + metrics slack + the transient allowance.
+    """
+    from ..core.memory import tree_param_bytes, tree_state_bytes
+
+    pb = float(tree_param_bytes(params))
+    sb = float(tree_state_bytes(state))
+    resident = pb + sb
+    transient_cap = transient_mult * resident + float(batch_bytes) \
+        + float(activation_bytes)
+    return MemoryBudget(
+        name=name,
+        max_peak_bytes=resident + float(batch_bytes) + out_slack_bytes
+        + transient_cap,
+        max_transient_bytes=transient_cap,
+        min_alias_bytes=resident,
+        max_param_bytes=pb,
+        max_state_bytes=sb,
+        state_plan_bytes=state_plan_bytes,
+        note="steady train step: donated params+state alias in full; "
+             "transients bounded by a params-proportional allowance plus "
+             "the analytic activation live set")
+
+
+def refresh_memory_budget(params: PyTree, state: PyTree, mesh=None, *,
+                          rank_plus_over: int,
+                          batch_bytes: float = 0.0,
+                          activation_bytes: float = 0.0,
+                          transient_mult: float = 3.0,
+                          name: str = "memory-refresh-train") -> MemoryBudget:
+    """Like ``steady_memory_budget`` plus the rSVD refresh workspace: per
+    bucket, the sketch panel (B, long_padded, l), its Gram/CholeskyQR2
+    factors (B, l, l) and the projected moment (B, l, short), l = rank +
+    oversample. The compiled step materializes the refresh as a cond
+    branch, so its workspace belongs in the transient allowance even for
+    update_freq > 1 programs."""
+    plan = bucket_memory_plan(state, mesh)
+    l = int(rank_plus_over)
+    workspace = 0.0
+    for e in plan.entries:
+        workspace += 4.0 * e.b_padded * (
+            e.long_padded * l           # sketch / basis panel
+            + 2 * l * l                 # Gram + triangular factor
+            + l * e.short)              # projected moment
+    base = steady_memory_budget(params, state, mesh,
+                                batch_bytes=batch_bytes,
+                                activation_bytes=activation_bytes,
+                                transient_mult=transient_mult, name=name)
+    return dataclasses.replace(
+        base,
+        max_transient_bytes=base.max_transient_bytes + workspace,
+        max_peak_bytes=base.max_peak_bytes + workspace,
+        note="refresh-boundary train step: steady budget + per-bucket rSVD "
+             f"workspace (l={l})")
+
+
+def dp_compress_memory_budget(params: PyTree, state: PyTree, wire_plan,
+                              n_workers: int, mesh=None, *,
+                              batch_bytes: float = 0.0,
+                              activation_bytes: float = 0.0,
+                              transient_mult: float = 3.0,
+                              name: str = "memory-dp-compress") -> MemoryBudget:
+    """The --dp-compress step's budget: the steady budget widened by the
+    per-worker error-feedback residuals (one full-gradient-shaped tree per
+    local worker, donated with the comp state) and the r×short exchange
+    payloads (bf16 on the wire, fp32 in the factors)."""
+    from ..core.memory import tree_param_bytes
+    from ..parallel.compression import wire_bytes
+
+    pb = float(tree_param_bytes(params))
+    ef_bytes = float(n_workers) * pb                 # fp32 EF residual tree
+    payload = 2.0 * float(wire_bytes(wire_plan))     # compress + decompress
+    base = steady_memory_budget(params, state, mesh,
+                                batch_bytes=batch_bytes,
+                                activation_bytes=activation_bytes,
+                                transient_mult=transient_mult, name=name)
+    return dataclasses.replace(
+        base,
+        min_alias_bytes=base.min_alias_bytes + ef_bytes,
+        max_transient_bytes=base.max_transient_bytes
+        + float(n_workers) * pb + payload,
+        max_peak_bytes=base.max_peak_bytes + 2.0 * ef_bytes + payload,
+        note=f"dp-compress step: steady budget + {n_workers} per-worker EF "
+             "residuals (donated) + exchange payloads")
+
+
+def serve_decode_memory_budget(cfg, ccfg, params: PyTree, *,
+                               transient_mult: float = 2.5,
+                               name: str = "memory-serve-decode"
+                               ) -> MemoryBudget:
+    """Budget for the compiled paged ``serve_decode``, derived from the KV
+    ``BlockPool`` geometry: both pools are
+    (n_layers, n_blocks, block_size, n_kv_heads, hd) in the model's compute
+    dtype, donated, and must alias in full — the pool is the dominant
+    buffer, and failing to donate it is exactly a 2× peak bug. The decode
+    transients (per-slot context gathers, scatter staging, one slot-batch of
+    logits, hidden activations) track the pool, not the params — so the
+    allowance is ``transient_mult`` × pool bytes plus the logits batch and a
+    small params fraction. A pool compiled at 2× the plan geometry blows
+    BOTH the transient allowance and the peak cap."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from ..core.memory import tree_param_bytes
+    from ..models import init_kv_pool
+
+    pools = jax.eval_shape(lambda: init_kv_pool(
+        cfg, ccfg.n_blocks, ccfg.block_size))
+    pool_bytes = float(sum(
+        int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize for p in pools))
+    pb = float(tree_param_bytes(params))
+    S = int(ccfg.num_slots)
+    logits_bytes = 4.0 * S * int(cfg.vocab)
+    small_io = 4.0 * S * (8 + ccfg.n_blocks)         # tables/lengths/temps/keys
+    transient_cap = transient_mult * pool_bytes + 4.0 * logits_bytes + pb / 8.0
+    return MemoryBudget(
+        name=name,
+        max_peak_bytes=pb + pool_bytes + logits_bytes + small_io
+        + transient_cap,
+        max_transient_bytes=transient_cap,
+        min_alias_bytes=pool_bytes,
+        max_param_bytes=pb,
+        note=f"paged serve_decode: pools ({pool_bytes:.0f} B) donated and "
+             "aliased in full; peak = params + ONE copy of the pools + "
+             "pool-proportional decode transients")

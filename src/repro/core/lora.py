@@ -1,4 +1,6 @@
-"""LoRA baseline: rank-r adapters W + (alpha/r)·B A on 2D matrices, trained
+"""LoRA baseline: rank-r adapters W + (alpha/r)·B A on matrix params (leading
+dims of stacked blocks / experts are treated as batch — one adapter pair per
+slice), trained
 with AdamW while base weights stay frozen. Also the post-hoc adapter
 extraction of paper Appendix B (Δ = W_ft − W_pre factorized at rank(Δ)).
 """
@@ -35,13 +37,16 @@ def init_lora_params(params: PyTree, config: LoraConfig = LoraConfig()) -> PyTre
 
     adapters = []
     for leaf, lab, k in zip(leaves, lab_leaves, keys):
-        if lab != "matrix" or leaf.ndim != 2:
+        if lab != "matrix" or leaf.ndim < 2:
             adapters.append(None)
             continue
-        m, n = leaf.shape
+        # leading dims (stacked blocks / experts) are batch: one adapter pair
+        # per slice, so memory matches Table 1's per-matrix 3r(m+n) accounting
+        bd = leaf.shape[:-2]
+        m, n = leaf.shape[-2:]
         r = min(config.rank, min(m, n))
-        A = jax.random.normal(k, (r, n), jnp.float32) / jnp.sqrt(n)
-        B = jnp.zeros((m, r), jnp.float32)
+        A = jax.random.normal(k, (*bd, r, n), jnp.float32) / jnp.sqrt(n)
+        B = jnp.zeros((*bd, m, r), jnp.float32)
         adapters.append({"A": A, "B": B})
     return jax.tree_util.tree_unflatten(treedef, adapters)
 
@@ -56,7 +61,7 @@ def apply_lora(params: PyTree, adapters: PyTree, config: LoraConfig = LoraConfig
     def merge(ad, p):
         if ad is None:
             return p
-        scale = config.alpha / ad["A"].shape[0]
+        scale = config.alpha / ad["A"].shape[-2]   # rank dim (batched A is (..., r, n))
         return p + (scale * (ad["B"] @ ad["A"])).astype(p.dtype)
 
     # map over the ADAPTER tree (its {A,B} dicts / Nones are the leaves) and

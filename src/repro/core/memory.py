@@ -96,6 +96,108 @@ def tree_param_bytes(params: PyTree) -> int:
     )
 
 
+def analytic_activation_bytes(cfg, batch: int, seq: int) -> int:
+    """Upper bound on a train step's fwd+bwd activation transients, in
+    bytes, from the arch config — the activation term of the pass-5 memory
+    budget (``analysis.memory.steady_memory_budget``).
+
+    Per token, in f32 floats: 6×vocab for the logits family (logits,
+    d-logits, softmax workspace, log-normalizer broadcast, target one-hot /
+    gather, loss mask), and per layer 24×d_model of saved d-wide
+    activations (qkvo, norms, residual streams, their cotangents), 8×d_ff
+    for the MLP hidden pair, and 4×n_heads×seq for the attention score /
+    softmax matrices (the O(seq²) term — scores are (batch, heads, seq,
+    seq), i.e. heads×seq floats per token, ×2 fwd/bwd ×2 score+softmax).
+    Coefficients are calibrated as an upper bound (~1.5–2× the measured
+    temp bytes on the smoke model at seq 16–64) — headroom for XLA's
+    fusion/layout choices, tight enough that a duplicated activation tree
+    (e.g. a dropped donation re-materializing the backward) still trips
+    ``transient-exceeds-plan``.
+    """
+    tokens = batch * seq
+    floats_per_token = (
+        6 * cfg.vocab
+        + cfg.n_layers * (24 * cfg.d_model + 8 * cfg.d_ff
+                          + 4 * cfg.n_heads * seq))
+    return 4 * tokens * floats_per_token
+
+
+def predict_state_bytes(method: str, params: PyTree, rank: int = 128) -> int:
+    """EXACT optimizer-state bytes for the live engines, from params+config.
+
+    ``analytic_state_floats`` is the paper's Table-1 model (batch dims folded
+    into the long dim — the right analytic simplification, but it undercounts
+    the real per-slice engines on stacked leaves). This predictor instead
+    replays the engines' own layout decisions — ``partition_params`` labels,
+    ``build_bucket_plan`` bucket stacking, per-slice factors — WITHOUT looking
+    at a live state tree, so ``predict_state_bytes(m, params, r) ==
+    tree_state_bytes(make_optimizer(m, ...).init(params))`` is a real
+    cross-check (asserted for all five optimizers in benchmarks/memory_table.py
+    and the analysis driver), not a tautology.
+
+    Byte accounting per method (fp32 states, int32 step, uint32[2] key):
+
+      adamw   step + mu/nu on every leaf
+      sumo    fallback AdamW + per bucket Q(B,long,r) M(B,r,short) prev_norm(B)
+              + step + refresh key
+      galore  fallback AdamW + per matrix leaf Q(b,long,r), mu/nu(b,r,short)
+              + step + refresh key
+      muon    fallback AdamW + full-shape momentum on matrix leaves + step
+      lora    frozen base: adapters A(b,r,n)+B(b,m,r) and AdamW over them
+    """
+    from . import optimizer as opt
+
+    method = method.lower()
+    if method == "adamw" or method == "adam":
+        return 4 + 2 * tree_param_bytes(params)
+
+    labels = opt.partition_params(params)
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    lab_leaves = treedef.flatten_up_to(labels)
+    matrix = [l for l, lab in zip(leaves, lab_leaves) if lab == "matrix"]
+    fb = [l for l, lab in zip(leaves, lab_leaves) if lab != "matrix"]
+    fb_bytes = 4 + 2 * sum(l.size * l.dtype.itemsize for l in fb)
+
+    def slices(leaf):
+        b = 1
+        for d in leaf.shape[:-2]:
+            b *= int(d)
+        long_d, short_d = opt.canonical_dims(leaf.shape)
+        return b, long_d, short_d
+
+    if method == "lora":
+        ab = 0
+        for leaf in matrix:
+            b, long_d, short_d = slices(leaf)
+            m, n = int(leaf.shape[-2]), int(leaf.shape[-1])
+            r = min(rank, short_d)
+            ab += 4 * b * (r * n + m * r)       # A + B adapters
+        return 3 * ab + 4                       # adapters + AdamW mu/nu + step
+
+    if method == "muon":
+        mb = 4 + sum(l.size * l.dtype.itemsize for l in matrix)
+        return mb + fb_bytes
+
+    if method == "galore":
+        mb = 4 + 8                              # step + refresh key
+        for leaf in matrix:
+            b, long_d, short_d = slices(leaf)
+            r = min(rank, short_d)
+            mb += 4 * b * (long_d * r + 2 * r * short_d)
+        return mb + fb_bytes
+
+    if method in ("sumo", "sumo-svd", "sumo-ns5"):
+        plan = opt.build_bucket_plan([l.shape for l in matrix])
+        mb = 4 + 8                              # step + refresh key
+        for bucket in plan:
+            long_d, short_d = bucket.shape
+            r = min(rank, short_d)
+            mb += 4 * bucket.size * (long_d * r + r * short_d + 1)
+        return mb + fb_bytes
+
+    raise ValueError(method)
+
+
 def model_memory_report(params: PyTree, rank: int = 128) -> dict[str, int]:
     """Analytic per-method optimizer state bytes for a whole model (fp32 states).
 

@@ -137,7 +137,9 @@ def dryrun_cell(arch_id: str, shape_name: str, multi_pod: bool,
 
         compiled = lowered.compile()
 
-    mem = compiled.memory_analysis()
+    from ..analysis.memory import measure_compiled_memory
+
+    mem = measure_compiled_memory(compiled)    # shared with analysis pass 5
     xla_flops, xla_bytes = extract_cost(compiled)       # XLA's own (no trip counts)
     hlo = compiled.as_text()
     cost = analyze_hlo(hlo)                             # trip-count-aware walker
@@ -152,10 +154,12 @@ def dryrun_cell(arch_id: str, shape_name: str, multi_pod: bool,
         "status": "ok",
         "compile_s": round(time.perf_counter() - t0, 1),
         "memory": {
-            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
-            "output_bytes": getattr(mem, "output_size_in_bytes", None),
-            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            "argument_bytes": mem.argument_bytes,
+            "output_bytes": mem.output_bytes,
+            "temp_bytes": mem.temp_bytes,
+            "alias_bytes": mem.alias_bytes,
+            "code_bytes": mem.generated_code_bytes,
+            "peak_bytes": mem.peak_bytes,
         },
         "xla_cost_analysis": {"flops": xla_flops, "bytes": xla_bytes},
         "collective_breakdown": {k: v for k, v in cost.collective_breakdown.items() if v},

@@ -14,11 +14,12 @@ from .model import (
     slot_decode_step,
     write_prefill_blocks,
 )
+from .transformer import paged_write_targets
 
 __all__ = [
     "init_params", "forward_hidden", "forward_logits", "loss_fn",
     "init_decode_cache", "decode_step", "prefill",
     "init_kv_pool", "paged_decode_step", "slot_decode_step",
-    "write_prefill_blocks",
+    "write_prefill_blocks", "paged_write_targets",
     "input_specs", "decode_cache_specs",
 ]

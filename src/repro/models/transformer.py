@@ -284,6 +284,29 @@ def write_prefill_blocks(k_pool, v_pool, k, v, block_ids):
     return k_pool.at[:, block_ids].set(kb), v_pool.at[:, block_ids].set(vb)
 
 
+def paged_write_targets(tables, lengths, block_size: int):
+    """Physical (block, offset) each slot's unconditional decode write targets.
+
+    Slot s writes its new token's K/V at physical block
+    ``tables[s, lengths[s] // block_size]``, offset ``lengths[s] % block_size``.
+    The block lookup is a one-hot select + sum rather than
+    ``jnp.take_along_axis``: a gather is opaque to the structured-zeros
+    interpreter (``analysis.inertness`` maps it to TOP), while this
+    formulation lets the null-block invariant — a free slot's all-zero table
+    row and zero length give ``blk == off == 0``, so its write lands in the
+    reserved null block and can never touch a live request — be *proven*
+    mechanically from the jaxpr (``prove_null_block_inertness``). The two are
+    equivalent for in-range indices, which the engine guarantees (admission
+    reserves worst-case blocks; out of range the one-hot yields the null
+    block, strictly safer than gather's index clamp).
+    """
+    j = jax.lax.div(lengths, jnp.int32(block_size))     # floor for lengths >= 0
+    sel = jnp.arange(tables.shape[1], dtype=lengths.dtype)[None, :] == j[:, None]
+    blk = jnp.sum(jnp.where(sel, tables, 0), axis=1)
+    off = lengths - j * jnp.int32(block_size)
+    return blk, off
+
+
 def paged_decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
                       k_pool, v_pool, tables, lengths):
     """One decode step for S batch slots against the paged KV pool.
@@ -308,8 +331,7 @@ def paged_decode_step(params, cfg: ArchConfig, token: jnp.ndarray,
     dt = dtype_of(cfg)
     x = params["embed_tokens"].astype(dt)[token[:, None]]       # (S, 1, d)
     pos = lengths[:, None]                                      # (S, 1)
-    blk = jnp.take_along_axis(tables, (lengths // bs)[:, None], axis=1)[:, 0]
-    off = lengths % bs
+    blk, off = paged_write_targets(tables, lengths, bs)
     att_len = (lengths + 1)[:, None, None, None]                # (S,1,1,1)
 
     def body(x, layer):

@@ -10,6 +10,7 @@ from .compression import (
     exchange_shard,
     finalize,
     full_wire_bytes,
+    hlo_wire_bytes,
     init_state,
     init_worker_state,
     make_dp_exchange_fn,
@@ -37,5 +38,5 @@ __all__ = [
     "CompressionConfig", "CompressionState", "eligible", "init_state",
     "init_worker_state", "compress_grads", "finalize", "exchange_shard",
     "make_dp_exchange_fn", "step_bases", "dp_wire_plan", "wire_bytes", "full_wire_bytes",
-    "compression_ratio",
+    "hlo_wire_bytes", "compression_ratio",
 ]

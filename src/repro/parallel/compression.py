@@ -68,6 +68,13 @@ class CompressionConfig:
     # coordination. False: reuse resident bases passed via ``bases=`` (SUMO's
     # rSVD Q; sketch fallback per leaf where the basis is absent/all-zero).
     use_sketch: bool = True
+    # Wire dtype of the compressed r×short payloads (the pmean buffers).
+    # bf16 halves the exchange bytes; EF absorbs the quantization error
+    # locally (it is computed from the round-tripped payload), so the
+    # telescoping EF identity still holds. "float32" restores the exact
+    # payload for algebra-exactness tests. Exact (ineligible) leaves always
+    # ride their own dtype.
+    payload_dtype: str = "bfloat16"
 
 
 class CompressionState(NamedTuple):
@@ -317,10 +324,12 @@ def compress_grads(grads: PyTree, state: CompressionState,
         if cfg.error_feedback:
             g32 = g32 + e
         key = _leaf_key(base, state.step, i)
-        p = compress_leaf(g32, key, cfg.rank, Q=Q)
+        p = compress_leaf(g32, key, cfg.rank, Q=Q).astype(cfg.payload_dtype)
         payload.append(p)
         if cfg.error_feedback:
-            new_err = g32 - decompress_leaf(p, key, g.shape, Q=Q)
+            # round-trip through the WIRE dtype so EF absorbs quantization
+            new_err = g32 - decompress_leaf(p.astype(jnp.float32), key,
+                                            g.shape, Q=Q)
         else:
             new_err = None
         meta.append((g.shape, i, new_err))
@@ -342,7 +351,8 @@ def finalize(payload_mean: PyTree, meta, treedef, state: CompressionState,
             continue
         shape, i, err = m
         key = _leaf_key(base, state.step, i)
-        out.append(decompress_leaf(p, key, shape, Q=Q).astype(jnp.float32))
+        out.append(decompress_leaf(p.astype(jnp.float32), key, shape,
+                                   Q=Q).astype(jnp.float32))
         new_err.append(err)
     grads = jax.tree_util.tree_unflatten(treedef, out)
     new_state = CompressionState(
@@ -431,16 +441,23 @@ class WirePlanEntry:
     eligible: bool
     rank: int                  # r on the wire (0 for exact leaves)
     payload_dims: tuple        # all-reduce buffer dims
-    payload_bytes: int         # per-step wire bytes (payload is fp32)
+    payload_bytes: int         # per-step wire bytes (cfg.payload_dtype)
     full_bytes: int            # uncompressed exchange bytes (leaf dtype)
+    # Bytes of the same buffer in THIS backend's optimized HLO: XLA's
+    # all-reduce promotion pass upcasts sub-f32 float collectives to f32 on
+    # CPU/GPU (TPU reduces bf16 natively), so post-optimization audits see
+    # 4 B/elem even for a bf16 wire. Budgets over compiled HLO must cap
+    # against this; bandwidth/ratio claims use ``payload_bytes``.
+    hlo_bytes: int = 0
 
 
 def dp_wire_plan(grads_template: PyTree, cfg: CompressionConfig,
                  bases: Optional[PyTree] = None) -> list:
-    """Per-leaf wire plan for one DP exchange — byte-accurate (fp32 payloads
-    for compressed leaves, the leaf's OWN dtype for exact ones, so bf16
-    grads are no longer counted as if they were fp32), sharing the
-    ``eligible``/orientation/rank logic with the compression itself."""
+    """Per-leaf wire plan for one DP exchange — byte-accurate
+    (``cfg.payload_dtype`` payloads for compressed leaves, the leaf's OWN
+    dtype for exact ones, so bf16 grads are no longer counted as if they
+    were fp32), sharing the ``eligible``/orientation/rank logic with the
+    compression itself."""
     from ..core.optimizer import path_str
 
     leaves, treedef = jax.tree_util.tree_flatten_with_path(
@@ -463,21 +480,41 @@ def dp_wire_plan(grads_template: PyTree, cfg: CompressionConfig,
             plan.append(WirePlanEntry(
                 path=path_str(path), shape=shape, eligible=False, rank=0,
                 payload_dims=shape, payload_bytes=n * itemsize,
-                full_bytes=n * itemsize))
+                full_bytes=n * itemsize,
+                hlo_bytes=n * _promoted_itemsize(g.dtype)))
             continue
         _, long_d, short_d = _orientation(shape)
         r = payload_rank(cfg, long_d, Q)
         batch = n // (shape[-2] * shape[-1])
         pdims = shape[:-2] + (r, short_d)
+        p_elems = batch * r * short_d
+        p_itemsize = int(jnp.dtype(cfg.payload_dtype).itemsize)
         plan.append(WirePlanEntry(
             path=path_str(path), shape=shape, eligible=True, rank=r,
-            payload_dims=pdims, payload_bytes=batch * r * short_d * 4,
-            full_bytes=n * itemsize))
+            payload_dims=pdims, payload_bytes=p_elems * p_itemsize,
+            full_bytes=n * itemsize,
+            hlo_bytes=p_elems * _promoted_itemsize(cfg.payload_dtype)))
     return plan
+
+
+def _promoted_itemsize(dtype) -> int:
+    """Itemsize of one all-reduce element in this backend's optimized HLO:
+    sub-f32 floats are promoted to f32 by XLA's all-reduce promotion pass."""
+    dt = jnp.dtype(dtype)
+    if jnp.issubdtype(dt, jnp.floating) and dt.itemsize < 4:
+        return 4
+    return int(dt.itemsize)
 
 
 def wire_bytes(plan) -> int:
     return sum(e.payload_bytes for e in plan)
+
+
+def hlo_wire_bytes(plan) -> int:
+    """Wire bytes as this backend's optimized HLO reports them (bf16
+    payloads promoted to f32 collectives) — audit compiled programs against
+    THIS; quote bandwidth claims from ``wire_bytes``."""
+    return sum(e.hlo_bytes for e in plan)
 
 
 def full_wire_bytes(plan) -> int:

@@ -79,6 +79,60 @@ def serving_kind(cfg: ArchConfig) -> str:
     return "paged"
 
 
+# Donation signatures of the compiled serve_decode entrypoints.  The KV /
+# state pools are by far the largest decode buffers; donating them is what
+# keeps exactly ONE copy resident — analysis/memory.py pins this with a
+# donation-savings floor equal to the full pool bytes.
+PAGED_DECODE_DONATE = (1, 2)    # k_pool, v_pool
+SLOT_DECODE_DONATE = (1,)       # slot-state store
+
+
+def paged_serve_decode_fn(cfg: ArchConfig):
+    """Build the paged-attention ``serve_decode`` step for ``cfg``.
+
+    Module-level (not a method closure) so the static-analysis driver can
+    compile and audit the EXACT function the engine runs — same name for
+    the recompile watcher, same donation signature, same HLO.
+    """
+    def serve_decode(params, k_pool, v_pool, tables, lengths, temps,
+                     keys, token):
+        logits, k_pool, v_pool = paged_decode_step(
+            params, cfg, token, k_pool, v_pool, tables, lengths)
+        tok, keys = _sample_slots(logits, temps, keys)
+        return tok, k_pool, v_pool, keys
+
+    return serve_decode
+
+
+def slot_serve_decode_fn(cfg: ArchConfig):
+    """Build the recurrent (slot-state) ``serve_decode`` step for ``cfg``."""
+    def serve_decode(params, store, lengths, temps, keys, token):
+        logits, store = slot_decode_step(
+            params, cfg, token[:, None], store, lengths)
+        tok, keys = _sample_slots(logits, temps, keys)
+        return tok, store, keys
+
+    return serve_decode
+
+
+def serve_decode_audit_args(cfg: ArchConfig, ccfg, params):
+    """Zero-valued arguments shaped exactly like ContinuousEngine's paged
+    decode call — so ``jax.jit(paged_serve_decode_fn(cfg),
+    donate_argnums=PAGED_DECODE_DONATE).lower(*args).compile()`` in the
+    analysis driver produces the same executable the engine runs."""
+    S = ccfg.num_slots
+    bs = ccfg.block_size
+    max_total = bucket_len(ccfg.max_prompt_len, bs) + ccfg.max_new_cap
+    max_blocks = -(-max_total // bs)
+    k_pool, v_pool = init_kv_pool(cfg, ccfg.n_blocks, bs)
+    return (params, k_pool, v_pool,
+            jnp.zeros((S, max_blocks), jnp.int32),
+            jnp.zeros(S, jnp.int32),
+            jnp.zeros(S, jnp.float32),
+            jnp.zeros((S, 2), jnp.uint32),
+            jnp.zeros(S, jnp.int32))
+
+
 class StaticEngine:
     """Static padded-batch engine (the original demo path, kept as the
     baseline and parity reference for the continuous engine)."""
@@ -213,25 +267,12 @@ class ContinuousEngine:
             self._k_pool, self._v_pool = init_kv_pool(cfg, ccfg.n_blocks, bs)
             self._tables = np.zeros((S, self._max_blocks), np.int32)
             self._scatter = jax.jit(write_prefill_blocks, donate_argnums=(0, 1))
-
-            def serve_decode(params, k_pool, v_pool, tables, lengths, temps,
-                             keys, token):
-                logits, k_pool, v_pool = paged_decode_step(
-                    params, cfg, token, k_pool, v_pool, tables, lengths)
-                tok, keys = _sample_slots(logits, temps, keys)
-                return tok, k_pool, v_pool, keys
-
-            self._decode = jax.jit(serve_decode, donate_argnums=(1, 2))
+            self._decode = jax.jit(paged_serve_decode_fn(cfg),
+                                   donate_argnums=PAGED_DECODE_DONATE)
         else:
             self._slots = SlotStateCache(cfg, S, self._max_total)
-
-            def serve_decode(params, store, lengths, temps, keys, token):
-                logits, store = slot_decode_step(
-                    params, cfg, token[:, None], store, lengths)
-                tok, keys = _sample_slots(logits, temps, keys)
-                return tok, store, keys
-
-            self._decode = jax.jit(serve_decode, donate_argnums=(1,))
+            self._decode = jax.jit(slot_serve_decode_fn(cfg),
+                                   donate_argnums=SLOT_DECODE_DONATE)
 
         self._prefill = jax.jit(
             lambda p, t, L: prefill(p, cfg, {"tokens": t}, L, ccfg.attn_impl),

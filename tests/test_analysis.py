@@ -16,7 +16,18 @@ program with its stable violation code, not just accept the good one:
     flagged ``donated-arg-not-rebound``; dropped donations are flagged by
     the HLO cross-check;
   * recompile: an off-boundary compile event fails the audit, while
-    warmup/boundary-adjacent ones pass.
+    warmup/boundary-adjacent ones pass;
+  * memory (pass 5): every violation code is falsifiable — the donated
+    smoke train step passes its steady budget while the UN-donated compile
+    fails ``donation-not-realized``; the compiled paged ``serve_decode``
+    passes at its own pool geometry but an oversized pool audited against
+    the plan budget fails ``peak-bytes-exceeded`` + ``transient-exceeds-plan``;
+    the Table-1 ratio lint fails when measured state exceeds the plan;
+  * host-dtype lint: an implicit-dtype ``np.zeros(...)`` host buffer is
+    flagged ``host-buffer-no-dtype``; the serve/train hot paths are clean;
+  * null-block inertness: free serving slots' decode writes provably target
+    physical block 0, and dropping the zero-table hypothesis breaks the
+    proof.
 
 The sharded end-to-end proofs (2D budgets on compiled HLO, full-update
 inertness, the concatenate-seam regression) live in
@@ -36,14 +47,29 @@ from repro.analysis.collectives import (
 )
 from repro.analysis.donation import (
     audit_donation,
+    audit_host_dtypes,
     lint_donation_source,
+    lint_host_dtype_source,
 )
 from repro.analysis.inertness import (
     Claim,
     InertnessError,
     analyze_jaxpr,
     check_claims,
+    prove_null_block_inertness,
     prove_refresh_inertness,
+)
+from repro.analysis.memory import (
+    MEMORY_VIOLATION_CODES,
+    MemoryBudget,
+    MemoryMeasurement,
+    audit_memory,
+    audit_state_ratio,
+    bucket_memory_plan,
+    hlo_buffer_table,
+    measure_compiled_memory,
+    serve_decode_memory_budget,
+    steady_memory_budget,
 )
 from repro.analysis.recompile import (
     CompileEvent,
@@ -398,3 +424,201 @@ def test_audit_recompiles_rejects_off_boundary():
     assert not report.ok
     assert [e.step for e in report.violations] == [7]
     assert "off-boundary-recompile" in report.summary()
+
+
+# -- memory budgets (pass 5) -------------------------------------------------
+
+def _mem_codes(report):
+    return {v.code for v in report.violations}
+
+
+def test_audit_memory_every_code_falsifiable_synthetic():
+    """One synthetic measurement trips all four named codes at once."""
+    m = MemoryMeasurement(argument_bytes=1000, output_bytes=1000,
+                          temp_bytes=500, alias_bytes=0)
+    budget = MemoryBudget(name="synthetic", max_peak_bytes=1200,
+                          max_transient_bytes=300, min_alias_bytes=900,
+                          state_plan_bytes=400)
+    rep = audit_memory(m, budget, state_bytes=500)
+    assert not rep.ok
+    assert _mem_codes(rep) == set(MEMORY_VIOLATION_CODES)
+    # and the same budget is satisfiable: full aliasing, small temps
+    ok = audit_memory(
+        MemoryMeasurement(argument_bytes=1000, output_bytes=1000,
+                          temp_bytes=100, alias_bytes=950),
+        budget, state_bytes=400)
+    assert ok.ok, ok.summary()
+
+
+def test_audit_state_ratio_fails_when_measured_exceeds_plan():
+    """The ~20%-vs-AdamW claim as a lint: measured/baseline over the cap
+    FAILS; at or under the cap passes."""
+    bad = audit_state_ratio("sumo-vs-adamw", 90.0, 100.0, max_ratio=0.80)
+    assert not bad.ok and _mem_codes(bad) == {"state-bytes-mismatch"}
+    good = audit_state_ratio("sumo-vs-adamw", 70.0, 100.0, max_ratio=0.80)
+    assert good.ok
+
+
+def test_hlo_buffer_table_on_compiled_program():
+    """The buffer-table walk and memory_analysis() must agree on a tiny
+    donated program: two f32[8,8] params, one aliased into the output."""
+    x = jnp.zeros((8, 8), jnp.float32)
+    compiled = jax.jit(lambda a, b: a * b + 1.0, donate_argnums=(0,)) \
+        .lower(x, x).compile()
+    table = hlo_buffer_table(compiled.as_text())
+    assert table.param_bytes == (256.0, 256.0)
+    assert table.output_bytes == 256.0
+    assert table.aliased_params == (0,)
+    assert table.alias_bytes == 256.0
+    m = measure_compiled_memory(compiled)
+    assert m.argument_bytes == 512.0
+    assert m.alias_bytes == 256.0
+    assert m.table is table or m.table.aliased_params == (0,)
+    # peak counts the donated buffer ONCE
+    assert m.peak_bytes == m.argument_bytes + m.output_bytes \
+        + m.temp_bytes + m.generated_code_bytes - 256.0
+
+
+@pytest.fixture(scope="module")
+def smoke_train():
+    """(params, opt_state, batch, step) — the lint smoke recipe, shared
+    with the analysis driver so the tests audit the exact same program."""
+    from repro.analysis.driver import _smoke_train_setup
+    return _smoke_train_setup()
+
+
+def test_train_step_memory_budget_donated_vs_undonated(smoke_train):
+    """Tentpole falsifiability: the donated smoke train step fits its
+    steady budget (donation floor = params+state EXACTLY); the SAME program
+    compiled WITHOUT donation fails ``donation-not-realized``."""
+    from repro.configs import get_smoke_config
+    from repro.core.memory import (analytic_activation_bytes,
+                                   predict_state_bytes, tree_param_bytes,
+                                   tree_state_bytes)
+
+    params, opt_state, batch, step = smoke_train
+    batch_bytes = sum(x.nbytes for x in jax.tree_util.tree_leaves(batch))
+    budget = steady_memory_budget(
+        params, opt_state, batch_bytes=batch_bytes,
+        activation_bytes=analytic_activation_bytes(
+            get_smoke_config("smollm-360m"), 2, 16),
+        state_plan_bytes=predict_state_bytes("sumo", params, rank=4))
+
+    donated = jax.jit(step, donate_argnums=(0, 1)) \
+        .lower(params, opt_state, batch).compile()
+    rep = audit_memory(measure_compiled_memory(donated), budget,
+                       param_bytes=tree_param_bytes(params),
+                       state_bytes=tree_state_bytes(opt_state))
+    assert rep.ok, rep.summary()
+
+    undonated = jax.jit(step).lower(params, opt_state, batch).compile()
+    bad = audit_memory(measure_compiled_memory(undonated), budget,
+                       param_bytes=tree_param_bytes(params),
+                       state_bytes=tree_state_bytes(opt_state))
+    assert not bad.ok
+    assert "donation-not-realized" in _mem_codes(bad)
+
+
+def test_bucket_memory_plan_matches_live_state(smoke_train):
+    """The analytic SumoState decomposition must cover the live tree
+    EXACTLY — every budget derived from it inherits byte accuracy."""
+    from repro.core.memory import tree_state_bytes
+
+    _, opt_state, _, _ = smoke_train
+    plan = bucket_memory_plan(opt_state)
+    assert plan.entries, "no bucket entries found in SumoState"
+    assert plan.total_bytes == tree_state_bytes(opt_state)
+
+
+def test_serve_decode_memory_budget_falsifiable():
+    """ONE oversized compile, both verdicts: a paged ``serve_decode``
+    compiled with a 2x KV pool passes the budget built from its OWN
+    geometry but fails the PLAN budget with ``peak-bytes-exceeded`` and
+    ``transient-exceeds-plan`` — the un-sized-pool bug cannot hide."""
+    from repro.configs import get_smoke_config
+    from repro.models import init_params
+    from repro.serve.engine import (PAGED_DECODE_DONATE, ContinuousConfig,
+                                    paged_serve_decode_fn,
+                                    serve_decode_audit_args)
+
+    cfg = get_smoke_config("smollm-360m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    plan_ccfg = ContinuousConfig(num_slots=4, block_size=8, n_blocks=32,
+                                 max_prompt_len=16, max_new_cap=16)
+    big_ccfg = ContinuousConfig(num_slots=4, block_size=8, n_blocks=64,
+                                max_prompt_len=16, max_new_cap=16)
+    fn = paged_serve_decode_fn(cfg)
+    compiled = jax.jit(fn, donate_argnums=PAGED_DECODE_DONATE) \
+        .lower(*serve_decode_audit_args(cfg, big_ccfg, params)).compile()
+    m = measure_compiled_memory(compiled)
+
+    ok = audit_memory(m, serve_decode_memory_budget(cfg, big_ccfg, params))
+    assert ok.ok, ok.summary()
+    bad = audit_memory(m, serve_decode_memory_budget(cfg, plan_ccfg, params))
+    assert not bad.ok
+    assert {"peak-bytes-exceeded",
+            "transient-exceeds-plan"} <= _mem_codes(bad)
+
+
+# -- host-dtype lint ---------------------------------------------------------
+
+def test_host_dtype_lint_flags_implicit_dtypes():
+    src = (
+        "import numpy as np\n"
+        "a = np.zeros(4)\n"                      # flagged
+        "b = np.zeros(4, np.int32)\n"            # positional dtype: ok
+        "c = np.array([1, 2], dtype=np.int32)\n"  # kwarg dtype: ok
+        "d = np.asarray(x)\n"                    # dtype-preserving: exempt
+        "e = np.full((2, 2), 0.0)\n"             # flagged (dtype is pos 2)
+        "f = np.full((2, 2), 0.0, np.float32)\n"  # ok
+    )
+    v = lint_host_dtype_source(src, "fake.py")
+    assert [x.code for x in v] == ["host-buffer-no-dtype"] * 2
+    assert {x.where for x in v} == {"fake.py:2", "fake.py:6"}
+
+
+def test_host_dtype_hot_paths_clean():
+    rep = audit_host_dtypes()
+    assert rep.ok, rep.summary()
+
+
+# -- null-block inertness (serving) ------------------------------------------
+
+def test_null_block_proof_and_falsification():
+    """Free slots' decode writes provably land in physical block 0; the
+    proof genuinely depends on the all-zero-table hypothesis — dropping the
+    table claim (a free slot whose table rows were left dirty) breaks it."""
+    result = prove_null_block_inertness()
+    assert result is not None
+
+    from repro.models.transformer import paged_write_targets
+    closed = jax.make_jaxpr(
+        lambda t, ln: paged_write_targets(t, ln, 8))(
+        jnp.zeros((4, 8), jnp.int32), jnp.zeros((4,), jnp.int32))
+    # hypothesis only on lengths, NOT on the table rows
+    weakened = analyze_jaxpr(closed, arg_claims=[None, {0: 2}])
+    failures = check_claims(weakened, [
+        Claim(what="free slots' write block", dim=0, count=2, out_index=0)])
+    assert failures, "proof must fail without the zero-table hypothesis"
+
+
+# -- driver: --json machine-readable report ----------------------------------
+
+def test_driver_json_report_schema(capsys):
+    """``python -m repro.analysis --mode 2d --json`` on a single device:
+    valid static-analysis-v1 JSON, stable check names, SKIPs (missing
+    devices) not counted as failures, exit code 0."""
+    import json as _json
+
+    from repro.analysis.driver import REPORT_SCHEMA, main
+
+    rc = main(["--mode", "2d", "--json"])
+    rep = _json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert rep["schema"] == REPORT_SCHEMA == "static-analysis-v1"
+    assert rep["ok"] is True and rep["failed"] == 0
+    by_name = {c["name"]: c["status"] for c in rep["checks"]}
+    assert by_name["inertness/refresh"] == "PASS"
+    assert by_name["collectives/steady-2d"] in ("PASS", "SKIP")
+    assert by_name["inertness/update-2d"] in ("PASS", "SKIP")
+    assert rep["passed"] + rep["skipped"] + rep["failed"] == len(rep["checks"])

@@ -1,0 +1,64 @@
+"""Fast unit test for the Table-1 memory benchmark (benchmarks/memory_table.py).
+
+Both directions of satellite 3: the live measured state of ALL FIVE
+optimizers equals the exact layout predictor (drift would make the bench
+exit non-zero), and the shared ``audit_table1_state`` code path is genuinely
+falsifiable — an impossible ratio cap produces a ``state-bytes-mismatch``
+violation, which ``run()`` turns into ``MemoryBudgetError``.
+"""
+import importlib.util
+import pathlib
+import sys
+
+import pytest
+
+from repro.analysis.memory import MemoryBudgetError, audit_table1_state
+
+
+def _load_memory_table():
+    spec = importlib.util.spec_from_file_location(
+        "memory_table_bench",
+        pathlib.Path(__file__).resolve().parents[1]
+        / "benchmarks/memory_table.py")
+    mod = importlib.util.module_from_spec(spec)
+    sys.modules["memory_table_bench"] = mod
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_measured_state_matches_predictor_all_five():
+    mod = _load_memory_table()
+    results, violations = mod.check_measured_state(rank=8)
+    assert set(results) == set(mod.MEASURED_METHODS) \
+        == {"sumo", "muon", "galore", "adamw", "lora"}
+    assert not violations, [str(v) for v in violations]
+    for method, (measured, predicted) in results.items():
+        assert measured == predicted, \
+            f"{method}: measured {measured} != predicted {predicted}"
+    # the paper's claims hold on the LIVE trees, with margin
+    assert results["sumo"][0] <= 0.80 * results["adamw"][0]
+    assert results["sumo"][0] <= 1.00 * results["galore"][0]
+
+
+def test_table1_audit_is_falsifiable():
+    """An impossible ratio cap must FAIL with the named code — proves the
+    check can actually reject, so a silent-green regression is impossible."""
+    _, violations = audit_table1_state(
+        rank=8, ratios=(("adamw", 0.01),), methods=("sumo", "adamw"))
+    assert violations
+    assert {v.code for v in violations} == {"state-bytes-mismatch"}
+
+
+def test_run_raises_on_violations(monkeypatch):
+    """``run()`` must surface violations as MemoryBudgetError (exit-nonzero
+    through benchmarks/run.py), never as a silent CSV row."""
+    mod = _load_memory_table()
+    fake = ({"sumo": (100, 100), "adamw": (100, 100)},
+            audit_table1_state(rank=8, ratios=(("adamw", 0.01),),
+                               methods=("sumo", "adamw"))[1])
+    monkeypatch.setattr(mod, "check_measured_state", lambda rank=8: fake)
+    rows = []
+    with pytest.raises(MemoryBudgetError):
+        mod.run(rows)
+    assert any(name == "table1_memory/memory_violations"
+               for name, _, _ in rows)

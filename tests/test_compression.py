@@ -198,18 +198,27 @@ def test_ef_off_stores_none_not_zeros():
 
 
 def test_compression_ratio_is_byte_accurate():
-    """Bugfix 4: the ratio used to count ELEMENTS, so bf16 grads were
-    charged as if fp32. The payload is always fp32 (4 B) while an exact
-    leaf ships in its own dtype — a bf16 compressed leaf's true wire ratio
-    is 2× the element ratio."""
+    """Bugfix 4 + the bf16 wire: the ratio counts BYTES at each buffer's
+    wire dtype — compressed payloads ride ``cfg.payload_dtype`` (bf16 by
+    default, 2 B), exact leaves their own dtype — and the plan separately
+    records ``hlo_bytes``, where XLA's all-reduce promotion upcasts sub-f32
+    float collectives to f32."""
     cfg = CompressionConfig(rank=16, min_dim=128)
     big16 = {"w": jnp.zeros((1024, 64), jnp.bfloat16)}
-    # fp32 payload 16*64*4 B over bf16 full 1024*64*2 B
-    assert compression_ratio(big16, cfg) == pytest.approx(
-        (16 * 64 * 4) / (1024 * 64 * 2))
+    # bf16 payload 16*64*2 B over bf16 full 1024*64*2 B
+    assert compression_ratio(big16, cfg) == pytest.approx(16 / 1024)
     big32 = {"w": jnp.zeros((1024, 64), jnp.float32)}
-    assert compression_ratio(big32, cfg) == pytest.approx(16 / 1024)
+    assert compression_ratio(big32, cfg) == pytest.approx(
+        (16 * 64 * 2) / (1024 * 64 * 4))
+    # an f32 payload restores the old accounting
+    cfg32 = CompressionConfig(rank=16, min_dim=128, payload_dtype="float32")
+    assert compression_ratio(big32, cfg32) == pytest.approx(16 / 1024)
+    # the compiled-HLO view promotes the bf16 payload back to f32
+    plan = dp_wire_plan(big32, cfg)
+    assert plan[0].payload_bytes == 16 * 64 * 2
+    assert plan[0].hlo_bytes == 16 * 64 * 4
     # exact leaves keep their own dtype on the wire
     plan = dp_wire_plan({"t": jnp.zeros((8, 8), jnp.bfloat16)}, cfg)
     assert plan[0].payload_bytes == 8 * 8 * 2
+    assert plan[0].hlo_bytes == 8 * 8 * 4   # promoted like any sub-f32 float
     assert not plan[0].eligible

@@ -91,8 +91,11 @@ def _simulate(grads_stacked, state, cfg, bases=None):
                                    bases=eff)
         payloads.append(p)
         metas.append(m)
+    # pmean semantics on a sub-f32 payload: XLA promotes the all-reduce to
+    # f32 and rounds the mean back to the wire dtype — match it exactly
     payload_mean = jax.tree_util.tree_map(
-        lambda *xs: sum(xs) / n, *payloads)
+        lambda *xs: (sum(x.astype(jnp.float32) for x in xs) / n
+                     ).astype(xs[0].dtype), *payloads)
     decoded, errors = [], []
     for w in range(n):
         local = CompressionState(step=state.step, error=worker(state.error, w))
@@ -180,10 +183,13 @@ def test_error_feedback_converges_to_exact_mean_on_collective():
                 k: np.linalg.norm(total[k] / t - exact[k])
                 / np.linalg.norm(exact[k]) for k in ("wide", "tall")}
     for k in ("wide", "tall"):
-        # the telescoping identity, exact up to fp32 accumulation
+        # the telescoping identity, up to the bf16 wire: EF absorbs each
+        # worker's LOCAL round-trip error exactly, but the pmean's final
+        # round back to bf16 (one rounding of the MEAN per step) is outside
+        # the telescope — it averages out at ~bf16 ulp / sqrt(T)
         resid = np.asarray(state_d.error[k], np.float64).mean(0)
         recon = (total[k] + resid) / steps
-        np.testing.assert_allclose(recon, exact[k], atol=5e-5)
+        np.testing.assert_allclose(recon, exact[k], atol=2e-3)
         # and the running average really closes on the exact mean
         assert rel_err[steps][k] < 0.6 * rel_err[10][k], (k, rel_err)
     # exact-path leaves were never compressed at all
@@ -207,7 +213,10 @@ def test_sumo_q_reuse_and_zero_basis_bootstrap():
     mesh = _mesh()
     n = int(mesh.shape["data"])
     r = 6
-    cfg = CompressionConfig(rank=r, min_dim=32, seed=1, use_sketch=False)
+    # exact payload: this test pins the BASIS algebra (lossless in-span
+    # round trip), which bf16 wire quantization would mask
+    cfg = CompressionConfig(rank=r, min_dim=32, seed=1, use_sketch=False,
+                            payload_dtype="float32")
     key = jax.random.PRNGKey(11)
     kq, kc, kz = jax.random.split(key, 3)
 
@@ -329,10 +338,16 @@ def test_hlo_wire_bytes_match_plan():
     meas_full = analyze_hlo(
         full_mean.lower(grads_d).compile().as_text()).collective_bytes
     ratio_meas = meas / meas_full
-    ratio_plan = compression_ratio(template, cfg)
+    # compiled HLO shows the bf16 payloads PROMOTED to f32 all-reduces
+    # (XLA's all-reduce promotion on CPU/GPU) — compare against the plan's
+    # hlo bytes; the true-wire ratio below stays strictly better
+    from repro.parallel import dp_wire_plan, full_wire_bytes, hlo_wire_bytes
+    plan = dp_wire_plan(template, cfg)
+    ratio_plan = hlo_wire_bytes(plan) / full_wire_bytes(plan)
     # the ×2 trip multiplier cancels in the ratio; shapes are exact
     assert abs(ratio_meas - ratio_plan) / ratio_plan < 1e-6, (
         ratio_meas, ratio_plan)
+    assert compression_ratio(template, cfg) <= ratio_plan
 
 
 @needs_8_devices

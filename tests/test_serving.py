@@ -186,12 +186,22 @@ def test_continuous_matches_static_greedy(arch_id):
         assert res[i].tolist() == static[i].tolist(), f"request {i} diverged"
 
 
-@pytest.mark.parametrize("arch_id", ["smollm-360m", "xlstm-1.3b"])
+@pytest.mark.parametrize("arch_id", [
+    "smollm-360m",
+    "xlstm-1.3b",
+    pytest.param("mixtral-8x22b", marks=pytest.mark.xfail(
+        reason="expert-capacity coupling: MoE capacity dispatch is a "
+               "function of ALL co-batched slot tokens, so a neighbor slot "
+               "joining can reroute/drop this request's expert assignment "
+               "(see SERVING.md); pinned here so the coupling is a named "
+               "xfail, not an undocumented gap", strict=False)),
+])
 def test_request_isolation_under_churn(arch_id):
     """A request's tokens must be identical served solo vs served while
     neighbor slots join, generate and retire around it (no cross-slot leak
-    through the pool/store). MoE archs are excluded by design: expert
-    capacity couples co-batched tokens (see SERVING.md)."""
+    through the pool/store). The dense + recurrent lanes must hold exactly;
+    the MoE lane is an explicit xfail — expert capacity couples co-batched
+    tokens by design (not a pool/store leak)."""
     cfg, params = _setup(arch_id)
     rng = np.random.default_rng(3)
     target = rng.integers(1, cfg.vocab, size=8).astype(np.int32)

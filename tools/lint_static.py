@@ -7,6 +7,10 @@ script drives both lint lanes:
     python tools/lint_static.py --mode 1d --devices 2
     python tools/lint_static.py --mode 2d --devices 8
 
+``--json`` passes through to the driver: the machine-readable
+static-analysis-v1 report on stdout (what tools/run_tier1.sh consumes)
+instead of the human PASS/FAIL log.
+
 An explicit XLA_FLAGS in the environment wins over --devices.
 """
 import argparse
@@ -21,14 +25,17 @@ def main() -> int:
     ap.add_argument("--mode", choices=("1d", "2d", "all"), default="all")
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = leave XLA alone)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the static-analysis-v1 JSON report on stdout")
     args = ap.parse_args()
     if args.devices and "xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "") +
             f" --xla_force_host_platform_device_count={args.devices}")
-    from repro.analysis.driver import run
-    return run(args.mode)
+    from repro.analysis.driver import main as driver_main
+    argv = ["--mode", args.mode] + (["--json"] if args.json else [])
+    return driver_main(argv)
 
 
 if __name__ == "__main__":
