@@ -1,6 +1,6 @@
 """repro.analysis — machine-checked static guarantees.
 
-Five passes over jaxprs and optimized HLO (see ANALYSIS.md):
+Six passes over jaxprs and optimized HLO (see ANALYSIS.md):
 
   collectives  declarative collective-budget lint over compiled HLO
   inertness    abstract-interpretation proof that edge-pad rows/slots of
@@ -8,13 +8,19 @@ Five passes over jaxprs and optimized HLO (see ANALYSIS.md):
                serving slots write only the null KV block)
   donation     jit donation markers vs compiled input-output aliasing,
                plus source lints for donated-buffer reuse and implicit
-               host-buffer dtypes on the serve/train hot paths
+               host-buffer dtypes on the serve/train/telemetry paths
   recompile    post-warmup recompiles only at controller boundaries
   memory       declarative peak-HBM budgets over compiled artifacts
                (train step, Table-1 state claim, paged serve_decode)
+  precision    fp32/bf16 discipline: accumulation dtypes over compiled
+               HLO and traced jaxprs, the DP payload's true-wire dtype,
+               an eps-guard lint over the refresh/orth jaxprs, and the
+               paper's kappa-dependent ortho error bound per bucket
 
 Run all of them: ``python -m repro.analysis`` (or tools/lint_static.py);
-``--json`` emits the machine-readable static-analysis-v1 report.
+``--json`` emits the machine-readable static-analysis-v2 report and
+``--list`` the required check names per lane (the single source
+tools/run_tier1.sh and tools/analysis_diff.py read).
 
 Submodule attributes are re-exported lazily so ``import repro.analysis``
 stays cheap (no jax import) — the training loop imports
@@ -61,6 +67,16 @@ _EXPORTS = {
     "steady_memory_budget": "memory", "refresh_memory_budget": "memory",
     "dp_compress_memory_budget": "memory",
     "serve_decode_memory_budget": "memory",
+    # precision
+    "PrecisionBudget": "precision", "PrecisionViolation": "precision",
+    "PrecisionReport": "precision", "PrecisionError": "precision",
+    "PRECISION_VIOLATION_CODES": "precision",
+    "assert_precision": "precision", "merge_reports": "precision",
+    "audit_accumulation_hlo": "precision", "audit_wire_dtype": "precision",
+    "audit_jaxpr_guards": "precision", "audit_ortho_bound": "precision",
+    "ns_error_bound": "precision", "svd_tier_bound": "precision",
+    "method_bound": "precision", "NS5_PLATEAU": "precision",
+    "F32_EPS": "precision",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -305,16 +305,29 @@ def lint_host_dtype_file(path) -> list:
 
 def audit_host_dtypes() -> DonationReport:
     """Run the host-buffer dtype lint over the serving/training hot paths
-    (the modules whose host arrays feed jitted per-step functions)."""
+    (the modules whose host arrays feed jitted per-step functions) plus the
+    telemetry sinks and the serving benchmark — their host buffers feed
+    aggregates and jitted-step arguments, so a platform-default int64
+    either recompiles a step or silently double-widths a metric."""
+    import os
+
     from ..serve import engine as _engine
     from ..serve import kv_cache as _kv
     from ..serve import scheduler as _sched
+    from ..telemetry import serving as _tserv
+    from ..telemetry import sink as _tsink
     from ..train import loop as _loop
     from ..train import steps as _steps
 
     violations = []
-    for mod in (_engine, _kv, _sched, _loop, _steps):
+    for mod in (_engine, _kv, _sched, _loop, _steps, _tsink, _tserv):
         violations.extend(lint_host_dtype_file(mod.__file__))
+    # benchmarks/ lives outside the package: lint by repo-relative path.
+    repo = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    bench = os.path.join(repo, "benchmarks", "serving.py")
+    if os.path.exists(bench):
+        violations.extend(lint_host_dtype_file(bench))
     return DonationReport(ok=not violations, violations=violations)
 
 

@@ -1,13 +1,15 @@
-"""Shared driver for the five static-analysis passes.
+"""Shared driver for the six static-analysis passes.
 
-``python -m repro.analysis [--mode 1d|2d|all] [--json]`` (or
+``python -m repro.analysis [--mode 1d|2d|all] [--json|--list]`` (or
 tools/lint_static.py) runs every pass that the current device count
 supports and prints one PASS/FAIL/SKIP line per check — or, with
-``--json``, a machine-readable report (schema ``static-analysis-v1``:
+``--json``, a machine-readable report (schema ``static-analysis-v2``:
 stable check names, PASS/FAIL/SKIP status, first detail line) consumed by
-tools/run_tier1.sh.  Exit code 0 iff nothing FAILed — SKIPs (missing
-devices) are not failures, so the same entry point works on a laptop and
-in the 8-device tier-1 lane.
+tools/run_tier1.sh, or, with ``--list``, just the check names/lanes the
+mode requires (no jax import, no work) so report consumers
+(tools/analysis_diff.py) read the required set from one source.  Exit
+code 0 iff nothing FAILed — SKIPs (missing devices) are not failures, so
+the same entry point works on a laptop and in the 8-device tier-1 lane.
 
 Train-stack imports stay inside the pass functions: importing this module
 must not pull jax (the ``repro.analysis`` package promises a cheap import
@@ -17,8 +19,8 @@ from __future__ import annotations
 
 import dataclasses
 
-__all__ = ["run", "run_checks", "json_report", "main", "CheckResult",
-           "REPORT_SCHEMA"]
+__all__ = ["run", "run_checks", "list_checks", "json_report", "main",
+           "CheckResult", "REPORT_SCHEMA"]
 
 
 @dataclasses.dataclass
@@ -319,28 +321,212 @@ def check_host_dtype() -> CheckResult:
                        "PASS" if rep.ok else "FAIL", rep.summary())
 
 
+# -- pass 6: precision flow & numerical stability ----------------------------
+
+def check_precision_accumulation() -> CheckResult:
+    """Every accumulating op on the SUMO hot path — Gram psums, loss
+    reductions, pmeans and dots — must accumulate in >= f32 even when
+    operands are bf16. Audited twice on the same real artifact: over the
+    compiled sharded update's HLO (`iter_reductions`) and over the traced
+    update jaxpr's dtype flow."""
+    import jax
+    from ..core import SumoConfig
+    from ..core.sumo import update_closed_jaxpr
+    from .precision import (PrecisionBudget, audit_accumulation_hlo,
+                            audit_jaxpr_guards, merge_reports)
+
+    if _devices() < 2:
+        return CheckResult("precision/accumulation", "SKIP",
+                           f"needs >=2 devices, have {_devices()}")
+    mesh = _mesh_1d()
+    params = _smoke_params(jax.random.PRNGKey(0), ragged=False)
+    cfg = SumoConfig(rank=8, update_freq=4, weight_decay=0.05)
+    hlo, _state = _compiled_update_hlo(params, cfg, mesh)
+    bud = PrecisionBudget(name="sumo-hot-path")
+    rep_hlo = audit_accumulation_hlo(hlo, bud, where="update-1d")
+    trace = update_closed_jaxpr(params, cfg, mesh=mesh)
+    rep_jx = audit_jaxpr_guards(trace.closed_jaxpr, bud,
+                                where="update-jaxpr")
+    rep = merge_reports(bud, rep_hlo, rep_jx)
+    if rep.ok and rep_hlo.checked < 5:
+        return CheckResult(
+            "precision/accumulation", "FAIL",
+            f"vacuous: only {rep_hlo.checked} accumulating ops found in "
+            f"the compiled update — the HLO walk is not seeing the program")
+    return CheckResult("precision/accumulation",
+                       "PASS" if rep.ok else "FAIL", rep.summary())
+
+
+def check_precision_wire_dtype() -> CheckResult:
+    """The DP payload's TRUE-wire dtype, read from compiled HLO: every
+    planned payload must appear as an all-reduce moving exactly
+    ``hlo_bytes/elems`` bytes per element — the machine check that the wire
+    plan's bf16-promotion dual view matches what XLA actually emits."""
+    import jax
+    import jax.numpy as jnp
+    from ..parallel.compression import (CompressionConfig,
+                                        dp_exchange_compiled_hlo)
+    from .precision import PrecisionBudget, audit_wire_dtype
+
+    if _devices() < 2:
+        return CheckResult("precision/wire-dtype", "SKIP",
+                           f"needs >=2 devices, have {_devices()}")
+    mesh = _mesh_1d()
+    cfg = CompressionConfig(rank=8, min_dim=64, seed=0,
+                            payload_dtype="bfloat16")
+    tmpl = {"w": jnp.ones((256, 96), jnp.float32),
+            "b": jnp.ones((8,), jnp.float32)}
+    hlo, plan = dp_exchange_compiled_hlo(mesh, cfg, tmpl)
+    bud = PrecisionBudget(name="dp-wire", wire_dtype="bfloat16")
+    rep = audit_wire_dtype(hlo, plan, bud)
+    if rep.ok and rep.checked < 2:
+        return CheckResult("precision/wire-dtype", "FAIL",
+                           f"vacuous: only {rep.checked} payloads matched")
+    return CheckResult("precision/wire-dtype",
+                       "PASS" if rep.ok else "FAIL", rep.summary())
+
+
+def check_precision_guards() -> CheckResult:
+    """Eps-guard lint over the refresh/orthogonalization jaxprs: every
+    div/rsqrt denominator must carry a provable positive floor and every
+    Cholesky operand a shift on the eps*trace scale (the PR 5 bug class —
+    a bare 1e-12 constant shift — has relative scale 0 and fails). Traces
+    abstractly; needs no devices."""
+    from ..core.orthogonalize import ORTH_METHODS, orth_closed_jaxpr
+    from ..core.rsvd import cholesky_qr2_closed_jaxpr, refresh_closed_jaxpr
+    from .precision import (PrecisionBudget, audit_jaxpr_guards,
+                            merge_reports)
+
+    bud = PrecisionBudget(name="refresh-guards")
+    reports = [
+        audit_jaxpr_guards(refresh_closed_jaxpr(64, 16, 4), bud,
+                           where="rsvd/refresh"),
+        audit_jaxpr_guards(cholesky_qr2_closed_jaxpr(64, 8), bud,
+                           where="rsvd/cholesky-qr2"),
+    ]
+    for method in ORTH_METHODS:
+        reports.append(audit_jaxpr_guards(orth_closed_jaxpr(method), bud,
+                                          where=f"orth/{method}"))
+    rep = merge_reports(bud, *reports)
+    if rep.ok and (reports[0].checked < 10 or reports[1].checked < 4):
+        return CheckResult(
+            "precision/guards", "FAIL",
+            "vacuous: the refresh/CholeskyQR2 jaxprs show almost no "
+            "div/cholesky sites — the interpreter is not descending into "
+            "the traced program")
+    return CheckResult("precision/guards",
+                       "PASS" if rep.ok else "FAIL", rep.summary())
+
+
+def check_precision_ortho_bound() -> CheckResult:
+    """The paper's kappa-dependent ortho error bound as an executable
+    check, in two parts. (a) Tiering on an ill-conditioned synthetic
+    moment: exact SVD must sit under the SVD-tier budget while NS5 must
+    EXCEED it (yet respect its own plateau bound) — if NS5 passed the SVD
+    tier the bound would be vacuous and this check FAILs. (b) A real
+    telemetry-enabled SUMO run: every bucket's measured residual must sit
+    under the configured method's bound at its measured kappa."""
+    import math
+
+    import jax
+    import jax.numpy as jnp
+    from ..core import SumoConfig, sumo
+    from ..core.orthogonalize import (condition_number, newton_schulz5,
+                                      orthogonality_error, orthogonalize_svd)
+    from ..core.sumo import bucket_spectral_stats
+    from .precision import PrecisionBudget, audit_ortho_bound
+
+    bud = PrecisionBudget(name="ortho-bound")
+
+    # (a) ill-conditioned synthetic moment, sigma from 1 to 1e-2.
+    r, n = 16, 128
+    key = jax.random.PRNGKey(0)
+    u, _ = jnp.linalg.qr(jax.random.normal(key, (r, r)))
+    v, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (n, r)))
+    M = (u * jnp.linspace(1.0, 1e-2, r)) @ v.T
+    kappa = float(condition_number(M))
+
+    def stats_for(O):
+        return {"sigma": [0.0] * r, "kappa": kappa,
+                "ortho_residual": float(orthogonality_error(O))}
+
+    svd_stats = {"synthetic": stats_for(orthogonalize_svd(M))}
+    ns5_stats = {"synthetic": stats_for(newton_schulz5(M))}
+    svd_vs_tier = audit_ortho_bound(svd_stats, "svd", bud)
+    ns5_vs_tier = audit_ortho_bound(ns5_stats, "svd", bud)
+    ns5_vs_own = audit_ortho_bound(ns5_stats, "ns5", bud)
+    lines = [f"synthetic kappa={kappa:.3g}: svd vs svd-tier "
+             f"{'OK' if svd_vs_tier.ok else 'FAIL'}, ns5 vs svd-tier "
+             f"{'exceeds (expected)' if not ns5_vs_tier.ok else 'PASSES?!'},"
+             f" ns5 vs ns5-bound {'OK' if ns5_vs_own.ok else 'FAIL'}"]
+    tier_ok = svd_vs_tier.ok and ns5_vs_own.ok and not ns5_vs_tier.ok
+
+    # (b) real run: telemetry stats from a short SUMO least-squares fit.
+    cfg = SumoConfig(rank=8, update_freq=5, orth_method="polar",
+                     telemetry=True)
+    w = jax.random.normal(jax.random.PRNGKey(1), (64, 48)) * 0.1
+    tx = sumo(0.01, cfg)
+    state = tx.init({"w": w})
+    params = {"w": w}
+    for step in range(12):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, step),
+                                    (64, 48))}
+        upd, state = tx.update(g, state, params)
+        params = jax.tree_util.tree_map(lambda p, u_: p + u_, params, upd)
+    stats = bucket_spectral_stats(state)
+    run_rep = audit_ortho_bound(stats, cfg.orth_method, bud,
+                                where="telemetry")
+    lines.append(run_rep.summary().splitlines()[0])
+    lines += [f"  {viol}" for viol in run_rep.violations]
+    ok = tier_ok and run_rep.ok and run_rep.checked >= 1
+    if run_rep.ok and run_rep.checked < 1:
+        lines.append("vacuous: telemetry produced no bucket stats")
+    return CheckResult("precision/ortho-bound",
+                       "PASS" if ok else "FAIL", "\n".join(lines))
+
+
 # -- entry point ------------------------------------------------------------
+
+#: The single source of truth for check names and lane membership —
+#: ``list_checks`` (the --list mode) feeds tools/run_tier1.sh and
+#: tools/analysis_diff.py so required-check sets are never hardcoded in
+#: shell. mode tag: "1d" / "2d" lane-specific, "both" runs in every lane.
+_CHECKS = (
+    ("collectives/steady-1d", "1d", check_collectives_1d),
+    ("inertness/refresh", "both", check_inertness_refresh),
+    ("inertness/update-1d", "1d", lambda: check_inertness_update(False)),
+    ("inertness/null-block", "1d", check_inertness_nullblock),
+    ("donation", "1d", check_donation),
+    ("donation/host-dtype", "1d", check_host_dtype),
+    ("recompile", "1d", check_recompile),
+    ("memory/train-step", "1d", check_memory_train),
+    ("memory/table1", "1d", check_memory_table1),
+    ("serve/decode-budget", "1d", check_serve_decode),
+    ("precision/accumulation", "1d", check_precision_accumulation),
+    ("precision/wire-dtype", "1d", check_precision_wire_dtype),
+    ("precision/guards", "both", check_precision_guards),
+    ("precision/ortho-bound", "both", check_precision_ortho_bound),
+    ("collectives/steady-2d", "2d", check_collectives_2d),
+    ("inertness/update-2d", "2d", lambda: check_inertness_update(True)),
+)
+
+
+def _selected(mode: str) -> list:
+    return [(n, t, f) for n, t, f in _CHECKS
+            if mode == "all" or t == "both" or t == mode]
+
+
+def list_checks(mode: str = "all") -> list:
+    """Check names + lane tags for a mode, WITHOUT running anything (and
+    without importing jax) — the machine-readable contract consumers diff
+    reports against."""
+    return [{"name": n, "mode": t} for n, t, _ in _selected(mode)]
+
 
 def run_checks(mode: str = "all") -> list:
     """Execute every check the mode asks for; returns [CheckResult...]."""
-    checks = []
-    if mode in ("1d", "all"):
-        checks += [check_collectives_1d,
-                   check_inertness_refresh,
-                   lambda: check_inertness_update(two_d=False),
-                   check_inertness_nullblock,
-                   check_donation,
-                   check_host_dtype,
-                   check_recompile,
-                   check_memory_train,
-                   check_memory_table1,
-                   check_serve_decode]
-    if mode in ("2d", "all"):
-        checks += [check_collectives_2d,
-                   lambda: check_inertness_update(two_d=True)]
-        if mode == "2d":
-            checks.insert(0, check_inertness_refresh)
-    return [c() for c in checks]
+    return [f() for _, _, f in _selected(mode)]
 
 
 def run(mode: str = "all", log=print) -> int:
@@ -360,7 +546,7 @@ def run(mode: str = "all", log=print) -> int:
     return 1 if failed else 0
 
 
-REPORT_SCHEMA = "static-analysis-v1"
+REPORT_SCHEMA = "static-analysis-v2"
 
 
 def json_report(mode: str = "all") -> dict:
@@ -388,7 +574,15 @@ def main(argv=None) -> int:
                     help="emit the machine-readable report on stdout "
                          "(schema %s) instead of the human log"
                          % REPORT_SCHEMA)
+    ap.add_argument("--list", action="store_true",
+                    help="print the check names/lanes the mode requires "
+                         "(JSON, no checks run, no jax import) and exit")
     args = ap.parse_args(argv)
+    if args.list:
+        import json
+        print(json.dumps({"schema": REPORT_SCHEMA, "mode": args.mode,
+                          "checks": list_checks(args.mode)}, indent=2))
+        return 0
     if args.json:
         import json
         rep = json_report(args.mode)

@@ -1,0 +1,629 @@
+"""Pass 6 — precision-flow & numerical-stability lint.
+
+Machine-checks the two numerics disciplines the repo's history shows are the
+live failure modes, plus the paper's condition-number error bound:
+
+  1. **Accumulation dtype** (`low-precision-accumulation`): every Gram psum,
+     loss reduction, pmean and dot on the SUMO hot path must accumulate in
+     >= f32 even when operands are bf16. Checked two ways — an HLO walk over
+     compiled artifacts (``roofline.hlo_cost.iter_reductions`` exposes each
+     reduce/dot/all-reduce's accumulation element type and its ``to_apply``
+     computation root) and a jaxpr dtype-flow over the traced update.
+  2. **Wire dtype** (`bf16-wire-promoted`): the DP payload's *true-wire*
+     dtype read from compiled HLO, closing the loop on the wire plan's
+     hand-carried ``hlo_bytes`` dual view (``WirePlanEntry.hlo_bytes``): a
+     plan that claims bf16 stays bf16 on a backend whose all-reduce
+     promotion pass upcasts it to f32 fails here, by name.
+  3. **Eps-guard lint** (`unguarded-division` / `under-scaled-shift`): an
+     abstract interpreter over the refresh/orthogonalization jaxprs proving
+     every div/rsqrt denominator carries a positive floor and every Cholesky
+     operand carries a shift on the eps * trace scale. This is the check that
+     would have caught the PR 5 bug class — a pure-constant 1e-12 shift
+     ~1000x below fp32 roundoff has relative scale 0 and fails.
+  4. **Ortho error bound** (`ortho-error-bound-exceeded`): the paper's
+     Lemma 3.2 bound ||NS_i(M) M^+ M - proj|| <= sqrt(r) (1 - 1/kappa)^(2^i)
+     as an executable per-bucket check over telemetry ``SpectralStats``,
+     with an SVD-tier budget that Newton-Schulz-5 demonstrably fails on
+     ill-conditioned moments while exact SVD passes.
+
+All audits return a ``PrecisionReport``; ``assert_precision`` raises
+``PrecisionError`` (an AssertionError carrying the report). The module
+imports neither jax nor numpy at top level so ``--list``-style driver uses
+stay import-light; jaxpr objects are consumed duck-typed.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Optional
+
+from ..roofline.hlo_cost import (_DTYPE_BYTES, _FLOAT_DTYPES, iter_collectives,
+                                 iter_reductions)
+
+# Machine-readable IDs, stable across refactors — tests and CI key on these.
+PRECISION_VIOLATION_CODES = (
+    "low-precision-accumulation",
+    "bf16-wire-promoted",
+    "unguarded-division",
+    "under-scaled-shift",
+    "ortho-error-bound-exceeded",
+)
+
+F32_EPS = 1.1920928955078125e-07
+
+# Normalized fixed-point residual of the Muon quintic (3.4445, -4.7750,
+# 2.0315): its iteration trades exact convergence for speed, so singular
+# values land in a band around 1 rather than at 1 and ||OO^T - I||_F /
+# sqrt(r) plateaus near 0.5 no matter how many steps run (worst measured
+# excess over the Lemma 3.2 kappa term is 0.49/sqrt(r), at kappa -> 1).
+# The ns5 bound tier adds this plateau on top of the kappa term; the SVD
+# tier does NOT — which is exactly why ns5 fails the SVD-tier budget.
+NS5_PLATEAU = 0.6
+
+
+@dataclass(frozen=True)
+class PrecisionViolation:
+    code: str       # one of PRECISION_VIOLATION_CODES
+    detail: str     # human-readable: what, where, expected vs got
+    where: str      # jaxpr path / HLO computation / bucket key
+    source: str = "?"   # HLO op_name metadata when available
+
+    def __str__(self):
+        return f"[{self.code}] {self.where}: {self.detail}"
+
+
+@dataclass(frozen=True)
+class PrecisionBudget:
+    """Declarative precision policy one artifact is audited against.
+
+    min_accum_bytes   floating accumulations (dot / reduce-add / all-reduce)
+                      must run at >= this element size (4 = f32)
+    min_shift_rel     Cholesky operands must carry a diagonal shift of at
+                      least this fraction of trace(gram). The repo's own
+                      CholeskyQR2 second pass uses 2*eps/l (~3e-8 for l=8),
+                      legitimately BELOW f32 eps — so the floor defaults to
+                      1e-9, three decades above the PR 5 bug's 1e-12-of-
+                      nothing (relative scale 0) but under every real shift.
+    wire_dtype        expected payload dtype name for wire audits (None =
+                      take each plan entry's own hlo_bytes claim)
+    allow_sources     op_name substrings exempt from the accumulation check
+                      (e.g. integer bookkeeping fused into a float reduce)
+    bound_scale       multiplier on the ortho error bound (1.0 = the paper's
+                      bound as stated; tests loosen/tighten via this)
+    ns_steps          Newton-Schulz iteration count the bound is evaluated at
+    """
+    name: str
+    min_accum_bytes: int = 4
+    min_shift_rel: float = 1e-9
+    wire_dtype: Optional[str] = None
+    allow_sources: tuple = ()
+    bound_scale: float = 1.0
+    ns_steps: int = 5
+    note: str = ""
+
+
+@dataclass(frozen=True)
+class PrecisionReport:
+    budget: PrecisionBudget
+    ok: bool
+    violations: tuple          # of PrecisionViolation
+    checked: int               # sites actually inspected (non-vacuity)
+    note: str = ""
+
+    def summary(self) -> str:
+        head = (f"precision budget '{self.budget.name}': "
+                f"{'OK' if self.ok else 'FAIL'} "
+                f"({self.checked} sites checked, "
+                f"{len(self.violations)} violations)")
+        lines = [head] + [f"  {v}" for v in self.violations]
+        if self.note:
+            lines.append(f"  note: {self.note}")
+        return "\n".join(lines)
+
+
+class PrecisionError(AssertionError):
+    def __init__(self, report: PrecisionReport):
+        super().__init__(report.summary())
+        self.report = report
+
+
+def assert_precision(report: PrecisionReport) -> PrecisionReport:
+    if not report.ok:
+        raise PrecisionError(report)
+    return report
+
+
+def merge_reports(budget: PrecisionBudget, *reports) -> PrecisionReport:
+    """Fold several audits of one artifact family into a single verdict."""
+    violations, checked, notes = [], 0, []
+    for r in reports:
+        violations.extend(r.violations)
+        checked += r.checked
+        if r.note:
+            notes.append(r.note)
+    return PrecisionReport(budget=budget, ok=not violations,
+                           violations=tuple(violations), checked=checked,
+                           note="; ".join(notes))
+
+
+# ---------------------------------------------------------------------------
+# 1. Accumulation dtype over compiled HLO
+# ---------------------------------------------------------------------------
+
+# reduce computations whose result is precision-sensitive: accumulating
+# roots lose mass to rounding at low precision; max/min/and/or do not.
+_ACCUM_ROOTS = {"add", "multiply"}
+
+
+def audit_accumulation_hlo(hlo_text, budget: PrecisionBudget,
+                           where: str = "hlo") -> PrecisionReport:
+    """Every accumulating op in a compiled program must run at
+    >= ``budget.min_accum_bytes`` per element (f32 by default), regardless
+    of operand dtype — a bf16 x bf16 dot with an f32 result passes; an
+    f16-accumulated Gram psum fails with `low-precision-accumulation`."""
+    violations, checked = [], 0
+    for ent in iter_reductions(hlo_text):
+        if any(a in ent["source"] for a in budget.allow_sources):
+            continue
+        # Reductions with a non-accumulating computation root (max-pool,
+        # arg-reduce bookkeeping, boolean any/all) are precision-neutral.
+        if ent["op"] != "dot" and ent["comp_root"] is not None \
+                and ent["comp_root"] not in _ACCUM_ROOTS:
+            continue
+        floats = [d for d in ent["accum_dtypes"] if d in _FLOAT_DTYPES]
+        if not floats:
+            continue  # integer/predicate reduction
+        checked += 1
+        bad = [d for d in floats if _DTYPE_BYTES[d] < budget.min_accum_bytes]
+        if bad:
+            violations.append(PrecisionViolation(
+                code="low-precision-accumulation",
+                detail=(f"{ent['op']} accumulates in {'/'.join(bad)} "
+                        f"(< {budget.min_accum_bytes} B/elem) over operands "
+                        f"{ent['operand_dtypes']} shape {ent['shape']}"),
+                where=f"{where}/{ent['computation']}",
+                source=ent["source"]))
+    return PrecisionReport(
+        budget=budget, ok=not violations, violations=tuple(violations),
+        checked=checked,
+        note=f"{checked} accumulating ops inspected in {where}")
+
+
+# ---------------------------------------------------------------------------
+# 2. True-wire dtype of the DP exchange
+# ---------------------------------------------------------------------------
+
+def _prod(dims) -> int:
+    n = 1
+    for d in dims:
+        n *= int(d)
+    return n
+
+
+def audit_wire_dtype(hlo_text, plan, budget: PrecisionBudget,
+                     where: str = "dp-exchange") -> PrecisionReport:
+    """Check the wire plan's ``hlo_bytes`` dual view against the compiled
+    program: for every planned payload there must be an all-reduce whose
+    element count matches ``payload_dims`` and whose MEASURED bytes/element
+    equal the plan's claim. A plan claiming a bf16 wire on a backend whose
+    all-reduce promotion pass upcasts to f32 fails `bf16-wire-promoted` —
+    the claim and the wire disagree, in either direction."""
+    avail = [c for c in iter_collectives(hlo_text)
+             if c["op"] in ("all-reduce", "reduce-scatter") and c["dims"]]
+    violations, checked = [], 0
+    for ent in plan:
+        elems = _prod(ent.payload_dims)
+        if elems <= 0:
+            continue
+        checked += 1
+        want_isz = ent.hlo_bytes / elems
+        # Prefer an exact (elems, itemsize) match; fall back to elems only.
+        match = best = None
+        for c in avail:
+            if _prod(c["dims"]) != elems:
+                continue
+            best = best or c
+            if abs(c["payload"] / elems - want_isz) < 0.5:
+                match = c
+                break
+        if match is not None:
+            avail.remove(match)
+            continue
+        if best is not None:
+            avail.remove(best)
+            got_isz = best["payload"] / _prod(best["dims"])
+            violations.append(PrecisionViolation(
+                code="bf16-wire-promoted",
+                detail=(f"leaf '{ent.path}' planned {want_isz:g} B/elem on "
+                        f"the wire (hlo_bytes={ent.hlo_bytes}) but the "
+                        f"compiled all-reduce moves {got_isz:g} B/elem "
+                        f"({best['payload']} B, dims {best['dims']})"),
+                where=f"{where}/{best['computation']}",
+                source=best["source"]))
+        else:
+            violations.append(PrecisionViolation(
+                code="bf16-wire-promoted",
+                detail=(f"no all-reduce carrying {elems} elems found for "
+                        f"leaf '{ent.path}' (payload_dims "
+                        f"{ent.payload_dims}) — wire plan and compiled "
+                        f"program disagree"),
+                where=where))
+    return PrecisionReport(
+        budget=budget, ok=not violations, violations=tuple(violations),
+        checked=checked,
+        note=f"{checked} planned payloads matched against compiled wire")
+
+
+# ---------------------------------------------------------------------------
+# 3. Guard lint + dtype flow over jaxprs (abstract interpretation)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class _Abs:
+    """Abstract value: what the lint knows about a jaxpr intermediate.
+
+    nonneg      provably >= 0
+    floor       provable lower bound (> 0 means 'guarded denominator')
+    const       known compile-time scalar value, else None
+    mask        0/1-valued (identity masks from eq(iota, iota) chains)
+    shift_rel   'this value is >= shift_rel * trace(input matrix)' — the
+                relative scale of a diagonal shift. Scalar full-reductions
+                seed it at 1.0; multiplying by eps-scale constants scales
+                it; adding to the Gram matrix preserves it. A Cholesky
+                operand must arrive with shift_rel >= budget.min_shift_rel.
+    """
+    nonneg: bool = False
+    floor: float = 0.0
+    const: Optional[float] = None
+    mask: bool = False
+    shift_rel: float = 0.0
+
+
+_TOP = _Abs()
+
+_PASSTHROUGH = {
+    "transpose", "broadcast_in_dim", "reshape", "squeeze", "expand_dims",
+    "copy", "convert_element_type", "reduce_precision", "stop_gradient",
+    "rev", "real", "slice", "dynamic_slice", "gather",
+}
+
+# Primitives whose OUTPUT dtype is an accumulation precision at jaxpr level.
+_ACCUM_PRIMS = {"dot_general", "reduce_sum", "psum", "pmean", "pdot"}
+
+_CALL_PRIMS = {"pjit", "closed_call", "core_call", "remat", "remat2",
+               "checkpoint", "xla_call"}
+
+
+def _is_lit(v) -> bool:
+    return hasattr(v, "val")
+
+
+def _lit_abs(v) -> _Abs:
+    try:
+        c = float(v.val)
+    except (TypeError, ValueError):
+        return _TOP
+    return _Abs(nonneg=c >= 0.0, floor=c if c > 0.0 else 0.0, const=c)
+
+
+def _read(env, v) -> _Abs:
+    return _lit_abs(v) if _is_lit(v) else env.get(v, _TOP)
+
+
+def _out_ndim(eqn) -> int:
+    aval = getattr(eqn.outvars[0], "aval", None)
+    return len(getattr(aval, "shape", ()) or ())
+
+
+def _float_itemsize(var) -> Optional[int]:
+    aval = getattr(var, "aval", None)
+    dt = getattr(aval, "dtype", None)
+    if dt is None:
+        return None
+    # ml_dtypes extension floats (bfloat16, float8_*) report numpy kind 'V',
+    # so classify by name, not kind.
+    name = getattr(dt, "name", "")
+    if not (name.startswith("float") or name.startswith("bfloat")):
+        return None
+    return int(dt.itemsize)
+
+
+def _mul_abs(a: _Abs, b: _Abs, same_var: bool) -> _Abs:
+    if same_var:  # x * x
+        return _Abs(nonneg=True, floor=a.floor * a.floor)
+    const = None
+    if a.const is not None and b.const is not None:
+        const = a.const * b.const
+    nonneg = (a.nonneg and b.nonneg)
+    floor = a.floor * b.floor if nonneg else 0.0
+    # Scaling a trace-scale scalar by a constant scales the shift claim;
+    # multiplying it into a 0/1 identity mask preserves it (diagonal shift).
+    shift_rel = 0.0
+    if b.const is not None and b.const > 0:
+        shift_rel = a.shift_rel * b.const
+    elif a.const is not None and a.const > 0:
+        shift_rel = b.shift_rel * a.const
+    elif b.mask:
+        shift_rel = a.shift_rel
+    elif a.mask:
+        shift_rel = b.shift_rel
+    return _Abs(nonneg=nonneg, floor=floor, const=const,
+                mask=a.mask and b.mask, shift_rel=shift_rel)
+
+
+def _add_abs(a: _Abs, b: _Abs) -> _Abs:
+    const = None
+    if a.const is not None and b.const is not None:
+        const = a.const + b.const
+    nonneg = a.nonneg and b.nonneg
+    return _Abs(nonneg=nonneg,
+                floor=(a.floor + b.floor) if nonneg else 0.0, const=const,
+                shift_rel=max(a.shift_rel, b.shift_rel))
+
+
+def _sub_jaxpr(params):
+    """The inner jaxpr of a call-like eqn, ClosedJaxpr or bare."""
+    for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+        if key in params:
+            inner = params[key]
+            return getattr(inner, "jaxpr", inner)
+    return None
+
+
+def audit_jaxpr_guards(closed_jaxpr, budget: PrecisionBudget,
+                       where: str = "jaxpr") -> PrecisionReport:
+    """Abstract-interpret a jaxpr, proving (a) every div/rsqrt denominator
+    carries a positive floor or nonzero constant, (b) every Cholesky operand
+    carries a diagonal shift on the eps * trace scale (relative magnitude
+    >= budget.min_shift_rel — a bare 1e-12 constant has relative scale 0
+    and fails), and (c) every float dot/reduce/psum output dtype meets
+    ``min_accum_bytes``. Control-flow bodies (scan/while/cond) are entered
+    with unknown inputs, so guards established inside them still count but
+    guards established outside them do not leak in (sound for linting)."""
+    violations: list = []
+    counts = {"div": 0, "rsqrt": 0, "cholesky": 0, "accum": 0}
+    seen: set = set()
+
+    def emit(code, detail, path):
+        key = (code, path, detail)
+        if key not in seen:
+            seen.add(key)
+            violations.append(PrecisionViolation(
+                code=code, detail=detail, where=path))
+
+    def run(jaxpr, in_abs, path):
+        env: dict = {}
+        invars = list(jaxpr.invars)
+        if in_abs is not None:
+            for v, a in zip(invars, list(in_abs)[:len(invars)]):
+                env[v] = a
+        for v in getattr(jaxpr, "constvars", ()):
+            env[v] = _TOP
+        for eqn in jaxpr.eqns:
+            prim = eqn.primitive.name
+            ins = [_read(env, v) for v in eqn.invars]
+            out = _TOP
+
+            if prim in _CALL_PRIMS:
+                inner = _sub_jaxpr(eqn.params)
+                name = eqn.params.get("name", prim)
+                if inner is not None:
+                    sub = run(inner, ins[-len(inner.invars):],
+                              f"{path}/{name}")
+                    for v, a in zip(eqn.outvars, sub):
+                        env[v] = a
+                continue
+            if prim in ("custom_jvp_call", "custom_vjp_call",
+                        "custom_jvp_call_jaxpr"):
+                inner = _sub_jaxpr(eqn.params)
+                if inner is not None:
+                    sub = run(inner, ins[-len(inner.invars):],
+                              f"{path}/{prim}")
+                    for v, a in zip(eqn.outvars, sub):
+                        env[v] = a
+                continue
+            if prim == "shard_map":
+                inner = _sub_jaxpr(eqn.params)
+                if inner is not None:
+                    sub = run(inner, ins[-len(inner.invars):],
+                              f"{path}/shard_map")
+                    for v, a in zip(eqn.outvars, sub):
+                        env[v] = a
+                continue
+            if prim in ("scan", "while"):
+                # Loop-carried values change across iterations: enter with
+                # unknowns so an outside guard can't vouch for inside uses.
+                inners = [eqn.params.get(k)
+                          for k in ("jaxpr", "cond_jaxpr", "body_jaxpr")]
+                for inner in inners:
+                    if inner is not None:
+                        run(getattr(inner, "jaxpr", inner), None,
+                            f"{path}/{prim}")
+                for v in eqn.outvars:
+                    env[v] = _TOP
+                continue
+            if prim == "cond":
+                for br in eqn.params.get("branches", ()):
+                    run(getattr(br, "jaxpr", br), None, f"{path}/cond")
+                for v in eqn.outvars:
+                    env[v] = _TOP
+                continue
+
+            if prim in _PASSTHROUGH and ins:
+                out = ins[0]
+            elif prim == "mul" and len(ins) == 2:
+                same = (not _is_lit(eqn.invars[0])
+                        and not _is_lit(eqn.invars[1])
+                        and eqn.invars[0] is eqn.invars[1])
+                out = _mul_abs(ins[0], ins[1], same)
+            elif prim == "add" and len(ins) == 2:
+                out = _add_abs(ins[0], ins[1])
+            elif prim == "max" and len(ins) == 2:
+                out = _Abs(nonneg=ins[0].nonneg or ins[1].nonneg,
+                           floor=max(ins[0].floor, ins[1].floor),
+                           shift_rel=max(ins[0].shift_rel,
+                                         ins[1].shift_rel))
+            elif prim == "min" and len(ins) == 2:
+                out = _Abs(nonneg=ins[0].nonneg and ins[1].nonneg,
+                           floor=min(ins[0].floor, ins[1].floor))
+            elif prim in ("abs", "exp", "integer_pow") and ins:
+                if prim == "integer_pow" and eqn.params.get("y", 0) % 2:
+                    out = ins[0]
+                else:
+                    out = _Abs(nonneg=True,
+                               floor=ins[0].floor if prim == "abs" else 0.0)
+            elif prim == "sqrt" and ins:
+                out = _Abs(nonneg=True, floor=math.sqrt(max(ins[0].floor,
+                                                            0.0)))
+            elif prim in ("eq", "ne", "lt", "le", "gt", "ge"):
+                out = _Abs(nonneg=True, mask=True)
+            elif prim == "iota":
+                out = _Abs(nonneg=True)
+            elif prim == "svd":
+                # Singular values are nonnegative by definition; they are
+                # the rank-(input-1) output (u/vt keep input rank).
+                in_nd = len(getattr(getattr(eqn.invars[0], "aval", None),
+                                    "shape", ()) or ())
+                for ov in eqn.outvars:
+                    nd = len(getattr(getattr(ov, "aval", None),
+                                     "shape", ()) or ())
+                    env[ov] = _Abs(nonneg=True) if nd == in_nd - 1 else _TOP
+                continue
+            elif prim == "select_n" and len(ins) >= 3:
+                cases = ins[1:]
+                out = _Abs(nonneg=all(c.nonneg for c in cases),
+                           floor=min(c.floor for c in cases),
+                           mask=all(c.mask or c.const in (0.0, 1.0)
+                                    for c in cases),
+                           shift_rel=min(c.shift_rel for c in cases))
+            elif prim in ("reduce_sum", "reduce_max", "reduce_min",
+                          "reduce_prod"):
+                nonneg = ins[0].nonneg if ins else False
+                # A full reduction of the matrix is on the trace scale —
+                # the seed every relative shift claim is grown from.
+                out = _Abs(nonneg=nonneg,
+                           shift_rel=1.0 if _out_ndim(eqn) == 0 else 0.0)
+            elif prim in ("psum", "pmean", "pmax", "pmin", "all_gather"):
+                out = ins[0] if ins else _TOP
+            elif prim in ("div", "rsqrt"):
+                counts[prim] += 1
+                den = ins[1] if prim == "div" else ins[0]
+                num = ins[0]
+                if den.const is not None and den.const != 0.0:
+                    if prim == "div" and den.const > 0:
+                        out = _Abs(nonneg=num.nonneg,
+                                   floor=num.floor / den.const,
+                                   shift_rel=num.shift_rel / den.const)
+                elif den.floor <= 0.0:
+                    emit("unguarded-division",
+                         f"{prim} denominator has no provable positive "
+                         f"floor (no eps guard on the path)", path)
+            elif prim == "cholesky":
+                counts["cholesky"] += 1
+                rel = ins[0].shift_rel if ins else 0.0
+                if rel < budget.min_shift_rel:
+                    emit("under-scaled-shift",
+                         f"cholesky operand shift has relative scale "
+                         f"{rel:.3e} < {budget.min_shift_rel:.1e} of "
+                         f"trace(gram) — a constant-only shift (the PR 5 "
+                         f"bug class) proves nothing at scale", path)
+
+            if prim in _ACCUM_PRIMS:
+                for ov in eqn.outvars:
+                    isz = _float_itemsize(ov)
+                    if isz is not None:
+                        counts["accum"] += 1
+                        if isz < budget.min_accum_bytes:
+                            emit("low-precision-accumulation",
+                                 f"{prim} accumulates in a {isz} B/elem "
+                                 f"float (< {budget.min_accum_bytes})",
+                                 path)
+
+            for v in eqn.outvars:
+                env.setdefault(v, out)
+        return [_read(env, v) for v in jaxpr.outvars]
+
+    jaxpr = getattr(closed_jaxpr, "jaxpr", closed_jaxpr)
+    run(jaxpr, None, where)
+    checked = sum(counts.values())
+    return PrecisionReport(
+        budget=budget, ok=not violations, violations=tuple(violations),
+        checked=checked,
+        note=(f"{counts['div']} div, {counts['rsqrt']} rsqrt, "
+              f"{counts['cholesky']} cholesky, {counts['accum']} "
+              f"accumulation sites inspected in {where}"))
+
+
+# ---------------------------------------------------------------------------
+# 4. The paper's ortho error bound as an executable check
+# ---------------------------------------------------------------------------
+
+def ns_error_bound(kappa: float, r: int, steps: int = 5) -> float:
+    """Lemma 3.2: ||NS_i(M) - polar(M)||_F <= sqrt(r) (1 - 1/kappa)^(2^i),
+    with kappa the squared-singular-value condition number the telemetry's
+    ``condition_number`` reports. Unnormalized Frobenius bound."""
+    kappa = max(float(kappa), 1.0)
+    return math.sqrt(max(r, 1)) * (1.0 - 1.0 / kappa) ** (2 ** steps)
+
+
+def svd_tier_bound(r: int, kappa: float = 1.0) -> float:
+    """Roundoff-tier budget for EXACT orthogonalization (svd / polar):
+    a few hundred ulps, growing mildly with conditioning. Any iterative
+    scheme with a convergence plateau sits orders of magnitude above this."""
+    kappa = max(float(kappa), 1.0)
+    return 256.0 * F32_EPS * math.sqrt(max(r, 1)) * (1.0 + kappa ** 0.25)
+
+
+def method_bound(method: str, kappa: float, r: int,
+                 ns_steps: int = 5) -> float:
+    """Unnormalized Frobenius bound on ||OO^T - I||_F for the configured
+    orthogonalization method — the single bound code path shared by the
+    lint, the driver check and benchmarks/ortho_error.py."""
+    if method in ("svd", "polar"):
+        return svd_tier_bound(r, kappa)
+    if method == "ns5":
+        # Muon's quintic never reaches exact orthogonality: kappa term
+        # plus its fixed-point plateau.
+        return (ns_error_bound(kappa, r, ns_steps)
+                + NS5_PLATEAU * math.sqrt(max(r, 1)))
+    if method == "cubic":
+        return ns_error_bound(kappa, r, ns_steps) + svd_tier_bound(r, kappa)
+    raise ValueError(f"unknown orthogonalization method: {method!r}")
+
+
+def _stat(stats, key):
+    v = stats[key] if isinstance(stats, dict) else getattr(stats, key)
+    return v
+
+
+def audit_ortho_bound(bucket_stats, method: str, budget: PrecisionBudget,
+                      where: str = "telemetry") -> PrecisionReport:
+    """Per-bucket: the measured ortho residual from telemetry
+    ``SpectralStats`` (normalized, ||OO^T - I||_F / sqrt(r)) must sit under
+    ``bound_scale * method_bound(method, kappa, r)``. Auditing an ns5 run
+    against ``method='svd'`` applies the SVD-tier budget — the
+    falsification the acceptance criteria demand."""
+    violations, checked = [], 0
+    for bucket, stats in dict(bucket_stats).items():
+        sigma = _stat(stats, "sigma")
+        r = int(len(sigma))
+        kappa = float(_stat(stats, "kappa"))
+        resid = float(_stat(stats, "ortho_residual"))
+        if not math.isfinite(resid) or r == 0:
+            continue
+        checked += 1
+        measured = resid * math.sqrt(r)   # un-normalize to Frobenius
+        bound = budget.bound_scale * method_bound(method, kappa, r,
+                                                  budget.ns_steps)
+        if measured > bound:
+            violations.append(PrecisionViolation(
+                code="ortho-error-bound-exceeded",
+                detail=(f"bucket {bucket}: measured ||OO^T-I||_F = "
+                        f"{measured:.3e} exceeds the {method} bound "
+                        f"{bound:.3e} at kappa={kappa:.3g}, r={r}"),
+                where=f"{where}/{bucket}"))
+    return PrecisionReport(
+        budget=budget, ok=not violations, violations=tuple(violations),
+        checked=checked,
+        note=f"{checked} buckets audited against the {method} bound")

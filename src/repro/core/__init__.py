@@ -19,11 +19,13 @@ from .optimizer import (
     partition_params,
 )
 from .orthogonalize import (
+    ORTH_METHODS,
     condition_number,
     effective_rank,
     gram_spectrum,
     newton_schulz5,
     newton_schulz_cubic,
+    orth_closed_jaxpr,
     orthogonality_error,
     orthogonalize_polar,
     orthogonalize_polar_with_spectrum,
@@ -32,6 +34,7 @@ from .orthogonalize import (
     rank_one_residual,
 )
 from .rsvd import (
+    cholesky_qr2_closed_jaxpr,
     randomized_range_finder,
     randomized_svd,
     rsvd_effective_rank,
@@ -43,6 +46,7 @@ from .sumo import (
     SpectralStats,
     SumoConfig,
     SumoState,
+    bucket_spectral_stats,
     convert_sumo_state,
     padded_long,
     sumo,
@@ -54,7 +58,7 @@ from .sumo import (
 __all__ = [
     "SumoConfig", "SumoState", "sumo", "sumo_optimizer",
     "convert_sumo_state", "sumo_state_layout", "padded_long",
-    "sumo_dp_bases",
+    "sumo_dp_bases", "bucket_spectral_stats",
     "MatrixStats", "SpectralStats",
     "GaloreConfig", "galore", "galore_optimizer",
     "muon", "muon_optimizer",
@@ -68,7 +72,8 @@ __all__ = [
     "newton_schulz_cubic", "condition_number", "effective_rank",
     "rank_one_residual", "orthogonality_error", "gram_spectrum",
     "orthogonalize_polar_with_spectrum", "orthogonalize_svd_with_spectrum",
+    "ORTH_METHODS", "orth_closed_jaxpr",
     "randomized_range_finder", "randomized_svd", "truncated_svd",
-    "rsvd_effective_rank", "subspace_overlap",
+    "rsvd_effective_rank", "subspace_overlap", "cholesky_qr2_closed_jaxpr",
     "analytic_state_floats", "model_memory_report", "tree_state_bytes",
 ]

@@ -154,6 +154,29 @@ def newton_schulz_cubic(M: jnp.ndarray, steps: int = 5) -> jnp.ndarray:
     return X.astype(M.dtype)
 
 
+#: method name -> implementation; the single dispatch table shared by
+#: core.sumo, the precision lint and the ortho-error benchmark.
+ORTH_METHODS = {
+    "svd": orthogonalize_svd,
+    "polar": orthogonalize_polar,
+    "ns5": newton_schulz5,
+    "cubic": newton_schulz_cubic,
+}
+
+
+def orth_closed_jaxpr(method: str, r: int = 16, n: int = 64,
+                      ns_steps: int = 5):
+    """Named closed-jaxpr export of one orthogonalization method on an
+    (r, n) fp32 moment, for the precision guard lint
+    (``repro.analysis.precision.audit_jaxpr_guards``): every division and
+    rsqrt in these jaxprs must carry a provable eps floor. Tracing is
+    abstract — no FLOPs run."""
+    fn = ORTH_METHODS[method]
+    if method in ("ns5", "cubic"):
+        fn = partial(fn, steps=ns_steps)
+    return jax.make_jaxpr(fn)(jax.ShapeDtypeStruct((r, n), jnp.float32))
+
+
 # ---------------------------------------------------------------------------
 # Diagnostics (paper Fig. 1 / Lemma 3.1 reproduction)
 # ---------------------------------------------------------------------------

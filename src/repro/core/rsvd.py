@@ -302,6 +302,27 @@ def refresh_closed_jaxpr(
     )
 
 
+def cholesky_qr2_closed_jaxpr(rows: int = 64, cols: int = 8,
+                              axis_name: str = "model"):
+    """Named closed-jaxpr export of the shifted-CholeskyQR2 kernel alone,
+    for the precision guard lint (repro.analysis.precision): the jaxpr
+    carries both Gram psums, both trace-scaled shifts and both Cholesky
+    factorizations, so ``audit_jaxpr_guards`` can prove every shift sits on
+    the eps·trace scale — the machine check for the PR 5 bug class (a bare
+    constant shift has relative scale 0 and fails `under-scaled-shift`).
+    Traced through a size-1 shard_map like ``refresh_closed_jaxpr``; needs
+    no devices."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), (axis_name,))
+    fn = shard_map(partial(_cholesky_qr2, axis_name=axis_name), mesh=mesh,
+                   in_specs=P(axis_name, None), out_specs=P(axis_name, None),
+                   check_rep=False)
+    return jax.make_jaxpr(fn)(
+        jax.ShapeDtypeStruct((rows, cols), jnp.float32))
+
+
 def subspace_overlap(Q1: jnp.ndarray, Q2: jnp.ndarray) -> jnp.ndarray:
     """‖Q1ᵀQ2‖_F² / min(r1, r2) ∈ [0,1] — how aligned two orthonormal bases
     are.

@@ -604,6 +604,24 @@ def sumo_state_layout(state: SumoState) -> str:
     return "leaf"
 
 
+def bucket_spectral_stats(state) -> dict:
+    """Telemetry claim hook for the precision lint: the per-bucket
+    ``SpectralStats`` out of any optimizer state holding a SumoState
+    (directly, or nested inside a chain/tuple), as a plain
+    ``{"LONGxSHORT": SpectralStats}`` dict host-side.
+    ``repro.analysis.precision.audit_ortho_bound`` checks each bucket's
+    measured ortho residual against the paper's kappa-dependent bound.
+    Returns {} when telemetry is off or no SumoState is present."""
+    if isinstance(state, SumoState):
+        return dict(state.stats) if isinstance(state.stats, dict) else {}
+    if isinstance(state, (tuple, list)):
+        for s in state:
+            found = bucket_spectral_stats(s)
+            if found:
+                return found
+    return {}
+
+
 def convert_sumo_state(
     state: SumoState, params: PyTree, cfg: SumoConfig, target: str,
     long_pad_to: Optional[int] = None,

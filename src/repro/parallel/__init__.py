@@ -5,6 +5,7 @@ from .compression import (
     CompressionState,
     compress_grads,
     compression_ratio,
+    dp_exchange_compiled_hlo,
     dp_wire_plan,
     eligible,
     exchange_shard,
@@ -38,5 +39,5 @@ __all__ = [
     "CompressionConfig", "CompressionState", "eligible", "init_state",
     "init_worker_state", "compress_grads", "finalize", "exchange_shard",
     "make_dp_exchange_fn", "step_bases", "dp_wire_plan", "wire_bytes", "full_wire_bytes",
-    "hlo_wire_bytes", "compression_ratio",
+    "hlo_wire_bytes", "compression_ratio", "dp_exchange_compiled_hlo",
 ]

@@ -521,6 +521,33 @@ def full_wire_bytes(plan) -> int:
     return sum(e.full_bytes for e in plan)
 
 
+def dp_exchange_compiled_hlo(mesh, cfg: CompressionConfig,
+                             grads_template: PyTree,
+                             data_axis: str = "data"):
+    """Compile one real DP exchange over ``mesh`` and return
+    ``(hlo_text, plan)`` — the artifact pair the precision lint's
+    `bf16-wire-promoted` check audits: the plan's ``hlo_bytes`` dual view
+    against the all-reduces actually in the compiled program. Uses the same
+    stacked-grads placement incantation as tests/test_compression_sharded.py
+    (worker rows over ``data_axis``, scalar state replicated)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    n = int(mesh.shape[data_axis])
+    grads_stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n,) + tuple(x.shape)),
+        grads_template)
+    state = init_worker_state(grads_template, cfg, n)
+    stack = NamedSharding(mesh, P(data_axis))
+    rep = NamedSharding(mesh, P())
+    grads_d = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, stack), grads_stacked)
+    state_d = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, stack if x.ndim > 0 else rep), state)
+    fn = make_dp_exchange_fn(mesh, cfg, data_axis=data_axis)
+    hlo_text = jax.jit(fn).lower(grads_d, state_d, None).compile().as_text()
+    return hlo_text, dp_wire_plan(grads_template, cfg)
+
+
 def compression_ratio(grads: PyTree, cfg: CompressionConfig,
                       bases: Optional[PyTree] = None) -> float:
     """Wire BYTES with compression / without (lower is better); the ≥8×

@@ -617,6 +617,105 @@ def iter_collectives(hlo_text) -> list[dict]:
     return entries
 
 
+_REDUCTION_OPS = {
+    # ops that ACCUMULATE: the element type they run in is the precision the
+    # whole reduction happens at, regardless of what the operands were.
+    "reduce", "reduce-window", "dot", "all-reduce", "reduce-scatter",
+}
+
+_FLOAT_DTYPES = {"f8e4m3fn", "f8e5m2", "f16", "bf16", "f32", "f64"}
+
+
+def _result_dtypes(shape_str: str) -> tuple:
+    """All known array element types in an HLO result-type string, in order
+    (singleton for plain results, several for tuple results)."""
+    return tuple(m.group(1) for m in _SHAPE_RE.finditer(shape_str)
+                 if m.group(1) in _DTYPE_BYTES)
+
+
+def iter_reductions(hlo_text) -> list[dict]:
+    """Every accumulating op in the program — the precision lint's walk.
+
+    Same call-graph traversal as ``iter_collectives`` (while bodies × trip,
+    every conditional branch, call/fusion/async targets, ``-done`` free) but
+    emitting the ops whose RESULT element type is an accumulation precision:
+    ``reduce`` / ``reduce-window`` (with their ``to_apply`` computation),
+    ``dot``, ``all-reduce`` and ``reduce-scatter``. Each entry:
+
+      op              base opcode ("reduce", "dot", "all-reduce", ...)
+      accum_dtypes    result element types (tuple; singleton for plain ops)
+      operand_dtypes  element type of each operand (None when unresolvable)
+      to_apply        reduce computation name, or None (dots)
+      comp_root       ROOT opcode of the reduce computation ("add", "maximum",
+                      "or", ...) — additive roots are the precision-sensitive
+                      ones; None when there is no to_apply
+      comp_dtype      ROOT result element type of the reduce computation
+      mult            trip multiplier
+      shape           raw HLO result-type string
+      source          jax op_name metadata ("?" when absent)
+      branch_depth    0 at top level, >=1 inside a lax.cond branch
+      computation     HLO computation the op lives in
+
+    ``repro.analysis.precision.audit_accumulation_hlo`` is built on this.
+    Accepts HLO text or an existing HloCostModel.
+    """
+    model = hlo_text if isinstance(hlo_text, HloCostModel) \
+        else HloCostModel(hlo_text)
+    entries: list[dict] = []
+
+    def walk(comp: str, mult: float, seen: tuple, branch_depth: int):
+        if comp in seen:
+            return
+        shapes = model._shapes(comp)
+        for op in model.computations.get(comp, []):
+            base = op.opcode.replace("-start", "").replace("-done", "")
+            if base in _REDUCTION_OPS and not op.opcode.endswith("-done"):
+                to_apply = model._called(op.attrs, "to_apply")
+                comp_root = comp_dtype = None
+                if to_apply:
+                    root = model._fusion_root(to_apply)
+                    if root is not None:
+                        comp_root = root.opcode
+                        rdts = _result_dtypes(root.result_type)
+                        comp_dtype = rdts[0] if rdts else None
+                operand_dtypes = []
+                for nm in op.operands:
+                    dts = _result_dtypes(shapes.get(nm, "")) if nm else ()
+                    operand_dtypes.append(dts[0] if dts else None)
+                m = re.search(r'op_name="([^"]*)"', op.raw)
+                entries.append({
+                    "op": base,
+                    "accum_dtypes": _result_dtypes(op.result_type),
+                    "operand_dtypes": tuple(operand_dtypes),
+                    "to_apply": to_apply,
+                    "comp_root": comp_root, "comp_dtype": comp_dtype,
+                    "mult": mult, "shape": op.result_type.strip(),
+                    "source": m.group(1) if m else "?",
+                    "branch_depth": branch_depth, "computation": comp,
+                })
+                continue
+            if op.opcode == "while":
+                body = model._called(op.attrs, "body")
+                cond = model._called(op.attrs, "condition")
+                trip = model._while_trip(op)
+                for c in (body, cond):
+                    if c:
+                        walk(c, mult * (trip or 1), seen + (comp,),
+                             branch_depth)
+            elif op.opcode == "conditional":
+                for tgt in model._branch_targets(op):
+                    walk(tgt, mult, seen + (comp,), branch_depth + 1)
+            elif op.opcode in ("call", "fusion", "async-start"):
+                tgt = model._called(op.attrs, "calls") or model._called(
+                    op.attrs, "to_apply")
+                if tgt:
+                    walk(tgt, mult, seen + (comp,), branch_depth)
+
+    if model.entry is not None:
+        walk(model.entry, 1.0, (), 0)
+    return entries
+
+
 def top_collectives(hlo_text: str, k: int = 20) -> list[dict]:
     """Attribute collective bytes to jax source ops: walks the call graph with
     trip-count multipliers and returns the top-k collectives by total bytes,

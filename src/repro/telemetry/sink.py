@@ -247,9 +247,10 @@ class TelemetrySink:
             if not win:
                 return None
             recs = list(win)
-        kappas = np.array([r["kappa"] for r in recs])
-        energies = np.array([r["energy"] for r in recs])
-        orthos = np.array([r["ortho_residual"] for r in recs])
+        kappas = np.array([r["kappa"] for r in recs], dtype=np.float64)
+        energies = np.array([r["energy"] for r in recs], dtype=np.float64)
+        orthos = np.array([r["ortho_residual"] for r in recs],
+                          dtype=np.float64)
         # rank may have changed inside the window (controller applied):
         # aggregate the spectrum over the trailing CONTIGUOUS run of
         # same-rank records — records before an r→r'→r flip-flop belong to a

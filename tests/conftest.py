@@ -1,3 +1,5 @@
+import gc
+
 import jax
 import pytest
 
@@ -6,6 +8,18 @@ import pytest
 # subprocesses with their own flags (test_sharding.py).
 
 jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _drop_compiled_executables_between_modules():
+    """Each retained compiled executable holds mmap'd code regions; across
+    the whole suite the process otherwise brushes vm.max_map_count (65530
+    on stock kernels) and malloc failures surface as segfaults in whichever
+    module compiles last. Nothing shares jit caches across module
+    boundaries, so the flush is free apart from recompiles."""
+    yield
+    jax.clear_caches()
+    gc.collect()
 
 
 @pytest.fixture(scope="session")

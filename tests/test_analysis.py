@@ -27,7 +27,20 @@ program with its stable violation code, not just accept the good one:
     flagged ``host-buffer-no-dtype``; the serve/train hot paths are clean;
   * null-block inertness: free serving slots' decode writes provably target
     physical block 0, and dropping the zero-table hypothesis breaks the
-    proof.
+    proof;
+  * precision (pass 6): every violation code is falsifiable — a bf16
+    Gram dot / reduce-add fails ``low-precision-accumulation`` (HLO walk
+    AND jaxpr dtype flow) while the f32 twin passes; a wire plan claiming
+    bf16 stays bf16 against an f32-promoted all-reduce fails
+    ``bf16-wire-promoted``; an eps-less normalize fails
+    ``unguarded-division`` and the PR 5 bug class (bare 1e-12 shift)
+    fails ``under-scaled-shift`` while the repo's own CholeskyQR2 and
+    orthogonalizers pass; NS5 residuals on an ill-conditioned moment fail
+    the SVD-tier ``ortho-error-bound-exceeded`` budget that exact SVD
+    passes, and ``bound_scale`` provably loosens/tightens the verdict;
+  * analysis_diff: newly-FAILed, silently-disappeared and
+    missing-required (driver ``--list`` contract) all fail the report
+    diff; PASS->SKIP and brand-new checks are warnings only.
 
 The sharded end-to-end proofs (2D budgets on compiled HLO, full-update
 inertness, the concatenate-seam regression) live in
@@ -71,13 +84,31 @@ from repro.analysis.memory import (
     serve_decode_memory_budget,
     steady_memory_budget,
 )
+from repro.analysis.precision import (
+    PRECISION_VIOLATION_CODES,
+    PrecisionBudget,
+    PrecisionError,
+    assert_precision,
+    audit_accumulation_hlo,
+    audit_jaxpr_guards,
+    audit_ortho_bound,
+    audit_wire_dtype,
+    merge_reports,
+    method_bound,
+    ns_error_bound,
+    svd_tier_bound,
+)
 from repro.analysis.recompile import (
     CompileEvent,
     CompileWatcher,
     audit_recompiles,
     mark_step,
 )
-from repro.roofline.hlo_cost import analyze_hlo, iter_collectives
+from repro.roofline.hlo_cost import (
+    analyze_hlo,
+    iter_collectives,
+    iter_reductions,
+)
 
 
 # -- handcrafted HLO fixtures ------------------------------------------------
@@ -606,8 +637,10 @@ def test_null_block_proof_and_falsification():
 
 def test_driver_json_report_schema(capsys):
     """``python -m repro.analysis --mode 2d --json`` on a single device:
-    valid static-analysis-v1 JSON, stable check names, SKIPs (missing
-    devices) not counted as failures, exit code 0."""
+    valid static-analysis-v2 JSON, stable check names, SKIPs (missing
+    devices) not counted as failures, exit code 0. The device-free
+    precision checks (guards, ortho-bound) must PASS, not SKIP, even
+    here."""
     import json as _json
 
     from repro.analysis.driver import REPORT_SCHEMA, main
@@ -615,10 +648,304 @@ def test_driver_json_report_schema(capsys):
     rc = main(["--mode", "2d", "--json"])
     rep = _json.loads(capsys.readouterr().out)
     assert rc == 0
-    assert rep["schema"] == REPORT_SCHEMA == "static-analysis-v1"
+    assert rep["schema"] == REPORT_SCHEMA == "static-analysis-v2"
     assert rep["ok"] is True and rep["failed"] == 0
     by_name = {c["name"]: c["status"] for c in rep["checks"]}
     assert by_name["inertness/refresh"] == "PASS"
+    assert by_name["precision/guards"] == "PASS"
+    assert by_name["precision/ortho-bound"] == "PASS"
     assert by_name["collectives/steady-2d"] in ("PASS", "SKIP")
     assert by_name["inertness/update-2d"] in ("PASS", "SKIP")
     assert rep["passed"] + rep["skipped"] + rep["failed"] == len(rep["checks"])
+
+
+def test_driver_list_is_the_check_contract(capsys):
+    """``--list`` is the single source of required check names: it matches
+    the registry per lane, runs nothing, and carries the schema tag
+    tools/analysis_diff.py keys required-check sets on."""
+    import json as _json
+
+    from repro.analysis.driver import REPORT_SCHEMA, list_checks, main
+
+    rc = main(["--mode", "1d", "--list"])
+    out = _json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert out["schema"] == REPORT_SCHEMA and out["mode"] == "1d"
+    assert out["checks"] == list_checks("1d")
+
+    names_1d = {c["name"] for c in list_checks("1d")}
+    names_2d = {c["name"] for c in list_checks("2d")}
+    assert {"precision/accumulation", "precision/wire-dtype",
+            "precision/guards", "precision/ortho-bound"} <= names_1d
+    # device-free precision checks run in BOTH lanes; the artifact-bound
+    # ones are 1d-lane only.
+    assert {"precision/guards", "precision/ortho-bound"} <= names_2d
+    assert "precision/accumulation" not in names_2d
+    assert "precision/wire-dtype" not in names_2d
+    all_names = [c["name"] for c in list_checks("all")]
+    assert len(all_names) == len(set(all_names))
+    assert set(all_names) == names_1d | names_2d
+
+
+# -- precision lint (pass 6) -------------------------------------------------
+# Handcrafted reduction HLO: an f32 Gram dot and loss reduce next to their
+# bf16 twins, plus a max-reduce (precision-neutral root) that must be
+# skipped, so checked/violation counts are exact.
+
+_ADD_BF16 = """\
+%add.b (a: bf16[], b: bf16[]) -> bf16[] {
+  %a = bf16[] parameter(0)
+  %b = bf16[] parameter(1)
+  ROOT %r = bf16[] add(%a, %b)
+}
+"""
+
+_MAX_BF16 = """\
+%max.b (a: bf16[], b: bf16[]) -> bf16[] {
+  %a = bf16[] parameter(0)
+  %b = bf16[] parameter(1)
+  ROOT %r = bf16[] maximum(%a, %b)
+}
+"""
+
+HLO_REDUCTIONS = _ADD + _ADD_BF16 + _MAX_BF16 + """
+ENTRY %main (p0: bf16[8,16], p1: f32[8,16]) -> f32[] {
+  %p0 = bf16[8,16] parameter(0)
+  %p1 = f32[8,16] parameter(1)
+  %z = bf16[] constant(0)
+  %zf = f32[] constant(0)
+  %gram = f32[8,8] dot(%p1, %p1), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %gram.b = bf16[8,8] dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={1}, metadata={op_name="jit(update)/gram_psum"}
+  %red.b = bf16[] reduce(%p0, %z), dimensions={0,1}, to_apply=%add.b
+  %mx = bf16[] reduce(%p0, %z), dimensions={0,1}, to_apply=%max.b
+  ROOT %red.f = f32[] reduce(%p1, %zf), dimensions={0,1}, to_apply=%add
+}
+"""
+
+
+def test_iter_reductions_handcrafted():
+    """The HLO walk exposes each accumulating op's result element type and
+    its to_apply ROOT opcode — the raw facts the accumulation lint keys on."""
+    all_ents = iter_reductions(HLO_REDUCTIONS)
+    assert len(all_ents) == 5
+    reduces = {e["to_apply"]: e for e in all_ents if e["op"] == "reduce"}
+    assert reduces["add.b"]["accum_dtypes"] == ("bf16",)
+    assert reduces["add.b"]["comp_root"] == "add"
+    assert reduces["max.b"]["comp_root"] == "maximum"
+    assert reduces["add"]["accum_dtypes"] == ("f32",)
+    dots = [e for e in all_ents if e["op"] == "dot"]
+    assert {e["accum_dtypes"][0] for e in dots} == {"f32", "bf16"}
+    bf_dot = next(e for e in dots if e["accum_dtypes"] == ("bf16",))
+    assert bf_dot["operand_dtypes"] == ("bf16", "bf16")
+    assert bf_dot["source"] == "jit(update)/gram_psum"
+
+
+def test_accumulation_hlo_flags_bf16_not_f32():
+    """`low-precision-accumulation` fires on the bf16 dot and the bf16
+    reduce-add, skips the max-reduce (precision-neutral root) and passes
+    both f32 twins; allow_sources exempts by op_name metadata."""
+    bud = PrecisionBudget(name="t")
+    rep = audit_accumulation_hlo(HLO_REDUCTIONS, bud)
+    assert not rep.ok
+    assert rep.checked == 4          # f32 dot, bf16 dot, 2 add-reduces
+    assert _codes(rep) == {"low-precision-accumulation"}
+    assert len(rep.violations) == 2
+    with pytest.raises(PrecisionError):
+        assert_precision(rep)
+
+    allowed = audit_accumulation_hlo(
+        HLO_REDUCTIONS, PrecisionBudget(name="t", allow_sources=("gram_psum",)))
+    assert len(allowed.violations) == 1   # only the bf16 reduce remains
+
+    relaxed = audit_accumulation_hlo(
+        HLO_REDUCTIONS, PrecisionBudget(name="t", min_accum_bytes=2))
+    assert relaxed.ok and relaxed.checked == 4
+
+
+def test_jaxpr_guard_unguarded_division():
+    """An eps-less normalize fails `unguarded-division`; the guarded twin
+    proves a positive floor through mul/sum/sqrt/add."""
+    x = jnp.ones((4, 4))
+    bud = PrecisionBudget(name="t")
+
+    bad = audit_jaxpr_guards(
+        jax.make_jaxpr(lambda a: a / jnp.linalg.norm(a))(x), bud)
+    assert not bad.ok and _codes(bad) == {"unguarded-division"}
+
+    good = audit_jaxpr_guards(
+        jax.make_jaxpr(lambda a: a / (jnp.linalg.norm(a) + 1e-7))(x), bud)
+    assert good.ok, good.summary()
+    assert good.checked >= 1
+
+
+def test_jaxpr_guard_under_scaled_shift_pr5_class():
+    """The PR 5 bug class: a bare 1e-12 diagonal shift (~1000x below f32
+    roundoff, relative scale 0) fails `under-scaled-shift`; the eps*trace
+    shift the repo's refresh actually uses passes, and the repo's OWN
+    CholeskyQR2 jaxpr is clean."""
+    g = jnp.ones((8, 4))
+    bud = PrecisionBudget(name="t")
+
+    def pr5_bug(a):
+        gram = a.T @ a
+        return jnp.linalg.cholesky(gram + 1e-12 * jnp.eye(4))
+
+    bad = audit_jaxpr_guards(jax.make_jaxpr(pr5_bug)(g), bud)
+    assert not bad.ok and "under-scaled-shift" in _codes(bad)
+
+    def fixed(a):
+        gram = a.T @ a
+        shift = 1e-7 * jnp.trace(gram)
+        return jnp.linalg.cholesky(gram + shift * jnp.eye(4))
+
+    good = audit_jaxpr_guards(jax.make_jaxpr(fixed)(g), bud)
+    assert good.ok, good.summary()
+
+    # the real artifact: distributed CholeskyQR2's two factorizations carry
+    # trace-scale shifts (its 2nd-pass 2*eps/l shift is legitimately below
+    # f32 eps — the 1e-9 default floor must admit it).
+    from repro.core.rsvd import cholesky_qr2_closed_jaxpr
+    rep = audit_jaxpr_guards(cholesky_qr2_closed_jaxpr(64, 8), bud,
+                             where="rsvd/cholesky-qr2")
+    assert rep.ok, rep.summary()
+    # tightening the floor above the real shifts must flip the verdict —
+    # the min_shift_rel knob is live, not decorative.
+    strict = audit_jaxpr_guards(
+        cholesky_qr2_closed_jaxpr(64, 8),
+        PrecisionBudget(name="strict", min_shift_rel=1e-2))
+    assert not strict.ok and _codes(strict) == {"under-scaled-shift"}
+
+
+def test_jaxpr_low_precision_accumulation():
+    """A bf16 Gram dot (f32-demoted accumulation) is flagged in the dtype
+    flow; the f32 twin and every repo orthogonalizer pass."""
+    bud = PrecisionBudget(name="t")
+
+    def gram(y):
+        return y.T @ y
+
+    bf16 = audit_jaxpr_guards(
+        jax.make_jaxpr(gram)(jnp.ones((8, 4), jnp.bfloat16)), bud)
+    assert not bf16.ok and _codes(bf16) == {"low-precision-accumulation"}
+
+    f32 = audit_jaxpr_guards(jax.make_jaxpr(gram)(jnp.ones((8, 4))), bud)
+    assert f32.ok and f32.checked >= 1
+
+    from repro.core.orthogonalize import ORTH_METHODS, orth_closed_jaxpr
+    reports = [audit_jaxpr_guards(orth_closed_jaxpr(m), bud, where=m)
+               for m in ORTH_METHODS]
+    merged = merge_reports(bud, *reports)
+    assert merged.ok, merged.summary()
+    assert merged.checked >= len(reports)   # non-vacuous on every method
+
+
+HLO_WIRE = _ADD + """
+ENTRY %main (p0: f32[4,16]) -> f32[4,16] {
+  %p0 = f32[4,16] parameter(0)
+  ROOT %ar = f32[4,16] all-reduce(%p0), replica_groups={}, to_apply=%add
+}
+"""
+
+
+def test_wire_dtype_promotion_falsifiable():
+    """`bf16-wire-promoted` closes the hlo_bytes dual-view loop: a plan
+    entry whose claim matches the compiled f32 all-reduce (4 B/elem, the
+    promoted bf16 wire) passes; a plan claiming bf16 STAYS bf16 on the
+    same program fails; a payload with no matching all-reduce fails."""
+    import dataclasses as _dc
+
+    from repro.parallel.compression import WirePlanEntry
+
+    bud = PrecisionBudget(name="t", wire_dtype="bfloat16")
+    honest = WirePlanEntry(path="w", shape=(4, 16), eligible=True, rank=4,
+                           payload_dims=(4, 16), payload_bytes=128,
+                           full_bytes=256, hlo_bytes=256)
+    rep = audit_wire_dtype(HLO_WIRE, [honest], bud)
+    assert rep.ok and rep.checked == 1
+
+    liar = _dc.replace(honest, hlo_bytes=honest.payload_bytes)
+    bad = audit_wire_dtype(HLO_WIRE, [liar], bud)
+    assert not bad.ok and _codes(bad) == {"bf16-wire-promoted"}
+    assert "2 B/elem" in bad.violations[0].detail
+
+    orphan = _dc.replace(honest, payload_dims=(99,), hlo_bytes=396)
+    miss = audit_wire_dtype(HLO_WIRE, [orphan], bud)
+    assert not miss.ok and "no all-reduce" in miss.violations[0].detail
+
+
+def test_ortho_bound_tiering_and_scale():
+    """`ortho-error-bound-exceeded`: an NS5-plateau residual fails the
+    SVD-tier budget that a roundoff-tier residual passes, yet respects its
+    own plateau bound; bound_scale provably loosens/tightens the verdict
+    (a silently loosened bound cannot pass as the paper's)."""
+    r, kappa = 16, 100.0
+    svd_stats = {"b": {"sigma": [0.0] * r, "kappa": kappa,
+                       "ortho_residual": 1e-7}}
+    ns5_stats = {"b": {"sigma": [0.0] * r, "kappa": kappa,
+                       "ortho_residual": 0.4}}
+    bud = PrecisionBudget(name="t")
+
+    assert audit_ortho_bound(svd_stats, "svd", bud).ok
+    bad = audit_ortho_bound(ns5_stats, "svd", bud)
+    assert not bad.ok and _codes(bad) == {"ortho-error-bound-exceeded"}
+    assert audit_ortho_bound(ns5_stats, "ns5", bud).ok
+
+    loose = PrecisionBudget(name="loose", bound_scale=1e7)
+    assert audit_ortho_bound(ns5_stats, "svd", loose).ok
+    tight = PrecisionBudget(name="tight", bound_scale=1e-9)
+    assert not audit_ortho_bound(svd_stats, "svd", tight).ok
+
+    # the bound pieces themselves: monotone in kappa, svd tier far below
+    # the ns5 plateau at matched (r, kappa).
+    assert ns_error_bound(1000.0, r) > ns_error_bound(10.0, r)
+    assert svd_tier_bound(r, kappa) < method_bound("ns5", kappa, r)
+    with pytest.raises(ValueError):
+        method_bound("qr", kappa, r)
+    assert set(PRECISION_VIOLATION_CODES) >= {
+        "low-precision-accumulation", "bf16-wire-promoted",
+        "unguarded-division", "under-scaled-shift",
+        "ortho-error-bound-exceeded"}
+
+
+# -- analysis_diff: report regression gate -----------------------------------
+
+def _load_analysis_diff():
+    import importlib.util
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "analysis_diff.py")
+    spec = importlib.util.spec_from_file_location("analysis_diff_tool", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_analysis_diff_regression_gate():
+    """newly-FAILed and silently-disappeared checks fail the diff;
+    PASS->SKIP and brand-new checks are warnings only; --require-mode
+    pulls the required set from the driver's --list contract."""
+    mod = _load_analysis_diff()
+    golden = {"schema": "static-analysis-v2", "checks": [
+        {"name": "a", "status": "PASS"}, {"name": "b", "status": "PASS"}]}
+
+    ok = {"schema": "static-analysis-v2", "checks": [
+        {"name": "a", "status": "PASS"}, {"name": "b", "status": "SKIP"},
+        {"name": "c", "status": "PASS"}]}
+    failures, warnings = mod.diff(golden, ok)
+    assert not failures and len(warnings) == 2
+
+    regressed = {"schema": "static-analysis-v2", "checks": [
+        {"name": "a", "status": "PASS"}, {"name": "b", "status": "FAIL"}]}
+    failures, _ = mod.diff(golden, regressed)
+    assert any("newly-failed" in f for f in failures)
+
+    dropped = {"schema": "static-analysis-v2",
+               "checks": [{"name": "a", "status": "PASS"}]}
+    failures, _ = mod.diff(golden, dropped)
+    assert any("silently-disappeared" in f for f in failures)
+
+    failures, _ = mod.diff(golden, ok, require_mode="1d")
+    missing = [f for f in failures if "missing-required" in f]
+    from repro.analysis.driver import list_checks
+    assert len(missing) == len(list_checks("1d"))
+    assert any("precision/guards" in f for f in missing)

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Diff two static-analysis JSON reports; fail CI on check-set regressions.
+
+    python tools/analysis_diff.py GOLDEN NEW [--require-mode 1d|2d|all]
+
+GOLDEN is the committed reference report (tools/golden/*.json — status per
+check name is all the diff reads, so goldens are stored reduced); NEW is a
+fresh ``python -m repro.analysis --json`` run. Exit non-zero when:
+
+  * newly-failed: a check FAILs in NEW that was not failing in GOLDEN;
+  * silently-disappeared: a check named in GOLDEN is absent from NEW
+    (a renamed or dropped check must update the golden explicitly);
+  * missing-required (with --require-mode): NEW lacks a check name the
+    driver's ``--list`` contract requires for that lane — the required
+    set comes from ``repro.analysis.driver.list_checks``, never from a
+    hardcoded list in shell.
+
+PASS -> SKIP transitions and brand-new checks are reported as warnings
+only: device-poor environments skip, and a new pass should not fail the
+lane that introduces it. Schema versions may differ between the two
+reports (that is the point of versioning) but each must match
+``static-analysis-v<N>``.
+"""
+import argparse
+import json
+import os
+import re
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+SCHEMA_RE = re.compile(r"^static-analysis-v\d+$")
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        rep = json.load(f)
+    schema = rep.get("schema", "")
+    if not SCHEMA_RE.match(schema):
+        raise SystemExit(f"{path}: schema {schema!r} does not match "
+                         f"{SCHEMA_RE.pattern}")
+    return rep
+
+
+def _statuses(rep: dict) -> dict:
+    return {c["name"]: c["status"] for c in rep.get("checks", [])}
+
+
+def diff(golden: dict, new: dict, require_mode: str = "") -> tuple:
+    """Returns (failures, warnings) as lists of strings."""
+    gold, cur = _statuses(golden), _statuses(new)
+    failures, warnings = [], []
+    for name, status in sorted(gold.items()):
+        if name not in cur:
+            failures.append(f"silently-disappeared: '{name}' ({status} in "
+                            f"golden) is absent from the new report")
+        elif cur[name] == "FAIL" and status != "FAIL":
+            failures.append(f"newly-failed: '{name}' was {status}, now FAIL")
+        elif cur[name] == "SKIP" and status == "PASS":
+            warnings.append(f"'{name}' was PASS, now SKIP (fewer devices?)")
+    for name in sorted(set(cur) - set(gold)):
+        warnings.append(f"new check '{name}' ({cur[name]}) not in golden — "
+                        f"update the golden to start tracking it")
+    if require_mode:
+        from repro.analysis.driver import list_checks
+        required = {c["name"] for c in list_checks(require_mode)}
+        for name in sorted(required - set(cur)):
+            failures.append(f"missing-required: mode '{require_mode}' "
+                            f"requires check '{name}' (driver --list) but "
+                            f"the new report does not contain it")
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Diff two static-analysis JSON reports.")
+    ap.add_argument("golden")
+    ap.add_argument("new")
+    ap.add_argument("--require-mode", choices=("1d", "2d", "all"),
+                    default="", help="also require every check name the "
+                    "driver lists for this lane to be present")
+    args = ap.parse_args(argv)
+    failures, warnings = diff(_load(args.golden), _load(args.new),
+                              args.require_mode)
+    for w in warnings:
+        print(f"warning: {w}")
+    for f in failures:
+        print(f"FAIL: {f}")
+    if failures:
+        print(f"analysis-diff: FAIL ({len(failures)} regressions)")
+        return 1
+    print(f"analysis-diff: OK ({len(warnings)} warnings)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,8 +8,10 @@ script drives both lint lanes:
     python tools/lint_static.py --mode 2d --devices 8
 
 ``--json`` passes through to the driver: the machine-readable
-static-analysis-v1 report on stdout (what tools/run_tier1.sh consumes)
-instead of the human PASS/FAIL log.
+static-analysis-v2 report on stdout (what tools/run_tier1.sh consumes)
+instead of the human PASS/FAIL log. ``--list`` passes through too: just
+the required check names/lanes for the mode (no jax work) — what
+tools/analysis_diff.py reads as the required set.
 
 An explicit XLA_FLAGS in the environment wins over --devices.
 """
@@ -26,7 +28,9 @@ def main() -> int:
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (0 = leave XLA alone)")
     ap.add_argument("--json", action="store_true",
-                    help="emit the static-analysis-v1 JSON report on stdout")
+                    help="emit the static-analysis-v2 JSON report on stdout")
+    ap.add_argument("--list", action="store_true", dest="list_checks",
+                    help="print required check names/lanes and exit")
     args = ap.parse_args()
     if args.devices and "xla_force_host_platform_device_count" not in \
             os.environ.get("XLA_FLAGS", ""):
@@ -34,7 +38,8 @@ def main() -> int:
             os.environ.get("XLA_FLAGS", "") +
             f" --xla_force_host_platform_device_count={args.devices}")
     from repro.analysis.driver import main as driver_main
-    argv = ["--mode", args.mode] + (["--json"] if args.json else [])
+    argv = ["--mode", args.mode] + (["--json"] if args.json else []) \
+        + (["--list"] if args.list_checks else [])
     return driver_main(argv)
 
 
